@@ -1,0 +1,47 @@
+//! Non-IID CIFAR comparison: the paper's core claim in one runnable scene.
+//!
+//! Trains the same highly-skewed workload (Cifar10-6, EMD 1.35 — the
+//! hardest row of Table 3) under all four techniques and prints the
+//! accuracy/traffic comparison, demonstrating:
+//!   * DGCwGM's growing downlink (server momentum, §2.1),
+//!   * GMC's accuracy fragility under high EMD (§2.2),
+//!   * DGCwGMF matching DGC's accuracy with less traffic.
+//!
+//! ```sh
+//! cargo run --release --example cifar_noniid [-- <emd> <rounds>]
+//! ```
+
+use fedgmf::compress::CompressorKind;
+use fedgmf::config::{RunConfig, Scale};
+use fedgmf::experiments::runner::{comparison_rows, execute};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let emd: f64 = argv.first().and_then(|s| s.parse().ok()).unwrap_or(1.35);
+    let rounds: usize = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(20);
+
+    println!("workload: synthetic Mod-Cifar10, EMD target {emd}, {rounds} rounds, rate 0.1\n");
+    let mut ctx = None;
+    let mut rows = Vec::new();
+    for kind in CompressorKind::ALL {
+        let mut cfg = RunConfig::default().with_scale(Scale::Default);
+        cfg.technique = kind;
+        cfg.emd = emd;
+        cfg.rounds = rounds;
+        cfg.eval_every = (rounds / 4).max(1);
+        let (summary, achieved) = execute(&cfg, Path::new("artifacts"), &mut ctx)?;
+        println!(
+            "  {:<8} done: acc {:.4}, traffic {:.4} GB (down {:.4}), achieved EMD {:.3}",
+            kind.name(),
+            summary.final_accuracy,
+            summary.total_traffic_gb,
+            summary.downlink_gb,
+            achieved
+        );
+        rows.push((kind.name().to_string(), summary));
+    }
+    println!("\n{}", comparison_rows(&rows));
+    println!("expected shape (paper Table 3, Cifar10-6): DGCwGM has the largest traffic;\nDGCwGMF the smallest, at accuracy >= DGC; GMC degrades at high EMD.");
+    Ok(())
+}

@@ -1,0 +1,147 @@
+"""AOT pipeline: lower L2/L1 jax functions to HLO-text artifacts for Rust.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` rust crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per model variant:
+    artifacts/<name>_train.hlo.txt   (params[P], x, y) -> (loss, grads[P], ncorrect)
+    artifacts/<name>_eval.hlo.txt    (params[P], x, y) -> (loss, ncorrect)
+    artifacts/<name>_init.f32        initial flat params, little-endian f32
+plus the compression-kernel artifacts at each model's P:
+    artifacts/<name>_gmf_score.hlo.txt   (V[P], M[P], tau[]) -> Z[P]
+    artifacts/<name>_dgc_update.hlo.txt  (U[P], V[P], grad[P], alpha[]) -> (U', V')
+and artifacts/manifest.json describing everything for the Rust runtime.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--models resnet8,charlstm]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from .kernels import gmf
+
+MANIFEST_VERSION = 2
+DEFAULT_MODELS = "resnet8,charlstm"
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text (return_tuple=True ABI)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> Dict[str, Any]:
+    with open(path, "w") as f:
+        f.write(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    return {"file": os.path.basename(path), "bytes": len(text), "sha256_16": digest}
+
+
+def lower_model(cfg: model_lib.ModelConfig, out_dir: str) -> Dict[str, Any]:
+    p = model_lib.param_count(cfg)
+    pspec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    xspec, yspec = model_lib.input_specs(cfg)
+
+    train = jax.jit(model_lib.make_train_step(cfg))
+    evalf = jax.jit(model_lib.make_eval_step(cfg))
+
+    entry: Dict[str, Any] = {
+        "name": cfg.name,
+        "kind": cfg.kind,
+        "param_count": p,
+        "batch": cfg.batch,
+        "inputs": {
+            "x": {"shape": list(xspec.shape), "dtype": str(xspec.dtype)},
+            "y": {"shape": list(yspec.shape), "dtype": str(yspec.dtype)},
+        },
+    }
+    if cfg.kind == "lstm":
+        entry["vocab"] = cfg.vocab
+        entry["seq"] = cfg.seq
+    if cfg.kind == "cnn":
+        entry["num_classes"] = cfg.num_classes
+        entry["image"] = list(cfg.image)
+
+    entry["train"] = _write(
+        os.path.join(out_dir, f"{cfg.name}_train.hlo.txt"),
+        to_hlo_text(train.lower(pspec, xspec, yspec)),
+    )
+    entry["eval"] = _write(
+        os.path.join(out_dir, f"{cfg.name}_eval.hlo.txt"),
+        to_hlo_text(evalf.lower(pspec, xspec, yspec)),
+    )
+
+    # initial parameters (W_init, Alg. 1 line 2) as raw little-endian f32
+    init = np.asarray(model_lib.flat_init(cfg), dtype="<f4")
+    init_path = os.path.join(out_dir, f"{cfg.name}_init.f32")
+    init.tofile(init_path)
+    entry["init"] = {
+        "file": os.path.basename(init_path),
+        "bytes": init.nbytes,
+        "sha256_16": hashlib.sha256(init.tobytes()).hexdigest()[:16],
+    }
+
+    # L1 compression kernels at this model's P (flat ABI; scalar hyper-params
+    # travel as 0-d f32 inputs)
+    vec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    scal = jax.ShapeDtypeStruct((), jnp.float32)
+
+    score = jax.jit(lambda v, m, tau: gmf.gmf_score(v, m, tau))
+    entry["gmf_score"] = _write(
+        os.path.join(out_dir, f"{cfg.name}_gmf_score.hlo.txt"),
+        to_hlo_text(score.lower(vec, vec, scal)),
+    )
+
+    upd = jax.jit(lambda u, v, g, alpha: gmf.dgc_update(u, v, g, alpha))
+    entry["dgc_update"] = _write(
+        os.path.join(out_dir, f"{cfg.name}_dgc_update.hlo.txt"),
+        to_hlo_text(upd.lower(vec, vec, vec, scal)),
+    )
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=DEFAULT_MODELS, help="comma-separated model names")
+    ap.add_argument("--out", default=None, help="(compat) single-file target; ignored")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest: Dict[str, Any] = {
+        "version": MANIFEST_VERSION,
+        "jax": jax.__version__,
+        "block": gmf.BLOCK,
+        "models": {},
+    }
+    for name in [m.strip() for m in args.models.split(",") if m.strip()]:
+        cfg = model_lib.MODELS[name]
+        print(f"[aot] lowering {name} ...", flush=True)
+        manifest["models"][name] = lower_model(cfg, out_dir)
+        print(f"[aot]   P={manifest['models'][name]['param_count']}", flush=True)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""L2 model: ResNet for 32x32 image classification (paper: ResNet56/CIFAR10).
+
+Functional JAX implementation (no flax/haiku -- build environment is
+jax-only).  BatchNorm is replaced by GroupNorm: federated averaging of BN
+running statistics is ill-defined under non-IID data and the paper's
+compression schemes act on *gradients* only; GroupNorm keeps every trainable
+tensor in the gradient path with no mutable aux state (documented in
+DESIGN.md substitutions).
+
+``resnet{8,14,20,56}`` follow the classic CIFAR ResNet layout: a 3x3 stem
+with 16 channels, three stages of n basic blocks at widths (16, 32, 64) with
+stride-2 transitions, global average pooling and a dense head.  Depth
+N = 6n + 2.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def conv_init(key, kh, kw, cin, cout):
+    """He-normal initialisation for a HWIO conv kernel."""
+    fan_in = kh * kw * cin
+    std = np.sqrt(2.0 / fan_in)
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std
+
+
+def conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def group_norm(x, scale, bias, groups=8, eps=1e-5):
+    """GroupNorm over NHWC; ``groups`` clamped to the channel count."""
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(n, h, w, c) * scale + bias
+
+
+def init_resnet(key, depth: int, num_classes: int = 10) -> Dict[str, Any]:
+    """Initialise CIFAR-ResNet parameters of the given depth (6n+2)."""
+    assert (depth - 2) % 6 == 0, f"depth {depth} is not 6n+2"
+    n = (depth - 2) // 6
+    widths = (16, 32, 64)
+    keys = iter(jax.random.split(key, 4 + 6 * n * 3 + 8))
+
+    params: Dict[str, Any] = {
+        "stem": {
+            "w": conv_init(next(keys), 3, 3, 3, 16),
+            "gn_s": jnp.ones((16,)),
+            "gn_b": jnp.zeros((16,)),
+        }
+    }
+    cin = 16
+    for si, width in enumerate(widths):
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            blk = {
+                "w1": conv_init(next(keys), 3, 3, cin, width),
+                "gn1_s": jnp.ones((width,)),
+                "gn1_b": jnp.zeros((width,)),
+                "w2": conv_init(next(keys), 3, 3, width, width),
+                "gn2_s": jnp.ones((width,)),
+                "gn2_b": jnp.zeros((width,)),
+            }
+            if stride != 1 or cin != width:
+                blk["proj"] = conv_init(next(keys), 1, 1, cin, width)
+            params[f"s{si}b{bi}"] = blk
+            cin = width
+    params["head"] = {
+        "w": jax.random.normal(next(keys), (64, num_classes), jnp.float32) * np.sqrt(1.0 / 64),
+        "b": jnp.zeros((num_classes,)),
+    }
+    params["_meta_depth"] = jnp.zeros(())  # keeps depth re-derivable? no-op leaf avoided:
+    del params["_meta_depth"]
+    return params
+
+
+def resnet_apply(params: Dict[str, Any], x: jax.Array, depth: int) -> jax.Array:
+    """Forward pass -> logits [B, num_classes]. ``x`` is NHWC f32 in [0,1]."""
+    n = (depth - 2) // 6
+    stem = params["stem"]
+    h = conv(x, stem["w"])
+    h = jax.nn.relu(group_norm(h, stem["gn_s"], stem["gn_b"]))
+    for si in range(3):
+        for bi in range(n):
+            blk = params[f"s{si}b{bi}"]
+            stride = 2 if (si > 0 and bi == 0) else 1
+            y = conv(h, blk["w1"], stride)
+            y = jax.nn.relu(group_norm(y, blk["gn1_s"], blk["gn1_b"]))
+            y = conv(y, blk["w2"])
+            y = group_norm(y, blk["gn2_s"], blk["gn2_b"])
+            sc = conv(h, blk["proj"], stride) if "proj" in blk else h
+            h = jax.nn.relu(y + sc)
+    h = h.mean(axis=(1, 2))  # global average pool
+    head = params["head"]
+    return h @ head["w"] + head["b"]

@@ -1,0 +1,245 @@
+"""L1 Pallas kernels for the Global Momentum Fusion compression pipeline.
+
+These kernels implement the compute hot-spot of the paper (Kuo et al. 2022,
+Algorithm 1): the per-round, per-client elementwise passes over the flat
+parameter-sized vectors U (momentum-corrected gradient), V (residual
+accumulator) and M (client-tracked global momentum).
+
+All kernels operate on flat f32 vectors padded to a multiple of BLOCK
+(8*128 = 1024, the TPU-aligned tile).  On TPU each block is one VMEM tile
+and the grid walks the HBM->VMEM schedule; here we lower with
+``interpret=True`` so the same HLO runs on the CPU PJRT client (see
+DESIGN.md "Hardware adaptation").
+
+Kernels
+-------
+- ``sumsq``             : blockwise sum-of-squares partials (phase 1 of the
+                          L2 normalisation used by ``N`` in paper Eq. 2)
+- ``gmf_fuse``          : Z = |(1-tau) * V * inv_nv + tau * M * inv_nm|
+                          (phase 2 of Eq. 2, fused scale+lerp+abs)
+- ``dgc_update``        : U' = alpha*U + grad ; V' = V + U'
+                          (momentum correction, Alg. 1 lines 6-7)
+- ``mask_apply``        : G = V (.) mask ; U' = U (.) (1-mask) ;
+                          V' = V (.) (1-mask)   (Alg. 1 lines 10-12)
+
+Correctness oracle: ``ref.py`` (pure jnp), checked by
+``python/tests/test_kernel.py`` under hypothesis sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One TPU-aligned tile of f32: 8 sublanes x 128 lanes.
+BLOCK = 1024
+
+# All pallas_call sites use interpret mode: real TPU lowering emits a Mosaic
+# custom-call the CPU PJRT plugin cannot execute.
+INTERPRET = True
+
+
+def pad_to_block(x: jax.Array) -> jax.Array:
+    """Pad a flat vector with zeros to a multiple of BLOCK."""
+    n = x.shape[0]
+    rem = (-n) % BLOCK
+    if rem:
+        x = jnp.pad(x, (0, rem))
+    return x
+
+
+def _grid(n: int) -> int:
+    assert n % BLOCK == 0, f"padded length {n} not a multiple of {BLOCK}"
+    return n // BLOCK
+
+
+# ---------------------------------------------------------------------------
+# sumsq: blockwise sum of squares (reduction phase of L2 normalisation)
+# ---------------------------------------------------------------------------
+
+
+def _sumsq_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[0] = jnp.sum(x * x)
+
+
+def sumsq(x: jax.Array) -> jax.Array:
+    """Sum of squares of a flat f32 vector, via blockwise partials.
+
+    Returns a scalar.  The blockwise partials are the structure that maps to
+    a VMEM-resident per-tile reduction on TPU; the final (grid-sized) sum is
+    left to XLA.
+    """
+    x = pad_to_block(x)
+    g = _grid(x.shape[0])
+    partials = pl.pallas_call(
+        _sumsq_kernel,
+        out_shape=jax.ShapeDtypeStruct((g,), jnp.float32),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        interpret=INTERPRET,
+    )(x)
+    return jnp.sum(partials)
+
+
+# ---------------------------------------------------------------------------
+# gmf_fuse: Z = |(1-tau) * v * inv_nv + tau * m * inv_nm|   (paper Eq. 2)
+# ---------------------------------------------------------------------------
+
+
+def _gmf_fuse_kernel(scal_ref, v_ref, m_ref, z_ref):
+    inv_nv = scal_ref[0]
+    inv_nm = scal_ref[1]
+    tau = scal_ref[2]
+    v = v_ref[...]
+    m = m_ref[...]
+    z_ref[...] = jnp.abs((1.0 - tau) * v * inv_nv + tau * m * inv_nm)
+
+
+def gmf_fuse(v: jax.Array, m: jax.Array, inv_nv, inv_nm, tau) -> jax.Array:
+    """Fused normalise-lerp-abs over flat padded vectors.
+
+    ``inv_nv``/``inv_nm`` are the reciprocal L2 norms (scalars), ``tau`` the
+    fusion ratio.  The three scalars travel in one (3,) array broadcast to
+    every block (SMEM-resident on TPU).
+    """
+    assert v.shape == m.shape
+    n = v.shape[0]
+    g = _grid(n)
+    scal = jnp.stack(
+        [jnp.asarray(inv_nv, jnp.float32), jnp.asarray(inv_nm, jnp.float32), jnp.asarray(tau, jnp.float32)]
+    )
+    return pl.pallas_call(
+        _gmf_fuse_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=INTERPRET,
+    )(scal, v, m)
+
+
+def gmf_score(v: jax.Array, m: jax.Array, tau, eps: float = 1e-12) -> jax.Array:
+    """Full paper Eq. 2 selection score: Z = |(1-tau)N(V) + tau N(M)|.
+
+    ``N(x) = x / (||x||_2 + eps)``.  Inputs are unpadded flat vectors; the
+    result is unpadded again.  Composes the two kernel phases.
+    """
+    n = v.shape[0]
+    vp, mp = pad_to_block(v), pad_to_block(m)
+    inv_nv = 1.0 / (jnp.sqrt(sumsq(vp)) + eps)
+    inv_nm = 1.0 / (jnp.sqrt(sumsq(mp)) + eps)
+    z = gmf_fuse(vp, mp, inv_nv, inv_nm, tau)
+    return z[:n]
+
+
+# ---------------------------------------------------------------------------
+# dgc_update: U' = alpha*U + grad ; V' = V + U'   (Alg. 1 lines 6-7)
+# ---------------------------------------------------------------------------
+
+
+def _dgc_update_kernel(scal_ref, u_ref, v_ref, g_ref, u_out, v_out):
+    alpha = scal_ref[0]
+    u_new = alpha * u_ref[...] + g_ref[...]
+    u_out[...] = u_new
+    v_out[...] = v_ref[...] + u_new
+
+
+def dgc_update(u: jax.Array, v: jax.Array, grad: jax.Array, alpha):
+    """Momentum correction: returns (U', V') with U'=alpha*U+g, V'=V+U'."""
+    n = u.shape[0]
+    up, vp, gp = pad_to_block(u), pad_to_block(v), pad_to_block(grad)
+    g = _grid(up.shape[0])
+    scal = jnp.asarray(alpha, jnp.float32).reshape(1)
+    u2, v2 = pl.pallas_call(
+        _dgc_update_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(up.shape, jnp.float32),
+            jax.ShapeDtypeStruct(vp.shape, jnp.float32),
+        ),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ),
+        interpret=INTERPRET,
+    )(scal, up, vp, gp)
+    return u2[:n], v2[:n]
+
+
+# ---------------------------------------------------------------------------
+# mask_apply: G = V.mask ; U' = U.(1-mask) ; V' = V.(1-mask)  (lines 10-12)
+# ---------------------------------------------------------------------------
+
+
+def _mask_apply_kernel(u_ref, v_ref, mask_ref, g_out, u_out, v_out):
+    mask = mask_ref[...]
+    keep = 1.0 - mask
+    v = v_ref[...]
+    g_out[...] = v * mask
+    u_out[...] = u_ref[...] * keep
+    v_out[...] = v * keep
+
+
+def mask_apply(u: jax.Array, v: jax.Array, mask: jax.Array):
+    """Memory update given a {0,1} mask: returns (G, U', V')."""
+    n = u.shape[0]
+    up, vp, mp = pad_to_block(u), pad_to_block(v), pad_to_block(mask)
+    g = _grid(up.shape[0])
+    outs = pl.pallas_call(
+        _mask_apply_kernel,
+        out_shape=tuple(jax.ShapeDtypeStruct(up.shape, jnp.float32) for _ in range(3)),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))] * 3,
+        out_specs=tuple(pl.BlockSpec((BLOCK,), lambda i: (i,)) for _ in range(3)),
+        interpret=INTERPRET,
+    )(up, vp, mp)
+    gv, u2, v2 = outs
+    return gv[:n], u2[:n], v2[:n]
+
+
+# ---------------------------------------------------------------------------
+# Composite client-side compression step (Alg. 1 lines 6-12), exported as a
+# single artifact so the L3 hot path can run one executable per round.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def dgc_gmf_step(u, v, m, grad, ghat_prev, alpha, beta, tau, k: int):
+    """One full DGCwGMF client compression round (paper Algorithm 1).
+
+    Args:
+      u, v:       momentum correction state (flat f32[P])
+      m:          client-tracked global momentum (flat f32[P])
+      grad:       fresh local gradient (flat f32[P])
+      ghat_prev:  previous round's aggregated gradient (flat f32[P])
+      alpha/beta: local/global momentum factors
+      tau:        fusion ratio (tau=0 degenerates to DGC)
+      k:          number of coordinates to keep (static)
+
+    Returns (g_sparse_dense, u', v', m', threshold) where g_sparse_dense is
+    the dense vector with only the selected coordinates nonzero.
+    """
+    m2 = beta * m + ghat_prev  # Alg. 1 line 8 (global momentum accumulate)
+    u1, v1 = dgc_update(u, v, grad, alpha)  # lines 6-7
+    z = gmf_score(v1, m2, tau)  # line 9 (GMF)
+    # top-k mask from the fused score; selection itself is XLA's top_k (it is
+    # selection-bound, not FLOP-bound -- see DESIGN.md Hardware adaptation).
+    thresh = jax.lax.top_k(z, k)[0][-1]
+    mask = (z >= thresh).astype(jnp.float32)
+    g_out, u2, v2 = mask_apply(u1, v1, mask)  # lines 10-12
+    return g_out, u2, v2, m2, thresh

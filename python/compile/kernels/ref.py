@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the L1 Pallas kernels (``gmf.py``).
+
+Every kernel has a reference implementation here written with plain
+``jax.numpy`` ops only -- no Pallas, no custom control flow.  The pytest
+suite asserts ``assert_allclose(kernel(x), ref(x))`` under hypothesis-driven
+shape/value sweeps; the Rust-native engine is additionally checked against
+the *artifacts built from the kernels*, so this file is the root of the
+correctness chain:
+
+    ref.py (spec)  ==  gmf.py (Pallas)  ==  artifacts/*.hlo.txt  ==  rust
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normalize(x: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """N(x) = x / (||x||_2 + eps) -- the ``N`` of paper Eq. 2."""
+    return x / (jnp.linalg.norm(x) + eps)
+
+
+def sumsq(x: jax.Array) -> jax.Array:
+    return jnp.sum(x * x)
+
+
+def gmf_score(v: jax.Array, m: jax.Array, tau, eps: float = 1e-12) -> jax.Array:
+    """Z = |(1-tau) N(V) + tau N(M)|  (paper Eq. 2, selection score)."""
+    return jnp.abs((1.0 - tau) * normalize(v, eps) + tau * normalize(m, eps))
+
+
+def dgc_update(u, v, grad, alpha):
+    """U' = alpha U + g ; V' = V + U'  (Alg. 1 lines 6-7)."""
+    u2 = alpha * u + grad
+    v2 = v + u2
+    return u2, v2
+
+
+def mask_apply(u, v, mask):
+    """G = V.mask ; U' = U.(1-mask) ; V' = V.(1-mask)  (lines 10-12)."""
+    return v * mask, u * (1.0 - mask), v * (1.0 - mask)
+
+
+def topk_mask(z: jax.Array, k: int) -> jax.Array:
+    """{0,1} mask keeping the k largest entries of z (ties: >= threshold)."""
+    thresh = jax.lax.top_k(z, k)[0][-1]
+    return (z >= thresh).astype(jnp.float32)
+
+
+def dgc_gmf_step(u, v, m, grad, ghat_prev, alpha, beta, tau, k: int):
+    """Reference for the composite client round (Alg. 1 lines 6-12)."""
+    m2 = beta * m + ghat_prev
+    u1, v1 = dgc_update(u, v, grad, alpha)
+    z = gmf_score(v1, m2, tau)
+    mask = topk_mask(z, k)
+    g_out, u2, v2 = mask_apply(u1, v1, mask)
+    thresh = jax.lax.top_k(z, k)[0][-1]
+    return g_out, u2, v2, m2, thresh

@@ -1,0 +1,132 @@
+"""L2 public surface: model registry + flat-ABI train/eval step builders.
+
+Each entry of :data:`MODELS` describes one lowered model variant.  The
+builders return jittable functions with the flat-parameter ABI documented in
+``pack.py``:
+
+    train_step(flat_params, x, y) -> (loss, flat_grads, ncorrect)
+    eval_step(flat_params, x, y)  -> (loss, ncorrect)
+
+``aot.py`` lowers these to HLO text artifacts; the pytest suite checks their
+shapes and gradient sanity before export.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import cnn, lstm, pack
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    kind: str  # "cnn" | "lstm"
+    batch: int
+    # cnn
+    depth: int = 8
+    num_classes: int = 10
+    image: Tuple[int, int, int] = (32, 32, 3)
+    # lstm
+    vocab: int = 64
+    embed: int = 16
+    hidden: int = 64
+    seq: int = 20
+    seed: int = 0
+
+
+MODELS: Dict[str, ModelConfig] = {
+    # default CIFAR model: ResNet-8, tractable on the CPU testbed
+    "resnet8": ModelConfig(name="resnet8", kind="cnn", batch=32, depth=8),
+    # paper-scale CIFAR model (export on demand; see aot.py --models)
+    "resnet20": ModelConfig(name="resnet20", kind="cnn", batch=32, depth=20),
+    "resnet56": ModelConfig(name="resnet56", kind="cnn", batch=32, depth=56),
+    # Shakespeare next-char LSTM
+    "charlstm": ModelConfig(name="charlstm", kind="lstm", batch=16, vocab=64, embed=16, hidden=64, seq=20),
+}
+
+
+def init_params(cfg: ModelConfig) -> Any:
+    key = jax.random.PRNGKey(cfg.seed)
+    if cfg.kind == "cnn":
+        return cnn.init_resnet(key, cfg.depth, cfg.num_classes)
+    if cfg.kind == "lstm":
+        return lstm.init_lstm(key, cfg.vocab, cfg.embed, cfg.hidden)
+    raise ValueError(cfg.kind)
+
+
+def apply_fn(cfg: ModelConfig) -> Callable[[Any, jax.Array], jax.Array]:
+    if cfg.kind == "cnn":
+        return lambda p, x: cnn.resnet_apply(p, x, cfg.depth)
+    if cfg.kind == "lstm":
+        return lambda p, x: lstm.lstm_apply(p, x)
+    raise ValueError(cfg.kind)
+
+
+def input_specs(cfg: ModelConfig) -> Tuple[jax.ShapeDtypeStruct, jax.ShapeDtypeStruct]:
+    """(x, y) example specs for lowering."""
+    if cfg.kind == "cnn":
+        h, w, c = cfg.image
+        return (
+            jax.ShapeDtypeStruct((cfg.batch, h, w, c), jnp.float32),
+            jax.ShapeDtypeStruct((cfg.batch,), jnp.int32),
+        )
+    return (
+        jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32),
+    )
+
+
+def _loss_and_correct(logits: jax.Array, y: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Mean cross-entropy + number of correct predictions.
+
+    Works for both [B, C] / y[B] (cnn) and [B, S, C] / y[B, S] (lstm).
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1).squeeze(-1)
+    loss = nll.mean()
+    ncorrect = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.int32))
+    return loss, ncorrect
+
+
+def make_train_step(cfg: ModelConfig):
+    """(flat_params[P], x, y) -> (loss, flat_grads[P], ncorrect)."""
+    template = init_params(cfg)
+    apply = apply_fn(cfg)
+
+    def train_step(flat_params, x, y):
+        params = pack.unpack(flat_params, template)
+
+        def loss_fn(p):
+            loss, nc = _loss_and_correct(apply(p, x), y)
+            return loss, nc
+
+        (loss, nc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return loss, pack.pack(grads), nc
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    """(flat_params[P], x, y) -> (loss, ncorrect)."""
+    template = init_params(cfg)
+    apply = apply_fn(cfg)
+
+    def eval_step(flat_params, x, y):
+        params = pack.unpack(flat_params, template)
+        return _loss_and_correct(apply(params, x), y)
+
+    return eval_step
+
+
+def flat_init(cfg: ModelConfig) -> jax.Array:
+    """The W_init shared by the server with all clients (Alg. 1 line 2)."""
+    return pack.pack(init_params(cfg))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return pack.param_count(init_params(cfg))

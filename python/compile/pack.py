@@ -1,0 +1,69 @@
+"""Flat-parameter-vector ABI shared between the JAX models and Rust.
+
+Every lowered train/eval step takes the model parameters as a single flat
+``f32[P]`` vector.  The Rust coordinator only ever sees ``&[f32]`` of length
+``P``: compression, momentum state, aggregation and the SGD update all
+operate on the flat vector, and the mapping back to structured parameters
+lives entirely inside the lowered HLO (static slicing + reshape, fused away
+by XLA).
+
+The packing order is the *sorted flattened key order* of the parameter
+pytree, which is deterministic across processes and recorded in the
+artifact manifest for debugging.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+Spec = List[Tuple[str, Tuple[int, ...]]]
+
+
+def _flatten_with_paths(tree: Any) -> List[Tuple[str, jax.Array]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    items = [(jax.tree_util.keystr(path), leaf) for path, leaf in leaves]
+    items.sort(key=lambda kv: kv[0])
+    return items
+
+
+def spec_of(params: Any) -> Spec:
+    """Shape spec (name, shape) for each leaf, in packing order."""
+    return [(name, tuple(leaf.shape)) for name, leaf in _flatten_with_paths(params)]
+
+
+def param_count(params: Any) -> int:
+    return sum(int(np.prod(s)) for _, s in spec_of(params))
+
+
+def pack(params: Any) -> jax.Array:
+    """Pack a parameter pytree into one flat f32 vector."""
+    items = _flatten_with_paths(params)
+    return jnp.concatenate([leaf.reshape(-1).astype(jnp.float32) for _, leaf in items])
+
+
+def unpack(flat: jax.Array, tree_template: Any) -> Any:
+    """Unpack a flat f32 vector into the structure of ``tree_template``.
+
+    Static shapes only: lowers to slices + reshapes.
+    """
+    items = _flatten_with_paths(tree_template)
+    out: Dict[str, jax.Array] = {}
+    off = 0
+    for name, leaf in items:
+        n = int(np.prod(leaf.shape)) if leaf.ndim else 1
+        out[name] = flat[off : off + n].reshape(leaf.shape)
+        off += n
+    if off != flat.shape[0]:
+        raise ValueError(f"flat vector length {flat.shape[0]} != spec total {off}")
+
+    # rebuild the pytree by substituting leaves in path order
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree_template)
+    leaves = []
+    for path, _leaf in paths:
+        leaves.append(out[jax.tree_util.keystr(path)])
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,88 @@
+"""AOT pipeline checks: HLO-text conversion, manifest integrity, and
+consistency between the exported init vector and the in-process model."""
+
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as ml
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))), "artifacts")
+
+
+def test_to_hlo_text_simple_fn():
+    lowered = jax.jit(lambda x: (x * 2 + 1,)).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ROOT" in text
+
+
+def test_to_hlo_text_contains_entry_params():
+    cfg = ml.MODELS["charlstm"]
+    p = ml.param_count(cfg)
+    xspec, yspec = ml.input_specs(cfg)
+    lowered = jax.jit(ml.make_eval_step(cfg)).lower(
+        jax.ShapeDtypeStruct((p,), jnp.float32), xspec, yspec
+    )
+    text = aot.to_hlo_text(lowered)
+    assert f"f32[{p}]" in text
+
+
+manifest_path = os.path.join(ART, "manifest.json")
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(manifest_path), reason="run `make artifacts` first"
+)
+
+
+@needs_artifacts
+def test_manifest_structure():
+    with open(manifest_path) as f:
+        man = json.load(f)
+    assert man["version"] >= 2
+    for name in ("resnet8", "charlstm"):
+        entry = man["models"][name]
+        assert entry["param_count"] > 0
+        for part in ("train", "eval", "init", "gmf_score", "dgc_update"):
+            path = os.path.join(ART, entry[part]["file"])
+            assert os.path.exists(path), path
+            assert os.path.getsize(path) == entry[part]["bytes"] or part == "init"
+
+
+@needs_artifacts
+def test_manifest_hashes_match_files():
+    with open(manifest_path) as f:
+        man = json.load(f)
+    for entry in man["models"].values():
+        for part in ("train", "eval", "gmf_score", "dgc_update"):
+            path = os.path.join(ART, entry[part]["file"])
+            with open(path, "rb") as fh:
+                digest = hashlib.sha256(fh.read()).hexdigest()[:16]
+            assert digest == entry[part]["sha256_16"], path
+
+
+@needs_artifacts
+def test_init_vector_matches_model():
+    with open(manifest_path) as f:
+        man = json.load(f)
+    for name in ("resnet8", "charlstm"):
+        entry = man["models"][name]
+        path = os.path.join(ART, entry["init"]["file"])
+        on_disk = np.fromfile(path, dtype="<f4")
+        assert on_disk.shape[0] == entry["param_count"]
+        in_proc = np.asarray(ml.flat_init(ml.MODELS[name]))
+        np.testing.assert_array_equal(on_disk, in_proc)
+
+
+@needs_artifacts
+def test_param_counts_stable():
+    """Pin the exported parameter counts: a silent change would desync the
+    Rust runtime's momentum state sizes from the artifacts."""
+    with open(manifest_path) as f:
+        man = json.load(f)
+    assert man["models"]["resnet8"]["param_count"] == 77850
+    assert man["models"]["charlstm"]["param_count"] == 25920

@@ -1,0 +1,193 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps vector lengths (block-aligned and ragged), value scales
+(including denormal-adjacent and large magnitudes) and hyper-parameters.
+Tolerances allow FMA/reassociation differences between the Pallas interpret
+path and the jnp oracle: rtol=1e-4, atol=1e-5 relative to unit-normalised
+vectors.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gmf, ref
+
+TOL = dict(rtol=1e-4, atol=1e-5)
+
+
+def vecs(n, seed, scale=1.0, count=1):
+    rng = np.random.default_rng(seed)
+    out = [jnp.asarray(rng.normal(size=n) * scale, jnp.float32) for _ in range(count)]
+    return out[0] if count == 1 else out
+
+
+# ----------------------------------------------------------------- sumsq ---
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_sumsq_matches_ref(n, seed, scale):
+    x = vecs(n, seed, scale)
+    got = gmf.sumsq(x)
+    want = ref.sumsq(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_sumsq_zero_vector():
+    assert float(gmf.sumsq(jnp.zeros(2048))) == 0.0
+
+
+def test_sumsq_exact_block_multiple():
+    x = jnp.ones(gmf.BLOCK * 3)
+    np.testing.assert_allclose(gmf.sumsq(x), gmf.BLOCK * 3, rtol=1e-6)
+
+
+# ------------------------------------------------------------- gmf_score ---
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=4000),
+    seed=st.integers(0, 2**31 - 1),
+    tau=st.sampled_from([0.0, 0.1, 0.3, 0.6, 1.0]),
+)
+def test_gmf_score_matches_ref(n, seed, tau):
+    v, m = vecs(n, seed, count=2)
+    np.testing.assert_allclose(gmf.gmf_score(v, m, tau), ref.gmf_score(v, m, tau), **TOL)
+
+
+def test_gmf_score_tau_zero_is_normalized_abs_v():
+    """tau=0 degenerates to DGC's |V| selection score (up to normalisation)."""
+    v, m = vecs(1500, 7, count=2)
+    z = gmf.gmf_score(v, m, 0.0)
+    np.testing.assert_allclose(z, jnp.abs(v) / jnp.linalg.norm(v), **TOL)
+    # ordering identical to |V|'s ordering
+    assert list(np.argsort(np.asarray(z))) == list(np.argsort(np.abs(np.asarray(v))))
+
+
+def test_gmf_score_tau_one_ignores_v_magnitudes():
+    v, m = vecs(1200, 9, count=2)
+    z1 = gmf.gmf_score(v, m, 1.0)
+    z2 = gmf.gmf_score(v * 123.0, m, 1.0)
+    np.testing.assert_allclose(z1, z2, **TOL)
+
+
+def test_gmf_score_zero_momentum_safe():
+    """M=0 (first round) must not produce NaN -- eps guards the norm."""
+    v = vecs(999, 3)
+    z = gmf.gmf_score(v, jnp.zeros_like(v), 0.5)
+    assert np.isfinite(np.asarray(z)).all()
+
+
+def test_gmf_score_scale_invariance():
+    """N() makes the score invariant to the scale of each input."""
+    v, m = vecs(2000, 11, count=2)
+    z1 = gmf.gmf_score(v, m, 0.4)
+    z2 = gmf.gmf_score(v * 0.01, m * 100.0, 0.4)
+    np.testing.assert_allclose(z1, z2, **TOL)
+
+
+# ------------------------------------------------------------ dgc_update ---
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=4000),
+    seed=st.integers(0, 2**31 - 1),
+    alpha=st.sampled_from([0.0, 0.5, 0.9, 0.99]),
+)
+def test_dgc_update_matches_ref(n, seed, alpha):
+    u, v, g = vecs(n, seed, count=3)
+    got = gmf.dgc_update(u, v, g, alpha)
+    want = ref.dgc_update(u, v, g, alpha)
+    for x, y in zip(got, want):
+        np.testing.assert_allclose(x, y, **TOL)
+
+
+def test_dgc_update_alpha_zero_is_plain_accumulate():
+    u, v, g = vecs(1025, 5, count=3)
+    u2, v2 = gmf.dgc_update(u, v, g, 0.0)
+    np.testing.assert_allclose(u2, g, **TOL)
+    np.testing.assert_allclose(v2, v + g, **TOL)
+
+
+# ------------------------------------------------------------ mask_apply ---
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=4000),
+    seed=st.integers(0, 2**31 - 1),
+    frac=st.floats(min_value=0.01, max_value=0.99),
+)
+def test_mask_apply_matches_ref(n, seed, frac):
+    u, v, z = vecs(n, seed, count=3)
+    k = max(1, int(frac * n))
+    mask = ref.topk_mask(jnp.abs(z), k)
+    got = gmf.mask_apply(u, v, mask)
+    want = ref.mask_apply(u, v, mask)
+    for x, y in zip(got, want):
+        np.testing.assert_allclose(x, y, **TOL)
+
+
+def test_mask_apply_partition_invariant():
+    """G + V' == V exactly: transmitted and accumulated parts partition V."""
+    u, v, z = vecs(3100, 13, count=3)
+    mask = ref.topk_mask(jnp.abs(z), 310)
+    g_out, _u2, v2 = gmf.mask_apply(u, v, mask)
+    np.testing.assert_allclose(np.asarray(g_out) + np.asarray(v2), np.asarray(v), rtol=1e-6)
+
+
+def test_mask_apply_orthogonality():
+    """<G, V'> == 0: the paper's orthogonality property (Fig. 2)."""
+    u, v, z = vecs(2048, 17, count=3)
+    mask = ref.topk_mask(jnp.abs(z), 204)
+    g_out, _u2, v2 = gmf.mask_apply(u, v, mask)
+    assert float(jnp.dot(g_out, v2)) == 0.0
+
+
+# -------------------------------------------------------- composite step ---
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tau=st.sampled_from([0.0, 0.3, 0.6]),
+    rate=st.sampled_from([0.1, 0.5]),
+)
+def test_dgc_gmf_step_matches_ref(seed, tau, rate):
+    n = 2500
+    u, v, m, g, gh = vecs(n, seed, count=5)
+    k = int(rate * n)
+    got = gmf.dgc_gmf_step(u, v, m, g, gh, 0.9, 0.8, tau, k)
+    want = ref.dgc_gmf_step(u, v, m, g, gh, 0.9, 0.8, tau, k)
+    for x, y in zip(got, want):
+        np.testing.assert_allclose(x, y, **TOL)
+
+
+def test_dgc_gmf_step_sparsity():
+    """The transmitted gradient has at most k nonzeros (ties can reduce)."""
+    n, k = 4000, 400
+    u, v, m, g = vecs(n, 23, count=4)
+    g_out, u2, v2, m2, thr = gmf.dgc_gmf_step(u, v, m, g, jnp.zeros(n), 0.9, 0.8, 0.3, k)
+    nnz = int(jnp.sum(g_out != 0.0))
+    assert nnz <= k + 5  # + tolerance for exact-tie threshold hits
+    assert nnz >= int(0.9 * k)
+
+
+def test_dgc_gmf_step_tau_zero_equals_dgc_selection():
+    """tau=0: the mask equals DGC's top-k |V| mask."""
+    n, k = 3000, 300
+    u, v, m, g = vecs(n, 29, count=4)
+    g_out, *_ = gmf.dgc_gmf_step(u, v, m, g, jnp.zeros(n), 0.9, 0.0, 0.0, k)
+    u1, v1 = ref.dgc_update(u, v, g, 0.9)
+    mask = ref.topk_mask(jnp.abs(v1), k)
+    want = v1 * mask
+    np.testing.assert_allclose(g_out, want, **TOL)

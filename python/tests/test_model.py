@@ -1,0 +1,175 @@
+"""L2 correctness: flat-ABI packing, model shapes, gradient sanity,
+and short-horizon trainability of both model families."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import cnn, lstm, model as ml, pack
+
+
+# ------------------------------------------------------------ pack/unpack --
+
+
+def test_pack_unpack_roundtrip_lstm():
+    cfg = ml.MODELS["charlstm"]
+    params = ml.init_params(cfg)
+    flat = pack.pack(params)
+    back = pack.unpack(flat, params)
+    for (pa, a), (pb, b) in zip(
+        jax.tree_util.tree_flatten_with_path(params)[0],
+        jax.tree_util.tree_flatten_with_path(back)[0],
+    ):
+        assert jax.tree_util.keystr(pa) == jax.tree_util.keystr(pb)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pack_unpack_roundtrip_cnn():
+    cfg = ml.MODELS["resnet8"]
+    params = ml.init_params(cfg)
+    flat = pack.pack(params)
+    back = pack.unpack(flat, params)
+    np.testing.assert_array_equal(np.asarray(pack.pack(back)), np.asarray(flat))
+
+
+def test_pack_order_deterministic():
+    cfg = ml.MODELS["charlstm"]
+    s1 = pack.spec_of(ml.init_params(cfg))
+    s2 = pack.spec_of(ml.init_params(cfg))
+    assert s1 == s2
+    assert s1 == sorted(s1, key=lambda kv: kv[0])
+
+
+def test_unpack_length_mismatch_raises():
+    cfg = ml.MODELS["charlstm"]
+    params = ml.init_params(cfg)
+    with pytest.raises(ValueError):
+        pack.unpack(jnp.zeros(pack.param_count(params) + 1), params)
+
+
+def test_param_count_matches_flat_len():
+    for name in ("charlstm", "resnet8"):
+        cfg = ml.MODELS[name]
+        assert ml.flat_init(cfg).shape[0] == ml.param_count(cfg)
+
+
+# ------------------------------------------------------------- model fwd ---
+
+
+def test_resnet_logits_shape():
+    cfg = ml.MODELS["resnet8"]
+    params = ml.init_params(cfg)
+    x = jnp.zeros((4, 32, 32, 3))
+    logits = cnn.resnet_apply(params, x, cfg.depth)
+    assert logits.shape == (4, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_resnet_depth_validation():
+    with pytest.raises(AssertionError):
+        cnn.init_resnet(jax.random.PRNGKey(0), depth=10)
+
+
+@pytest.mark.parametrize("depth,nblocks", [(8, 1), (20, 3), (56, 9)])
+def test_resnet_depth_block_count(depth, nblocks):
+    params = cnn.init_resnet(jax.random.PRNGKey(0), depth)
+    blocks = [k for k in params if k.startswith("s") and "b" in k and k != "stem"]
+    assert len(blocks) == 3 * nblocks
+
+
+def test_lstm_logits_shape():
+    cfg = ml.MODELS["charlstm"]
+    params = ml.init_params(cfg)
+    x = jnp.zeros((3, cfg.seq), jnp.int32)
+    logits = lstm.lstm_apply(params, x)
+    assert logits.shape == (3, cfg.seq, cfg.vocab)
+
+
+def test_group_norm_zero_mean_unit_var():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 16)) * 5 + 3
+    y = cnn.group_norm(x, jnp.ones(16), jnp.zeros(16), groups=4)
+    yg = np.asarray(y).reshape(2, 8, 8, 4, 4)
+    np.testing.assert_allclose(yg.mean(axis=(1, 2, 4)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(yg.var(axis=(1, 2, 4)), 1.0, atol=1e-2)
+
+
+# ------------------------------------------------------------ train steps --
+
+
+def _rand_batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.kind == "cnn":
+        x = jnp.asarray(rng.normal(size=(cfg.batch, 32, 32, 3)), jnp.float32)
+        y = jnp.asarray(rng.integers(0, cfg.num_classes, size=(cfg.batch,)), jnp.int32)
+    else:
+        x = jnp.asarray(rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq)), jnp.int32)
+        y = jnp.asarray(rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq)), jnp.int32)
+    return x, y
+
+
+@pytest.mark.parametrize("name", ["charlstm", "resnet8"])
+def test_train_step_signature(name):
+    cfg = ml.MODELS[name]
+    ts = jax.jit(ml.make_train_step(cfg))
+    p0 = ml.flat_init(cfg)
+    x, y = _rand_batch(cfg)
+    loss, grads, nc = ts(p0, x, y)
+    assert loss.shape == ()
+    assert grads.shape == p0.shape
+    assert float(jnp.linalg.norm(grads)) > 0
+    total = cfg.batch * (cfg.seq if cfg.kind == "lstm" else 1)
+    assert 0 <= int(nc) <= total
+
+
+@pytest.mark.parametrize("name", ["charlstm", "resnet8"])
+def test_eval_matches_train_metrics(name):
+    cfg = ml.MODELS[name]
+    ts = jax.jit(ml.make_train_step(cfg))
+    ev = jax.jit(ml.make_eval_step(cfg))
+    p0 = ml.flat_init(cfg)
+    x, y = _rand_batch(cfg, 1)
+    lt, _, nct = ts(p0, x, y)
+    le, nce = ev(p0, x, y)
+    np.testing.assert_allclose(float(lt), float(le), rtol=1e-5)
+    assert int(nct) == int(nce)
+
+
+def test_lstm_sgd_reduces_loss():
+    """A few SGD steps on a fixed batch must reduce the loss (trainability)."""
+    cfg = ml.MODELS["charlstm"]
+    ts = jax.jit(ml.make_train_step(cfg))
+    p = ml.flat_init(cfg)
+    x, y = _rand_batch(cfg, 2)
+    first = None
+    for _ in range(20):
+        loss, grads, _ = ts(p, x, y)
+        if first is None:
+            first = float(loss)
+        p = p - 0.5 * grads
+    assert float(loss) < first - 0.05, (first, float(loss))
+
+
+def test_resnet_sgd_reduces_loss():
+    cfg = ml.MODELS["resnet8"]
+    ts = jax.jit(ml.make_train_step(cfg))
+    p = ml.flat_init(cfg)
+    x, y = _rand_batch(cfg, 3)
+    first = None
+    for _ in range(5):
+        loss, grads, _ = ts(p, x, y)
+        if first is None:
+            first = float(loss)
+        p = p - 0.05 * grads
+    assert float(loss) < first, (first, float(loss))
+
+
+def test_gradient_deterministic():
+    cfg = ml.MODELS["charlstm"]
+    ts = jax.jit(ml.make_train_step(cfg))
+    p0 = ml.flat_init(cfg)
+    x, y = _rand_batch(cfg, 4)
+    _, g1, _ = ts(p0, x, y)
+    _, g2, _ = ts(p0, x, y)
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))

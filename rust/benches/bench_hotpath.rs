@@ -1,0 +1,125 @@
+//! Micro-benchmarks of the L3 hot path (run with `cargo bench`).
+//!
+//! The offline vendored crate set has no criterion, so this is a small
+//! self-contained harness: warmup + N timed iterations, reporting
+//! median/mean/p90 per op. Sizes match the real models (P = 77 850 for
+//! resnet8, 25 920 for charlstm) plus a 1M-parameter stress size.
+//!
+//! Covered (one section per hot-path stage):
+//!   topk/exact, topk/sampled      — selection (dominant cost)
+//!   score/abs, score/gmf          — selection-score construction
+//!   compress/dgc, compress/gmf    — full client compression step
+//!   aggregate/20clients           — server-side sparse mean
+//!   wire/encode+decode            — serialisation
+//!   momentum/accumulate           — client M update
+
+use fedgmf::compress::{primitives, CompressConfig, Compressor, TauSchedule};
+use fedgmf::sparse::merge::Aggregator;
+use fedgmf::sparse::topk;
+use fedgmf::sparse::vector::SparseVec;
+use fedgmf::sparse::wire;
+use fedgmf::util::rng::Rng;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    for _ in 0..3 {
+        f(); // warmup
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
+    let median = samples[samples.len() / 2];
+    let p90 = samples[samples.len() * 9 / 10];
+    println!("{name:<42} median {median:>9.3} ms  mean {mean:>9.3} ms  p90 {p90:>9.3} ms");
+}
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.normal()).collect()
+}
+
+fn main() {
+    println!("== fedgmf hot-path micro-benchmarks ==");
+    for &p in &[77_850usize, 1_000_000] {
+        let label = if p == 77_850 { "P=77850(resnet8)" } else { "P=1M" };
+        let k = p / 10;
+        let scores: Vec<f32> = randvec(p, 1).iter().map(|x| x.abs()).collect();
+        let mut scratch = Vec::new();
+
+        bench(&format!("topk/exact        {label}"), 20, || {
+            std::hint::black_box(topk::threshold_exact(&scores, k, &mut scratch));
+        });
+        bench(&format!("topk/sampled      {label}"), 20, || {
+            std::hint::black_box(topk::threshold_sampled(&scores, k, 7, &mut scratch));
+        });
+
+        let v = randvec(p, 2);
+        let m = randvec(p, 3);
+        let mut z = vec![0.0f32; p];
+        bench(&format!("score/abs         {label}"), 30, || {
+            primitives::abs_score(&mut z, &v);
+            std::hint::black_box(&z);
+        });
+        bench(&format!("score/gmf         {label}"), 30, || {
+            primitives::gmf_score(&mut z, &v, &m, 0.4);
+            std::hint::black_box(&z);
+        });
+
+        let grad = randvec(p, 4);
+        let mut dgc = fedgmf::compress::Dgc::new(&CompressConfig::default(), p);
+        bench(&format!("compress/dgc      {label}"), 15, || {
+            std::hint::black_box(dgc.compress(&grad, k, 1));
+        });
+        let cfg = CompressConfig { tau: TauSchedule::Constant(0.4), ..Default::default() };
+        let mut gmf = fedgmf::compress::DgcGmf::new(&cfg, p);
+        gmf.observe_broadcast(&SparseVec::from_dense(&randvec(p, 5)));
+        bench(&format!("compress/gmf      {label}"), 15, || {
+            std::hint::black_box(gmf.compress(&grad, k, 1));
+        });
+
+        let cfg2 = CompressConfig { exact_topk: false, ..cfg.clone() };
+        let mut gmf2 = fedgmf::compress::DgcGmf::new(&cfg2, p);
+        gmf2.observe_broadcast(&SparseVec::from_dense(&randvec(p, 5)));
+        bench(&format!("compress/gmf-sampled {label}"), 15, || {
+            std::hint::black_box(gmf2.compress(&grad, k, 1));
+        });
+
+        // server-side aggregate of 20 client gradients at rate 0.1
+        let grads: Vec<SparseVec> = (0..20u64)
+            .map(|c| {
+                let raw = randvec(p, 100 + c);
+                let abs: Vec<f32> = raw.iter().map(|x| x.abs()).collect();
+                let ids = topk::select_topk(&abs, k);
+                let vals: Vec<f32> = ids.iter().map(|&i| raw[i as usize]).collect();
+                SparseVec::from_sorted(p, ids, vals)
+            })
+            .collect();
+        let mut agg = Aggregator::new(p);
+        bench(&format!("aggregate/20c     {label}"), 15, || {
+            for g in &grads {
+                agg.add(g);
+            }
+            std::hint::black_box(agg.finish_mean(20));
+        });
+
+        let buf = wire::encode(&grads[0]);
+        bench(&format!("wire/encode       {label}"), 30, || {
+            std::hint::black_box(wire::encode(&grads[0]));
+        });
+        bench(&format!("wire/decode       {label}"), 30, || {
+            std::hint::black_box(wire::decode(&buf).unwrap());
+        });
+
+        let mut mom = randvec(p, 6);
+        bench(&format!("momentum/accum    {label}"), 30, || {
+            primitives::momentum_accumulate(&mut mom, 0.9, &grads[0]);
+            std::hint::black_box(&mom);
+        });
+        println!();
+    }
+}

@@ -1,0 +1,114 @@
+//! End-to-end round-throughput benchmarks, one section per paper table
+//! (run with `cargo bench`). These measure the *system* cost of a
+//! communication round for each technique at each table's workload shape,
+//! on the native engine so the numbers isolate coordinator + compression
+//! + transport (the PJRT model step is benchmarked by the experiment
+//! harness itself and recorded in EXPERIMENTS.md).
+//!
+//!   table3 shape: 20 clients × P=77 850 (resnet8), rate 0.1
+//!   table4 shape: 100 clients × P=25 920 (charlstm), rate 0.1
+//!
+//! Also includes the fig5/fig6 ablation axis: round cost vs compression
+//! rate, demonstrating where the wire dense-fallback crossover sits.
+
+use fedgmf::compress::{CompressConfig, CompressorKind, TauSchedule};
+use fedgmf::coordinator::server::{BroadcastPolicy, FlServer};
+use fedgmf::coordinator::traffic::{TrafficMeter, TrafficPolicy};
+use fedgmf::sparse::wire;
+use fedgmf::util::rng::Rng;
+use std::time::Instant;
+
+/// One synthetic FL round over pre-generated gradients: compress on every
+/// client, ship, aggregate, broadcast. No model step — pure system cost.
+fn round_cost(
+    kind: CompressorKind,
+    clients: usize,
+    p: usize,
+    rate: f64,
+    rounds: usize,
+) -> (f64, usize) {
+    let cfg = CompressConfig { tau: TauSchedule::Constant(0.4), ..Default::default() };
+    let mut comps: Vec<_> = (0..clients).map(|_| fedgmf::compress::build(kind, &cfg, p)).collect();
+    let policy = if kind.server_momentum() {
+        BroadcastPolicy::ServerMomentum { beta: 0.9 }
+    } else {
+        BroadcastPolicy::Aggregate
+    };
+    let mut server = FlServer::new(p, policy);
+    let mut meter = TrafficMeter::new(TrafficPolicy::default());
+    let k = ((rate * p as f64) as usize).max(1);
+    let mut rng = Rng::new(99);
+    let grads: Vec<Vec<f32>> = (0..clients).map(|_| (0..p).map(|_| rng.normal()).collect()).collect();
+
+    let t0 = Instant::now();
+    let mut payload = fedgmf::sparse::vector::SparseVec::empty(p);
+    for round in 0..rounds {
+        meter.begin_round();
+        for (c, comp) in comps.iter_mut().enumerate() {
+            comp.observe_broadcast(&payload);
+            let out = comp.compress(&grads[c], k, round);
+            let buf = wire::encode(&out.gradient);
+            meter.record_uplink(c, buf.len());
+            server.receive(&wire::decode(&buf).unwrap());
+        }
+        let (pl, _ghat) = server.finish_round(clients);
+        let buf = wire::encode(&pl);
+        meter.record_broadcast(buf.len(), clients);
+        payload = pl;
+    }
+    (t0.elapsed().as_secs_f64() * 1e3 / rounds as f64, meter.total())
+}
+
+fn main() {
+    println!("== fedgmf per-round system cost (coordinator+compression+wire, no model step) ==\n");
+
+    println!("-- table3 shape: 20 clients, P=77850 (resnet8), rate 0.1 --");
+    for kind in CompressorKind::ALL {
+        let (ms, bytes) = round_cost(kind, 20, 77_850, 0.1, 8);
+        println!(
+            "{:<10} {:>9.2} ms/round   {:>10.2} KB/round",
+            kind.name(),
+            ms,
+            bytes as f64 / 8.0 / 1e3
+        );
+    }
+
+    println!("\n-- table4 shape: 100 clients, P=25920 (charlstm), rate 0.1 --");
+    for kind in CompressorKind::ALL {
+        let (ms, bytes) = round_cost(kind, 100, 25_920, 0.1, 5);
+        println!(
+            "{:<10} {:>9.2} ms/round   {:>10.2} KB/round",
+            kind.name(),
+            ms,
+            bytes as f64 / 5.0 / 1e3
+        );
+    }
+
+    println!("\n-- fig5/fig6 axis: DGCwGMF round cost vs compression rate (P=77850, 20 clients) --");
+    for rate in [0.1, 0.3, 0.5, 0.7, 0.9] {
+        let (ms, bytes) = round_cost(CompressorKind::DgcWgmf, 20, 77_850, rate, 6);
+        println!(
+            "rate {rate:<4} {:>9.2} ms/round   {:>10.2} KB/round",
+            ms,
+            bytes as f64 / 6.0 / 1e3
+        );
+    }
+
+    println!("\n-- ablation: exact vs sampled top-k inside DGCwGMF (P=1M, 8 clients) --");
+    for (label, exact) in [("exact", true), ("sampled", false)] {
+        let cfg = CompressConfig {
+            tau: TauSchedule::Constant(0.4),
+            exact_topk: exact,
+            ..Default::default()
+        };
+        let mut comp = fedgmf::compress::DgcGmf::new(&cfg, 1_000_000);
+        let mut rng = Rng::new(5);
+        let grad: Vec<f32> = (0..1_000_000).map(|_| rng.normal()).collect();
+        let t0 = Instant::now();
+        for round in 0..6 {
+            use fedgmf::compress::Compressor;
+            std::hint::black_box(comp.compress(&grad, 100_000, round));
+        }
+        println!("topk={label:<8} {:>9.2} ms/compress", t0.elapsed().as_secs_f64() * 1e3 / 6.0);
+    }
+}

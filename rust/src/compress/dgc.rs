@@ -1,0 +1,156 @@
+//! DGC — Deep Gradient Compression (Lin et al., ICLR 2018), the baseline.
+//!
+//! Client keeps momentum-corrected residuals:
+//! ```text
+//!   U ← α·U + ∇         (momentum correction)
+//!   V ← V + U           (residual accumulation)
+//!   mask = top-k(|V|) ; transmit V⊙mask ; U,V ⊙= (1−mask)
+//! ```
+//! Also used verbatim as the client half of DGCwGM (the server adds its
+//! global momentum on the aggregate).
+
+use super::policy::{CompressConfig, Compressor};
+use super::{primitives, Compressed};
+use crate::sparse::vector::SparseVec;
+use crate::util::math::l2_norm;
+
+pub struct Dgc {
+    alpha: f32,
+    clip_norm: f32,
+    exact_topk: bool,
+    u: Vec<f32>,
+    v: Vec<f32>,
+    scores: Vec<f32>,
+    scratch: Vec<f32>,
+    grad_buf: Vec<f32>,
+}
+
+impl Dgc {
+    pub fn new(cfg: &CompressConfig, dim: usize) -> Self {
+        Dgc {
+            alpha: cfg.alpha,
+            clip_norm: cfg.clip_norm,
+            exact_topk: cfg.exact_topk,
+            u: vec![0.0; dim],
+            v: vec![0.0; dim],
+            scores: vec![0.0; dim],
+            scratch: Vec::new(),
+            grad_buf: vec![0.0; dim],
+        }
+    }
+}
+
+impl Compressor for Dgc {
+    fn name(&self) -> &'static str {
+        "DGC"
+    }
+
+    fn observe_broadcast(&mut self, _ghat: &SparseVec) {
+        // DGC tracks no global state on the client.
+    }
+
+    fn compress(&mut self, grad: &[f32], k: usize, round: usize) -> Compressed {
+        debug_assert_eq!(grad.len(), self.u.len());
+        self.grad_buf.copy_from_slice(grad);
+        primitives::clip_gradient(&mut self.grad_buf, self.clip_norm);
+        primitives::dgc_update(&mut self.u, &mut self.v, &self.grad_buf, self.alpha);
+        primitives::abs_score(&mut self.scores, &self.v);
+        let (gradient, threshold) = primitives::extract_and_clear(
+            &mut self.u,
+            &mut self.v,
+            &self.scores,
+            k,
+            self.exact_topk,
+            round as u64,
+            &mut self.scratch,
+        );
+        Compressed { gradient, threshold }
+    }
+
+    fn residual_norm(&self) -> f32 {
+        l2_norm(&self.v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> CompressConfig {
+        CompressConfig { alpha: 0.9, ..Default::default() }
+    }
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn first_round_transmits_topk_of_gradient() {
+        let mut dgc = Dgc::new(&cfg(), 100);
+        let grad = randvec(100, 1);
+        let out = dgc.compress(&grad, 10, 0);
+        assert_eq!(out.gradient.nnz(), 10);
+        // with U=V=0, V after update == grad, so values are gradient values
+        for (&i, &val) in out.gradient.indices.iter().zip(&out.gradient.values) {
+            assert!((val - grad[i as usize]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn residual_accumulates_unselected_mass() {
+        let mut dgc = Dgc::new(&cfg(), 50);
+        let grad = randvec(50, 2);
+        let norm_before = l2_norm(&grad);
+        let out = dgc.compress(&grad, 5, 0);
+        let res = dgc.residual_norm();
+        assert!(res > 0.0 && res < norm_before);
+        // transmitted + residual energy ≈ total (disjoint support)
+        let sent = out.gradient.l2_norm();
+        assert!((sent * sent + res * res - norm_before * norm_before).abs() / (norm_before * norm_before) < 1e-4);
+    }
+
+    #[test]
+    fn no_residual_nothing_lost_over_rounds() {
+        // sum of everything ever transmitted + final residual == sum of all
+        // momentum-corrected gradients (error-feedback invariant)
+        let dim = 200;
+        let mut dgc = Dgc::new(&CompressConfig { alpha: 0.0, ..cfg() }, dim);
+        let mut transmitted = vec![0.0f32; dim];
+        let mut total = vec![0.0f32; dim];
+        for round in 0..20 {
+            let grad = randvec(dim, 100 + round);
+            for i in 0..dim {
+                total[i] += grad[i];
+            }
+            let out = dgc.compress(&grad, 20, round as usize);
+            out.gradient.add_into(&mut transmitted, 1.0);
+        }
+        for i in 0..dim {
+            let residual = total[i] - transmitted[i];
+            assert!((residual - dgc.v[i]).abs() < 1e-4, "i={i}");
+        }
+    }
+
+    #[test]
+    fn momentum_correction_differs_from_plain_momentum() {
+        // alpha > 0 must change the transmitted values vs alpha = 0
+        let grad = randvec(64, 5);
+        let mut a = Dgc::new(&CompressConfig { alpha: 0.9, ..cfg() }, 64);
+        let mut b = Dgc::new(&CompressConfig { alpha: 0.0, ..cfg() }, 64);
+        let _ = a.compress(&grad, 6, 0);
+        let _ = b.compress(&grad, 6, 0);
+        let ga = a.compress(&grad, 6, 1);
+        let gb = b.compress(&grad, 6, 1);
+        assert_ne!(ga.gradient.values, gb.gradient.values);
+    }
+
+    #[test]
+    fn clipping_bounds_update_energy() {
+        let mut dgc = Dgc::new(&CompressConfig { clip_norm: 0.1, alpha: 0.0, ..cfg() }, 32);
+        let grad: Vec<f32> = (0..32).map(|i| (i as f32) * 10.0).collect();
+        let out = dgc.compress(&grad, 32, 0);
+        assert!(out.gradient.l2_norm() <= 0.1 + 1e-5);
+    }
+}

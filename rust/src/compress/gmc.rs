@@ -1,0 +1,169 @@
+//! GMC — Global Momentum Compression (Zhao et al., 2019).
+//!
+//! Client-side global momentum **in the compensation process** (paper
+//! Table 2): instead of DGC's local momentum correction, the client folds
+//! the *previous global update* into the residual each round — Zhao et
+//! al.'s `u_t = (w_{t-1} − w_t)/η` is exactly the broadcast aggregate, so
+//! the recursion `v = g + β·u` realises momentum SGD globally:
+//!
+//! ```text
+//!   U ← Ĝ_{t-1}                 (observe_broadcast; the last global update)
+//!   V ← V + ∇ + β·U             (compensation with global momentum pull)
+//!   mask = top-k(|V|) ; transmit V⊙mask ; V ⊙= (1−mask)
+//! ```
+//!
+//! (Ĝ recursively contains β·its own predecessor, so no client-side
+//! geometric accumulation is needed — accumulating here would compound the
+//! momentum twice and diverge.)
+//!
+//! The paper's §2.2 critique — which our Table 3/Fig 4 reproduction
+//! measures — is that GMC ignores the variance between the local gradient
+//! and the global momentum: under high-EMD data the compensation keeps
+//! pulling V toward a global direction that poorly matches the local
+//! distribution, the residual grows, and late in training the transmitted
+//! values over-fit local data, degrading the global model.
+
+use super::policy::{CompressConfig, Compressor};
+use super::{primitives, Compressed};
+use crate::sparse::vector::SparseVec;
+use crate::util::math::l2_norm;
+
+pub struct Gmc {
+    beta: f32,
+    clip_norm: f32,
+    exact_topk: bool,
+    v: Vec<f32>,
+    m: Vec<f32>,
+    u_dummy: Vec<f32>, // extract_and_clear clears U too; GMC has no U
+    scores: Vec<f32>,
+    scratch: Vec<f32>,
+    grad_buf: Vec<f32>,
+}
+
+impl Gmc {
+    pub fn new(cfg: &CompressConfig, dim: usize) -> Self {
+        Gmc {
+            beta: cfg.beta,
+            clip_norm: cfg.clip_norm,
+            exact_topk: cfg.exact_topk,
+            v: vec![0.0; dim],
+            m: vec![0.0; dim],
+            u_dummy: vec![0.0; dim],
+            scores: vec![0.0; dim],
+            scratch: Vec::new(),
+            grad_buf: vec![0.0; dim],
+        }
+    }
+
+    pub fn momentum_norm(&self) -> f32 {
+        l2_norm(&self.m)
+    }
+}
+
+impl Compressor for Gmc {
+    fn name(&self) -> &'static str {
+        "GMC"
+    }
+
+    fn observe_broadcast(&mut self, ghat: &SparseVec) {
+        // store the last global update (not an accumulation — Ĝ already
+        // carries the momentum recursion)
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        ghat.add_into(&mut self.m, 1.0);
+    }
+
+    fn compress(&mut self, grad: &[f32], k: usize, round: usize) -> Compressed {
+        debug_assert_eq!(grad.len(), self.v.len());
+        self.grad_buf.copy_from_slice(grad);
+        primitives::clip_gradient(&mut self.grad_buf, self.clip_norm);
+        // V ← V + ∇ + β·M  (no local momentum correction)
+        for i in 0..self.v.len() {
+            self.v[i] += self.grad_buf[i] + self.beta * self.m[i];
+        }
+        primitives::abs_score(&mut self.scores, &self.v);
+        let (gradient, threshold) = primitives::extract_and_clear(
+            &mut self.u_dummy,
+            &mut self.v,
+            &self.scores,
+            k,
+            self.exact_topk,
+            round as u64,
+            &mut self.scratch,
+        );
+        Compressed { gradient, threshold }
+    }
+
+    fn residual_norm(&self) -> f32 {
+        l2_norm(&self.v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn without_broadcast_behaves_like_plain_topk_with_residual() {
+        let mut gmc = Gmc::new(&CompressConfig::default(), 80);
+        let grad = randvec(80, 1);
+        let out = gmc.compress(&grad, 8, 0);
+        assert_eq!(out.gradient.nnz(), 8);
+        for (&i, &val) in out.gradient.indices.iter().zip(&out.gradient.values) {
+            assert!((val - grad[i as usize]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn broadcast_biases_compensation() {
+        let dim = 60;
+        let mut a = Gmc::new(&CompressConfig::default(), dim);
+        let mut b = Gmc::new(&CompressConfig::default(), dim);
+        let ghat = SparseVec::new(dim, vec![(0, 10.0), (1, 10.0)]);
+        b.observe_broadcast(&ghat);
+        let grad = randvec(dim, 2);
+        let ga = a.compress(&grad, 6, 0);
+        let gb = b.compress(&grad, 6, 0);
+        assert_ne!(ga.gradient.indices, gb.gradient.indices);
+        // the boosted coordinates should now be selected
+        assert!(gb.gradient.indices.contains(&0));
+        assert!(gb.gradient.indices.contains(&1));
+    }
+
+    #[test]
+    fn stores_last_broadcast_without_accumulating() {
+        // Ĝ already carries the momentum recursion; GMC must not compound it
+        let dim = 10;
+        let mut gmc = Gmc::new(&CompressConfig { beta: 0.5, ..Default::default() }, dim);
+        gmc.observe_broadcast(&SparseVec::new(dim, vec![(3, 8.0)]));
+        assert_eq!(gmc.m[3], 8.0);
+        gmc.observe_broadcast(&SparseVec::new(dim, vec![(4, 2.0)]));
+        assert_eq!(gmc.m[3], 0.0, "previous broadcast replaced, not decayed");
+        assert_eq!(gmc.m[4], 2.0);
+    }
+
+    #[test]
+    fn residual_grows_when_momentum_diverges_from_gradient() {
+        // the §2.2 failure mode in miniature: when the global update points
+        // in a direction unrelated to the local gradient (high variance,
+        // i.e. non-IID), the compensation keeps injecting that foreign mass
+        // into V and the residual runs above the momentum-free case
+        let dim = 100;
+        let mut with_m = Gmc::new(&CompressConfig { beta: 0.9, ..Default::default() }, dim);
+        let mut no_m = Gmc::new(&CompressConfig { beta: 0.9, ..Default::default() }, dim);
+        let grad = randvec(dim, 3);
+        let foreign = SparseVec::from_dense(&randvec(dim, 99)); // uncorrelated
+        for round in 0..10 {
+            with_m.observe_broadcast(&foreign);
+            no_m.observe_broadcast(&SparseVec::empty(dim));
+            let _ = with_m.compress(&grad, 10, round);
+            let _ = no_m.compress(&grad, 10, round);
+        }
+        assert!(with_m.residual_norm() > no_m.residual_norm());
+    }
+}

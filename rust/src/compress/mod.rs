@@ -1,0 +1,50 @@
+//! Gradient compression schemes (the paper's Table 2):
+//!
+//! | Technique | Momentum correction | Client-side GM | Server-side GM |
+//! |-----------|--------------------|----------------|----------------|
+//! | DGC       | yes                | —              | —              |
+//! | GMC       | —                  | compensation   | —              |
+//! | DGCwGM    | yes                | —              | yes (server)   |
+//! | DGCwGMF   | yes                | compression    | —              |
+//!
+//! Client-side state machines live here; the *server*-side half of DGCwGM
+//! (momentum on the aggregate) lives in `coordinator::server` as a
+//! [`BroadcastPolicy`]. All schemes share the same hot-path primitives
+//! (`primitives.rs`), which mirror the L1 Pallas kernels one-to-one and are
+//! equivalence-tested against the AOT artifacts.
+
+pub mod gmc;
+pub mod policy;
+pub mod primitives;
+pub mod schedule;
+
+pub mod dgc;
+pub mod dgc_gmf;
+
+pub use dgc::Dgc;
+pub use dgc_gmf::DgcGmf;
+pub use gmc::Gmc;
+pub use policy::{Compressor, CompressorKind, CompressConfig, TechniqueRow};
+pub use schedule::{SparsityWarmup, TauSchedule};
+
+use crate::sparse::vector::SparseVec;
+
+/// Build a client compressor of the given kind.
+///
+/// `DGCwGM` uses a plain DGC client (its global momentum is server-side);
+/// the distinction is carried by the coordinator's broadcast policy.
+pub fn build(kind: CompressorKind, cfg: &CompressConfig, dim: usize) -> Box<dyn Compressor> {
+    match kind {
+        CompressorKind::Dgc | CompressorKind::DgcWgm => Box::new(Dgc::new(cfg, dim)),
+        CompressorKind::Gmc => Box::new(Gmc::new(cfg, dim)),
+        CompressorKind::DgcWgmf => Box::new(DgcGmf::new(cfg, dim)),
+    }
+}
+
+/// Output of one client compression call.
+#[derive(Clone, Debug)]
+pub struct Compressed {
+    pub gradient: SparseVec,
+    /// selection threshold actually used (diagnostics)
+    pub threshold: f32,
+}

@@ -1,0 +1,133 @@
+//! Compressor trait + configuration shared by all schemes.
+
+use super::Compressed;
+use crate::sparse::vector::SparseVec;
+
+/// Which compression technique a run uses (paper Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CompressorKind {
+    /// Deep Gradient Compression (Lin et al. 2018) — the baseline.
+    Dgc,
+    /// Global Momentum Compression (Zhao et al. 2019).
+    Gmc,
+    /// DGC clients + server-side global momentum broadcast (paper §2.1).
+    DgcWgm,
+    /// DGC + the paper's Global Momentum Fusion (Algorithm 1).
+    DgcWgmf,
+}
+
+impl CompressorKind {
+    pub const ALL: [CompressorKind; 4] =
+        [CompressorKind::Dgc, CompressorKind::Gmc, CompressorKind::DgcWgm, CompressorKind::DgcWgmf];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressorKind::Dgc => "DGC",
+            CompressorKind::Gmc => "GMC",
+            CompressorKind::DgcWgm => "DGCwGM",
+            CompressorKind::DgcWgmf => "DGCwGMF",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CompressorKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "dgc" => Some(CompressorKind::Dgc),
+            "gmc" => Some(CompressorKind::Gmc),
+            "dgcwgm" | "dgc_gm" | "dgc+gm" => Some(CompressorKind::DgcWgm),
+            "dgcwgmf" | "dgc_gmf" | "dgc+gmf" | "gmf" => Some(CompressorKind::DgcWgmf),
+            _ => None,
+        }
+    }
+
+    /// Whether the server runs momentum on the aggregate (DGCwGM only).
+    pub fn server_momentum(&self) -> bool {
+        matches!(self, CompressorKind::DgcWgm)
+    }
+
+    /// Paper Table 2 row for this technique.
+    pub fn technique_row(&self) -> TechniqueRow {
+        match self {
+            CompressorKind::Dgc => TechniqueRow { momentum_correction: true, client_gm: None, server_gm: false },
+            CompressorKind::Gmc => TechniqueRow { momentum_correction: false, client_gm: Some("compensation"), server_gm: false },
+            CompressorKind::DgcWgm => TechniqueRow { momentum_correction: true, client_gm: None, server_gm: true },
+            CompressorKind::DgcWgmf => TechniqueRow { momentum_correction: true, client_gm: Some("compression"), server_gm: false },
+        }
+    }
+}
+
+/// Table 2 introspection record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TechniqueRow {
+    pub momentum_correction: bool,
+    /// None, or where the client-side global momentum participates.
+    pub client_gm: Option<&'static str>,
+    pub server_gm: bool,
+}
+
+/// Hyper-parameters shared across schemes.
+#[derive(Clone, Debug)]
+pub struct CompressConfig {
+    /// local momentum factor α (momentum correction)
+    pub alpha: f32,
+    /// global momentum factor β
+    pub beta: f32,
+    /// fusion ratio schedule τ(round) — GMF only
+    pub tau: super::schedule::TauSchedule,
+    /// gradient L2 clipping before accumulation; <= 0 disables
+    pub clip_norm: f32,
+    /// exact top-k (true) vs DGC sampled-threshold estimation (false)
+    pub exact_topk: bool,
+}
+
+impl Default for CompressConfig {
+    fn default() -> Self {
+        CompressConfig {
+            alpha: 0.9,
+            beta: 0.9,
+            tau: super::schedule::TauSchedule::paper_default(),
+            clip_norm: 0.0,
+            exact_topk: false,
+        }
+    }
+}
+
+/// Client-side compression state machine.
+///
+/// Round protocol (matches Algorithm 1's loop body):
+///   1. `observe_broadcast(Ĝ_{t-1})` — at the end of round t-1 every client
+///      receives the aggregate; schemes tracking global momentum fold it in.
+///   2. `compress(∇_{k,t}, k, t)` — compress the fresh local gradient.
+pub trait Compressor: Send {
+    fn name(&self) -> &'static str;
+    fn observe_broadcast(&mut self, ghat: &SparseVec);
+    fn compress(&mut self, grad: &[f32], k: usize, round: usize) -> Compressed;
+
+    /// Residual (V) L2 norm — over-fitting diagnostic used by Fig. 4 analysis.
+    fn residual_norm(&self) -> f32;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(CompressorKind::parse("dgc"), Some(CompressorKind::Dgc));
+        assert_eq!(CompressorKind::parse("DGCwGMF"), Some(CompressorKind::DgcWgmf));
+        assert_eq!(CompressorKind::parse("dgcwgm"), Some(CompressorKind::DgcWgm));
+        assert_eq!(CompressorKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn table2_rows() {
+        let dgc = CompressorKind::Dgc.technique_row();
+        assert!(dgc.momentum_correction && dgc.client_gm.is_none() && !dgc.server_gm);
+        let gmf = CompressorKind::DgcWgmf.technique_row();
+        assert_eq!(gmf.client_gm, Some("compression"));
+        assert!(!gmf.server_gm);
+        let gm = CompressorKind::DgcWgm.technique_row();
+        assert!(gm.server_gm);
+        assert!(CompressorKind::DgcWgm.server_momentum());
+        assert!(!CompressorKind::DgcWgmf.server_momentum());
+    }
+}

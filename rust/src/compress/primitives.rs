@@ -1,0 +1,218 @@
+//! Hot-path primitives shared by all compression schemes.
+//!
+//! Each function mirrors one L1 Pallas kernel (see
+//! `python/compile/kernels/gmf.py`); the integration test
+//! `rust/tests/pjrt_roundtrip.rs` checks this module against the AOT
+//! artifacts built from those kernels, making the Pallas kernels the
+//! specification and this module the optimised engine.
+
+use crate::sparse::topk;
+use crate::sparse::vector::SparseVec;
+use crate::util::math::l2_norm;
+
+/// Epsilon guarding the normalisation (matches the jax kernels).
+pub const NORM_EPS: f32 = 1e-12;
+
+/// Momentum correction (Alg. 1 lines 6-7, kernel `dgc_update`):
+/// `U ← α·U + g ; V ← V + U` — in place, single fused pass.
+pub fn dgc_update(u: &mut [f32], v: &mut [f32], grad: &[f32], alpha: f32) {
+    debug_assert_eq!(u.len(), v.len());
+    debug_assert_eq!(u.len(), grad.len());
+    for i in 0..u.len() {
+        let un = alpha * u[i] + grad[i];
+        u[i] = un;
+        v[i] += un;
+    }
+}
+
+/// Global momentum accumulate (Alg. 1 line 8): `M ← β·M + Ĝ_{t-1}`,
+/// with the sparse broadcast applied on top of the decayed dense state.
+pub fn momentum_accumulate(m: &mut [f32], beta: f32, ghat: &SparseVec) {
+    debug_assert_eq!(m.len(), ghat.dim);
+    for x in m.iter_mut() {
+        *x *= beta;
+    }
+    ghat.add_into(m, 1.0);
+}
+
+/// GMF selection score (Alg. 1 line 9, kernels `sumsq` + `gmf_fuse`):
+/// `Z = |(1−τ)·N(V) + τ·N(M)|` written into `z`.
+pub fn gmf_score(z: &mut [f32], v: &[f32], m: &[f32], tau: f32) {
+    debug_assert_eq!(z.len(), v.len());
+    debug_assert_eq!(z.len(), m.len());
+    let inv_nv = 1.0 / (l2_norm(v) + NORM_EPS);
+    let inv_nm = 1.0 / (l2_norm(m) + NORM_EPS);
+    let a = (1.0 - tau) * inv_nv;
+    let b = tau * inv_nm;
+    for i in 0..z.len() {
+        z[i] = (a * v[i] + b * m[i]).abs();
+    }
+}
+
+/// |V| selection score (DGC / GMC).
+pub fn abs_score(z: &mut [f32], v: &[f32]) {
+    debug_assert_eq!(z.len(), v.len());
+    for i in 0..z.len() {
+        z[i] = v[i].abs();
+    }
+}
+
+/// Masked extraction + memory update (Alg. 1 lines 10-12, kernel
+/// `mask_apply`): pulls the top-k coordinates of `v` (by `scores`) out into
+/// a sparse gradient and zeroes them in `u` and `v`.
+///
+/// `scratch` is reused across rounds (no allocation when warm).
+pub fn extract_and_clear(
+    u: &mut [f32],
+    v: &mut [f32],
+    scores: &[f32],
+    k: usize,
+    exact: bool,
+    seed: u64,
+    scratch: &mut Vec<f32>,
+) -> (SparseVec, f32) {
+    let threshold = if exact {
+        topk::threshold_exact(scores, k, scratch)
+    } else {
+        topk::threshold_sampled(scores, k, seed, scratch)
+    };
+    let indices = topk::select_at_threshold(scores, threshold, k);
+    let mut values = Vec::with_capacity(indices.len());
+    for &i in &indices {
+        let iu = i as usize;
+        values.push(v[iu]);
+        v[iu] = 0.0;
+        u[iu] = 0.0;
+    }
+    (SparseVec::from_sorted(v.len(), indices, values), threshold)
+}
+
+/// Gradient L2 clipping (DGC detail): scales `grad` in place if its norm
+/// exceeds `clip`; no-op when `clip <= 0`.
+pub fn clip_gradient(grad: &mut [f32], clip: f32) {
+    if clip <= 0.0 {
+        return;
+    }
+    let norm = l2_norm(grad);
+    if norm > clip {
+        let s = clip / norm;
+        for g in grad.iter_mut() {
+            *g *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn dgc_update_matches_formula() {
+        let mut u = vec![1.0, -2.0];
+        let mut v = vec![0.5, 0.5];
+        dgc_update(&mut u, &mut v, &[0.1, 0.2], 0.9);
+        assert!((u[0] - 1.0f32).abs() < 1e-6); // 0.9*1 + 0.1
+        assert!((u[1] - (-1.6f32)).abs() < 1e-6);
+        assert!((v[0] - 1.5).abs() < 1e-6);
+        assert!((v[1] - (-1.1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_accumulate_decays_and_adds() {
+        let mut m = vec![1.0, 2.0, 0.0];
+        let ghat = SparseVec::new(3, vec![(2, 5.0)]);
+        momentum_accumulate(&mut m, 0.5, &ghat);
+        assert_eq!(m, vec![0.5, 1.0, 5.0]);
+    }
+
+    #[test]
+    fn gmf_score_tau_zero_is_scaled_abs_v() {
+        let v = randvec(100, 1);
+        let m = randvec(100, 2);
+        let mut z = vec![0.0; 100];
+        gmf_score(&mut z, &v, &m, 0.0);
+        let nv = l2_norm(&v);
+        for i in 0..100 {
+            assert!((z[i] - (v[i] / nv).abs()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gmf_score_scale_invariant() {
+        let v = randvec(200, 3);
+        let m = randvec(200, 4);
+        let v2: Vec<f32> = v.iter().map(|x| x * 100.0).collect();
+        let mut z1 = vec![0.0; 200];
+        let mut z2 = vec![0.0; 200];
+        gmf_score(&mut z1, &v, &m, 0.4);
+        gmf_score(&mut z2, &v2, &m, 0.4);
+        for (a, b) in z1.iter().zip(&z2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gmf_score_zero_momentum_finite() {
+        let v = randvec(64, 5);
+        let m = vec![0.0; 64];
+        let mut z = vec![0.0; 64];
+        gmf_score(&mut z, &v, &m, 0.6);
+        assert!(z.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn extract_clears_selected_keeps_rest() {
+        let mut u = vec![1.0; 6];
+        let mut v = vec![0.1, 5.0, 0.2, 4.0, 0.3, 0.05];
+        let scores: Vec<f32> = v.iter().map(|x: &f32| x.abs()).collect();
+        let mut scratch = Vec::new();
+        let (g, thr) = extract_and_clear(&mut u, &mut v, &scores, 2, true, 0, &mut scratch);
+        assert_eq!(g.indices, vec![1, 3]);
+        assert_eq!(g.values, vec![5.0, 4.0]);
+        assert_eq!(v[1], 0.0);
+        assert_eq!(v[3], 0.0);
+        assert_eq!(u[1], 0.0);
+        assert_eq!(u[3], 0.0);
+        assert_eq!(v[0], 0.1); // untouched residual
+        assert_eq!(u[0], 1.0);
+        assert!(thr <= 4.0 && thr > 0.3);
+    }
+
+    #[test]
+    fn extract_partitions_v() {
+        // transmitted + residual == original V (paper's orthogonality, Fig 2)
+        let mut u = randvec(500, 6);
+        let mut v = randvec(500, 7);
+        let orig_v = v.clone();
+        let scores: Vec<f32> = v.iter().map(|x| x.abs()).collect();
+        let mut scratch = Vec::new();
+        let (g, _) = extract_and_clear(&mut u, &mut v, &scores, 50, true, 0, &mut scratch);
+        let mut reassembled = v.clone();
+        g.add_into(&mut reassembled, 1.0);
+        for (a, b) in reassembled.iter().zip(&orig_v) {
+            assert_eq!(a, b);
+        }
+        // orthogonality: residual and transmitted have disjoint support
+        let dot: f64 = g.indices.iter().map(|&i| v[i as usize] as f64).sum();
+        assert_eq!(dot, 0.0);
+    }
+
+    #[test]
+    fn clip_caps_norm() {
+        let mut g = vec![3.0, 4.0]; // norm 5
+        clip_gradient(&mut g, 1.0);
+        assert!((l2_norm(&g) - 1.0).abs() < 1e-6);
+        let mut g2 = vec![0.3, 0.4];
+        clip_gradient(&mut g2, 1.0);
+        assert_eq!(g2, vec![0.3, 0.4]); // under the cap: untouched
+        let mut g3 = vec![3.0, 4.0];
+        clip_gradient(&mut g3, 0.0); // disabled
+        assert_eq!(g3, vec![3.0, 4.0]);
+    }
+}

@@ -1,0 +1,136 @@
+//! Schedules: the paper's stepped fusion-ratio ramp and DGC's sparsity
+//! warmup.
+
+/// Fusion ratio τ over training (paper §4.1: "start from 0 and step
+/// increase to 0.6 in 10 steps").
+#[derive(Clone, Debug)]
+pub enum TauSchedule {
+    /// Constant τ.
+    Constant(f32),
+    /// `steps` equal increments from 0 up to `end`, spread over
+    /// `total_rounds` rounds: τ(t) = end · floor(t·steps/total) / steps.
+    Stepped { end: f32, steps: usize, total_rounds: usize },
+}
+
+impl TauSchedule {
+    /// The paper's setting for a run of `total_rounds`.
+    pub fn paper(total_rounds: usize) -> TauSchedule {
+        TauSchedule::Stepped { end: 0.6, steps: 10, total_rounds }
+    }
+
+    /// Placeholder default (rebound to the run length by the config layer).
+    pub fn paper_default() -> TauSchedule {
+        TauSchedule::paper(220)
+    }
+
+    pub fn at(&self, round: usize) -> f32 {
+        match *self {
+            TauSchedule::Constant(tau) => tau,
+            TauSchedule::Stepped { end, steps, total_rounds } => {
+                if total_rounds == 0 || steps == 0 {
+                    return end;
+                }
+                let step = (round * steps) / total_rounds;
+                end * (step.min(steps) as f32) / steps as f32
+            }
+        }
+    }
+}
+
+/// DGC's sparsity warmup: keep-rate starts high (transmit almost
+/// everything) and decays exponentially to the target over the first
+/// `warmup_rounds`, avoiding early-training divergence at aggressive
+/// compression.
+#[derive(Clone, Copy, Debug)]
+pub struct SparsityWarmup {
+    /// final keep rate (paper's "compression rate", e.g. 0.1)
+    pub rate: f64,
+    /// rounds of warmup; 0 disables
+    pub warmup_rounds: usize,
+}
+
+impl SparsityWarmup {
+    pub fn none(rate: f64) -> Self {
+        SparsityWarmup { rate, warmup_rounds: 0 }
+    }
+
+    /// Effective keep-rate for `round`.
+    pub fn at(&self, round: usize) -> f64 {
+        if round >= self.warmup_rounds || self.warmup_rounds == 0 {
+            return self.rate;
+        }
+        // geometric interpolation 1.0 → rate over warmup_rounds
+        let frac = (round + 1) as f64 / self.warmup_rounds as f64;
+        let keep = self.rate.powf(frac);
+        keep.max(self.rate)
+    }
+
+    /// k for a parameter vector of length `dim` at `round` (at least 1).
+    pub fn k_at(&self, dim: usize, round: usize) -> usize {
+        ((self.at(round) * dim as f64).ceil() as usize).clamp(1, dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stepped_tau_ramp() {
+        let s = TauSchedule::paper(100);
+        assert_eq!(s.at(0), 0.0);
+        // step width = 10 rounds; after the first step τ = 0.06
+        assert!((s.at(10) - 0.06).abs() < 1e-6);
+        assert!((s.at(55) - 0.3).abs() < 1e-6);
+        assert!((s.at(99) - 0.54).abs() < 1e-6);
+        assert!((s.at(1000) - 0.6).abs() < 1e-6); // clamped after the ramp
+    }
+
+    #[test]
+    fn constant_tau() {
+        let s = TauSchedule::Constant(0.25);
+        assert_eq!(s.at(0), 0.25);
+        assert_eq!(s.at(999), 0.25);
+    }
+
+    #[test]
+    fn tau_monotone_nondecreasing() {
+        let s = TauSchedule::paper(220);
+        let mut last = -1.0f32;
+        for t in 0..220 {
+            let tau = s.at(t);
+            assert!(tau >= last);
+            assert!((0.0..=0.6).contains(&tau));
+            last = tau;
+        }
+    }
+
+    #[test]
+    fn warmup_decays_to_rate() {
+        let w = SparsityWarmup { rate: 0.1, warmup_rounds: 4 };
+        let keeps: Vec<f64> = (0..6).map(|t| w.at(t)).collect();
+        // strictly decreasing during warmup, then flat at the target
+        assert!(keeps[0] > keeps[1] && keeps[1] > keeps[2] && keeps[2] > keeps[3]);
+        assert!((keeps[3] - 0.1).abs() < 1e-12);
+        assert_eq!(keeps[4], 0.1);
+        assert_eq!(keeps[5], 0.1);
+    }
+
+    #[test]
+    fn warmup_none_is_flat() {
+        let w = SparsityWarmup::none(0.3);
+        assert_eq!(w.at(0), 0.3);
+        assert_eq!(w.at(100), 0.3);
+    }
+
+    #[test]
+    fn k_at_bounds() {
+        let w = SparsityWarmup::none(0.1);
+        assert_eq!(w.k_at(1000, 0), 100);
+        assert_eq!(w.k_at(3, 0), 1);
+        let tiny = SparsityWarmup::none(1e-9);
+        assert_eq!(tiny.k_at(1000, 0), 1); // never zero
+        let full = SparsityWarmup::none(1.0);
+        assert_eq!(full.k_at(1000, 0), 1000);
+    }
+}

@@ -1,0 +1,403 @@
+//! Experiment configuration: typed config + TOML loading + presets.
+//!
+//! A [`RunConfig`] fully describes one FL training run (task, model,
+//! engine, technique, compression and schedule hyper-parameters, data
+//! shape, scale). Experiment harnesses build them programmatically; the
+//! CLI loads them from TOML files (see `configs/` at the repo root) with
+//! `--set section.key=value` overrides.
+
+pub mod toml;
+
+use crate::compress::{CompressConfig, CompressorKind, SparsityWarmup, TauSchedule};
+use crate::coordinator::round::{FlConfig, LrSchedule};
+use crate::coordinator::sampler::Sampler;
+use crate::coordinator::traffic::TrafficPolicy;
+use anyhow::{anyhow, Result};
+use toml::{get, parse, TomlDoc};
+
+/// Which workload a run trains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// synthetic Mod-CIFAR10 image classification (paper §4.2)
+    Cifar,
+    /// synthetic Shakespeare next-char prediction (paper §4.3)
+    Shakespeare,
+    /// Gaussian blobs on the native engine (tests / CI)
+    Blobs,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> Option<Task> {
+        match s.to_ascii_lowercase().as_str() {
+            "cifar" | "cifar10" | "mod-cifar10" => Some(Task::Cifar),
+            "shakespeare" | "shake" => Some(Task::Shakespeare),
+            "blobs" => Some(Task::Blobs),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Cifar => "cifar",
+            Task::Shakespeare => "shakespeare",
+            Task::Blobs => "blobs",
+        }
+    }
+}
+
+/// Which engine executes the model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT artifacts on the PJRT CPU client (production path)
+    Pjrt,
+    /// pure-Rust MLP (tests / artifact-free quick runs)
+    Native,
+}
+
+/// Experiment scale: trades fidelity for wall-clock on this CPU testbed.
+/// `Paper` reproduces the paper's round/client counts exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Default,
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s.to_ascii_lowercase().as_str() {
+            "quick" | "smoke" => Some(Scale::Quick),
+            "default" | "small" => Some(Scale::Default),
+            "paper" | "full" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+}
+
+/// Complete description of one FL run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub task: Task,
+    pub engine: EngineKind,
+    /// manifest model name (pjrt engine)
+    pub model: String,
+    pub technique: CompressorKind,
+    pub clients: usize,
+    pub rounds: usize,
+    pub rate: f64,
+    pub emd: f64,
+    pub alpha: f32,
+    pub beta: f32,
+    pub tau_end: f32,
+    pub tau_steps: usize,
+    pub clip_norm: f32,
+    pub exact_topk: bool,
+    pub warmup_rounds: usize,
+    pub lr: f32,
+    pub batch: usize,
+    pub local_steps: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    /// samples per client (cifar/blobs) or chars per speaker (shakespeare)
+    pub samples_per_client: usize,
+    pub test_size: usize,
+    pub downlink_per_client: bool,
+    pub client_fraction: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            task: Task::Cifar,
+            engine: EngineKind::Pjrt,
+            model: "resnet8".into(),
+            technique: CompressorKind::Dgc,
+            clients: 10,
+            rounds: 30,
+            rate: 0.1,
+            emd: 0.0,
+            alpha: 0.9,
+            beta: 0.9,
+            tau_end: 0.6,
+            tau_steps: 10,
+            clip_norm: 5.0,
+            exact_topk: false,
+            warmup_rounds: 4,
+            lr: 0.1,
+            batch: 32,
+            local_steps: 1,
+            eval_every: 10,
+            seed: 42,
+            samples_per_client: 100,
+            test_size: 320,
+            downlink_per_client: false,
+            client_fraction: 1.0,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Paper-default Shakespeare run shape (Table 1: 100 clients, 80 rounds).
+    pub fn shakespeare() -> Self {
+        RunConfig {
+            task: Task::Shakespeare,
+            model: "charlstm".into(),
+            clients: 100,
+            rounds: 30,
+            lr: 1.0,
+            batch: 16,
+            samples_per_client: 2000,
+            client_fraction: 0.1, // 10 of 100 speakers per round keeps CPU tractable
+            ..Default::default()
+        }
+    }
+
+    /// Apply a scale preset (round/client counts).
+    pub fn with_scale(mut self, scale: Scale) -> Self {
+        match (self.task, scale) {
+            (Task::Cifar, Scale::Quick) => {
+                self.clients = 4;
+                self.rounds = 6;
+                self.samples_per_client = 40;
+                self.test_size = 64;
+                self.eval_every = 3;
+            }
+            (Task::Cifar, Scale::Default) => {} // struct defaults
+            (Task::Cifar, Scale::Paper) => {
+                self.clients = 20;
+                self.rounds = 220;
+                self.samples_per_client = 2500;
+                self.test_size = 1000;
+            }
+            (Task::Shakespeare, Scale::Quick) => {
+                self.clients = 10;
+                self.rounds = 6;
+                self.samples_per_client = 600;
+                self.test_size = 64;
+                self.eval_every = 3;
+                self.client_fraction = 1.0;
+            }
+            (Task::Shakespeare, Scale::Default) => {}
+            (Task::Shakespeare, Scale::Paper) => {
+                self.clients = 100;
+                self.rounds = 80;
+                self.samples_per_client = 4000;
+                self.client_fraction = 1.0;
+            }
+            (Task::Blobs, _) => {}
+        }
+        self
+    }
+
+    /// Build the coordinator config.
+    pub fn fl_config(&self) -> FlConfig {
+        FlConfig {
+            kind: self.technique,
+            compress: CompressConfig {
+                alpha: self.alpha,
+                beta: self.beta,
+                tau: TauSchedule::Stepped {
+                    end: self.tau_end,
+                    steps: self.tau_steps,
+                    total_rounds: self.rounds,
+                },
+                clip_norm: self.clip_norm,
+                exact_topk: self.exact_topk,
+            },
+            rounds: self.rounds,
+            batch_size: self.batch,
+            local_steps: self.local_steps,
+            lr: LrSchedule::step_at_halves(self.lr, self.rounds),
+            warmup: SparsityWarmup { rate: self.rate, warmup_rounds: self.warmup_rounds },
+            sampler: if self.client_fraction >= 1.0 {
+                Sampler::Full
+            } else {
+                Sampler::Fraction(self.client_fraction)
+            },
+            traffic: TrafficPolicy { downlink_per_client: self.downlink_per_client },
+            eval_every: self.eval_every,
+            seed: self.seed,
+        }
+    }
+
+    /// Load from a TOML file + `section.key=value` overrides.
+    pub fn from_toml_str(text: &str, overrides: &[String]) -> Result<Self> {
+        let mut doc = parse(text).map_err(|e| anyhow!("{e}"))?;
+        for ov in overrides {
+            let (path, value) = ov
+                .split_once('=')
+                .ok_or_else(|| anyhow!("override `{ov}` must be section.key=value"))?;
+            let (section, key) = path.trim().split_once('.').unwrap_or(("", path.trim()));
+            let parsed = toml::parse(&format!("k = {}", value.trim()))
+                .map_err(|e| anyhow!("override `{ov}`: {e}"))?;
+            let v = parsed[""]["k"].clone();
+            doc.entry(section.to_string()).or_default().insert(key.to_string(), v);
+        }
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        if let Some(v) = get(doc, "run", "task").and_then(|v| v.as_str()) {
+            cfg.task = Task::parse(v).ok_or_else(|| anyhow!("unknown task `{v}`"))?;
+            if cfg.task == Task::Shakespeare {
+                cfg = RunConfig { task: cfg.task, ..RunConfig::shakespeare() };
+            }
+        }
+        macro_rules! read {
+            ($sec:literal, $key:literal, $field:ident, $conv:ident, $ty:ty) => {
+                if let Some(v) = get(doc, $sec, $key) {
+                    cfg.$field = v
+                        .$conv()
+                        .ok_or_else(|| anyhow!(concat!($sec, ".", $key, ": wrong type")))?
+                        as $ty;
+                }
+            };
+        }
+        if let Some(v) = get(doc, "run", "engine").and_then(|v| v.as_str()) {
+            cfg.engine = match v {
+                "pjrt" => EngineKind::Pjrt,
+                "native" => EngineKind::Native,
+                other => return Err(anyhow!("unknown engine `{other}`")),
+            };
+        }
+        if let Some(v) = get(doc, "run", "model").and_then(|v| v.as_str()) {
+            cfg.model = v.to_string();
+        }
+        if let Some(v) = get(doc, "run", "technique").and_then(|v| v.as_str()) {
+            cfg.technique =
+                CompressorKind::parse(v).ok_or_else(|| anyhow!("unknown technique `{v}`"))?;
+        }
+        read!("run", "rounds", rounds, as_usize, usize);
+        read!("run", "seed", seed, as_usize, u64);
+        read!("data", "clients", clients, as_usize, usize);
+        read!("data", "samples_per_client", samples_per_client, as_usize, usize);
+        read!("data", "test_size", test_size, as_usize, usize);
+        read!("data", "emd", emd, as_f64, f64);
+        read!("compress", "rate", rate, as_f64, f64);
+        read!("compress", "alpha", alpha, as_f64, f32);
+        read!("compress", "beta", beta, as_f64, f32);
+        read!("compress", "tau_end", tau_end, as_f64, f32);
+        read!("compress", "tau_steps", tau_steps, as_usize, usize);
+        read!("compress", "clip_norm", clip_norm, as_f64, f32);
+        read!("compress", "warmup_rounds", warmup_rounds, as_usize, usize);
+        if let Some(v) = get(doc, "compress", "exact_topk") {
+            cfg.exact_topk = v.as_bool().ok_or_else(|| anyhow!("compress.exact_topk: bool"))?;
+        }
+        read!("train", "lr", lr, as_f64, f32);
+        read!("train", "batch", batch, as_usize, usize);
+        read!("train", "local_steps", local_steps, as_usize, usize);
+        read!("train", "eval_every", eval_every, as_usize, usize);
+        read!("train", "client_fraction", client_fraction, as_f64, f64);
+        if let Some(v) = get(doc, "traffic", "downlink_per_client") {
+            cfg.downlink_per_client =
+                v.as_bool().ok_or_else(|| anyhow!("traffic.downlink_per_client: bool"))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0 < self.rate && self.rate <= 1.0) {
+            return Err(anyhow!("rate must be in (0, 1], got {}", self.rate));
+        }
+        if !(0.0..=1.0).contains(&(self.tau_end as f64)) {
+            return Err(anyhow!("tau_end must be in [0, 1]"));
+        }
+        if self.clients == 0 || self.rounds == 0 || self.batch == 0 {
+            return Err(anyhow!("clients, rounds and batch must be positive"));
+        }
+        if self.task == Task::Cifar && self.emd > 1.8 {
+            return Err(anyhow!("cifar EMD max is 1.8 (10 classes), got {}", self.emd));
+        }
+        Ok(())
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{} | {} | {} clients | {} rounds | rate {} | EMD {} | engine {:?}",
+            self.task.name(),
+            self.technique.name(),
+            self.clients,
+            self.rounds,
+            self.rate,
+            self.emd,
+            self.engine
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        RunConfig::default().validate().unwrap();
+        RunConfig::shakespeare().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = RunConfig::from_toml_str(
+            r#"
+[run]
+task = "cifar"
+technique = "dgcwgmf"
+rounds = 12
+[data]
+clients = 5
+emd = 0.99
+[compress]
+rate = 0.3
+"#,
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.technique, CompressorKind::DgcWgmf);
+        assert_eq!(cfg.rounds, 12);
+        assert_eq!(cfg.clients, 5);
+        assert!((cfg.emd - 0.99).abs() < 1e-12);
+        assert!((cfg.rate - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let cfg = RunConfig::from_toml_str(
+            "[run]\ntask = \"cifar\"\nrounds = 10\n",
+            &["run.rounds=99".to_string(), "compress.rate=0.5".to_string()],
+        )
+        .unwrap();
+        assert_eq!(cfg.rounds, 99);
+        assert!((cfg.rate - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(RunConfig::from_toml_str("[compress]\nrate = 0.0\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[run]\ntask = \"nope\"\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[run]\ntechnique = \"nope\"\n", &[]).is_err());
+    }
+
+    #[test]
+    fn scale_presets() {
+        let q = RunConfig::default().with_scale(Scale::Quick);
+        assert!(q.rounds < RunConfig::default().rounds);
+        let p = RunConfig::default().with_scale(Scale::Paper);
+        assert_eq!(p.rounds, 220);
+        assert_eq!(p.clients, 20);
+        let sp = RunConfig::shakespeare().with_scale(Scale::Paper);
+        assert_eq!(sp.rounds, 80);
+        assert_eq!(sp.clients, 100);
+    }
+
+    #[test]
+    fn fl_config_reflects_fields() {
+        let mut rc = RunConfig::default();
+        rc.rate = 0.2;
+        rc.technique = CompressorKind::DgcWgm;
+        let fc = rc.fl_config();
+        assert_eq!(fc.kind, CompressorKind::DgcWgm);
+        assert!((fc.warmup.rate - 0.2).abs() < 1e-12);
+        assert_eq!(fc.rounds, rc.rounds);
+    }
+}

@@ -1,0 +1,229 @@
+//! Minimal TOML-subset parser for experiment configs.
+//!
+//! Supported (all the framework needs): `[section]` tables, `key = value`
+//! with string / integer / float / boolean / homogeneous arrays, `#`
+//! comments, blank lines. Nested tables, dates and inline tables are out of
+//! scope and rejected explicitly.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|x| usize::try_from(x).ok())
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// section → key → value ("" = top-level keys before any section header)
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section header"))?;
+            if name.contains('[') || name.contains('.') {
+                return Err(err("nested/array tables not supported"));
+            }
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+        } else if let Some(eq) = line.find('=') {
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+            doc.get_mut(&section).unwrap().insert(key.to_string(), value);
+        } else {
+            return Err(err("expected `key = value` or `[section]`"));
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: no # inside our string values
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let mut out = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                out.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(out));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+/// Typed accessor over a parsed doc.
+pub fn get<'a>(doc: &'a TomlDoc, section: &str, key: &str) -> Option<&'a TomlValue> {
+    doc.get(section).and_then(|t| t.get(key))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = parse(
+            r#"
+# experiment config
+[run]
+task = "cifar"          # the image task
+rounds = 60
+seed = 42
+
+[compress]
+rate = 0.1
+exact_topk = true
+emd_levels = [0.0, 0.48, 1.35]
+"#,
+        )
+        .unwrap();
+        assert_eq!(get(&doc, "run", "task").unwrap().as_str(), Some("cifar"));
+        assert_eq!(get(&doc, "run", "rounds").unwrap().as_usize(), Some(60));
+        assert_eq!(get(&doc, "compress", "rate").unwrap().as_f64(), Some(0.1));
+        assert_eq!(get(&doc, "compress", "exact_topk").unwrap().as_bool(), Some(true));
+        let arr = match get(&doc, "compress", "emd_levels").unwrap() {
+            TomlValue::Array(a) => a,
+            _ => panic!(),
+        };
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_f64(), Some(1.35));
+    }
+
+    #[test]
+    fn top_level_keys() {
+        let doc = parse("name = \"x\"\n[a]\nb = 1\n").unwrap();
+        assert_eq!(get(&doc, "", "name").unwrap().as_str(), Some("x"));
+        assert_eq!(get(&doc, "a", "b").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("keyonly\n").is_err());
+        assert!(parse("k = \n").is_err());
+        assert!(parse("[a.b]\n").is_err());
+        assert!(parse("k = zzz\n").is_err());
+    }
+
+    #[test]
+    fn string_with_hash_and_escape() {
+        let doc = parse("k = \"a # not comment \\\" q\"\n").unwrap();
+        assert_eq!(get(&doc, "", "k").unwrap().as_str(), Some("a # not comment \" q"));
+    }
+
+    #[test]
+    fn numbers_with_underscores_and_exponents() {
+        let doc = parse("a = 1_000\nb = 2.5e3\nc = -7\n").unwrap();
+        assert_eq!(get(&doc, "", "a").unwrap().as_i64(), Some(1000));
+        assert_eq!(get(&doc, "", "b").unwrap().as_f64(), Some(2500.0));
+        assert_eq!(get(&doc, "", "c").unwrap().as_i64(), Some(-7));
+    }
+}

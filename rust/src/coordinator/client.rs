@@ -1,0 +1,73 @@
+//! FL client: local data shard + compression state.
+//!
+//! The model itself stays synchronized across clients (every client applies
+//! the same broadcast update, Alg. 1 line 15), so the run keeps a single
+//! parameter vector and each client owns only its *divergent* state: the
+//! compressor memory (U, V, M) and its data shard.
+
+use crate::compress::{Compressed, Compressor};
+use crate::data::dataset::{Batch, Dataset};
+use crate::runtime::TrainEngine;
+use crate::sparse::vector::SparseVec;
+use crate::util::rng::Rng;
+
+pub struct FlClient {
+    pub id: usize,
+    pub compressor: Box<dyn Compressor>,
+    pub shard: Box<dyn Dataset + Send>,
+    pub rng: Rng,
+}
+
+impl FlClient {
+    pub fn new(
+        id: usize,
+        compressor: Box<dyn Compressor>,
+        shard: Box<dyn Dataset + Send>,
+        root_rng: &Rng,
+    ) -> Self {
+        FlClient { id, compressor, shard, rng: root_rng.derive(0xC11E ^ id as u64) }
+    }
+
+    /// Receive the round broadcast (Alg. 1 line 14 → line 8 of the next
+    /// round's momentum accumulate).
+    pub fn observe_broadcast(&mut self, payload: &SparseVec) {
+        self.compressor.observe_broadcast(payload);
+    }
+
+    /// One local round: compute the local gradient at the current global
+    /// parameters (averaged over `local_steps` minibatches) and compress it.
+    ///
+    /// Returns (compressed upload, mean training loss, #correct, #seen).
+    pub fn local_round(
+        &mut self,
+        engine: &mut dyn TrainEngine,
+        params: &[f32],
+        batch_size: usize,
+        local_steps: usize,
+        k: usize,
+        round: usize,
+    ) -> anyhow::Result<(Compressed, f64, usize, usize)> {
+        let mut grad_acc: Vec<f32> = vec![0.0; params.len()];
+        let mut loss_sum = 0.0;
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        for _ in 0..local_steps.max(1) {
+            let batch: Batch = self.shard.sample_batch(batch_size, &mut self.rng);
+            let out = engine.train_step(params, &batch)?;
+            for (a, g) in grad_acc.iter_mut().zip(&out.grads) {
+                *a += g;
+            }
+            loss_sum += out.loss;
+            correct += out.ncorrect;
+            seen += batch.prediction_count();
+        }
+        let steps = local_steps.max(1) as f32;
+        if steps > 1.0 {
+            for a in grad_acc.iter_mut() {
+                *a /= steps;
+            }
+        }
+        let compressed = self.compressor.compress(&grad_acc, k, round);
+        Ok((compressed, loss_sum / steps as f64, correct, seen))
+    }
+}

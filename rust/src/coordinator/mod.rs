@@ -1,0 +1,18 @@
+//! The FL coordinator: hub-and-spoke round protocol (paper Fig. 1 + Alg. 1).
+//!
+//! * [`client::FlClient`] — local trainer + compressor state.
+//! * [`server::FlServer`] — sparse aggregation + broadcast policy (plain
+//!   aggregate vs server-side global momentum, the DGCwGM half).
+//! * [`traffic::TrafficMeter`] — byte-exact accounting of both overhead
+//!   terms of §2.1 (client uploads, server broadcast).
+//! * [`round::FlRun`] — the synchronous round loop tying it all together.
+//! * [`sampler`] — client participation policies.
+
+pub mod client;
+pub mod round;
+pub mod sampler;
+pub mod server;
+pub mod traffic;
+
+pub use round::{FlConfig, FlRun, RunSummary};
+pub use server::BroadcastPolicy;

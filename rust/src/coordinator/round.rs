@@ -1,0 +1,369 @@
+//! The synchronous FL round loop (paper Algorithm 1, all four schemes).
+//!
+//! One `FlRun` owns the global model, the clients, the server, the traffic
+//! meter and the network simulator, and drives `rounds` communication
+//! rounds, recording everything the experiment harness needs.
+
+use super::client::FlClient;
+use super::sampler::Sampler;
+use super::server::{BroadcastPolicy, FlServer};
+use super::traffic::{TrafficMeter, TrafficPolicy};
+use crate::compress::{self, CompressConfig, CompressorKind, SparsityWarmup};
+use crate::data::dataset::{Batch, Dataset};
+use crate::metrics::recorder::{Recorder, RoundRecord};
+use crate::runtime::{evaluate, TrainEngine};
+use crate::sim::network::Network;
+use crate::sparse::merge::mean_pairwise_jaccard;
+use crate::sparse::vector::SparseVec;
+use crate::sparse::wire;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Learning-rate schedule: base lr with multiplicative milestones.
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    pub base: f32,
+    /// (round, factor): from `round` on, lr *= factor (applied cumulatively)
+    pub milestones: Vec<(usize, f32)>,
+}
+
+impl LrSchedule {
+    pub fn constant(base: f32) -> Self {
+        LrSchedule { base, milestones: Vec::new() }
+    }
+
+    /// Paper-style: decay at 50% and 75% of training by 10×.
+    pub fn step_at_halves(base: f32, total_rounds: usize) -> Self {
+        LrSchedule {
+            base,
+            milestones: vec![(total_rounds / 2, 0.1), (total_rounds * 3 / 4, 0.1)],
+        }
+    }
+
+    pub fn at(&self, round: usize) -> f32 {
+        let mut lr = self.base;
+        for &(r, f) in &self.milestones {
+            if round >= r {
+                lr *= f;
+            }
+        }
+        lr
+    }
+}
+
+/// Full configuration of one FL training run.
+#[derive(Clone, Debug)]
+pub struct FlConfig {
+    pub kind: CompressorKind,
+    pub compress: CompressConfig,
+    pub rounds: usize,
+    pub batch_size: usize,
+    /// minibatches averaged into the local gradient each round
+    pub local_steps: usize,
+    pub lr: LrSchedule,
+    pub warmup: SparsityWarmup,
+    pub sampler: Sampler,
+    pub traffic: TrafficPolicy,
+    /// evaluate every N rounds (and always on the last round); 0 = last only
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl FlConfig {
+    /// Sensible defaults for a given technique / compression rate / length.
+    pub fn new(kind: CompressorKind, rate: f64, rounds: usize) -> Self {
+        let mut compress = CompressConfig::default();
+        compress.tau = crate::compress::TauSchedule::paper(rounds);
+        FlConfig {
+            kind,
+            compress,
+            rounds,
+            batch_size: 32,
+            local_steps: 1,
+            lr: LrSchedule::step_at_halves(0.1, rounds),
+            warmup: SparsityWarmup { rate, warmup_rounds: (rounds / 20).min(8) },
+            sampler: Sampler::Full,
+            traffic: TrafficPolicy::default(),
+            eval_every: 10,
+            seed: 42,
+        }
+    }
+}
+
+/// Outcome of a run: the recorder plus headline numbers.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub technique: &'static str,
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+    pub final_loss: f64,
+    pub total_traffic_gb: f64,
+    pub uplink_gb: f64,
+    pub downlink_gb: f64,
+    pub sim_seconds: f64,
+    pub mean_mask_overlap: f64,
+    pub recorder: Recorder,
+}
+
+/// One federated training run.
+pub struct FlRun {
+    pub cfg: FlConfig,
+    pub params: Vec<f32>,
+    pub clients: Vec<FlClient>,
+    pub server: FlServer,
+    pub meter: TrafficMeter,
+    pub network: Network,
+    pub recorder: Recorder,
+    test_batches: Vec<Batch>,
+    last_payload: SparseVec,
+}
+
+impl FlRun {
+    /// Build a run: one shard per client. The engine is passed per-call so
+    /// several runs can share one compiled artifact set.
+    pub fn new(
+        engine: &dyn TrainEngine,
+        shards: Vec<Box<dyn Dataset + Send>>,
+        test_batches: Vec<Batch>,
+        network: Network,
+        cfg: FlConfig,
+    ) -> Self {
+        let dim = engine.param_count();
+        let root = Rng::new(cfg.seed);
+        let clients: Vec<FlClient> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| {
+                FlClient::new(id, compress::build(cfg.kind, &cfg.compress, dim), shard, &root)
+            })
+            .collect();
+        let policy = if cfg.kind.server_momentum() {
+            BroadcastPolicy::ServerMomentum { beta: cfg.compress.beta }
+        } else {
+            BroadcastPolicy::Aggregate
+        };
+        FlRun {
+            params: engine.initial_params(),
+            server: FlServer::new(dim, policy),
+            meter: TrafficMeter::new(cfg.traffic),
+            network,
+            recorder: Recorder::new(),
+            clients,
+            test_batches,
+            last_payload: SparseVec::empty(dim),
+            cfg,
+        }
+    }
+
+    /// Execute one communication round; returns the round record.
+    pub fn step_round(
+        &mut self,
+        engine: &mut dyn TrainEngine,
+        round: usize,
+    ) -> anyhow::Result<RoundRecord> {
+        let wall = Instant::now();
+        self.meter.begin_round();
+        let root = Rng::new(self.cfg.seed);
+        let participants = self.cfg.sampler.sample(self.clients.len(), round, &root);
+        let dim = self.params.len();
+        let k = self.cfg.warmup.k_at(dim, round);
+
+        // 1. broadcast of the previous round reaches everyone (Alg.1 l.14+8)
+        if round > 0 {
+            for c in self.clients.iter_mut() {
+                c.observe_broadcast(&self.last_payload);
+            }
+        }
+
+        // 2. local training + compression + upload
+        let mut train_loss = 0.0;
+        let mut grads: Vec<SparseVec> = Vec::with_capacity(participants.len());
+        for &cid in &participants {
+            let client = &mut self.clients[cid];
+            let (compressed, loss, _corr, _seen) = client.local_round(
+                engine,
+                &self.params,
+                self.cfg.batch_size,
+                self.cfg.local_steps,
+                k,
+                round,
+            )?;
+            train_loss += loss;
+            // the gradient actually crosses the wire
+            let buf = wire::encode(&compressed.gradient);
+            self.meter.record_uplink(cid, buf.len());
+            let decoded = wire::decode(&buf).expect("self-encoded gradient must decode");
+            self.server.receive(&decoded);
+            grads.push(decoded);
+        }
+        train_loss /= participants.len().max(1) as f64;
+
+        // 3. aggregate + broadcast
+        let (payload, _ghat) = self.server.finish_round(participants.len());
+        let bcast_buf = wire::encode(&payload);
+        self.meter.record_broadcast(bcast_buf.len(), participants.len());
+        let payload = wire::decode(&bcast_buf).expect("broadcast must decode");
+
+        // 4. synchronized model update (Alg. 1 line 15)
+        let lr = self.cfg.lr.at(round);
+        payload.add_into(&mut self.params, -lr);
+        self.last_payload = payload;
+
+        // 5. diagnostics + eval
+        let refs: Vec<&SparseVec> = grads.iter().collect();
+        let overlap = mean_pairwise_jaccard(&refs);
+        let sim_s = self.network.uplink_time(&self.meter.round_uplinks)
+            + self.network.broadcast_time(bcast_buf.len(), &participants);
+
+        let is_last = round + 1 == self.cfg.rounds;
+        let do_eval = is_last
+            || (self.cfg.eval_every > 0 && round % self.cfg.eval_every == self.cfg.eval_every - 1);
+        let (test_loss, test_acc) = if do_eval && !self.test_batches.is_empty() {
+            evaluate(engine, &self.params, &self.test_batches)?
+        } else {
+            (0.0, 0.0)
+        };
+
+        let rec = RoundRecord {
+            round,
+            train_loss,
+            test_loss,
+            test_accuracy: test_acc,
+            uplink_bytes: self.meter.round_uplink,
+            downlink_bytes: self.meter.round_downlink,
+            aggregate_nnz: self.last_payload.nnz(),
+            mask_overlap: overlap,
+            sim_seconds: sim_s,
+            wall_seconds: wall.elapsed().as_secs_f64(),
+        };
+        self.recorder.push(rec.clone());
+        Ok(rec)
+    }
+
+    /// Drive the full configured number of rounds.
+    pub fn run(&mut self, engine: &mut dyn TrainEngine) -> anyhow::Result<RunSummary> {
+        for round in 0..self.cfg.rounds {
+            self.step_round(engine, round)?;
+        }
+        Ok(self.summary())
+    }
+
+    pub fn summary(&self) -> RunSummary {
+        let overlaps: Vec<f64> = self.recorder.rounds.iter().map(|r| r.mask_overlap).collect();
+        RunSummary {
+            technique: self.cfg.kind.name(),
+            final_accuracy: self.recorder.final_accuracy(),
+            best_accuracy: self.recorder.best_accuracy(),
+            final_loss: self
+                .recorder
+                .rounds
+                .last()
+                .map(|r| if r.test_loss > 0.0 { r.test_loss } else { r.train_loss })
+                .unwrap_or(0.0),
+            total_traffic_gb: self.meter.total_gb(),
+            uplink_gb: self.meter.total_uplink as f64 / 1e9,
+            downlink_gb: self.meter.total_downlink as f64 / 1e9,
+            sim_seconds: self.recorder.total_sim_seconds(),
+            mean_mask_overlap: crate::util::math::mean(&overlaps),
+            recorder: self.recorder.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::{BlobDataset, NativeEngine};
+
+    fn blob_shards(
+        clients: usize,
+        per_client: usize,
+        dim: usize,
+        classes: usize,
+        seed: u64,
+    ) -> (Vec<Box<dyn Dataset + Send>>, Vec<Batch>) {
+        let mut shards: Vec<Box<dyn Dataset + Send>> = Vec::new();
+        for c in 0..clients {
+            // shared centers (same task), disjoint noise per client shard
+            shards.push(Box::new(BlobDataset::generate_split(
+                per_client, dim, classes, 0.4, seed, seed + 1 + c as u64,
+            )));
+        }
+        let test = BlobDataset::generate_split(128, dim, classes, 0.4, seed, seed ^ 0x7E57);
+        let batches = test.eval_batches(32);
+        (shards, batches)
+    }
+
+    fn quick_cfg(kind: CompressorKind) -> FlConfig {
+        let mut cfg = FlConfig::new(kind, 0.1, 30);
+        cfg.lr = LrSchedule::constant(0.5);
+        cfg.eval_every = 5;
+        cfg
+    }
+
+    #[test]
+    fn dgc_run_converges_on_blobs() {
+        let mut engine = NativeEngine::new(8, 12, 4, 1);
+        let (shards, test) = blob_shards(4, 80, 8, 4, 10);
+        let net = Network::uniform(4, Default::default());
+        let mut run = FlRun::new(&engine, shards, test, net, quick_cfg(CompressorKind::Dgc));
+        let summary = run.run(&mut engine).unwrap();
+        assert!(summary.final_accuracy > 0.8, "acc {}", summary.final_accuracy);
+        assert!(summary.total_traffic_gb > 0.0);
+    }
+
+    #[test]
+    fn all_four_schemes_run_and_report() {
+        for kind in CompressorKind::ALL {
+            let mut engine = NativeEngine::new(8, 10, 3, 2);
+            let (shards, test) = blob_shards(3, 60, 8, 3, 20);
+            let net = Network::uniform(3, Default::default());
+            let mut run = FlRun::new(&engine, shards, test, net, quick_cfg(kind));
+            let summary = run.run(&mut engine).unwrap();
+            assert_eq!(summary.technique, kind.name());
+            assert!(summary.final_accuracy > 0.5, "{}: acc {}", kind.name(), summary.final_accuracy);
+        }
+    }
+
+    #[test]
+    fn dgcwgm_downlink_exceeds_dgc() {
+        // paper §2.1: server momentum accumulates support → larger downlink
+        let run_kind = |kind: CompressorKind| -> (f64, f64) {
+            let mut engine = NativeEngine::new(8, 10, 3, 3);
+            let (shards, test) = blob_shards(4, 60, 8, 3, 30);
+            let net = Network::uniform(4, Default::default());
+            let mut run = FlRun::new(&engine, shards, test, net, quick_cfg(kind));
+            let s = run.run(&mut engine).unwrap();
+            (s.downlink_gb, s.uplink_gb)
+        };
+        let (down_dgc, up_dgc) = run_kind(CompressorKind::Dgc);
+        let (down_gm, up_gm) = run_kind(CompressorKind::DgcWgm);
+        assert!(down_gm > down_dgc, "GM downlink {down_gm} vs DGC {down_dgc}");
+        assert!((up_gm - up_dgc).abs() / up_dgc < 0.05, "uplinks comparable");
+    }
+
+    #[test]
+    fn lr_schedule_milestones() {
+        let lr = LrSchedule::step_at_halves(0.1, 100);
+        assert_eq!(lr.at(0), 0.1);
+        assert!((lr.at(50) - 0.01).abs() < 1e-7);
+        assert!((lr.at(75) - 0.001).abs() < 1e-8);
+    }
+
+    #[test]
+    fn traffic_recorded_every_round() {
+        let mut engine = NativeEngine::new(6, 8, 3, 4);
+        let (shards, test) = blob_shards(3, 40, 6, 3, 40);
+        let net = Network::uniform(3, Default::default());
+        let mut cfg = quick_cfg(CompressorKind::DgcWgmf);
+        cfg.rounds = 5;
+        let mut run = FlRun::new(&engine, shards, test, net, cfg);
+        let summary = run.run(&mut engine).unwrap();
+        assert_eq!(summary.recorder.rounds.len(), 5);
+        for r in &summary.recorder.rounds {
+            assert!(r.uplink_bytes > 0);
+            assert!(r.downlink_bytes > 0);
+            assert!(r.sim_seconds > 0.0);
+        }
+    }
+}

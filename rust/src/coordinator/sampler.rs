@@ -1,0 +1,77 @@
+//! Client participation policies.
+//!
+//! The paper trains with full participation (20 / 100 clients every round);
+//! partial participation is a first-class knob for the ablation benches.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub enum Sampler {
+    /// Every client participates every round (paper default).
+    Full,
+    /// A uniform random fraction (at least one client).
+    Fraction(f64),
+    /// A fixed number per round.
+    Count(usize),
+}
+
+impl Sampler {
+    /// Participant ids for `round`, deterministic given `rng` seed.
+    pub fn sample(&self, clients: usize, round: usize, rng: &Rng) -> Vec<usize> {
+        match *self {
+            Sampler::Full => (0..clients).collect(),
+            Sampler::Fraction(f) => {
+                let count = ((clients as f64 * f).round() as usize).clamp(1, clients);
+                Self::choose(clients, count, round, rng)
+            }
+            Sampler::Count(c) => Self::choose(clients, c.clamp(1, clients), round, rng),
+        }
+    }
+
+    fn choose(clients: usize, count: usize, round: usize, rng: &Rng) -> Vec<usize> {
+        let mut ids: Vec<usize> = (0..clients).collect();
+        let mut r = rng.derive(0x5A3F ^ round as u64);
+        r.shuffle(&mut ids);
+        ids.truncate(count);
+        ids.sort_unstable();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_is_everyone() {
+        let rng = Rng::new(1);
+        assert_eq!(Sampler::Full.sample(5, 0, &rng), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn fraction_counts() {
+        let rng = Rng::new(2);
+        assert_eq!(Sampler::Fraction(0.5).sample(10, 0, &rng).len(), 5);
+        assert_eq!(Sampler::Fraction(0.0).sample(10, 0, &rng).len(), 1); // floor 1
+        assert_eq!(Sampler::Fraction(1.0).sample(10, 3, &rng).len(), 10);
+    }
+
+    #[test]
+    fn deterministic_per_round_but_varies_across_rounds() {
+        let rng = Rng::new(3);
+        let a = Sampler::Count(3).sample(10, 7, &rng);
+        let b = Sampler::Count(3).sample(10, 7, &rng);
+        assert_eq!(a, b);
+        let c = Sampler::Count(3).sample(10, 8, &rng);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn ids_sorted_unique_in_range() {
+        let rng = Rng::new(4);
+        let ids = Sampler::Count(6).sample(20, 11, &rng);
+        assert_eq!(ids.len(), 6);
+        assert!(ids.windows(2).all(|w| w[0] < w[1]));
+        assert!(ids.iter().all(|&i| i < 20));
+    }
+}

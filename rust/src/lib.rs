@@ -1,0 +1,22 @@
+//! # fedgmf
+//!
+//! A federated-learning framework with **Global Momentum Fusion** gradient
+//! compression — a full reproduction of Kuo, Kuo & Lin, *"Improving
+//! Federated Learning Communication Efficiency with Global Momentum Fusion
+//! for Gradient Compression Schemes"* (2022).
+//!
+//! Three layers (see DESIGN.md):
+//! * L3 (this crate): FL coordinator, compression policies, sparse
+//!   transport, network simulation, experiment harness.
+//! * L2: JAX models AOT-lowered to HLO artifacts (`python/compile/`).
+//! * L1: Pallas kernels specifying the compression hot path.
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod util;

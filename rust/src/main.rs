@@ -1,0 +1,261 @@
+//! fedgmf — CLI launcher.
+//!
+//! ```text
+//! fedgmf train --config configs/cifar_gmf.toml [--set compress.rate=0.3 ...]
+//! fedgmf experiment --id table3 [--scale quick|default|paper] [--engine native]
+//! fedgmf experiment --list
+//! fedgmf data --task cifar --emd 1.35       # inspect partition statistics
+//! fedgmf artifacts-check                    # verify AOT artifacts load
+//! ```
+//!
+//! (argument parsing is hand-rolled: the build environment is offline and
+//! the vendored crate set has no clap)
+
+use fedgmf::compress::CompressorKind;
+use fedgmf::config::{EngineKind, RunConfig, Scale};
+use fedgmf::experiments::{self, ExpArgs};
+use fedgmf::runtime::manifest::Manifest;
+use fedgmf::runtime::pjrt::PjrtContext;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch(args: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "experiment" | "exp" => cmd_experiment(rest),
+        "data" => cmd_data(rest),
+        "artifacts-check" => cmd_artifacts_check(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            Err(anyhow::anyhow!("unknown command `{other}`"))
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "fedgmf — federated learning with Global Momentum Fusion compression
+
+USAGE:
+  fedgmf train [--config FILE] [--set sec.key=val ...] [--out-dir DIR]
+               [--technique dgc|gmc|dgcwgm|dgcwgmf] [--scale S]
+  fedgmf experiment --id ID [--scale quick|default|paper] [--engine pjrt|native]
+               [--techniques a,b] [--levels 0.1,0.5] [--out-dir DIR] [--seed N]
+  fedgmf experiment --list
+  fedgmf data --task cifar|shakespeare [--emd X] [--clients N]
+  fedgmf artifacts-check [--artifacts DIR]
+"
+    );
+}
+
+/// Tiny flag parser: `--key value` pairs + repeated `--set`.
+struct Flags {
+    vals: Vec<(String, String)>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> anyhow::Result<Flags> {
+        let mut vals = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let k = &args[i];
+            if let Some(name) = k.strip_prefix("--") {
+                if name == "list" {
+                    vals.push(("list".into(), "true".into()));
+                    i += 1;
+                    continue;
+                }
+                let v = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("flag --{name} needs a value"))?;
+                vals.push((name.to_string(), v.clone()));
+                i += 2;
+            } else {
+                return Err(anyhow::anyhow!("unexpected argument `{k}`"));
+            }
+        }
+        Ok(Flags { vals })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.vals.iter().rev().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    fn all(&self, name: &str) -> Vec<String> {
+        self.vals.iter().filter(|(k, _)| k == name).map(|(_, v)| v.clone()).collect()
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.get(name).is_some()
+    }
+}
+
+fn artifacts_dir(f: &Flags) -> PathBuf {
+    f.get("artifacts").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn cmd_train(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags::parse(args)?;
+    let mut cfg = if let Some(path) = f.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        RunConfig::from_toml_str(&text, &f.all("set"))?
+    } else {
+        RunConfig::from_toml_str("", &f.all("set"))?
+    };
+    if let Some(t) = f.get("technique") {
+        cfg.technique = CompressorKind::parse(t)
+            .ok_or_else(|| anyhow::anyhow!("unknown technique `{t}`"))?;
+    }
+    if let Some(s) = f.get("scale") {
+        let scale = Scale::parse(s).ok_or_else(|| anyhow::anyhow!("unknown scale `{s}`"))?;
+        cfg = cfg.with_scale(scale);
+    }
+    if let Some(e) = f.get("engine") {
+        cfg.engine = match e {
+            "pjrt" => EngineKind::Pjrt,
+            "native" => EngineKind::Native,
+            other => return Err(anyhow::anyhow!("unknown engine `{other}`")),
+        };
+    }
+    let out_dir = PathBuf::from(f.get("out-dir").unwrap_or("results/train"));
+    std::fs::create_dir_all(&out_dir)?;
+
+    println!("run: {}", cfg.describe());
+    let mut ctx = None;
+    let (summary, emd) = experiments::runner::execute(&cfg, &artifacts_dir(&f), &mut ctx)?;
+    println!("achieved EMD: {emd:.4}");
+    println!(
+        "final acc {:.4} | best {:.4} | traffic {:.4} GB (up {:.4} / down {:.4}) | sim {:.1}s",
+        summary.final_accuracy,
+        summary.best_accuracy,
+        summary.total_traffic_gb,
+        summary.uplink_gb,
+        summary.downlink_gb,
+        summary.sim_seconds
+    );
+    let curve = out_dir.join(format!("{}.csv", summary.technique));
+    summary.recorder.write_csv(&curve)?;
+    std::fs::write(out_dir.join("summary.json"), summary.recorder.summary_json().to_pretty())?;
+    println!("curve: {}", curve.display());
+    Ok(())
+}
+
+fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags::parse(args)?;
+    if f.has("list") {
+        print!("{}", experiments::list());
+        return Ok(());
+    }
+    let id = f.get("id").ok_or_else(|| anyhow::anyhow!("--id required (or --list)"))?;
+    let mut ea = ExpArgs::new(
+        artifacts_dir(&f),
+        PathBuf::from(f.get("out-dir").unwrap_or("results")),
+    );
+    if let Some(s) = f.get("scale") {
+        ea.scale = Scale::parse(s).ok_or_else(|| anyhow::anyhow!("unknown scale `{s}`"))?;
+    }
+    if let Some(e) = f.get("engine") {
+        ea.engine = Some(match e {
+            "pjrt" => EngineKind::Pjrt,
+            "native" => EngineKind::Native,
+            other => return Err(anyhow::anyhow!("unknown engine `{other}`")),
+        });
+    }
+    if let Some(seed) = f.get("seed") {
+        ea.seed = seed.parse()?;
+    }
+    if let Some(ts) = f.get("techniques") {
+        for t in ts.split(',') {
+            ea.techniques.push(
+                CompressorKind::parse(t).ok_or_else(|| anyhow::anyhow!("unknown technique `{t}`"))?,
+            );
+        }
+    }
+    if let Some(ls) = f.get("levels") {
+        for l in ls.split(',') {
+            ea.levels.push(l.trim().parse()?);
+        }
+    }
+    let report = experiments::run(id, &ea)?;
+    println!("{report}");
+    let report_path = ea.out_dir.join(id).join("report.txt");
+    std::fs::write(&report_path, &report)?;
+    println!("(report saved to {})", report_path.display());
+    Ok(())
+}
+
+fn cmd_data(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags::parse(args)?;
+    let task = f.get("task").unwrap_or("cifar");
+    let mut cfg = match task {
+        "shakespeare" => RunConfig::shakespeare(),
+        _ => RunConfig::default(),
+    };
+    if let Some(e) = f.get("emd") {
+        cfg.emd = e.parse()?;
+    }
+    if let Some(c) = f.get("clients") {
+        cfg.clients = c.parse()?;
+    }
+    let w = experiments::workload::build_workload(&cfg)?;
+    println!("task {} | {} clients | achieved EMD {:.4}", task, w.shards.len(), w.achieved_emd);
+    for (i, s) in w.shards.iter().enumerate().take(8) {
+        let h = s.label_histogram();
+        let nz: Vec<String> = h
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .take(12)
+            .map(|(c, &n)| format!("{c}:{n}"))
+            .collect();
+        println!("  client {i:>3}: {} samples | {}", s.len(), nz.join(" "));
+    }
+    if w.shards.len() > 8 {
+        println!("  ... ({} more clients)", w.shards.len() - 8);
+    }
+    Ok(())
+}
+
+fn cmd_artifacts_check(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags::parse(args)?;
+    let dir = artifacts_dir(&f);
+    let man = Manifest::load(&dir)?;
+    println!("manifest v{} | models: {:?}", man.version, man.names());
+    let ctx = PjrtContext::cpu()?;
+    println!("PJRT platform: {}", ctx.client.platform_name());
+    for entry in &man.models {
+        let t0 = std::time::Instant::now();
+        let _exe = ctx.load(&entry.train_file)?;
+        let _exe2 = ctx.load(&entry.eval_file)?;
+        let _k = fedgmf::runtime::pjrt::KernelExecutor::new(&ctx, entry)?;
+        println!(
+            "  {:<10} P={:<8} batch={:<3} compiled train+eval+kernels in {:.2}s",
+            entry.name,
+            entry.param_count,
+            entry.batch,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    println!("artifacts OK");
+    Ok(())
+}

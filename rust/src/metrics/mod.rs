@@ -1,0 +1,4 @@
+//! Metric recording and reporting.
+pub mod recorder;
+
+pub use recorder::{Recorder, RoundRecord};

@@ -1,0 +1,179 @@
+//! Per-round metric recording: loss/accuracy curves, traffic, mask overlap.
+//!
+//! One `RoundRecord` per communication round; the recorder serialises to CSV
+//! (for the figure series) and JSON (for EXPERIMENTS.md evidence), both via
+//! the in-tree writers (no external deps).
+
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::Path;
+
+/// Everything measured about one communication round.
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub train_loss: f64,
+    pub test_loss: f64,
+    pub test_accuracy: f64,
+    /// bytes uploaded by all participating clients this round
+    pub uplink_bytes: usize,
+    /// bytes of the server broadcast (counted once — hub multicast)
+    pub downlink_bytes: usize,
+    /// nnz of the aggregated gradient (union support size)
+    pub aggregate_nnz: usize,
+    /// mean pairwise Jaccard overlap of client masks
+    pub mask_overlap: f64,
+    /// simulated network seconds for the round
+    pub sim_seconds: f64,
+    /// wall-clock compute seconds for the round (this testbed)
+    pub wall_seconds: f64,
+}
+
+/// Accumulates rounds; produces summaries and files.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    pub fn total_uplink(&self) -> usize {
+        self.rounds.iter().map(|r| r.uplink_bytes).sum()
+    }
+
+    pub fn total_downlink(&self) -> usize {
+        self.rounds.iter().map(|r| r.downlink_bytes).sum()
+    }
+
+    /// Total communication overhead in bytes — the paper's headline column.
+    pub fn total_traffic(&self) -> usize {
+        self.total_uplink() + self.total_downlink()
+    }
+
+    pub fn total_traffic_gb(&self) -> f64 {
+        self.total_traffic() as f64 / 1e9
+    }
+
+    pub fn total_sim_seconds(&self) -> f64 {
+        self.rounds.iter().map(|r| r.sim_seconds).sum()
+    }
+
+    /// Final test accuracy (last evaluated round).
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .rev()
+            .find(|r| r.test_accuracy > 0.0)
+            .map(|r| r.test_accuracy)
+            .unwrap_or(0.0)
+    }
+
+    /// Best test accuracy over the run.
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds.iter().map(|r| r.test_accuracy).fold(0.0, f64::max)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,train_loss,test_loss,test_accuracy,uplink_bytes,downlink_bytes,aggregate_nnz,mask_overlap,sim_seconds,wall_seconds\n",
+        );
+        for r in &self.rounds {
+            out.push_str(&format!(
+                "{},{:.6},{:.6},{:.6},{},{},{},{:.6},{:.6},{:.6}\n",
+                r.round,
+                r.train_loss,
+                r.test_loss,
+                r.test_accuracy,
+                r.uplink_bytes,
+                r.downlink_bytes,
+                r.aggregate_nnz,
+                r.mask_overlap,
+                r.sim_seconds,
+                r.wall_seconds
+            ));
+        }
+        out
+    }
+
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("rounds", Json::num(self.rounds.len() as f64)),
+            ("final_accuracy", Json::num(self.final_accuracy())),
+            ("best_accuracy", Json::num(self.best_accuracy())),
+            ("total_uplink_bytes", Json::num(self.total_uplink() as f64)),
+            ("total_downlink_bytes", Json::num(self.total_downlink() as f64)),
+            ("total_traffic_gb", Json::num(self.total_traffic_gb())),
+            ("total_sim_seconds", Json::num(self.total_sim_seconds())),
+        ])
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, acc: f64, up: usize, down: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            test_accuracy: acc,
+            uplink_bytes: up,
+            downlink_bytes: down,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn totals_and_final() {
+        let mut r = Recorder::new();
+        r.push(rec(0, 0.1, 100, 50));
+        r.push(rec(1, 0.5, 100, 60));
+        r.push(rec(2, 0.4, 100, 70));
+        assert_eq!(r.total_uplink(), 300);
+        assert_eq!(r.total_downlink(), 180);
+        assert_eq!(r.total_traffic(), 480);
+        assert_eq!(r.final_accuracy(), 0.4);
+        assert_eq!(r.best_accuracy(), 0.5);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut r = Recorder::new();
+        r.push(rec(0, 0.3, 10, 5));
+        let csv = r.to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("round,"));
+        assert!(lines[1].starts_with("0,"));
+    }
+
+    #[test]
+    fn summary_json_fields() {
+        let mut r = Recorder::new();
+        r.push(rec(0, 0.3, 10, 5));
+        let j = r.summary_json();
+        assert_eq!(j.get("rounds").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("total_uplink_bytes").unwrap().as_usize(), Some(10));
+    }
+
+    #[test]
+    fn empty_recorder_is_safe() {
+        let r = Recorder::new();
+        assert_eq!(r.final_accuracy(), 0.0);
+        assert_eq!(r.total_traffic(), 0);
+    }
+}

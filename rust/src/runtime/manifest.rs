@@ -1,0 +1,178 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed with the in-tree JSON module.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One lowered model variant's artifact set.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub kind: String, // "cnn" | "lstm"
+    pub param_count: usize,
+    pub batch: usize,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    pub x_dtype: String,
+    pub train_file: PathBuf,
+    pub eval_file: PathBuf,
+    pub init_file: PathBuf,
+    pub gmf_score_file: PathBuf,
+    pub dgc_update_file: PathBuf,
+    pub vocab: Option<usize>,
+    pub seq: Option<usize>,
+    pub num_classes: Option<usize>,
+}
+
+/// The whole `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub version: usize,
+    pub block: usize,
+    pub models: Vec<ModelEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let version = j.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version < 2 {
+            return Err(anyhow!("manifest version {version} too old; re-run `make artifacts`"));
+        }
+        let block = j.get("block").and_then(Json::as_usize).unwrap_or(1024);
+        let models_obj = j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?;
+
+        let mut models = Vec::new();
+        for (name, entry) in models_obj {
+            let file = |part: &str| -> Result<PathBuf> {
+                let f = entry
+                    .at(&[part, "file"])
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("model {name}: missing {part}.file"))?;
+                Ok(dir.join(f))
+            };
+            let shape = |which: &str| -> Vec<usize> {
+                entry
+                    .at(&["inputs", which, "shape"])
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default()
+            };
+            models.push(ModelEntry {
+                name: name.clone(),
+                kind: entry.get("kind").and_then(Json::as_str).unwrap_or("").to_string(),
+                param_count: entry
+                    .get("param_count")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("model {name}: missing param_count"))?,
+                batch: entry.get("batch").and_then(Json::as_usize).unwrap_or(0),
+                x_shape: shape("x"),
+                y_shape: shape("y"),
+                x_dtype: entry
+                    .at(&["inputs", "x", "dtype"])
+                    .and_then(Json::as_str)
+                    .unwrap_or("float32")
+                    .to_string(),
+                train_file: file("train")?,
+                eval_file: file("eval")?,
+                init_file: file("init")?,
+                gmf_score_file: file("gmf_score")?,
+                dgc_update_file: file("dgc_update")?,
+                vocab: entry.get("vocab").and_then(Json::as_usize),
+                seq: entry.get("seq").and_then(Json::as_usize),
+                num_classes: entry.get("num_classes").and_then(Json::as_usize),
+            });
+        }
+        models.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(Manifest { dir: dir.to_path_buf(), version, block, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.iter().map(|m| m.name.as_str()).collect()
+    }
+}
+
+/// Read a raw little-endian f32 file (the exported W_init).
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        return Err(anyhow!("{}: length {} not a multiple of 4", path.display(), bytes.len()));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_dir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("fedgmf-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let man = r#"{
+          "version": 2, "block": 1024, "jax": "0.8.2",
+          "models": {
+            "tiny": {
+              "kind": "cnn", "param_count": 10, "batch": 4,
+              "inputs": {"x": {"shape": [4, 2], "dtype": "float32"},
+                          "y": {"shape": [4], "dtype": "int32"}},
+              "train": {"file": "tiny_train.hlo.txt", "bytes": 1, "sha256_16": "x"},
+              "eval": {"file": "tiny_eval.hlo.txt", "bytes": 1, "sha256_16": "x"},
+              "init": {"file": "tiny_init.f32", "bytes": 40, "sha256_16": "x"},
+              "gmf_score": {"file": "t_g.hlo.txt", "bytes": 1, "sha256_16": "x"},
+              "dgc_update": {"file": "t_d.hlo.txt", "bytes": 1, "sha256_16": "x"}
+            }
+          }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), man).unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_and_resolves_paths() {
+        let dir = fake_manifest_dir();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.version, 2);
+        let e = m.model("tiny").unwrap();
+        assert_eq!(e.param_count, 10);
+        assert_eq!(e.x_shape, vec![4, 2]);
+        assert!(e.train_file.ends_with("tiny_train.hlo.txt"));
+        assert!(m.model("missing").is_err());
+    }
+
+    #[test]
+    fn read_f32_roundtrip() {
+        let dir = fake_manifest_dir();
+        let path = dir.join("vals.f32");
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(read_f32_file(&path).unwrap(), vals);
+    }
+
+    #[test]
+    fn rejects_old_version() {
+        let dir = std::env::temp_dir().join(format!("fedgmf-manifest-old-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"version": 1, "models": {}}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

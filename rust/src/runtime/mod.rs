@@ -1,0 +1,60 @@
+//! Execution engines: how a client turns a minibatch into a gradient.
+//!
+//! * [`pjrt::PjrtEngine`] — the production path: loads the AOT-compiled HLO
+//!   artifacts (L2 JAX models + L1 Pallas kernels, see `python/compile/`)
+//!   and runs them on the PJRT CPU client. Python is never on this path.
+//! * [`native::NativeEngine`] — a self-contained pure-Rust model (MLP with
+//!   hand-written backprop) used by unit/integration tests and benches that
+//!   must run without artifacts, and as a cross-check for the FL dynamics.
+//!
+//! Both implement [`TrainEngine`]; the coordinator is engine-agnostic.
+
+pub mod manifest;
+pub mod native;
+pub mod pjrt;
+
+pub use manifest::{Manifest, ModelEntry};
+
+use crate::data::dataset::Batch;
+
+/// Result of one local training step.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    pub loss: f64,
+    pub grads: Vec<f32>,
+    pub ncorrect: usize,
+}
+
+/// A model execution engine with the flat-parameter ABI (DESIGN.md §2).
+pub trait TrainEngine: Send {
+    /// Length P of the flat parameter vector.
+    fn param_count(&self) -> usize;
+    /// Initial parameters (the W_init the server shares, Alg. 1 line 2).
+    fn initial_params(&self) -> Vec<f32>;
+    /// Loss + flat gradient + #correct on one batch.
+    fn train_step(&mut self, params: &[f32], batch: &Batch) -> anyhow::Result<StepOutput>;
+    /// Loss + #correct on one batch (no gradient).
+    fn eval_step(&mut self, params: &[f32], batch: &Batch) -> anyhow::Result<(f64, usize)>;
+}
+
+/// Evaluate over a list of batches; returns (mean loss, accuracy).
+pub fn evaluate(
+    engine: &mut dyn TrainEngine,
+    params: &[f32],
+    batches: &[Batch],
+) -> anyhow::Result<(f64, f64)> {
+    let mut loss_sum = 0.0;
+    let mut correct = 0usize;
+    let mut preds = 0usize;
+    for b in batches {
+        let (loss, nc) = engine.eval_step(params, b)?;
+        loss_sum += loss * b.len() as f64;
+        correct += nc;
+        preds += b.prediction_count();
+    }
+    let n: usize = batches.iter().map(|b| b.len()).sum();
+    if n == 0 {
+        return Ok((0.0, 0.0));
+    }
+    Ok((loss_sum / n as f64, correct as f64 / preds as f64))
+}

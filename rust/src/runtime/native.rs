@@ -1,0 +1,379 @@
+//! Native mock engine: a pure-Rust one-hidden-layer MLP classifier with
+//! hand-written backprop.
+//!
+//! Exists so that the FL coordinator, the compression schemes and all the
+//! experiment machinery can be exercised (tests, proptests, benches, quick
+//! CI runs) without the AOT artifacts or the PJRT runtime, and fast enough
+//! to run hundreds of FL rounds in milliseconds. Accepts `Features` batches
+//! directly and `Image` batches by treating pixels as a flat feature vector.
+//!
+//! Architecture: x[D] → tanh(W1ᵀx + b1)[H] → softmax(W2ᵀh + b2)[C].
+//! Flat packing order: W1 (D·H), b1 (H), W2 (H·C), b2 (C).
+
+use super::{StepOutput, TrainEngine};
+use crate::data::dataset::Batch;
+use crate::util::math::{argmax, softmax_inplace};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Debug)]
+pub struct NativeEngine {
+    pub input_dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    seed: u64,
+    // scratch buffers (reused across steps; no allocation when warm)
+    h_buf: Vec<f32>,
+    logit_buf: Vec<f32>,
+    dh_buf: Vec<f32>,
+}
+
+impl NativeEngine {
+    pub fn new(input_dim: usize, hidden: usize, classes: usize, seed: u64) -> Self {
+        NativeEngine {
+            input_dim,
+            hidden,
+            classes,
+            seed,
+            h_buf: vec![0.0; hidden],
+            logit_buf: vec![0.0; classes],
+            dh_buf: vec![0.0; hidden],
+        }
+    }
+
+    /// Offsets into the flat parameter vector.
+    fn offsets(&self) -> (usize, usize, usize, usize) {
+        let w1 = 0;
+        let b1 = w1 + self.input_dim * self.hidden;
+        let w2 = b1 + self.hidden;
+        let b2 = w2 + self.hidden * self.classes;
+        (w1, b1, w2, b2)
+    }
+
+    fn batch_views<'a>(&self, batch: &'a Batch) -> Result<(&'a [f32], &'a [i32], usize)> {
+        match batch {
+            Batch::Features { x, y, n, dim } => {
+                if *dim != self.input_dim {
+                    return Err(anyhow!("feature dim {} != engine input {}", dim, self.input_dim));
+                }
+                Ok((x, y, *n))
+            }
+            Batch::Image { x, y, n } => {
+                if x.len() != n * self.input_dim {
+                    return Err(anyhow!(
+                        "image batch pixels {} != n*input_dim {}",
+                        x.len(),
+                        n * self.input_dim
+                    ));
+                }
+                Ok((x, y, *n))
+            }
+            Batch::Tokens { .. } => Err(anyhow!("native engine does not model token batches")),
+        }
+    }
+
+    /// Forward one sample; fills h_buf and logit_buf (softmax-ed in place by
+    /// the caller when needed).
+    fn forward(&mut self, params: &[f32], x: &[f32]) {
+        let (w1, b1, w2, b2) = self.offsets();
+        for j in 0..self.hidden {
+            let mut acc = params[b1 + j];
+            let col = w1 + j; // W1 stored row-major [D, H]: element (i, j) at i*H + j
+            for i in 0..self.input_dim {
+                acc += x[i] * params[col + i * self.hidden];
+            }
+            self.h_buf[j] = acc.tanh();
+        }
+        for c in 0..self.classes {
+            let mut acc = params[b2 + c];
+            for j in 0..self.hidden {
+                acc += self.h_buf[j] * params[w2 + j * self.classes + c];
+            }
+            self.logit_buf[c] = acc;
+        }
+    }
+}
+
+impl TrainEngine for NativeEngine {
+    fn param_count(&self) -> usize {
+        self.input_dim * self.hidden + self.hidden + self.hidden * self.classes + self.classes
+    }
+
+    fn initial_params(&self) -> Vec<f32> {
+        let mut rng = Rng::new(self.seed ^ 0xAB1E);
+        let mut p = vec![0.0f32; self.param_count()];
+        let (w1, b1, w2, b2) = self.offsets();
+        let s1 = (2.0 / self.input_dim as f32).sqrt();
+        let s2 = (2.0 / self.hidden as f32).sqrt();
+        for i in w1..b1 {
+            p[i] = rng.normal() * s1;
+        }
+        for i in w2..b2 {
+            p[i] = rng.normal() * s2;
+        }
+        p
+    }
+
+    fn train_step(&mut self, params: &[f32], batch: &Batch) -> Result<StepOutput> {
+        if params.len() != self.param_count() {
+            return Err(anyhow!("param len {} != {}", params.len(), self.param_count()));
+        }
+        let (xs, ys, n) = self.batch_views(batch)?;
+        let (xs, ys) = (xs.to_vec(), ys.to_vec()); // detach borrows from self
+        let (w1, b1, w2, b2) = self.offsets();
+        let mut grads = vec![0.0f32; self.param_count()];
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        let inv_n = 1.0 / n as f32;
+
+        for s in 0..n {
+            let x = &xs[s * self.input_dim..(s + 1) * self.input_dim];
+            let label = ys[s] as usize;
+            self.forward(params, x);
+            if argmax(&self.logit_buf) == label {
+                correct += 1;
+            }
+            softmax_inplace(&mut self.logit_buf);
+            loss_sum += -(self.logit_buf[label].max(1e-12).ln() as f64);
+
+            // dL/dlogits = softmax - onehot (scaled by 1/n)
+            self.logit_buf[label] -= 1.0;
+            for v in self.logit_buf.iter_mut() {
+                *v *= inv_n;
+            }
+            // backprop into W2, b2, h
+            self.dh_buf.iter_mut().for_each(|d| *d = 0.0);
+            for j in 0..self.hidden {
+                let hj = self.h_buf[j];
+                let row = w2 + j * self.classes;
+                let mut dh = 0.0f32;
+                for c in 0..self.classes {
+                    let dl = self.logit_buf[c];
+                    grads[row + c] += hj * dl;
+                    dh += params[row + c] * dl;
+                }
+                self.dh_buf[j] = dh * (1.0 - hj * hj); // tanh'
+            }
+            for c in 0..self.classes {
+                grads[b2 + c] += self.logit_buf[c];
+            }
+            // backprop into W1, b1
+            for i in 0..self.input_dim {
+                let xi = x[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let row = w1 + i * self.hidden;
+                for j in 0..self.hidden {
+                    grads[row + j] += xi * self.dh_buf[j];
+                }
+            }
+            for j in 0..self.hidden {
+                grads[b1 + j] += self.dh_buf[j];
+            }
+        }
+        Ok(StepOutput { loss: loss_sum / n as f64, grads, ncorrect: correct })
+    }
+
+    fn eval_step(&mut self, params: &[f32], batch: &Batch) -> Result<(f64, usize)> {
+        let (xs, ys, n) = self.batch_views(batch)?;
+        let (xs, ys) = (xs.to_vec(), ys.to_vec());
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        for s in 0..n {
+            let x = &xs[s * self.input_dim..(s + 1) * self.input_dim];
+            let label = ys[s] as usize;
+            self.forward(params, x);
+            if argmax(&self.logit_buf) == label {
+                correct += 1;
+            }
+            softmax_inplace(&mut self.logit_buf);
+            loss_sum += -(self.logit_buf[label].max(1e-12).ln() as f64);
+        }
+        Ok((loss_sum / n as f64, correct))
+    }
+}
+
+/// Synthetic Gaussian-blob feature dataset for native-engine tests: class c
+/// lives around a deterministic center; labels learnable by the MLP.
+pub struct BlobDataset {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+impl BlobDataset {
+    pub fn generate(n: usize, dim: usize, classes: usize, spread: f32, seed: u64) -> Self {
+        Self::generate_split(n, dim, classes, spread, seed, seed)
+    }
+
+    /// Same class centers for every `centers_seed`, independent noise draws
+    /// per `noise_seed` — lets FL tests shard one distribution across
+    /// clients (shared centers) with disjoint sample noise.
+    pub fn generate_split(
+        n: usize,
+        dim: usize,
+        classes: usize,
+        spread: f32,
+        centers_seed: u64,
+        noise_seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(noise_seed ^ 0xB10B);
+        // deterministic well-separated centers
+        let mut centers = vec![0.0f32; classes * dim];
+        let mut crng = Rng::new(centers_seed ^ 0xCE17E5);
+        for v in centers.iter_mut() {
+            *v = crng.normal() * 2.0;
+        }
+        let mut x = Vec::with_capacity(n * dim);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = i % classes;
+            for d in 0..dim {
+                x.push(centers[c * dim + d] + spread * rng.normal());
+            }
+            y.push(c as i32);
+        }
+        BlobDataset { x, y, dim, classes }
+    }
+
+    pub fn batch(&self, ids: &[usize]) -> Batch {
+        let mut x = Vec::with_capacity(ids.len() * self.dim);
+        let mut y = Vec::with_capacity(ids.len());
+        for &i in ids {
+            x.extend_from_slice(&self.x[i * self.dim..(i + 1) * self.dim]);
+            y.push(self.y[i]);
+        }
+        Batch::Features { x, y, n: ids.len(), dim: self.dim }
+    }
+}
+
+impl crate::data::dataset::Dataset for BlobDataset {
+    fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    fn label_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.classes];
+        for &l in &self.y {
+            h[l as usize] += 1;
+        }
+        h
+    }
+
+    fn sample_batch(&self, batch: usize, rng: &mut Rng) -> Batch {
+        let ids: Vec<usize> = (0..batch).map(|_| rng.below(self.len())).collect();
+        self.batch(&ids)
+    }
+
+    fn eval_batches(&self, batch: usize) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i + batch <= self.len() {
+            let ids: Vec<usize> = (i..i + batch).collect();
+            out.push(self.batch(&ids));
+            i += batch;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_formula() {
+        let e = NativeEngine::new(10, 8, 3, 0);
+        assert_eq!(e.param_count(), 10 * 8 + 8 + 8 * 3 + 3);
+        assert_eq!(e.initial_params().len(), e.param_count());
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let mut e = NativeEngine::new(6, 5, 3, 1);
+        let params = e.initial_params();
+        let ds = BlobDataset::generate(9, 6, 3, 0.5, 2);
+        let batch = ds.batch(&[0, 1, 2, 3, 4, 5]);
+        let out = e.train_step(&params, &batch).unwrap();
+
+        let eps = 1e-3f32;
+        let mut checked = 0;
+        for idx in (0..params.len()).step_by(3) {
+            let mut pp = params.clone();
+            pp[idx] += eps;
+            let (lp, _) = loss_of(&mut e, &pp, &batch);
+            let mut pm = params.clone();
+            pm[idx] -= eps;
+            let (lm, _) = loss_of(&mut e, &pm, &batch);
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let an = out.grads[idx] as f64;
+            assert!(
+                (fd - an).abs() < 2e-3 + 0.05 * fd.abs().max(an.abs()),
+                "idx {idx}: fd={fd} analytic={an}"
+            );
+            checked += 1;
+        }
+        assert!(checked > 10);
+    }
+
+    fn loss_of(e: &mut NativeEngine, params: &[f32], batch: &Batch) -> (f64, usize) {
+        e.eval_step(params, batch).unwrap()
+    }
+
+    #[test]
+    fn sgd_learns_blobs() {
+        let mut e = NativeEngine::new(8, 16, 4, 3);
+        let ds = BlobDataset::generate(200, 8, 4, 0.3, 4);
+        let mut params = e.initial_params();
+        let mut rng = Rng::new(5);
+        use crate::data::dataset::Dataset;
+        let mut first_loss = None;
+        for _ in 0..60 {
+            let batch = ds.sample_batch(32, &mut rng);
+            let out = e.train_step(&params, &batch).unwrap();
+            if first_loss.is_none() {
+                first_loss = Some(out.loss);
+            }
+            for (p, g) in params.iter_mut().zip(&out.grads) {
+                *p -= 0.5 * g;
+            }
+        }
+        let batches = ds.eval_batches(50);
+        let (loss, acc) = {
+            let mut correct = 0;
+            let mut ls = 0.0;
+            for b in &batches {
+                let (l, c) = e.eval_step(&params, b).unwrap();
+                ls += l;
+                correct += c;
+            }
+            (ls / batches.len() as f64, correct as f64 / 200.0)
+        };
+        assert!(loss < first_loss.unwrap(), "loss {loss} vs {first_loss:?}");
+        assert!(acc > 0.9, "accuracy {acc}");
+    }
+
+    #[test]
+    fn eval_matches_train_metrics() {
+        let mut e = NativeEngine::new(5, 4, 2, 7);
+        let params = e.initial_params();
+        let ds = BlobDataset::generate(20, 5, 2, 0.4, 8);
+        let batch = ds.batch(&(0..20).collect::<Vec<_>>());
+        let t = e.train_step(&params, &batch).unwrap();
+        let (l, c) = e.eval_step(&params, &batch).unwrap();
+        assert!((t.loss - l).abs() < 1e-9);
+        assert_eq!(t.ncorrect, c);
+    }
+
+    #[test]
+    fn rejects_wrong_dims() {
+        let mut e = NativeEngine::new(5, 4, 2, 7);
+        let params = e.initial_params();
+        let bad = Batch::Features { x: vec![0.0; 12], y: vec![0; 3], n: 3, dim: 4 };
+        assert!(e.train_step(&params, &bad).is_err());
+        let good = Batch::Features { x: vec![0.0; 10], y: vec![0; 2], n: 2, dim: 5 };
+        assert!(e.train_step(&params[..3], &good).is_err());
+    }
+}

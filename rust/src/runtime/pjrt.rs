@@ -1,0 +1,203 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts and runs them.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialised protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see DESIGN.md and aot.py).
+//!
+//! One `PjrtEngine` per model variant; executables are compiled once at
+//! construction and reused for every client every round.
+
+use super::manifest::{read_f32_file, ModelEntry};
+use super::{StepOutput, TrainEngine};
+use crate::data::dataset::Batch;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+use std::rc::Rc;
+
+/// Shared PJRT client (one per process is plenty; executables are cheap).
+pub struct PjrtContext {
+    pub client: xla::PjRtClient,
+}
+
+impl PjrtContext {
+    pub fn cpu() -> Result<Rc<PjrtContext>> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        Ok(Rc::new(PjrtContext { client }))
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))
+    }
+}
+
+/// Engine for one model variant backed by the AOT artifacts.
+pub struct PjrtEngine {
+    /// keeps the client alive for the executables' lifetime
+    _ctx: Rc<PjrtContext>,
+    entry: ModelEntry,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+    init: Vec<f32>,
+}
+
+// The PJRT CPU client is used from one coordinator thread at a time; the
+// raw pointers inside the xla wrappers prevent an auto-impl.
+unsafe impl Send for PjrtEngine {}
+
+impl PjrtEngine {
+    pub fn new(ctx: Rc<PjrtContext>, entry: &ModelEntry) -> Result<PjrtEngine> {
+        let train_exe = ctx.load(&entry.train_file).context("train artifact")?;
+        let eval_exe = ctx.load(&entry.eval_file).context("eval artifact")?;
+        let init = read_f32_file(&entry.init_file).context("init artifact")?;
+        if init.len() != entry.param_count {
+            return Err(anyhow!(
+                "init vector length {} != param_count {}",
+                init.len(),
+                entry.param_count
+            ));
+        }
+        Ok(PjrtEngine { _ctx: ctx.clone(), entry: entry.clone(), train_exe, eval_exe, init })
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    /// Batch → (x, y) literals matching the lowered input specs.
+    fn batch_literals(&self, batch: &Batch) -> Result<(xla::Literal, xla::Literal)> {
+        let dims_x: Vec<i64> = self.entry.x_shape.iter().map(|&d| d as i64).collect();
+        let dims_y: Vec<i64> = self.entry.y_shape.iter().map(|&d| d as i64).collect();
+        match batch {
+            Batch::Image { x, y, .. } => {
+                let expect: usize = self.entry.x_shape.iter().product();
+                if x.len() != expect {
+                    return Err(anyhow!("image batch has {} pixels, artifact expects {expect}", x.len()));
+                }
+                let lx = xla::Literal::vec1(x.as_slice())
+                    .reshape(&dims_x)
+                    .map_err(|e| anyhow!("reshape x: {e}"))?;
+                let ly = xla::Literal::vec1(y.as_slice());
+                Ok((lx, ly))
+            }
+            Batch::Tokens { x, y, .. } => {
+                let expect: usize = self.entry.x_shape.iter().product();
+                if x.len() != expect {
+                    return Err(anyhow!("token batch has {} ids, artifact expects {expect}", x.len()));
+                }
+                let lx = xla::Literal::vec1(x.as_slice())
+                    .reshape(&dims_x)
+                    .map_err(|e| anyhow!("reshape x: {e}"))?;
+                let ly = xla::Literal::vec1(y.as_slice())
+                    .reshape(&dims_y)
+                    .map_err(|e| anyhow!("reshape y: {e}"))?;
+                Ok((lx, ly))
+            }
+            Batch::Features { .. } => Err(anyhow!("PJRT engine has no artifact for feature batches")),
+        }
+    }
+
+    fn run(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<xla::Literal> {
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))
+    }
+}
+
+impl TrainEngine for PjrtEngine {
+    fn param_count(&self) -> usize {
+        self.entry.param_count
+    }
+
+    fn initial_params(&self) -> Vec<f32> {
+        self.init.clone()
+    }
+
+    fn train_step(&mut self, params: &[f32], batch: &Batch) -> Result<StepOutput> {
+        debug_assert_eq!(params.len(), self.entry.param_count);
+        let lp = xla::Literal::vec1(params);
+        let (lx, ly) = self.batch_literals(batch)?;
+        let out = Self::run(&self.train_exe, &[lp, lx, ly])?;
+        // lowered with return_tuple=True: (loss, grads, ncorrect)
+        let (loss, grads, ncorrect) = out
+            .to_tuple3()
+            .map_err(|e| anyhow!("train output tuple: {e}"))?;
+        Ok(StepOutput {
+            loss: loss.get_first_element::<f32>().map_err(|e| anyhow!("loss: {e}"))? as f64,
+            grads: grads.to_vec::<f32>().map_err(|e| anyhow!("grads: {e}"))?,
+            ncorrect: ncorrect.get_first_element::<i32>().map_err(|e| anyhow!("ncorrect: {e}"))?
+                as usize,
+        })
+    }
+
+    fn eval_step(&mut self, params: &[f32], batch: &Batch) -> Result<(f64, usize)> {
+        let lp = xla::Literal::vec1(params);
+        let (lx, ly) = self.batch_literals(batch)?;
+        let out = Self::run(&self.eval_exe, &[lp, lx, ly])?;
+        let (loss, ncorrect) = out.to_tuple2().map_err(|e| anyhow!("eval output tuple: {e}"))?;
+        Ok((
+            loss.get_first_element::<f32>().map_err(|e| anyhow!("loss: {e}"))? as f64,
+            ncorrect.get_first_element::<i32>().map_err(|e| anyhow!("ncorrect: {e}"))? as usize,
+        ))
+    }
+}
+
+/// Standalone wrapper for the L1 kernel artifacts (`gmf_score`,
+/// `dgc_update`) — used by the Rust-vs-Pallas equivalence tests and the
+/// optional fused-score engine.
+pub struct KernelExecutor {
+    gmf_score: xla::PjRtLoadedExecutable,
+    dgc_update: xla::PjRtLoadedExecutable,
+    pub param_count: usize,
+}
+
+unsafe impl Send for KernelExecutor {}
+
+impl KernelExecutor {
+    pub fn new(ctx: &PjrtContext, entry: &ModelEntry) -> Result<KernelExecutor> {
+        Ok(KernelExecutor {
+            gmf_score: ctx.load(&entry.gmf_score_file)?,
+            dgc_update: ctx.load(&entry.dgc_update_file)?,
+            param_count: entry.param_count,
+        })
+    }
+
+    /// Z = |(1−τ)N(V) + τN(M)| via the AOT Pallas kernel.
+    pub fn gmf_score(&self, v: &[f32], m: &[f32], tau: f32) -> Result<Vec<f32>> {
+        let out = PjrtEngine::run(
+            &self.gmf_score,
+            &[xla::Literal::vec1(v), xla::Literal::vec1(m), xla::Literal::scalar(tau)],
+        )?;
+        let z = out.to_tuple1().map_err(|e| anyhow!("gmf_score tuple: {e}"))?;
+        z.to_vec::<f32>().map_err(|e| anyhow!("gmf_score out: {e}"))
+    }
+
+    /// (U', V') = momentum correction via the AOT Pallas kernel.
+    pub fn dgc_update(&self, u: &[f32], v: &[f32], g: &[f32], alpha: f32) -> Result<(Vec<f32>, Vec<f32>)> {
+        let out = PjrtEngine::run(
+            &self.dgc_update,
+            &[
+                xla::Literal::vec1(u),
+                xla::Literal::vec1(v),
+                xla::Literal::vec1(g),
+                xla::Literal::scalar(alpha),
+            ],
+        )?;
+        let (u2, v2) = out.to_tuple2().map_err(|e| anyhow!("dgc_update tuple: {e}"))?;
+        Ok((
+            u2.to_vec::<f32>().map_err(|e| anyhow!("u out: {e}"))?,
+            v2.to_vec::<f32>().map_err(|e| anyhow!("v out: {e}"))?,
+        ))
+    }
+}

@@ -1,0 +1,4 @@
+//! Network simulation: hub-and-spoke topology, bytes → seconds.
+pub mod network;
+
+pub use network::{LinkSpec, Network};

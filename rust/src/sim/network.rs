@@ -1,0 +1,112 @@
+//! Hub-and-spoke network simulator.
+//!
+//! The paper's FL topology: every client talks only to the central server.
+//! Given byte counts from the wire layer, the simulator converts traffic
+//! into time under per-link bandwidth/latency, modelling the round as
+//!
+//!   round_time = max_k (uplink_k) + aggregate_compute + broadcast
+//!
+//! (clients upload in parallel on their own links; the hub's downlink is a
+//! multicast costed once at the slowest client's bandwidth). This gives the
+//! wall-clock view of the paper's communication-overhead tables: bytes are
+//! the primary metric, simulated seconds are reported alongside.
+
+/// Per-link characteristics (asymmetric, like consumer connections).
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    /// client → server bytes/second
+    pub up_bps: f64,
+    /// server → client bytes/second
+    pub down_bps: f64,
+    /// one-way latency, seconds
+    pub latency_s: f64,
+}
+
+impl Default for LinkSpec {
+    fn default() -> Self {
+        // 20 Mbit/s up, 100 Mbit/s down, 25 ms — a typical consumer link
+        LinkSpec { up_bps: 2.5e6, down_bps: 12.5e6, latency_s: 0.025 }
+    }
+}
+
+/// Hub-and-spoke network over `clients` links.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub links: Vec<LinkSpec>,
+}
+
+impl Network {
+    pub fn uniform(clients: usize, spec: LinkSpec) -> Self {
+        Network { links: vec![spec; clients] }
+    }
+
+    /// Heterogeneous helper: every `slow_every`-th client gets `slow` links.
+    pub fn heterogeneous(clients: usize, fast: LinkSpec, slow: LinkSpec, slow_every: usize) -> Self {
+        let links = (0..clients)
+            .map(|k| if slow_every > 0 && k % slow_every == slow_every - 1 { slow } else { fast })
+            .collect();
+        Network { links }
+    }
+
+    pub fn clients(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Time for the parallel uplink phase: slowest participating client.
+    pub fn uplink_time(&self, uplink_bytes: &[(usize, usize)]) -> f64 {
+        uplink_bytes
+            .iter()
+            .map(|&(k, bytes)| {
+                let l = &self.links[k % self.links.len()];
+                l.latency_s + bytes as f64 / l.up_bps
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Time for the broadcast phase to a set of participants: the multicast
+    /// completes when the slowest participant has the payload.
+    pub fn broadcast_time(&self, bytes: usize, participants: &[usize]) -> f64 {
+        participants
+            .iter()
+            .map(|&k| {
+                let l = &self.links[k % self.links.len()];
+                l.latency_s + bytes as f64 / l.down_bps
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uplink_is_slowest_client() {
+        let net = Network::uniform(3, LinkSpec { up_bps: 1000.0, down_bps: 1000.0, latency_s: 0.0 });
+        let t = net.uplink_time(&[(0, 1000), (1, 3000), (2, 500)]);
+        assert!((t - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn broadcast_counts_once_at_slowest() {
+        let fast = LinkSpec { up_bps: 1e6, down_bps: 1e6, latency_s: 0.0 };
+        let slow = LinkSpec { up_bps: 1e6, down_bps: 1e3, latency_s: 0.0 };
+        let net = Network::heterogeneous(4, fast, slow, 4);
+        let t = net.broadcast_time(1000, &[0, 1, 2, 3]);
+        assert!((t - 1.0).abs() < 1e-9, "t={t}"); // limited by the one slow link
+    }
+
+    #[test]
+    fn latency_floors_small_messages() {
+        let net = Network::uniform(2, LinkSpec { up_bps: 1e9, down_bps: 1e9, latency_s: 0.05 });
+        let t = net.uplink_time(&[(0, 1), (1, 1)]);
+        assert!(t >= 0.05);
+    }
+
+    #[test]
+    fn empty_participation_is_free() {
+        let net = Network::uniform(2, LinkSpec::default());
+        assert_eq!(net.uplink_time(&[]), 0.0);
+        assert_eq!(net.broadcast_time(100, &[]), 0.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Sparse aggregation: the server-side combine of client gradients.
+//!
+//! `Ĝ_t = (1/K) Σ_k G_{k,t}` where each `G_k` is sparse. The support of the
+//! result is the **union** of client supports — the quantity the paper's
+//! downlink overhead measures (GMF's whole point is shrinking this union by
+//! correlating client masks through the shared global momentum).
+
+use super::vector::SparseVec;
+
+/// Dense-buffer sparse accumulator, reused across rounds (no allocation in
+/// the round loop once warm).
+pub struct Aggregator {
+    acc: Vec<f32>,
+    touched: Vec<u32>,
+    dirty: Vec<bool>,
+}
+
+impl Aggregator {
+    pub fn new(dim: usize) -> Self {
+        Aggregator { acc: vec![0.0; dim], touched: Vec::new(), dirty: vec![false; dim] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.acc.len()
+    }
+
+    /// Add one client contribution.
+    pub fn add(&mut self, g: &SparseVec) {
+        assert_eq!(g.dim, self.acc.len(), "dimension mismatch");
+        for (&i, &v) in g.indices.iter().zip(&g.values) {
+            let iu = i as usize;
+            if !self.dirty[iu] {
+                self.dirty[iu] = true;
+                self.touched.push(i);
+            }
+            self.acc[iu] += v;
+        }
+    }
+
+    /// Finish the round: divide by `count`, emit the union-support sparse
+    /// aggregate, and reset for the next round.
+    pub fn finish_mean(&mut self, count: usize) -> SparseVec {
+        let scale = if count == 0 { 0.0 } else { 1.0 / count as f32 };
+        self.touched.sort_unstable();
+        let mut indices = Vec::with_capacity(self.touched.len());
+        let mut values = Vec::with_capacity(self.touched.len());
+        for &i in &self.touched {
+            let iu = i as usize;
+            let v = self.acc[iu] * scale;
+            if v != 0.0 {
+                indices.push(i);
+                values.push(v);
+            }
+            self.acc[iu] = 0.0;
+            self.dirty[iu] = false;
+        }
+        self.touched.clear();
+        SparseVec::from_sorted(self.dim(), indices, values)
+    }
+}
+
+/// Union of supports without values (used by broadcast-size analysis).
+pub fn support_union(vs: &[&SparseVec]) -> Vec<u32> {
+    let mut all: Vec<u32> = vs.iter().flat_map(|v| v.indices.iter().copied()).collect();
+    all.sort_unstable();
+    all.dedup();
+    all
+}
+
+/// Mean Jaccard overlap between consecutive client masks — the mask
+/// similarity statistic GMF is designed to raise (higher overlap → smaller
+/// union → cheaper downlink).
+pub fn mean_pairwise_jaccard(vs: &[&SparseVec]) -> f64 {
+    if vs.len() < 2 {
+        return 1.0;
+    }
+    let mut total = 0.0;
+    let mut pairs = 0usize;
+    for i in 0..vs.len() {
+        for j in (i + 1)..vs.len() {
+            total += jaccard(&vs[i].indices, &vs[j].indices);
+            pairs += 1;
+        }
+    }
+    total / pairs as f64
+}
+
+fn jaccard(a: &[u32], b: &[u32]) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    let (mut i, mut j, mut inter) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    let union = a.len() + b.len() - inter;
+    inter as f64 / union as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_of_two() {
+        let mut agg = Aggregator::new(6);
+        agg.add(&SparseVec::new(6, vec![(0, 2.0), (3, 4.0)]));
+        agg.add(&SparseVec::new(6, vec![(3, 2.0), (5, 6.0)]));
+        let out = agg.finish_mean(2);
+        assert_eq!(out.indices, vec![0, 3, 5]);
+        assert_eq!(out.values, vec![1.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn aggregator_resets_between_rounds() {
+        let mut agg = Aggregator::new(4);
+        agg.add(&SparseVec::new(4, vec![(1, 1.0)]));
+        let _ = agg.finish_mean(1);
+        agg.add(&SparseVec::new(4, vec![(2, 5.0)]));
+        let out = agg.finish_mean(1);
+        assert_eq!(out.indices, vec![2]);
+        assert_eq!(out.values, vec![5.0]);
+    }
+
+    #[test]
+    fn cancellation_drops_zero_entries() {
+        let mut agg = Aggregator::new(4);
+        agg.add(&SparseVec::new(4, vec![(1, 1.0)]));
+        agg.add(&SparseVec::new(4, vec![(1, -1.0)]));
+        let out = agg.finish_mean(2);
+        assert_eq!(out.nnz(), 0);
+    }
+
+    #[test]
+    fn union_support() {
+        let a = SparseVec::new(10, vec![(1, 1.0), (5, 1.0)]);
+        let b = SparseVec::new(10, vec![(5, 1.0), (7, 1.0)]);
+        assert_eq!(support_union(&[&a, &b]), vec![1, 5, 7]);
+    }
+
+    #[test]
+    fn jaccard_values() {
+        let a = SparseVec::new(10, vec![(1, 1.0), (2, 1.0)]);
+        let b = SparseVec::new(10, vec![(2, 1.0), (3, 1.0)]);
+        let c = SparseVec::new(10, vec![(1, 1.0), (2, 1.0)]);
+        assert!((mean_pairwise_jaccard(&[&a, &b]) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(mean_pairwise_jaccard(&[&a, &c]), 1.0);
+        assert_eq!(mean_pairwise_jaccard(&[&a]), 1.0);
+    }
+
+    #[test]
+    fn empty_mean() {
+        let mut agg = Aggregator::new(8);
+        let out = agg.finish_mean(0);
+        assert_eq!(out.nnz(), 0);
+    }
+}

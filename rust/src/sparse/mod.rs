@@ -1,0 +1,9 @@
+//! Sparse gradient substrate: COO vectors, top-k selection, aggregation,
+//! wire format with exact byte accounting.
+pub mod merge;
+pub mod topk;
+pub mod vector;
+pub mod wire;
+
+pub use merge::Aggregator;
+pub use vector::SparseVec;

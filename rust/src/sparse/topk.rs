@@ -1,0 +1,244 @@
+//! Top-k selection — the L3 hot path of every compression scheme.
+//!
+//! Each client, each round, selects the k largest-score coordinates out of P
+//! (P ≈ 10^5..10^6, k = rate·P). We provide:
+//!
+//! * [`threshold_exact`] — exact k-th largest score via iterative quickselect
+//!   on a scratch buffer (no recursion, median-of-three pivots, O(P) expected).
+//! * [`threshold_sampled`] — DGC's trick: estimate the threshold from a
+//!   deterministic sample, then correct by counting; falls back to exact
+//!   refinement only on the (rare) underflow. Used by the perf-tuned path.
+//! * [`select_topk`] — mask extraction at a threshold with an exact-k tie
+//!   policy (first-index-wins, matching `jax.lax.top_k` determinism closely
+//!   enough for the equivalence tests, which compare sets at distinct scores).
+
+use crate::util::rng::Rng;
+
+/// Exact value of the k-th largest element (1-based: k=1 → max).
+/// Returns `f32::NEG_INFINITY` for k == 0 and the minimum for k >= len.
+pub fn threshold_exact(scores: &[f32], k: usize, scratch: &mut Vec<f32>) -> f32 {
+    if k == 0 {
+        return f32::INFINITY;
+    }
+    if k >= scores.len() {
+        return scores.iter().cloned().fold(f32::INFINITY, f32::min);
+    }
+    scratch.clear();
+    scratch.extend_from_slice(scores);
+    let kth_from_start = scores.len() - k; // k-th largest == (n-k)-th smallest (0-based)
+    *order_stat(scratch, kth_from_start)
+}
+
+/// Iterative quickselect for the idx-th smallest (0-based) element.
+fn order_stat(buf: &mut [f32], idx: usize) -> &f32 {
+    let (mut lo, mut hi) = (0usize, buf.len());
+    loop {
+        debug_assert!(lo <= idx && idx < hi);
+        if hi - lo <= 8 {
+            buf[lo..hi].sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            return &buf[idx];
+        }
+        // median-of-three pivot
+        let mid = lo + (hi - lo) / 2;
+        let (a, b, c) = (buf[lo], buf[mid], buf[hi - 1]);
+        let pivot = median3(a, b, c);
+
+        // three-way partition (Dutch flag) to be robust against duplicates
+        let (mut lt, mut i, mut gt) = (lo, lo, hi);
+        while i < gt {
+            if buf[i] < pivot {
+                buf.swap(lt, i);
+                lt += 1;
+                i += 1;
+            } else if buf[i] > pivot {
+                gt -= 1;
+                buf.swap(i, gt);
+            } else {
+                i += 1;
+            }
+        }
+        if idx < lt {
+            hi = lt;
+        } else if idx >= gt {
+            lo = gt;
+        } else {
+            return &buf[idx]; // inside the == pivot run
+        }
+    }
+}
+
+fn median3(a: f32, b: f32, c: f32) -> f32 {
+    a.max(b).min(a.min(b).max(c))
+}
+
+/// DGC-style sampled threshold estimation — *exact* result, sampled speed.
+///
+/// Samples `max(1024, P/100)` scores deterministically (seeded) and picks a
+/// deliberately *low* candidate threshold (targeting ~2k survivors), so that
+/// the survivor set almost surely contains the true top-k; the exact k-th
+/// largest is then selected among the survivors only (≈2k ≪ P elements).
+/// Falls back to a full exact select in the rare undershoot case, so the
+/// returned threshold always equals [`threshold_exact`]'s.
+pub fn threshold_sampled(scores: &[f32], k: usize, seed: u64, scratch: &mut Vec<f32>) -> f32 {
+    let n = scores.len();
+    if k == 0 {
+        return f32::INFINITY;
+    }
+    if k >= n {
+        return scores.iter().cloned().fold(f32::INFINITY, f32::min);
+    }
+    let sample_n = (n / 100).max(1024).min(n);
+    let mut rng = Rng::new(seed);
+    scratch.clear();
+    for _ in 0..sample_n {
+        scratch.push(scores[rng.below(n)]);
+    }
+    // target 2k survivors (safety margin against sampling noise)
+    let k_sample = ((2.0 * k as f64) * (sample_n as f64) / (n as f64)).ceil() as usize;
+    let k_sample = k_sample.clamp(1, sample_n);
+    let idx = sample_n - k_sample;
+    let candidate = *order_stat(scratch, idx);
+
+    scratch.clear();
+    scratch.extend(scores.iter().cloned().filter(|&s| s >= candidate));
+    if scratch.len() < k {
+        // undershoot (heavy ties / adversarial distribution): full fallback
+        return threshold_exact(scores, k, scratch);
+    }
+    let idx = scratch.len() - k;
+    *order_stat(scratch, idx)
+}
+
+/// Collect the indices whose score clears `threshold`, capped at `k`
+/// (first-index-wins on ties). Returns sorted indices.
+pub fn select_at_threshold(scores: &[f32], threshold: f32, k: usize) -> Vec<u32> {
+    let mut out = Vec::with_capacity(k.min(scores.len()));
+    for (i, &s) in scores.iter().enumerate() {
+        if s >= threshold {
+            out.push(i as u32);
+            if out.len() == k {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Convenience: exact top-k indices of `scores` (sorted ascending by index).
+pub fn select_topk(scores: &[f32], k: usize) -> Vec<u32> {
+    let mut scratch = Vec::new();
+    let t = threshold_exact(scores, k, &mut scratch);
+    select_at_threshold(scores, t, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn brute_topk(scores: &[f32], k: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b as usize]
+                .partial_cmp(&scores[a as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut top: Vec<u32> = idx.into_iter().take(k).collect();
+        top.sort_unstable();
+        top
+    }
+
+    #[test]
+    fn exact_threshold_matches_sort() {
+        let mut rng = Rng::new(1);
+        for n in [1usize, 2, 7, 100, 1000] {
+            let scores: Vec<f32> = (0..n).map(|_| rng.normal().abs()).collect();
+            let mut sorted = scores.clone();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let mut scratch = Vec::new();
+            for k in [1usize, n / 2, n] {
+                if k == 0 || k > n {
+                    continue;
+                }
+                let t = threshold_exact(&scores, k, &mut scratch);
+                assert_eq!(t, sorted[k - 1], "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_with_duplicates() {
+        let scores = vec![1.0f32; 100];
+        let mut scratch = Vec::new();
+        assert_eq!(threshold_exact(&scores, 10, &mut scratch), 1.0);
+        let sel = select_at_threshold(&scores, 1.0, 10);
+        assert_eq!(sel, (0..10u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn select_topk_matches_brute_force() {
+        let mut rng = Rng::new(2);
+        for n in [10usize, 257, 4096] {
+            // distinct scores so set comparison is well-defined
+            let scores: Vec<f32> = (0..n).map(|i| rng.f32() + i as f32 * 1e-7).collect();
+            for k in [1usize, 3, n / 10 + 1, n / 2] {
+                assert_eq!(select_topk(&scores, k), brute_topk(&scores, k), "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_selects_exactly_k() {
+        let mut rng = Rng::new(3);
+        let n = 100_000;
+        let scores: Vec<f32> = (0..n).map(|_| rng.normal().abs()).collect();
+        let k = 10_000;
+        let mut scratch = Vec::new();
+        let t = threshold_sampled(&scores, k, 42, &mut scratch);
+        let survivors = scores.iter().filter(|&&s| s >= t).count();
+        assert_eq!(survivors, k, "distinct scores: survivors must equal k");
+    }
+
+    #[test]
+    fn sampled_equals_exact() {
+        let mut rng = Rng::new(4);
+        let n = 50_000;
+        let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let mut scratch = Vec::new();
+        for k in [1usize, 100, 5000, 25_000, 49_999] {
+            let te = threshold_exact(&scores, k, &mut scratch);
+            let ts = threshold_sampled(&scores, k, 7, &mut scratch);
+            assert_eq!(ts, te, "k={k}");
+        }
+    }
+
+    #[test]
+    fn sampled_handles_constant_scores() {
+        let scores = vec![2.5f32; 10_000];
+        let mut scratch = Vec::new();
+        assert_eq!(threshold_sampled(&scores, 100, 1, &mut scratch), 2.5);
+    }
+
+    #[test]
+    fn k_edge_cases() {
+        let scores = vec![0.5f32, 0.1, 0.9];
+        let mut scratch = Vec::new();
+        assert_eq!(threshold_exact(&scores, 0, &mut scratch), f32::INFINITY);
+        assert_eq!(threshold_exact(&scores, 3, &mut scratch), 0.1);
+        assert_eq!(threshold_exact(&scores, 99, &mut scratch), 0.1);
+        assert!(select_topk(&scores, 0).is_empty());
+    }
+
+    #[test]
+    fn adversarial_patterns() {
+        let mut scratch = Vec::new();
+        // already sorted ascending / descending / sawtooth
+        let asc: Vec<f32> = (0..2000).map(|i| i as f32).collect();
+        let desc: Vec<f32> = (0..2000).rev().map(|i| i as f32).collect();
+        let saw: Vec<f32> = (0..2000).map(|i| (i % 7) as f32).collect();
+        assert_eq!(threshold_exact(&asc, 100, &mut scratch), 1900.0);
+        assert_eq!(threshold_exact(&desc, 100, &mut scratch), 1900.0);
+        let t = threshold_exact(&saw, 100, &mut scratch);
+        assert_eq!(t, 6.0);
+    }
+}

@@ -1,0 +1,143 @@
+//! Sparse gradient vector (COO, sorted unique indices).
+//!
+//! The unit of communication in the whole framework: clients upload sparse
+//! compressed gradients, the server broadcasts a sparse (or dense-fallback)
+//! aggregate. Invariants, enforced in debug builds and by proptests:
+//!   * indices strictly increasing (sorted, unique)
+//!   * indices < dim
+//!   * values.len() == indices.len()
+
+/// COO sparse vector over a dense space of `dim` f32 coordinates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseVec {
+    pub dim: usize,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn empty(dim: usize) -> Self {
+        SparseVec { dim, indices: Vec::new(), values: Vec::new() }
+    }
+
+    /// Build from parallel index/value arrays. Sorts by index and asserts
+    /// uniqueness; use [`SparseVec::from_sorted`] on pre-sorted input.
+    pub fn new(dim: usize, mut pairs: Vec<(u32, f32)>) -> Self {
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        let indices: Vec<u32> = pairs.iter().map(|&(i, _)| i).collect();
+        let values: Vec<f32> = pairs.iter().map(|&(_, v)| v).collect();
+        let sv = SparseVec { dim, indices, values };
+        sv.debug_check();
+        sv
+    }
+
+    /// Build from already-sorted unique indices (hot path, no sort).
+    pub fn from_sorted(dim: usize, indices: Vec<u32>, values: Vec<f32>) -> Self {
+        let sv = SparseVec { dim, indices, values };
+        sv.debug_check();
+        sv
+    }
+
+    /// Extract nonzeros of a dense vector.
+    pub fn from_dense(dense: &[f32]) -> Self {
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for (i, &v) in dense.iter().enumerate() {
+            if v != 0.0 {
+                indices.push(i as u32);
+                values.push(v);
+            }
+        }
+        SparseVec { dim: dense.len(), indices, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.dim == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.dim as f64
+        }
+    }
+
+    /// Materialise as a dense vector.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim];
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    /// Add into an existing dense accumulator: `acc += scale * self`.
+    pub fn add_into(&self, acc: &mut [f32], scale: f32) {
+        debug_assert_eq!(acc.len(), self.dim);
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            acc[i as usize] += scale * v;
+        }
+    }
+
+    /// Scale all values in place.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.values {
+            *v *= s;
+        }
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.values.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    pub(crate) fn debug_check(&self) {
+        debug_assert_eq!(self.indices.len(), self.values.len());
+        debug_assert!(self.indices.windows(2).all(|w| w[0] < w[1]), "indices not sorted-unique");
+        if let Some(&last) = self.indices.last() {
+            debug_assert!((last as usize) < self.dim, "index out of bounds");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrip() {
+        let dense = vec![0.0, 1.5, 0.0, -2.0, 0.0];
+        let sv = SparseVec::from_dense(&dense);
+        assert_eq!(sv.nnz(), 2);
+        assert_eq!(sv.to_dense(), dense);
+    }
+
+    #[test]
+    fn new_sorts_pairs() {
+        let sv = SparseVec::new(10, vec![(5, 1.0), (2, 2.0), (7, 3.0)]);
+        assert_eq!(sv.indices, vec![2, 5, 7]);
+        assert_eq!(sv.values, vec![2.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn add_into_accumulates() {
+        let sv = SparseVec::new(4, vec![(1, 2.0), (3, -1.0)]);
+        let mut acc = vec![1.0; 4];
+        sv.add_into(&mut acc, 0.5);
+        assert_eq!(acc, vec![1.0, 2.0, 1.0, 0.5]);
+    }
+
+    #[test]
+    fn density_and_norm() {
+        let sv = SparseVec::new(8, vec![(0, 3.0), (4, 4.0)]);
+        assert!((sv.density() - 0.25).abs() < 1e-12);
+        assert!((sv.l2_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_vector() {
+        let sv = SparseVec::empty(16);
+        assert_eq!(sv.nnz(), 0);
+        assert_eq!(sv.to_dense(), vec![0.0; 16]);
+    }
+}

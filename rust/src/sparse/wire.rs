@@ -1,0 +1,198 @@
+//! Wire format + byte accounting for gradient exchange.
+//!
+//! Every uplink/downlink in the system is *actually serialised* through this
+//! format (not just size-estimated), so the communication-overhead numbers in
+//! the experiment tables are byte-exact for the implementation.
+//!
+//! Layout (little-endian):
+//! ```text
+//!   magic   u32   0x46474D46 ("FGMF")
+//!   kind    u8    0 = sparse, 1 = dense
+//!   dim     u32
+//!   sparse: nnz u32, then nnz * (idx u32), then nnz * (val f32)
+//!   dense:  dim * (val f32)
+//! ```
+//! The encoder auto-selects dense when `8·nnz >= 4·dim` (sparse would be
+//! larger) — this is exactly the "aggregated gradient becomes nearly full
+//! size" effect of server-side global momentum the paper's §2.1 measures.
+
+use super::vector::SparseVec;
+
+pub const MAGIC: u32 = 0x4647_4D46;
+const HEADER_BYTES: usize = 4 + 1 + 4;
+
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    #[error("buffer too short ({0} bytes)")]
+    Truncated(usize),
+    #[error("bad magic {0:#x}")]
+    BadMagic(u32),
+    #[error("bad kind byte {0}")]
+    BadKind(u8),
+    #[error("index {idx} out of bounds for dim {dim}")]
+    IndexOutOfBounds { idx: u32, dim: u32 },
+    #[error("indices not sorted-unique")]
+    Unsorted,
+}
+
+/// Exact number of bytes [`encode`] will produce.
+pub fn encoded_bytes(sv: &SparseVec) -> usize {
+    if use_dense(sv) {
+        HEADER_BYTES + 4 * sv.dim
+    } else {
+        HEADER_BYTES + 4 + 8 * sv.nnz()
+    }
+}
+
+fn use_dense(sv: &SparseVec) -> bool {
+    8 * sv.nnz() >= 4 * sv.dim
+}
+
+pub fn encode(sv: &SparseVec) -> Vec<u8> {
+    let mut out = Vec::with_capacity(encoded_bytes(sv));
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    if use_dense(sv) {
+        out.push(1);
+        out.extend_from_slice(&(sv.dim as u32).to_le_bytes());
+        let dense = sv.to_dense();
+        for v in dense {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    } else {
+        out.push(0);
+        out.extend_from_slice(&(sv.dim as u32).to_le_bytes());
+        out.extend_from_slice(&(sv.nnz() as u32).to_le_bytes());
+        for &i in &sv.indices {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        for &v in &sv.values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    debug_assert_eq!(out.len(), encoded_bytes(sv));
+    out
+}
+
+pub fn decode(buf: &[u8]) -> Result<SparseVec, WireError> {
+    let mut cur = Cursor { buf, pos: 0 };
+    let magic = cur.u32()?;
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let kind = cur.u8()?;
+    let dim = cur.u32()?;
+    match kind {
+        1 => {
+            let mut dense = Vec::with_capacity(dim as usize);
+            for _ in 0..dim {
+                dense.push(cur.f32()?);
+            }
+            Ok(SparseVec::from_dense(&dense))
+        }
+        0 => {
+            let nnz = cur.u32()?;
+            let mut indices = Vec::with_capacity(nnz as usize);
+            for _ in 0..nnz {
+                let i = cur.u32()?;
+                if i >= dim {
+                    return Err(WireError::IndexOutOfBounds { idx: i, dim });
+                }
+                indices.push(i);
+            }
+            if !indices.windows(2).all(|w| w[0] < w[1]) {
+                return Err(WireError::Unsorted);
+            }
+            let mut values = Vec::with_capacity(nnz as usize);
+            for _ in 0..nnz {
+                values.push(cur.f32()?);
+            }
+            Ok(SparseVec::from_sorted(dim as usize, indices, values))
+        }
+        k => Err(WireError::BadKind(k)),
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.buf.len() {
+            return Err(WireError::Truncated(self.buf.len()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_roundtrip() {
+        let sv = SparseVec::new(100, vec![(3, 1.5), (50, -2.0), (99, 0.25)]);
+        let buf = encode(&sv);
+        assert_eq!(buf.len(), encoded_bytes(&sv));
+        assert_eq!(decode(&buf).unwrap(), sv);
+    }
+
+    #[test]
+    fn dense_fallback_when_over_half() {
+        // nnz/dim >= 0.5 → dense encoding is smaller
+        let pairs: Vec<(u32, f32)> = (0..60).map(|i| (i, i as f32 + 1.0)).collect();
+        let sv = SparseVec::new(100, pairs);
+        let buf = encode(&sv);
+        assert_eq!(buf.len(), HEADER_BYTES + 400);
+        let back = decode(&buf).unwrap();
+        assert_eq!(back.to_dense(), sv.to_dense());
+    }
+
+    #[test]
+    fn crossover_is_exact() {
+        // sparse bytes = 13 + 8nnz, dense bytes = 9 + 4dim
+        let dim = 100usize;
+        for nnz in [49usize, 50, 51] {
+            let pairs: Vec<(u32, f32)> = (0..nnz as u32).map(|i| (i, 1.0)).collect();
+            let sv = SparseVec::new(dim, pairs);
+            let expect_dense = 8 * nnz >= 4 * dim;
+            assert_eq!(encode(&sv)[4] == 1, expect_dense, "nnz={nnz}");
+        }
+    }
+
+    #[test]
+    fn rejects_corrupt_input() {
+        let sv = SparseVec::new(10, vec![(1, 1.0)]);
+        let mut buf = encode(&sv);
+        assert!(matches!(decode(&buf[..3]), Err(WireError::Truncated(_))));
+        buf[0] ^= 0xFF;
+        assert!(matches!(decode(&buf), Err(WireError::BadMagic(_))));
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_index() {
+        let sv = SparseVec::new(10, vec![(1, 1.0)]);
+        let mut buf = encode(&sv);
+        // index field starts at HEADER+4
+        buf[HEADER_BYTES + 4..HEADER_BYTES + 8].copy_from_slice(&100u32.to_le_bytes());
+        assert!(matches!(decode(&buf), Err(WireError::IndexOutOfBounds { .. })));
+    }
+
+    #[test]
+    fn empty_vec_roundtrip() {
+        let sv = SparseVec::empty(42);
+        assert_eq!(decode(&encode(&sv)).unwrap(), sv);
+    }
+}

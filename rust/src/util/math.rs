@@ -1,0 +1,122 @@
+//! Small numeric helpers shared across modules.
+
+/// L2 norm of a dense vector.
+#[inline]
+pub fn l2_norm(xs: &[f32]) -> f32 {
+    // accumulate in f64: P ~ 1e5..1e6 elements, f32 accumulation loses
+    // ~3 digits and the normalisation in the GMF score is tolerance-checked
+    // against the jax oracle at 1e-4.
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// Dot product (f64 accumulator).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Mean of an f64 iterator; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile (nearest-rank) of an unsorted slice; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Softmax in place over a logits slice (numerically stable).
+pub fn softmax_inplace(logits: &mut [f32]) {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in logits.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    for x in logits.iter_mut() {
+        *x /= sum;
+    }
+}
+
+/// argmax index; first max wins.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Total L1 distance between two probability vectors.
+pub fn l1_distance(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l2_norm_basic() {
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+        assert_eq!(l2_norm(&[]), 0.0);
+    }
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0f32, 2.0, 3.0, 1000.0];
+        softmax_inplace(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(xs[3] > 0.99);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+    }
+
+    #[test]
+    fn l1_distance_symmetric() {
+        let a = [0.5, 0.5];
+        let b = [0.9, 0.1];
+        assert!((l1_distance(&a, &b) - 0.8).abs() < 1e-12);
+        assert_eq!(l1_distance(&a, &b), l1_distance(&b, &a));
+    }
+}

@@ -1,0 +1,4 @@
+//! Shared utilities: deterministic RNG, JSON, numeric helpers.
+pub mod json;
+pub mod math;
+pub mod rng;

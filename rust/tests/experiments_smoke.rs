@@ -1,0 +1,73 @@
+//! Smoke tests of the experiment harness: every registered experiment id
+//! runs at quick scale on the native engine (table1/table2 are metadata
+//! renders; the heavy grids are restricted to one level and two techniques
+//! so this completes in seconds without artifacts).
+
+use fedgmf::compress::CompressorKind;
+use fedgmf::config::{EngineKind, Scale};
+use fedgmf::experiments::{list, run, ExpArgs};
+use std::path::PathBuf;
+
+fn args(tmp: &str) -> ExpArgs {
+    let out = std::env::temp_dir().join(format!("fedgmf-exp-{}-{tmp}", std::process::id()));
+    let mut a = ExpArgs::new(PathBuf::from("artifacts"), out);
+    a.scale = Scale::Quick;
+    a.engine = Some(EngineKind::Native);
+    a.techniques = vec![CompressorKind::Dgc, CompressorKind::DgcWgmf];
+    a.levels = vec![0.99];
+    a
+}
+
+#[test]
+fn list_contains_every_id() {
+    let l = list();
+    for (id, _) in fedgmf::experiments::registry::EXPERIMENTS {
+        assert!(l.contains(id));
+    }
+}
+
+#[test]
+fn table1_and_table2_render() {
+    let a = args("t12");
+    let t1 = run("table1", &a).unwrap();
+    assert!(t1.contains("# of clients"));
+    let t2 = run("table2", &a).unwrap();
+    assert!(t2.contains("DGCwGMF") && t2.contains("compression process"));
+}
+
+#[test]
+fn table3_quick_native() {
+    let a = args("t3");
+    let report = run("table3", &a).unwrap();
+    assert!(report.contains("Cifar10-0"));
+    assert!(report.contains("DGC"));
+    assert!(report.contains("DGCwGMF"));
+    // evidence files written
+    assert!(a.out_dir.join("table3").join("summary.json").exists());
+}
+
+#[test]
+fn fig4_quick_native_writes_curves() {
+    let a = args("f4");
+    let report = run("fig4", &a).unwrap();
+    assert!(report.contains("DGC"));
+    assert!(a.out_dir.join("fig4").join("DGC.csv").exists());
+    assert!(a.out_dir.join("fig4").join("DGCwGMF.csv").exists());
+}
+
+#[test]
+fn fig5_quick_native_sweeps() {
+    let mut a = args("f5");
+    a.levels = vec![0.2, 0.8]; // rates for the sweep
+    let report = run("fig5", &a).unwrap();
+    assert!(report.contains("0.2") && report.contains("0.8"));
+    let csv = std::fs::read_to_string(a.out_dir.join("fig5").join("sweep.csv")).unwrap();
+    assert!(csv.lines().count() >= 5); // header + 2 rates × 2 techniques
+}
+
+#[test]
+fn unknown_id_lists_options() {
+    let a = args("bad");
+    let err = run("table99", &a).unwrap_err().to_string();
+    assert!(err.contains("table3"));
+}

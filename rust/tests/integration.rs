@@ -1,0 +1,281 @@
+//! Cross-module integration tests on the native engine (no artifacts
+//! needed): full FL runs, scheme-level behavioural properties from the
+//! paper's problem formulation, config plumbing, persistence.
+
+use fedgmf::compress::CompressorKind;
+use fedgmf::config::{EngineKind, RunConfig, Task};
+use fedgmf::coordinator::round::{FlConfig, FlRun, LrSchedule};
+use fedgmf::coordinator::sampler::Sampler;
+use fedgmf::data::dataset::Dataset;
+use fedgmf::experiments::runner::execute;
+use fedgmf::experiments::workload::build_workload;
+use fedgmf::runtime::native::{BlobDataset, NativeEngine};
+use fedgmf::sim::network::Network;
+use std::path::Path;
+
+fn native_cifar_cfg(kind: CompressorKind) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.engine = EngineKind::Native;
+    cfg.clients = 10;
+    cfg.rounds = 25;
+    cfg.samples_per_client = 60;
+    cfg.test_size = 160;
+    cfg.technique = kind;
+    cfg.lr = 0.15; // stable for the momentum-corrected schemes on the MLP
+    cfg.eval_every = 5;
+    cfg
+}
+
+#[test]
+fn native_cifar_all_schemes_learn() {
+    // the synthetic CIFAR classes are separable; the DGC-family schemes
+    // must beat chance (0.1) by a wide margin even at rate 0.1 under mild
+    // non-IID. GMC is exempt from the accuracy bar: its global-momentum
+    // compensation is amplification-unstable at this lr — the same
+    // fragility the paper reports ("GMC fails to converge", Table 4) — so
+    // for GMC we only require the run to complete with finite metrics.
+    for kind in CompressorKind::ALL {
+        let mut cfg = native_cifar_cfg(kind);
+        cfg.emd = 0.48;
+        // per-technique lr, as the paper tunes per scheme: momentum-bearing
+        // schemes multiply the effective step (≈1/(1-β)) and need smaller lr
+        cfg.lr = match kind {
+            CompressorKind::Dgc => 0.3,
+            CompressorKind::Gmc => 0.15,
+            CompressorKind::DgcWgm => 0.05,
+            CompressorKind::DgcWgmf => 0.1,
+        };
+        let (summary, _) = execute(&cfg, Path::new("artifacts"), &mut None).unwrap();
+        assert!(summary.total_traffic_gb > 0.0);
+        assert!(summary.final_loss.is_finite(), "{}: loss diverged to NaN", kind.name());
+        if kind != CompressorKind::Gmc {
+            assert!(
+                summary.final_accuracy > 0.3, // chance = 0.1
+                "{}: accuracy {}",
+                kind.name(),
+                summary.final_accuracy
+            );
+        }
+    }
+}
+
+#[test]
+fn dgcwgm_costs_more_downlink_and_gmf_not_more() {
+    // paper Table 3 ordering on the downlink: DGCwGMF <= DGC < DGCwGM
+    let run = |kind: CompressorKind| {
+        let mut cfg = native_cifar_cfg(kind);
+        cfg.emd = 1.35;
+        cfg.rounds = 30;
+        let (s, _) = execute(&cfg, Path::new("artifacts"), &mut None).unwrap();
+        s
+    };
+    let dgc = run(CompressorKind::Dgc);
+    let gm = run(CompressorKind::DgcWgm);
+    let gmf = run(CompressorKind::DgcWgmf);
+    assert!(
+        gm.downlink_gb > dgc.downlink_gb,
+        "DGCwGM downlink {} must exceed DGC {}",
+        gm.downlink_gb,
+        dgc.downlink_gb
+    );
+    assert!(
+        gmf.total_traffic_gb <= dgc.total_traffic_gb * 1.02,
+        "DGCwGMF traffic {} must not exceed DGC {}",
+        gmf.total_traffic_gb,
+        dgc.total_traffic_gb
+    );
+    assert!(
+        gmf.mean_mask_overlap > dgc.mean_mask_overlap,
+        "GMF raises mask overlap: {} vs {}",
+        gmf.mean_mask_overlap,
+        dgc.mean_mask_overlap
+    );
+}
+
+#[test]
+fn traffic_accounting_is_consistent() {
+    let mut cfg = native_cifar_cfg(CompressorKind::DgcWgmf);
+    cfg.rounds = 8;
+    let (summary, _) = execute(&cfg, Path::new("artifacts"), &mut None).unwrap();
+    let up: usize = summary.recorder.rounds.iter().map(|r| r.uplink_bytes).sum();
+    let down: usize = summary.recorder.rounds.iter().map(|r| r.downlink_bytes).sum();
+    assert!((summary.uplink_gb - up as f64 / 1e9).abs() < 1e-12);
+    assert!((summary.downlink_gb - down as f64 / 1e9).abs() < 1e-12);
+    assert!((summary.total_traffic_gb - (up + down) as f64 / 1e9).abs() < 1e-12);
+    for r in &summary.recorder.rounds {
+        assert!(r.uplink_bytes > 0 && r.downlink_bytes > 0 && r.sim_seconds > 0.0);
+    }
+}
+
+#[test]
+fn partial_participation_reduces_uplink() {
+    let engine = NativeEngine::new(16, 12, 4, 1);
+    let make_run = |sampler: Sampler| {
+        let shards: Vec<Box<dyn Dataset + Send>> = (0..8)
+            .map(|c| {
+                Box::new(BlobDataset::generate_split(60, 16, 4, 0.4, 7, 8 + c as u64))
+                    as Box<dyn Dataset + Send>
+            })
+            .collect();
+        let test = BlobDataset::generate_split(64, 16, 4, 0.4, 7, 0xE).eval_batches(32);
+        let mut fc = FlConfig::new(CompressorKind::Dgc, 0.1, 10);
+        fc.sampler = sampler;
+        fc.lr = LrSchedule::constant(0.3);
+        FlRun::new(&engine, shards, test, Network::uniform(8, Default::default()), fc)
+    };
+    let mut e1 = engine.clone();
+    let full = make_run(Sampler::Full).run(&mut e1).unwrap();
+    let mut e2 = engine.clone();
+    let half = make_run(Sampler::Fraction(0.5)).run(&mut e2).unwrap();
+    assert!(half.uplink_gb < full.uplink_gb * 0.6, "{} vs {}", half.uplink_gb, full.uplink_gb);
+}
+
+#[test]
+fn rate_sweep_orders_uplink() {
+    // uplink bytes must scale with the keep-rate below the wire layer's
+    // dense-fallback crossover (nnz = dim/2; above it all rates cost the
+    // dense payload — that plateau is itself asserted in the wire tests)
+    let mut totals = Vec::new();
+    for rate in [0.05, 0.2, 0.4] {
+        let mut cfg = native_cifar_cfg(CompressorKind::Dgc);
+        cfg.rate = rate;
+        cfg.rounds = 6;
+        cfg.warmup_rounds = 0;
+        let (s, _) = execute(&cfg, Path::new("artifacts"), &mut None).unwrap();
+        totals.push(s.uplink_gb);
+    }
+    assert!(totals[0] < totals[1] && totals[1] < totals[2], "{totals:?}");
+}
+
+#[test]
+fn emd_partition_quality_via_workload() {
+    for emd in [0.0, 0.76, 1.35] {
+        let mut cfg = RunConfig::default();
+        cfg.engine = EngineKind::Native;
+        cfg.clients = 20;
+        cfg.samples_per_client = 100;
+        cfg.emd = emd;
+        let w = build_workload(&cfg).unwrap();
+        assert!(
+            (w.achieved_emd - emd).abs() < 0.08,
+            "target {emd} achieved {}",
+            w.achieved_emd
+        );
+    }
+}
+
+#[test]
+fn shakespeare_workload_is_naturally_noniid() {
+    let mut cfg = RunConfig::shakespeare();
+    cfg.clients = 40;
+    cfg.samples_per_client = 1500;
+    let w = build_workload(&cfg).unwrap();
+    assert!(w.achieved_emd > 0.05, "char EMD {}", w.achieved_emd);
+    assert_eq!(w.shards.len(), 40);
+}
+
+#[test]
+fn run_is_deterministic_given_seed() {
+    let run = || {
+        let mut cfg = native_cifar_cfg(CompressorKind::DgcWgmf);
+        cfg.rounds = 6;
+        cfg.seed = 1234;
+        let (s, _) = execute(&cfg, Path::new("artifacts"), &mut None).unwrap();
+        (
+            s.final_accuracy,
+            s.total_traffic_gb,
+            s.recorder.rounds.last().unwrap().train_loss,
+        )
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn recorder_csv_and_json_consistent() {
+    let mut cfg = native_cifar_cfg(CompressorKind::Gmc);
+    cfg.rounds = 4;
+    let (summary, _) = execute(&cfg, Path::new("artifacts"), &mut None).unwrap();
+    let csv = summary.recorder.to_csv();
+    let lines: Vec<&str> = csv.trim().lines().collect();
+    assert_eq!(lines.len(), 5); // header + 4 rounds
+    let header_cols = lines[0].split(',').count();
+    for line in &lines[1..] {
+        assert_eq!(line.split(',').count(), header_cols);
+    }
+    let j = fedgmf::util::json::Json::parse(&summary.recorder.summary_json().to_pretty()).unwrap();
+    assert_eq!(j.get("rounds").unwrap().as_usize(), Some(4));
+}
+
+#[test]
+fn config_pipeline_from_toml_to_run() {
+    let cfg = RunConfig::from_toml_str(
+        r#"
+[run]
+task = "cifar"
+engine = "native"
+technique = "dgcwgmf"
+rounds = 5
+[data]
+clients = 6
+samples_per_client = 40
+test_size = 64
+emd = 0.87
+[compress]
+rate = 0.2
+[train]
+lr = 0.3
+eval_every = 5
+"#,
+        &[],
+    )
+    .unwrap();
+    assert_eq!(cfg.task, Task::Cifar);
+    let (summary, emd) = execute(&cfg, Path::new("artifacts"), &mut None).unwrap();
+    assert!(emd > 0.5);
+    assert_eq!(summary.recorder.rounds.len(), 5);
+}
+
+#[test]
+fn gmc_masks_dominated_by_global_term_under_noniid() {
+    // §2.2 at system level: GMC's compensation folds β·Ĝ into every
+    // client's V, so the selection is pulled toward the shared global
+    // direction and client masks overlap far more than DGC's on the same
+    // non-IID workload — the same signal that makes GMC's transmissions
+    // carry less client-specific information (its over-fitting mechanism).
+    let overlap_after = |kind: CompressorKind| -> f64 {
+        let mut cfg = native_cifar_cfg(kind);
+        cfg.emd = 1.35;
+        cfg.rounds = 20;
+        let w = build_workload(&cfg).unwrap();
+        let mut engine = NativeEngine::new(3072, 24, 10, cfg.seed);
+        let mut run = FlRun::new(
+            &engine,
+            w.shards,
+            w.test,
+            Network::uniform(cfg.clients, Default::default()),
+            cfg.fl_config(),
+        );
+        let mut last = 0.0;
+        for round in 0..20 {
+            last = run.step_round(&mut engine, round).unwrap().mask_overlap;
+        }
+        last
+    };
+    let gmc = overlap_after(CompressorKind::Gmc);
+    let dgc = overlap_after(CompressorKind::Dgc);
+    assert!(
+        gmc > dgc * 1.2,
+        "GMC mask overlap {gmc} must clearly exceed DGC's {dgc}"
+    );
+}
+
+#[test]
+fn warmup_rounds_send_more_early() {
+    let mut cfg = native_cifar_cfg(CompressorKind::Dgc);
+    cfg.rounds = 10;
+    cfg.warmup_rounds = 5;
+    let (summary, _) = execute(&cfg, Path::new("artifacts"), &mut None).unwrap();
+    let first = summary.recorder.rounds[0].uplink_bytes;
+    let last = summary.recorder.rounds[9].uplink_bytes;
+    assert!(first > last, "warmup round 0 uplink {first} must exceed steady {last}");
+}

@@ -1,0 +1,155 @@
+//! Integration tests across the AOT boundary: artifacts built by
+//! `python/compile/aot.py` (L2 JAX models + L1 Pallas kernels) loaded and
+//! executed by the Rust PJRT runtime, checked against the Rust-native
+//! implementations of the same math.
+//!
+//! These tests skip (with a notice) when `artifacts/` is missing — run
+//! `make artifacts` first; `make test` does this automatically.
+
+use fedgmf::compress::primitives;
+use fedgmf::data::dataset::Batch;
+use fedgmf::runtime::manifest::Manifest;
+use fedgmf::runtime::pjrt::{KernelExecutor, PjrtContext};
+use fedgmf::runtime::{evaluate, TrainEngine};
+use fedgmf::util::rng::Rng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.normal()).collect()
+}
+
+#[test]
+fn manifest_loads_and_lists_models() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    assert!(man.names().contains(&"resnet8"));
+    assert!(man.names().contains(&"charlstm"));
+    assert_eq!(man.model("resnet8").unwrap().param_count, 77850);
+    assert_eq!(man.model("charlstm").unwrap().param_count, 25920);
+}
+
+#[test]
+fn pallas_gmf_score_matches_rust_primitives() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+    let entry = man.model("charlstm").unwrap();
+    let kx = KernelExecutor::new(&ctx, entry).unwrap();
+    let p = entry.param_count;
+
+    for (seed, tau) in [(1u64, 0.0f32), (2, 0.3), (3, 0.6), (4, 1.0)] {
+        let v = randvec(p, seed);
+        let m = randvec(p, seed + 100);
+        let z_pallas = kx.gmf_score(&v, &m, tau).unwrap();
+        let mut z_rust = vec![0.0f32; p];
+        primitives::gmf_score(&mut z_rust, &v, &m, tau);
+        let mut max_err = 0.0f32;
+        for (a, b) in z_pallas.iter().zip(&z_rust) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 1e-5, "tau={tau}: max |pallas - rust| = {max_err}");
+    }
+}
+
+#[test]
+fn pallas_dgc_update_matches_rust_primitives() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+    let entry = man.model("charlstm").unwrap();
+    let kx = KernelExecutor::new(&ctx, entry).unwrap();
+    let p = entry.param_count;
+
+    let u0 = randvec(p, 10);
+    let v0 = randvec(p, 11);
+    let g = randvec(p, 12);
+    let (u_pallas, v_pallas) = kx.dgc_update(&u0, &v0, &g, 0.9).unwrap();
+
+    let mut u_rust = u0.clone();
+    let mut v_rust = v0.clone();
+    primitives::dgc_update(&mut u_rust, &mut v_rust, &g, 0.9);
+
+    for i in 0..p {
+        assert!((u_pallas[i] - u_rust[i]).abs() < 1e-5, "u[{i}]");
+        assert!((v_pallas[i] - v_rust[i]).abs() < 1e-5, "v[{i}]");
+    }
+}
+
+#[test]
+fn lstm_train_step_runs_and_learns() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+    let entry = man.model("charlstm").unwrap();
+    let mut engine = fedgmf::runtime::pjrt::PjrtEngine::new(ctx, entry).unwrap();
+
+    let b = entry.batch;
+    let s = entry.seq.unwrap();
+    let vocab = entry.vocab.unwrap();
+    let mut rng = Rng::new(7);
+    // a learnable fixed batch: y = x (predict the same char class)
+    let x: Vec<i32> = (0..b * s).map(|_| rng.below(vocab) as i32).collect();
+    let y: Vec<i32> = x.clone();
+    let batch = Batch::Tokens { x, y, n: b, seq: s };
+
+    let mut params = engine.initial_params();
+    let first = engine.train_step(&params, &batch).unwrap();
+    assert!(first.loss.is_finite() && first.loss > 0.0);
+    assert_eq!(first.grads.len(), entry.param_count);
+    let gnorm: f64 = first.grads.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>().sqrt();
+    assert!(gnorm > 0.0, "gradient must be nonzero");
+
+    let mut last = first.loss;
+    for _ in 0..15 {
+        let out = engine.train_step(&params, &batch).unwrap();
+        for (p, g) in params.iter_mut().zip(&out.grads) {
+            *p -= 1.0 * g;
+        }
+        last = out.loss;
+    }
+    assert!(last < first.loss - 0.05, "loss {} -> {last}", first.loss);
+
+    // eval agrees with train metrics at the same params
+    let (eloss, eacc) = evaluate(&mut engine, &params, &[batch]).unwrap();
+    assert!(eloss.is_finite());
+    assert!((0.0..=1.0).contains(&eacc));
+}
+
+#[test]
+fn resnet_train_step_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    let ctx = PjrtContext::cpu().unwrap();
+    let entry = man.model("resnet8").unwrap();
+    let mut engine = fedgmf::runtime::pjrt::PjrtEngine::new(ctx, entry).unwrap();
+
+    use fedgmf::data::dataset::Dataset;
+    use fedgmf::data::synth_cifar::CifarLike;
+    let ds = CifarLike::balanced(8, 0.15, 5); // 80 samples
+    let mut rng = Rng::new(3);
+    let batch = ds.sample_batch(entry.batch, &mut rng);
+
+    let params = engine.initial_params();
+    let t0 = std::time::Instant::now();
+    let out = engine.train_step(&params, &batch).unwrap();
+    let dt = t0.elapsed();
+    eprintln!("resnet8 train_step: {:.1} ms", dt.as_secs_f64() * 1e3);
+    assert!(out.loss.is_finite() && out.loss > 0.0);
+    assert_eq!(out.grads.len(), entry.param_count);
+    assert!(out.ncorrect <= entry.batch);
+
+    let (eloss, enc) = engine.eval_step(&params, &batch).unwrap();
+    assert!((eloss - out.loss).abs() < 1e-4, "eval {eloss} vs train {}", out.loss);
+    assert_eq!(enc, out.ncorrect);
+}

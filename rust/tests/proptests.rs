@@ -1,0 +1,299 @@
+//! Property-based tests over randomized inputs.
+//!
+//! The offline vendored crate set has no `proptest`, so this file carries a
+//! small in-tree property harness: each property runs `CASES` randomized
+//! cases from a deterministic seed stream; failures print the case seed so
+//! they can be replayed exactly (`PROP_SEED=<n>`).
+
+use fedgmf::compress::{primitives, CompressConfig, Compressor, CompressorKind, TauSchedule};
+use fedgmf::data::partition::{emd_of_partition, partition_by_emd};
+use fedgmf::sparse::merge::Aggregator;
+use fedgmf::sparse::topk;
+use fedgmf::sparse::vector::SparseVec;
+use fedgmf::sparse::wire;
+use fedgmf::util::json::Json;
+use fedgmf::util::rng::Rng;
+
+const CASES: u64 = 60;
+
+fn seeds() -> impl Iterator<Item = u64> {
+    let base: u64 = std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xF00D);
+    (0..CASES).map(move |i| base.wrapping_add(i))
+}
+
+fn rand_sparse(rng: &mut Rng, max_dim: usize) -> SparseVec {
+    let dim = 1 + rng.below(max_dim);
+    let nnz = rng.below(dim + 1);
+    let mut ids: Vec<u32> = (0..dim as u32).collect();
+    rng.shuffle(&mut ids);
+    ids.truncate(nnz);
+    ids.sort_unstable();
+    let values: Vec<f32> = ids.iter().map(|_| rng.normal() * 10.0).collect();
+    SparseVec::from_sorted(dim, ids, values)
+}
+
+// -------------------------------------------------------------------- wire
+
+#[test]
+fn prop_wire_roundtrip_preserves_vector() {
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let sv = rand_sparse(&mut rng, 400);
+        let buf = wire::encode(&sv);
+        assert_eq!(buf.len(), wire::encoded_bytes(&sv), "seed {seed}");
+        let back = wire::decode(&buf).unwrap();
+        assert_eq!(back.to_dense(), sv.to_dense(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_wire_never_larger_than_dense_plus_header() {
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let sv = rand_sparse(&mut rng, 300);
+        let dense_bytes = 9 + 4 * sv.dim;
+        assert!(wire::encoded_bytes(&sv) <= dense_bytes, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_wire_decode_rejects_truncations() {
+    for seed in seeds().take(20) {
+        let mut rng = Rng::new(seed);
+        let sv = rand_sparse(&mut rng, 100);
+        let buf = wire::encode(&sv);
+        for cut in [1usize, buf.len() / 2, buf.len().saturating_sub(1)] {
+            if cut < buf.len() {
+                assert!(wire::decode(&buf[..cut]).is_err(), "seed {seed} cut {cut}");
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------- top-k
+
+#[test]
+fn prop_topk_threshold_selects_exactly_k_distinct() {
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let n = 10 + rng.below(5000);
+        // distinct scores: add index-scaled epsilon
+        let scores: Vec<f32> = (0..n).map(|i| rng.f32() + i as f32 * 1e-6).collect();
+        let k = 1 + rng.below(n);
+        let mut scratch = Vec::new();
+        let t = topk::threshold_exact(&scores, k, &mut scratch);
+        let count = scores.iter().filter(|&&s| s >= t).count();
+        assert_eq!(count, k, "seed {seed} n {n} k {k}");
+        let ts = topk::threshold_sampled(&scores, k, seed, &mut scratch);
+        assert_eq!(ts, t, "sampled != exact, seed {seed}");
+    }
+}
+
+#[test]
+fn prop_select_at_threshold_sorted_and_capped() {
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let n = 5 + rng.below(1000);
+        let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let k = 1 + rng.below(n);
+        let sel = topk::select_topk(&scores, k);
+        assert!(sel.len() <= k, "seed {seed}");
+        assert!(sel.windows(2).all(|w| w[0] < w[1]), "seed {seed}");
+    }
+}
+
+// -------------------------------------------------------------- aggregation
+
+#[test]
+fn prop_aggregator_equals_dense_mean() {
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let dim = 10 + rng.below(200);
+        let kcount = 1 + rng.below(8);
+        let mut agg = Aggregator::new(dim);
+        let mut dense_sum = vec![0.0f64; dim];
+        for _ in 0..kcount {
+            let mut ids: Vec<u32> = (0..dim as u32).collect();
+            rng.shuffle(&mut ids);
+            ids.truncate(rng.below(dim + 1));
+            ids.sort_unstable();
+            let vals: Vec<f32> = ids.iter().map(|_| rng.normal()).collect();
+            let sv = SparseVec::from_sorted(dim, ids, vals);
+            for (&i, &v) in sv.indices.iter().zip(&sv.values) {
+                dense_sum[i as usize] += v as f64;
+            }
+            agg.add(&sv);
+        }
+        let mean = agg.finish_mean(kcount);
+        let dense = mean.to_dense();
+        for i in 0..dim {
+            let want = dense_sum[i] / kcount as f64;
+            assert!((dense[i] as f64 - want).abs() < 1e-5, "seed {seed} i {i}");
+        }
+    }
+}
+
+// ------------------------------------------------------------- compression
+
+#[test]
+fn prop_compress_partitions_v_and_respects_k() {
+    // For every scheme: nnz(G) <= k, and for DGC-family the transmitted
+    // values + residual exactly reconstruct the pre-extraction V.
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let dim = 50 + rng.below(500);
+        let k = 1 + rng.below(dim / 2 + 1);
+        for kind in CompressorKind::ALL {
+            let mut comp = fedgmf::compress::build(kind, &CompressConfig::default(), dim);
+            let ghat = rand_sparse(&mut rng, dim);
+            // pad ghat to the right dim (rand_sparse picks its own)
+            let ghat = SparseVec::new(
+                dim,
+                ghat.indices
+                    .iter()
+                    .zip(&ghat.values)
+                    .filter(|(&i, _)| (i as usize) < dim)
+                    .map(|(&i, &v)| (i, v))
+                    .collect(),
+            );
+            comp.observe_broadcast(&ghat);
+            let grad: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            let out = comp.compress(&grad, k, 0);
+            assert!(out.gradient.nnz() <= k, "{} seed {seed}", kind.name());
+            assert_eq!(out.gradient.dim, dim);
+            out.gradient.debug_ok();
+        }
+    }
+}
+
+#[test]
+fn prop_gmf_tau_zero_is_dgc_for_any_input() {
+    for seed in seeds().take(30) {
+        let mut rng = Rng::new(seed);
+        let dim = 20 + rng.below(300);
+        let k = 1 + rng.below(dim / 3 + 1);
+        let cfg0 = CompressConfig { tau: TauSchedule::Constant(0.0), ..Default::default() };
+        let mut gmf = fedgmf::compress::DgcGmf::new(&cfg0, dim);
+        let mut dgc = fedgmf::compress::Dgc::new(&CompressConfig::default(), dim);
+        for round in 0..4 {
+            let ghat = rand_sparse(&mut rng, dim);
+            let ghat = SparseVec::new(
+                dim,
+                ghat.indices
+                    .iter()
+                    .zip(&ghat.values)
+                    .filter(|(&i, _)| (i as usize) < dim)
+                    .map(|(&i, &v)| (i, v))
+                    .collect(),
+            );
+            gmf.observe_broadcast(&ghat);
+            dgc.observe_broadcast(&ghat);
+            let grad: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            let a = gmf.compress(&grad, k, round);
+            let b = dgc.compress(&grad, k, round);
+            assert_eq!(a.gradient, b.gradient, "seed {seed} round {round}");
+        }
+    }
+}
+
+#[test]
+fn prop_gmf_score_invariants() {
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let n = 2 + rng.below(2000);
+        let v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let m: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let tau = rng.f32();
+        let mut z = vec![0.0f32; n];
+        primitives::gmf_score(&mut z, &v, &m, tau);
+        // non-negative, finite, bounded by |N(v)| + |N(m)| <= 2
+        assert!(z.iter().all(|&x| x >= 0.0 && x.is_finite() && x <= 2.0), "seed {seed}");
+    }
+}
+
+// -------------------------------------------------------------- partition
+
+#[test]
+fn prop_partition_covers_all_samples_once() {
+    for seed in seeds().take(25) {
+        let mut rng = Rng::new(seed);
+        let classes = 2 + rng.below(9);
+        let per_class = 20 + rng.below(80);
+        let clients = classes + rng.below(3 * classes);
+        let labels: Vec<i32> = (0..classes)
+            .flat_map(|c| std::iter::repeat(c as i32).take(per_class))
+            .collect();
+        let max_emd = 2.0 * (classes as f64 - 1.0) / classes as f64;
+        let target = rng.f64() * max_emd;
+        let (shards, achieved) =
+            partition_by_emd(&labels, classes, clients, target, seed).unwrap();
+        let mut all: Vec<usize> = shards.iter().flat_map(|s| s.sample_ids.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..labels.len()).collect::<Vec<_>>(), "seed {seed}");
+        assert!((0.0..=max_emd + 1e-9).contains(&achieved), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_emd_bounds() {
+    for seed in seeds().take(30) {
+        let mut rng = Rng::new(seed);
+        let classes = 2 + rng.below(8);
+        let clients = 1 + rng.below(12);
+        let hists: Vec<Vec<usize>> = (0..clients)
+            .map(|_| (0..classes).map(|_| rng.below(50)).collect())
+            .collect();
+        let emd = emd_of_partition(&hists);
+        let max = 2.0;
+        assert!((0.0..=max).contains(&emd), "seed {seed} emd {emd}");
+    }
+}
+
+// -------------------------------------------------------------------- json
+
+#[test]
+fn prop_json_roundtrip() {
+    for seed in seeds().take(40) {
+        let mut rng = Rng::new(seed);
+        let j = rand_json(&mut rng, 3);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(j, back, "seed {seed}: {text}");
+        let pretty = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(j, pretty, "seed {seed}");
+    }
+}
+
+fn rand_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num((rng.normal() * 100.0).round() as f64 / 4.0),
+        3 => {
+            let len = rng.below(8);
+            Json::Str((0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect())
+        }
+        4 => Json::Arr((0..rng.below(4)).map(|_| rand_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(4))
+                .map(|i| (format!("k{i}"), rand_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+// ------------------------------------------------------------ trait helper
+
+trait DebugOk {
+    fn debug_ok(&self);
+}
+
+impl DebugOk for SparseVec {
+    fn debug_ok(&self) {
+        assert_eq!(self.indices.len(), self.values.len());
+        assert!(self.indices.windows(2).all(|w| w[0] < w[1]));
+        if let Some(&last) = self.indices.last() {
+            assert!((last as usize) < self.dim);
+        }
+    }
+}
