@@ -1,4 +1,4 @@
-//! Micro-benchmarks of the L3 hot path (run with `cargo bench`).
+//! Micro- and round-level benchmarks of the L3 hot path (`cargo bench`).
 //!
 //! The offline vendored crate set has no criterion, so this is a small
 //! self-contained harness: warmup + N timed iterations, reporting
@@ -12,16 +12,34 @@
 //!   aggregate/20clients           — server-side sparse mean
 //!   wire/encode+decode            — serialisation
 //!   momentum/accumulate           — client M update
+//!   round/e2e                     — full FlRun::step_round, 20 clients ×
+//!                                   P≈1M, sequential vs parallel workers
+//!
+//! Results are also written machine-readable to `BENCH_hotpath.json` at the
+//! repo root so the perf trajectory is tracked across PRs.
 
-use fedgmf::compress::{primitives, CompressConfig, Compressor, TauSchedule};
+use fedgmf::compress::{primitives, CompressConfig, Compressor, CompressorKind, TauSchedule};
+use fedgmf::coordinator::round::{FlConfig, FlRun, LrSchedule};
+use fedgmf::data::dataset::Dataset;
+use fedgmf::runtime::native::{BlobDataset, NativeEngine};
+use fedgmf::runtime::TrainEngine;
+use fedgmf::sim::network::Network;
 use fedgmf::sparse::merge::Aggregator;
 use fedgmf::sparse::topk;
 use fedgmf::sparse::vector::SparseVec;
 use fedgmf::sparse::wire;
+use fedgmf::util::json::Json;
 use fedgmf::util::rng::Rng;
 use std::time::Instant;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+#[derive(Clone, Copy)]
+struct Stats {
+    median_ms: f64,
+    mean_ms: f64,
+    p90_ms: f64,
+}
+
+fn bench<F: FnMut()>(results: &mut Vec<(String, Stats)>, name: &str, iters: usize, mut f: F) {
     for _ in 0..3 {
         f(); // warmup
     }
@@ -33,9 +51,16 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
-    let median = samples[samples.len() / 2];
-    let p90 = samples[samples.len() * 9 / 10];
-    println!("{name:<42} median {median:>9.3} ms  mean {mean:>9.3} ms  p90 {p90:>9.3} ms");
+    let stats = Stats {
+        median_ms: samples[samples.len() / 2],
+        mean_ms: mean,
+        p90_ms: samples[samples.len() * 9 / 10],
+    };
+    println!(
+        "{name:<42} median {:>9.3} ms  mean {:>9.3} ms  p90 {:>9.3} ms",
+        stats.median_ms, stats.mean_ms, stats.p90_ms
+    );
+    results.push((name.to_string(), stats));
 }
 
 fn randvec(n: usize, seed: u64) -> Vec<f32> {
@@ -43,7 +68,37 @@ fn randvec(n: usize, seed: u64) -> Vec<f32> {
     (0..n).map(|_| r.normal()).collect()
 }
 
+/// Full communication rounds through `FlRun::step_round` on the native
+/// engine: N clients × P params at rate 0.1. Returns mean ms/round over
+/// `rounds` steady-state rounds (one warmup round excluded).
+fn round_e2e(clients: usize, input_dim: usize, hidden: usize, classes: usize, workers: usize, rounds: usize) -> (f64, usize) {
+    let engine = NativeEngine::new(input_dim, hidden, classes, 1);
+    let p = engine.param_count();
+    let shards: Vec<Box<dyn Dataset + Send>> = (0..clients)
+        .map(|c| {
+            Box::new(BlobDataset::generate_split(32, input_dim, classes, 0.4, 9, 10 + c as u64))
+                as Box<dyn Dataset + Send>
+        })
+        .collect();
+    let net = Network::uniform(clients, Default::default());
+    let mut cfg = FlConfig::new(CompressorKind::Dgc, 0.1, rounds + 1);
+    cfg.lr = LrSchedule::constant(0.05);
+    cfg.batch_size = 8;
+    cfg.eval_every = 0;
+    cfg.warmup.warmup_rounds = 0; // steady-state k from round 0
+    cfg.workers = workers;
+    let mut run = FlRun::new(&engine, shards, Vec::new(), net, cfg);
+    let mut engine = engine;
+    run.step_round(&mut engine, 0).unwrap(); // warm the buffers
+    let t0 = Instant::now();
+    for r in 1..=rounds {
+        run.step_round(&mut engine, r).unwrap();
+    }
+    (t0.elapsed().as_secs_f64() * 1e3 / rounds as f64, p)
+}
+
 fn main() {
+    let mut results: Vec<(String, Stats)> = Vec::new();
     println!("== fedgmf hot-path micro-benchmarks ==");
     for &p in &[77_850usize, 1_000_000] {
         let label = if p == 77_850 { "P=77850(resnet8)" } else { "P=1M" };
@@ -51,41 +106,41 @@ fn main() {
         let scores: Vec<f32> = randvec(p, 1).iter().map(|x| x.abs()).collect();
         let mut scratch = Vec::new();
 
-        bench(&format!("topk/exact        {label}"), 20, || {
+        bench(&mut results, &format!("topk/exact        {label}"), 20, || {
             std::hint::black_box(topk::threshold_exact(&scores, k, &mut scratch));
         });
-        bench(&format!("topk/sampled      {label}"), 20, || {
+        bench(&mut results, &format!("topk/sampled      {label}"), 20, || {
             std::hint::black_box(topk::threshold_sampled(&scores, k, 7, &mut scratch));
         });
 
         let v = randvec(p, 2);
         let m = randvec(p, 3);
         let mut z = vec![0.0f32; p];
-        bench(&format!("score/abs         {label}"), 30, || {
+        bench(&mut results, &format!("score/abs         {label}"), 30, || {
             primitives::abs_score(&mut z, &v);
             std::hint::black_box(&z);
         });
-        bench(&format!("score/gmf         {label}"), 30, || {
+        bench(&mut results, &format!("score/gmf         {label}"), 30, || {
             primitives::gmf_score(&mut z, &v, &m, 0.4);
             std::hint::black_box(&z);
         });
 
         let grad = randvec(p, 4);
         let mut dgc = fedgmf::compress::Dgc::new(&CompressConfig::default(), p);
-        bench(&format!("compress/dgc      {label}"), 15, || {
+        bench(&mut results, &format!("compress/dgc      {label}"), 15, || {
             std::hint::black_box(dgc.compress(&grad, k, 1));
         });
         let cfg = CompressConfig { tau: TauSchedule::Constant(0.4), ..Default::default() };
         let mut gmf = fedgmf::compress::DgcGmf::new(&cfg, p);
         gmf.observe_broadcast(&SparseVec::from_dense(&randvec(p, 5)));
-        bench(&format!("compress/gmf      {label}"), 15, || {
+        bench(&mut results, &format!("compress/gmf      {label}"), 15, || {
             std::hint::black_box(gmf.compress(&grad, k, 1));
         });
 
         let cfg2 = CompressConfig { exact_topk: false, ..cfg.clone() };
         let mut gmf2 = fedgmf::compress::DgcGmf::new(&cfg2, p);
         gmf2.observe_broadcast(&SparseVec::from_dense(&randvec(p, 5)));
-        bench(&format!("compress/gmf-sampled {label}"), 15, || {
+        bench(&mut results, &format!("compress/gmf-sampled {label}"), 15, || {
             std::hint::black_box(gmf2.compress(&grad, k, 1));
         });
 
@@ -99,27 +154,85 @@ fn main() {
                 SparseVec::from_sorted(p, ids, vals)
             })
             .collect();
+        let refs: Vec<&SparseVec> = grads.iter().collect();
         let mut agg = Aggregator::new(p);
-        bench(&format!("aggregate/20c     {label}"), 15, || {
+        bench(&mut results, &format!("aggregate/20c     {label}"), 15, || {
             for g in &grads {
                 agg.add(g);
             }
             std::hint::black_box(agg.finish_mean(20));
         });
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut out_sv = SparseVec::empty(p);
+        bench(&mut results, &format!("aggregate/20c-sharded {label}"), 15, || {
+            agg.add_all(&refs, cores);
+            agg.finish_mean_into(20, &mut out_sv);
+            std::hint::black_box(&out_sv);
+        });
 
         let buf = wire::encode(&grads[0]);
-        bench(&format!("wire/encode       {label}"), 30, || {
-            std::hint::black_box(wire::encode(&grads[0]));
+        let mut enc_buf = Vec::new();
+        bench(&mut results, &format!("wire/encode       {label}"), 30, || {
+            wire::encode_into(&grads[0], &mut enc_buf);
+            std::hint::black_box(&enc_buf);
         });
-        bench(&format!("wire/decode       {label}"), 30, || {
-            std::hint::black_box(wire::decode(&buf).unwrap());
+        let mut dec_sv = SparseVec::empty(0);
+        bench(&mut results, &format!("wire/decode       {label}"), 30, || {
+            wire::decode_into(&buf, &mut dec_sv).unwrap();
+            std::hint::black_box(&dec_sv);
         });
 
         let mut mom = randvec(p, 6);
-        bench(&format!("momentum/accum    {label}"), 30, || {
+        bench(&mut results, &format!("momentum/accum    {label}"), 30, || {
             primitives::momentum_accumulate(&mut mom, 0.9, &grads[0]);
             std::hint::black_box(&mom);
         });
         println!();
+    }
+
+    // ---- round-level end-to-end: 20 clients × P≈1M, sequential vs parallel
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("== round end-to-end (FlRun::step_round, 20 clients, P≈1M, rate 0.1) ==");
+    let (seq_ms, p) = round_e2e(20, 1024, 976, 16, 1, 4);
+    println!("round/e2e sequential (P={p})            {seq_ms:>9.1} ms/round");
+    let (par_ms, _) = round_e2e(20, 1024, 976, 16, 0, 4);
+    let speedup = seq_ms / par_ms;
+    println!("round/e2e parallel   ({cores} cores)          {par_ms:>9.1} ms/round");
+    println!("round/e2e speedup                          {speedup:>9.2}x");
+
+    // ---- machine-readable trajectory file at the repo root
+    let sections: Vec<Json> = results
+        .iter()
+        .map(|(name, s)| {
+            Json::obj(vec![
+                ("name", Json::str(name.trim())),
+                ("median_ms", Json::num(s.median_ms)),
+                ("mean_ms", Json::num(s.mean_ms)),
+                ("p90_ms", Json::num(s.p90_ms)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("generated", Json::Bool(true)),
+        ("host_cores", Json::num(cores as f64)),
+        (
+            "round_e2e",
+            Json::obj(vec![
+                ("clients", Json::num(20.0)),
+                ("param_count", Json::num(p as f64)),
+                ("rate", Json::num(0.1)),
+                ("sequential_ms_per_round", Json::num(seq_ms)),
+                ("parallel_ms_per_round", Json::num(par_ms)),
+                ("parallel_workers", Json::num(cores as f64)),
+                ("speedup", Json::num(speedup)),
+            ]),
+        ),
+        ("micro", Json::Arr(sections)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    match std::fs::write(path, doc.to_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
 }

@@ -11,7 +11,7 @@
 //! Also includes the fig5/fig6 ablation axis: round cost vs compression
 //! rate, demonstrating where the wire dense-fallback crossover sits.
 
-use fedgmf::compress::{CompressConfig, CompressorKind, TauSchedule};
+use fedgmf::compress::{CompressConfig, Compressor, CompressorKind, TauSchedule};
 use fedgmf::coordinator::server::{BroadcastPolicy, FlServer};
 use fedgmf::coordinator::traffic::{TrafficMeter, TrafficPolicy};
 use fedgmf::sparse::wire;
@@ -106,7 +106,6 @@ fn main() {
         let grad: Vec<f32> = (0..1_000_000).map(|_| rng.normal()).collect();
         let t0 = Instant::now();
         for round in 0..6 {
-            use fedgmf::compress::Compressor;
             std::hint::black_box(comp.compress(&grad, 100_000, round));
         }
         println!("topk={label:<8} {:>9.2} ms/compress", t0.elapsed().as_secs_f64() * 1e3 / 6.0);

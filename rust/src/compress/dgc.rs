@@ -10,7 +10,7 @@
 //! global momentum on the aggregate).
 
 use super::policy::{CompressConfig, Compressor};
-use super::{primitives, Compressed};
+use super::primitives;
 use crate::sparse::vector::SparseVec;
 use crate::util::math::l2_norm;
 
@@ -49,13 +49,17 @@ impl Compressor for Dgc {
         // DGC tracks no global state on the client.
     }
 
-    fn compress(&mut self, grad: &[f32], k: usize, round: usize) -> Compressed {
+    fn observes_broadcast(&self) -> bool {
+        false
+    }
+
+    fn compress_into(&mut self, grad: &[f32], k: usize, round: usize, out: &mut SparseVec) -> f32 {
         debug_assert_eq!(grad.len(), self.u.len());
         self.grad_buf.copy_from_slice(grad);
         primitives::clip_gradient(&mut self.grad_buf, self.clip_norm);
         primitives::dgc_update(&mut self.u, &mut self.v, &self.grad_buf, self.alpha);
         primitives::abs_score(&mut self.scores, &self.v);
-        let (gradient, threshold) = primitives::extract_and_clear(
+        primitives::extract_and_clear_into(
             &mut self.u,
             &mut self.v,
             &self.scores,
@@ -63,8 +67,8 @@ impl Compressor for Dgc {
             self.exact_topk,
             round as u64,
             &mut self.scratch,
-        );
-        Compressed { gradient, threshold }
+            out,
+        )
     }
 
     fn residual_norm(&self) -> f32 {
@@ -144,6 +148,13 @@ mod tests {
         let ga = a.compress(&grad, 6, 1);
         let gb = b.compress(&grad, 6, 1);
         assert_ne!(ga.gradient.values, gb.gradient.values);
+    }
+
+    #[test]
+    fn only_global_momentum_schemes_observe_broadcasts() {
+        assert!(!Dgc::new(&cfg(), 8).observes_broadcast());
+        assert!(crate::compress::Gmc::new(&CompressConfig::default(), 8).observes_broadcast());
+        assert!(crate::compress::DgcGmf::new(&CompressConfig::default(), 8).observes_broadcast());
     }
 
     #[test]

@@ -18,8 +18,8 @@
 //! downlink saving measured in Tables 3/4.
 
 use super::policy::{CompressConfig, Compressor};
+use super::primitives;
 use super::schedule::TauSchedule;
-use super::{primitives, Compressed};
 use crate::sparse::vector::SparseVec;
 use crate::util::math::l2_norm;
 
@@ -73,14 +73,14 @@ impl Compressor for DgcGmf {
         primitives::momentum_accumulate(&mut self.m, self.beta, ghat); // line 8
     }
 
-    fn compress(&mut self, grad: &[f32], k: usize, round: usize) -> Compressed {
+    fn compress_into(&mut self, grad: &[f32], k: usize, round: usize, out: &mut SparseVec) -> f32 {
         debug_assert_eq!(grad.len(), self.u.len());
         self.grad_buf.copy_from_slice(grad);
         primitives::clip_gradient(&mut self.grad_buf, self.clip_norm);
         primitives::dgc_update(&mut self.u, &mut self.v, &self.grad_buf, self.alpha); // 6-7
         let tau = self.tau.at(round);
         primitives::gmf_score(&mut self.scores, &self.v, &self.m, tau); // 9
-        let (gradient, threshold) = primitives::extract_and_clear(
+        primitives::extract_and_clear_into(
             &mut self.u,
             &mut self.v,
             &self.scores,
@@ -88,8 +88,8 @@ impl Compressor for DgcGmf {
             self.exact_topk,
             round as u64,
             &mut self.scratch,
-        ); // 10-12
-        Compressed { gradient, threshold }
+            out,
+        ) // 10-12
     }
 
     fn residual_norm(&self) -> f32 {

@@ -24,7 +24,7 @@
 //! values over-fit local data, degrading the global model.
 
 use super::policy::{CompressConfig, Compressor};
-use super::{primitives, Compressed};
+use super::primitives;
 use crate::sparse::vector::SparseVec;
 use crate::util::math::l2_norm;
 
@@ -72,7 +72,7 @@ impl Compressor for Gmc {
         ghat.add_into(&mut self.m, 1.0);
     }
 
-    fn compress(&mut self, grad: &[f32], k: usize, round: usize) -> Compressed {
+    fn compress_into(&mut self, grad: &[f32], k: usize, round: usize, out: &mut SparseVec) -> f32 {
         debug_assert_eq!(grad.len(), self.v.len());
         self.grad_buf.copy_from_slice(grad);
         primitives::clip_gradient(&mut self.grad_buf, self.clip_norm);
@@ -81,7 +81,7 @@ impl Compressor for Gmc {
             self.v[i] += self.grad_buf[i] + self.beta * self.m[i];
         }
         primitives::abs_score(&mut self.scores, &self.v);
-        let (gradient, threshold) = primitives::extract_and_clear(
+        primitives::extract_and_clear_into(
             &mut self.u_dummy,
             &mut self.v,
             &self.scores,
@@ -89,8 +89,8 @@ impl Compressor for Gmc {
             self.exact_topk,
             round as u64,
             &mut self.scratch,
-        );
-        Compressed { gradient, threshold }
+            out,
+        )
     }
 
     fn residual_norm(&self) -> f32 {

@@ -100,7 +100,27 @@ impl Default for CompressConfig {
 pub trait Compressor: Send {
     fn name(&self) -> &'static str;
     fn observe_broadcast(&mut self, ghat: &SparseVec);
-    fn compress(&mut self, grad: &[f32], k: usize, round: usize) -> Compressed;
+
+    /// Whether [`Compressor::observe_broadcast`] does any work. Schemes with
+    /// no client-side global state (plain DGC) return `false`, letting the
+    /// round loop skip the broadcast fan-out entirely.
+    fn observes_broadcast(&self) -> bool {
+        true
+    }
+
+    /// Hot path: compress the local gradient into a caller-owned reusable
+    /// output vector (`out` is cleared and refilled, keeping its capacity —
+    /// no steady-state allocation). Returns the selection threshold used.
+    fn compress_into(&mut self, grad: &[f32], k: usize, round: usize, out: &mut SparseVec)
+        -> f32;
+
+    /// Allocating convenience wrapper over [`Compressor::compress_into`]
+    /// (tests / cold paths).
+    fn compress(&mut self, grad: &[f32], k: usize, round: usize) -> Compressed {
+        let mut out = SparseVec::empty(grad.len());
+        let threshold = self.compress_into(grad, k, round, &mut out);
+        Compressed { gradient: out, threshold }
+    }
 
     /// Residual (V) L2 norm — over-fitting diagnostic used by Fig. 4 analysis.
     fn residual_norm(&self) -> f32;

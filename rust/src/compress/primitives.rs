@@ -59,9 +59,40 @@ pub fn abs_score(z: &mut [f32], v: &[f32]) {
 
 /// Masked extraction + memory update (Alg. 1 lines 10-12, kernel
 /// `mask_apply`): pulls the top-k coordinates of `v` (by `scores`) out into
-/// a sparse gradient and zeroes them in `u` and `v`.
-///
-/// `scratch` is reused across rounds (no allocation when warm).
+/// `out` (cleared and refilled, capacity kept) and zeroes them in `u` and
+/// `v`. Both `scratch` and `out` are reused across rounds — no allocation
+/// when warm. Returns the selection threshold.
+#[allow(clippy::too_many_arguments)]
+pub fn extract_and_clear_into(
+    u: &mut [f32],
+    v: &mut [f32],
+    scores: &[f32],
+    k: usize,
+    exact: bool,
+    seed: u64,
+    scratch: &mut Vec<f32>,
+    out: &mut SparseVec,
+) -> f32 {
+    let threshold = if exact {
+        topk::threshold_exact(scores, k, scratch)
+    } else {
+        topk::threshold_sampled(scores, k, seed, scratch)
+    };
+    out.dim = v.len();
+    topk::select_at_threshold_into(scores, threshold, k, &mut out.indices);
+    out.values.clear();
+    out.values.reserve(out.indices.len());
+    for &i in &out.indices {
+        let iu = i as usize;
+        out.values.push(v[iu]);
+        v[iu] = 0.0;
+        u[iu] = 0.0;
+    }
+    out.debug_check();
+    threshold
+}
+
+/// Allocating convenience wrapper over [`extract_and_clear_into`].
 pub fn extract_and_clear(
     u: &mut [f32],
     v: &mut [f32],
@@ -71,20 +102,9 @@ pub fn extract_and_clear(
     seed: u64,
     scratch: &mut Vec<f32>,
 ) -> (SparseVec, f32) {
-    let threshold = if exact {
-        topk::threshold_exact(scores, k, scratch)
-    } else {
-        topk::threshold_sampled(scores, k, seed, scratch)
-    };
-    let indices = topk::select_at_threshold(scores, threshold, k);
-    let mut values = Vec::with_capacity(indices.len());
-    for &i in &indices {
-        let iu = i as usize;
-        values.push(v[iu]);
-        v[iu] = 0.0;
-        u[iu] = 0.0;
-    }
-    (SparseVec::from_sorted(v.len(), indices, values), threshold)
+    let mut out = SparseVec::empty(v.len());
+    let threshold = extract_and_clear_into(u, v, scores, k, exact, seed, scratch, &mut out);
+    (out, threshold)
 }
 
 /// Gradient L2 clipping (DGC detail): scales `grad` in place if its norm

@@ -5,6 +5,18 @@
 //! shape, scale). Experiment harnesses build them programmatically; the
 //! CLI loads them from TOML files (see `configs/` at the repo root) with
 //! `--set section.key=value` overrides.
+//!
+//! ## Threading
+//!
+//! `run.workers` (TOML) / [`RunConfig::workers`] controls the round loop's
+//! client fan-out: `0` (the default) uses one worker per available core,
+//! `1` forces sequential execution, any other value caps the thread pool.
+//! Results are **bit-identical at every setting** — the parallel path only
+//! reorders embarrassingly-parallel per-client work, never the reductions —
+//! so the knob is purely a performance/affinity control (e.g.
+//! `--set run.workers=1` to profile the sequential path, or a low value to
+//! share a box between experiment sweeps). Engines that cannot provide
+//! per-worker instances (the PJRT engine) always run sequentially.
 
 pub mod toml;
 
@@ -102,6 +114,12 @@ pub struct RunConfig {
     pub test_size: usize,
     pub downlink_per_client: bool,
     pub client_fraction: f64,
+    /// round-loop worker threads: 0 = one per core, 1 = sequential
+    /// (bit-identical results at any setting; see module docs)
+    pub workers: usize,
+    /// record the exact O(clients²·nnz) mask-overlap diagnostic instead of
+    /// the O(nnz) estimate (analysis runs; TOML `run.exact_mask_overlap`)
+    pub exact_mask_overlap: bool,
 }
 
 impl Default for RunConfig {
@@ -131,6 +149,8 @@ impl Default for RunConfig {
             test_size: 320,
             downlink_per_client: false,
             client_fraction: 1.0,
+            workers: 0,
+            exact_mask_overlap: false,
         }
     }
 }
@@ -216,6 +236,8 @@ impl RunConfig {
             traffic: TrafficPolicy { downlink_per_client: self.downlink_per_client },
             eval_every: self.eval_every,
             seed: self.seed,
+            workers: self.workers,
+            exact_mask_overlap: self.exact_mask_overlap,
         }
     }
 
@@ -269,6 +291,11 @@ impl RunConfig {
         }
         read!("run", "rounds", rounds, as_usize, usize);
         read!("run", "seed", seed, as_usize, u64);
+        read!("run", "workers", workers, as_usize, usize);
+        if let Some(v) = get(doc, "run", "exact_mask_overlap") {
+            cfg.exact_mask_overlap =
+                v.as_bool().ok_or_else(|| anyhow!("run.exact_mask_overlap: bool"))?;
+        }
         read!("data", "clients", clients, as_usize, usize);
         read!("data", "samples_per_client", samples_per_client, as_usize, usize);
         read!("data", "test_size", test_size, as_usize, usize);
@@ -395,9 +422,30 @@ rate = 0.3
         let mut rc = RunConfig::default();
         rc.rate = 0.2;
         rc.technique = CompressorKind::DgcWgm;
+        rc.workers = 3;
         let fc = rc.fl_config();
         assert_eq!(fc.kind, CompressorKind::DgcWgm);
         assert!((fc.warmup.rate - 0.2).abs() < 1e-12);
         assert_eq!(fc.rounds, rc.rounds);
+        assert_eq!(fc.workers, 3);
+    }
+
+    #[test]
+    fn workers_knob_from_toml() {
+        assert_eq!(RunConfig::default().workers, 0, "default = one worker per core");
+        let cfg =
+            RunConfig::from_toml_str("[run]\ntask = \"cifar\"\nworkers = 1\n", &[]).unwrap();
+        assert_eq!(cfg.workers, 1);
+        let cfg = RunConfig::from_toml_str("", &["run.workers=4".to_string()]).unwrap();
+        assert_eq!(cfg.workers, 4);
+    }
+
+    #[test]
+    fn exact_mask_overlap_knob_from_toml() {
+        assert!(!RunConfig::default().exact_mask_overlap);
+        let cfg = RunConfig::from_toml_str("[run]\nexact_mask_overlap = true\n", &[]).unwrap();
+        assert!(cfg.exact_mask_overlap);
+        assert!(cfg.fl_config().exact_mask_overlap);
+        assert!(RunConfig::from_toml_str("[run]\nexact_mask_overlap = 3\n", &[]).is_err());
     }
 }

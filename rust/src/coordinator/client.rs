@@ -1,14 +1,23 @@
-//! FL client: local data shard + compression state.
+//! FL client: local data shard + compression state + persistent round
+//! buffers.
 //!
 //! The model itself stays synchronized across clients (every client applies
 //! the same broadcast update, Alg. 1 line 15), so the run keeps a single
 //! parameter vector and each client owns only its *divergent* state: the
-//! compressor memory (U, V, M) and its data shard.
+//! compressor memory (U, V, M), its data shard, and the reusable buffers the
+//! round hot path writes into (`grad_acc`, `upload`, `wire_buf`, `echo`) —
+//! after the first round a client round performs no heap allocation for
+//! gradient accumulation, compression output or wire encode/decode.
+//!
+//! All per-round state is exclusively per-client, which is what lets the
+//! coordinator fan `local_round` calls out over worker threads with results
+//! bit-identical to sequential execution.
 
-use crate::compress::{Compressed, Compressor};
+use crate::compress::Compressor;
 use crate::data::dataset::{Batch, Dataset};
 use crate::runtime::TrainEngine;
 use crate::sparse::vector::SparseVec;
+use crate::sparse::wire;
 use crate::util::rng::Rng;
 
 pub struct FlClient {
@@ -16,6 +25,14 @@ pub struct FlClient {
     pub compressor: Box<dyn Compressor>,
     pub shard: Box<dyn Dataset + Send>,
     pub rng: Rng,
+    /// local-gradient accumulator, zeroed and refilled each round
+    grad_acc: Vec<f32>,
+    /// compressed upload, reused round over round (capacity kept)
+    pub upload: SparseVec,
+    /// serialised upload — the bytes that actually cross the wire
+    pub wire_buf: Vec<u8>,
+    /// the upload decoded back, i.e. the gradient as the server sees it
+    pub echo: SparseVec,
 }
 
 impl FlClient {
@@ -24,8 +41,18 @@ impl FlClient {
         compressor: Box<dyn Compressor>,
         shard: Box<dyn Dataset + Send>,
         root_rng: &Rng,
+        dim: usize,
     ) -> Self {
-        FlClient { id, compressor, shard, rng: root_rng.derive(0xC11E ^ id as u64) }
+        FlClient {
+            id,
+            compressor,
+            shard,
+            rng: root_rng.derive(0xC11E ^ id as u64),
+            grad_acc: vec![0.0; dim],
+            upload: SparseVec::empty(dim),
+            wire_buf: Vec::new(),
+            echo: SparseVec::empty(dim),
+        }
     }
 
     /// Receive the round broadcast (Alg. 1 line 14 → line 8 of the next
@@ -34,10 +61,12 @@ impl FlClient {
         self.compressor.observe_broadcast(payload);
     }
 
-    /// One local round: compute the local gradient at the current global
-    /// parameters (averaged over `local_steps` minibatches) and compress it.
+    /// One local round, entirely into the persistent buffers: compute the
+    /// local gradient at the current global parameters (averaged over
+    /// `local_steps` minibatches), compress it into `upload`, serialise into
+    /// `wire_buf` and decode into `echo`.
     ///
-    /// Returns (compressed upload, mean training loss, #correct, #seen).
+    /// Returns (mean training loss, #correct, #seen).
     pub fn local_round(
         &mut self,
         engine: &mut dyn TrainEngine,
@@ -46,15 +75,16 @@ impl FlClient {
         local_steps: usize,
         k: usize,
         round: usize,
-    ) -> anyhow::Result<(Compressed, f64, usize, usize)> {
-        let mut grad_acc: Vec<f32> = vec![0.0; params.len()];
+    ) -> anyhow::Result<(f64, usize, usize)> {
+        debug_assert_eq!(self.grad_acc.len(), params.len());
+        self.grad_acc.iter_mut().for_each(|a| *a = 0.0);
         let mut loss_sum = 0.0;
         let mut correct = 0usize;
         let mut seen = 0usize;
         for _ in 0..local_steps.max(1) {
             let batch: Batch = self.shard.sample_batch(batch_size, &mut self.rng);
             let out = engine.train_step(params, &batch)?;
-            for (a, g) in grad_acc.iter_mut().zip(&out.grads) {
+            for (a, g) in self.grad_acc.iter_mut().zip(&out.grads) {
                 *a += g;
             }
             loss_sum += out.loss;
@@ -63,11 +93,14 @@ impl FlClient {
         }
         let steps = local_steps.max(1) as f32;
         if steps > 1.0 {
-            for a in grad_acc.iter_mut() {
+            for a in self.grad_acc.iter_mut() {
                 *a /= steps;
             }
         }
-        let compressed = self.compressor.compress(&grad_acc, k, round);
-        Ok((compressed, loss_sum / steps as f64, correct, seen))
+        let _threshold = self.compressor.compress_into(&self.grad_acc, k, round, &mut self.upload);
+        wire::encode_into(&self.upload, &mut self.wire_buf);
+        wire::decode_into(&self.wire_buf, &mut self.echo)
+            .expect("self-encoded gradient must decode");
+        Ok((loss_sum / steps as f64, correct, seen))
     }
 }

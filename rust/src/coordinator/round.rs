@@ -3,6 +3,25 @@
 //! One `FlRun` owns the global model, the clients, the server, the traffic
 //! meter and the network simulator, and drives `rounds` communication
 //! rounds, recording everything the experiment harness needs.
+//!
+//! ## Parallel execution
+//!
+//! Client work — broadcast observation, local training, compression, wire
+//! encode/decode — is embarrassingly parallel: every piece of mutable state
+//! it touches is per-client. `step_round` therefore fans it out over up to
+//! [`FlConfig::workers`] threads (`std::thread::scope`, one
+//! [`TrainEngine::spawn_worker`] instance per extra thread), while every
+//! order-sensitive reduction — the f64 loss sum, traffic metering, the f32
+//! server merge — runs in deterministic participant order. Results are
+//! **bit-identical** at any worker count (asserted by
+//! `tests/determinism.rs`).
+//!
+//! ## Steady-state allocation
+//!
+//! All round-sized buffers (client gradient accumulators, compression
+//! outputs, wire encode/decode buffers, the server aggregate and broadcast)
+//! are persistent and reused round over round: once warm, the round loop
+//! performs no heap allocation on those paths.
 
 use super::client::FlClient;
 use super::sampler::Sampler;
@@ -13,11 +32,24 @@ use crate::data::dataset::{Batch, Dataset};
 use crate::metrics::recorder::{Recorder, RoundRecord};
 use crate::runtime::{evaluate, TrainEngine};
 use crate::sim::network::Network;
-use crate::sparse::merge::mean_pairwise_jaccard;
+use crate::sparse::merge::{mean_jaccard_estimate, mean_pairwise_jaccard};
 use crate::sparse::vector::SparseVec;
 use crate::sparse::wire;
 use crate::util::rng::Rng;
 use std::time::Instant;
+
+/// Below this much total broadcast-observation work (dense momentum coords ×
+/// clients) the per-round thread spawns cost more than they parallelise.
+const PARALLEL_OBSERVE_MIN_WORK: usize = 1 << 15;
+
+/// Resolve a configured worker count: 0 = one per available core.
+fn resolve_pool(workers: usize) -> usize {
+    if workers == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        workers
+    }
+}
 
 /// Learning-rate schedule: base lr with multiplicative milestones.
 #[derive(Clone, Debug)]
@@ -67,6 +99,13 @@ pub struct FlConfig {
     /// evaluate every N rounds (and always on the last round); 0 = last only
     pub eval_every: usize,
     pub seed: u64,
+    /// worker threads for the per-client fan-out: 0 = one per available
+    /// core, 1 = sequential. Any setting produces bit-identical results.
+    pub workers: usize,
+    /// compute the exact O(clients²·nnz) pairwise mask-overlap diagnostic
+    /// instead of the O(total-nnz) count-based estimate (analysis runs only
+    /// — the exact statistic dominates round cost at large cohorts)
+    pub exact_mask_overlap: bool,
 }
 
 impl FlConfig {
@@ -86,6 +125,8 @@ impl FlConfig {
             traffic: TrafficPolicy::default(),
             eval_every: 10,
             seed: 42,
+            workers: 0,
+            exact_mask_overlap: false,
         }
     }
 }
@@ -116,6 +157,16 @@ pub struct FlRun {
     pub recorder: Recorder,
     test_batches: Vec<Batch>,
     last_payload: SparseVec,
+    /// broadcast payload before its wire round-trip (reused across rounds)
+    payload_scratch: SparseVec,
+    /// broadcast wire bytes (reused across rounds)
+    bcast_buf: Vec<u8>,
+    /// per-participant training losses, reduced in participant order
+    loss_scratch: Vec<f64>,
+    /// index buffer for the mask-overlap estimator
+    overlap_scratch: Vec<u32>,
+    /// worker engine pool, spawned once and reused every round
+    worker_engines: Vec<Box<dyn TrainEngine>>,
 }
 
 impl FlRun {
@@ -134,7 +185,7 @@ impl FlRun {
             .into_iter()
             .enumerate()
             .map(|(id, shard)| {
-                FlClient::new(id, compress::build(cfg.kind, &cfg.compress, dim), shard, &root)
+                FlClient::new(id, compress::build(cfg.kind, &cfg.compress, dim), shard, &root, dim)
             })
             .collect();
         let policy = if cfg.kind.server_momentum() {
@@ -151,11 +202,20 @@ impl FlRun {
             clients,
             test_batches,
             last_payload: SparseVec::empty(dim),
+            payload_scratch: SparseVec::empty(dim),
+            bcast_buf: Vec::new(),
+            loss_scratch: Vec::new(),
+            overlap_scratch: Vec::new(),
+            worker_engines: Vec::new(),
             cfg,
         }
     }
 
     /// Execute one communication round; returns the round record.
+    ///
+    /// Bit-identical at every `cfg.workers` setting: client work is
+    /// exclusively per-client, and every order-sensitive reduction (loss
+    /// sum, metering, server merge) runs in deterministic participant order.
     pub fn step_round(
         &mut self,
         engine: &mut dyn TrainEngine,
@@ -167,53 +227,163 @@ impl FlRun {
         let participants = self.cfg.sampler.sample(self.clients.len(), round, &root);
         let dim = self.params.len();
         let k = self.cfg.warmup.k_at(dim, round);
+        let pool = resolve_pool(self.cfg.workers);
 
         // 1. broadcast of the previous round reaches everyone (Alg.1 l.14+8)
-        if round > 0 {
-            for c in self.clients.iter_mut() {
-                c.observe_broadcast(&self.last_payload);
+        //    — per-client momentum fold-in, skipped wholesale for schemes
+        //    whose observe is a no-op (plain DGC), and fanned out over the
+        //    pool when the O(P)-per-client fold beats the spawn overhead
+        let observes =
+            self.clients.first().is_some_and(|c| c.compressor.observes_broadcast());
+        if round > 0 && observes {
+            let payload = &self.last_payload;
+            let clients = &mut self.clients;
+            let observe_work = dim * clients.len();
+            if pool > 1 && clients.len() > 1 && observe_work >= PARALLEL_OBSERVE_MIN_WORK {
+                let chunk = clients.len().div_ceil(pool);
+                std::thread::scope(|s| {
+                    for ch in clients.chunks_mut(chunk) {
+                        s.spawn(move || {
+                            for c in ch {
+                                c.observe_broadcast(payload);
+                            }
+                        });
+                    }
+                });
+            } else {
+                for c in clients.iter_mut() {
+                    c.observe_broadcast(payload);
+                }
             }
         }
 
-        // 2. local training + compression + upload
-        let mut train_loss = 0.0;
-        let mut grads: Vec<SparseVec> = Vec::with_capacity(participants.len());
-        for &cid in &participants {
-            let client = &mut self.clients[cid];
-            let (compressed, loss, _corr, _seen) = client.local_round(
-                engine,
-                &self.params,
-                self.cfg.batch_size,
-                self.cfg.local_steps,
-                k,
-                round,
-            )?;
-            train_loss += loss;
-            // the gradient actually crosses the wire
-            let buf = wire::encode(&compressed.gradient);
-            self.meter.record_uplink(cid, buf.len());
-            let decoded = wire::decode(&buf).expect("self-encoded gradient must decode");
-            self.server.receive(&decoded);
-            grads.push(decoded);
-        }
-        train_loss /= participants.len().max(1) as f64;
+        // 2. local training + compression + wire round-trip, fanned out over
+        //    worker threads; each client writes only its own persistent
+        //    buffers (upload / wire_buf / echo)
+        let n = participants.len();
+        self.loss_scratch.clear();
+        self.loss_scratch.resize(n, 0.0);
+        let overlap;
+        {
+            let mut parts: Vec<&mut FlClient> = Vec::with_capacity(n);
+            let mut client_iter = self.clients.iter_mut().enumerate();
+            for &cid in &participants {
+                for (i, c) in client_iter.by_ref() {
+                    if i == cid {
+                        parts.push(c);
+                        break;
+                    }
+                }
+            }
+            // the single-pass match above requires ascending participant ids
+            // (every Sampler variant sorts); a miss here would silently skip
+            // clients and misalign the reductions below
+            assert_eq!(
+                parts.len(),
+                participants.len(),
+                "sampler must return sorted unique in-range client ids"
+            );
+            let (batch_size, local_steps) = (self.cfg.batch_size, self.cfg.local_steps);
+            let params = &self.params;
+            let losses = &mut self.loss_scratch[..];
+            // top up the persistent worker pool (first rounds only; engines
+            // are reused every round thereafter)
+            let want = if pool > 1 && n > 1 { pool.min(n) - 1 } else { 0 };
+            while self.worker_engines.len() < want {
+                match engine.spawn_worker() {
+                    Some(e) => self.worker_engines.push(e),
+                    // engine cannot be replicated: run sequentially
+                    None => break,
+                }
+            }
+            let extra = &mut self.worker_engines[..self.worker_engines.len().min(want)];
+            if extra.is_empty() {
+                for (c, l) in parts.iter_mut().zip(losses.iter_mut()) {
+                    let (loss, _, _) =
+                        c.local_round(engine, params, batch_size, local_steps, k, round)?;
+                    *l = loss;
+                }
+            } else {
+                let threads = extra.len() + 1;
+                let chunk = n.div_ceil(threads);
+                let mut first_err: anyhow::Result<()> = Ok(());
+                std::thread::scope(|s| {
+                    let mut part_chunks = parts.chunks_mut(chunk);
+                    let mut loss_chunks = losses.chunks_mut(chunk);
+                    let head_parts = part_chunks.next();
+                    let head_losses = loss_chunks.next();
+                    let mut handles = Vec::with_capacity(threads - 1);
+                    for ((pc, lc), eng) in part_chunks.zip(loss_chunks).zip(extra.iter_mut()) {
+                        handles.push(s.spawn(move || -> anyhow::Result<()> {
+                            for (c, l) in pc.iter_mut().zip(lc.iter_mut()) {
+                                let (loss, _, _) = c.local_round(
+                                    eng.as_mut(),
+                                    params,
+                                    batch_size,
+                                    local_steps,
+                                    k,
+                                    round,
+                                )?;
+                                *l = loss;
+                            }
+                            Ok(())
+                        }));
+                    }
+                    // the caller's engine drives the first chunk on this thread
+                    if let (Some(pc), Some(lc)) = (head_parts, head_losses) {
+                        for (c, l) in pc.iter_mut().zip(lc.iter_mut()) {
+                            match c.local_round(engine, params, batch_size, local_steps, k, round)
+                            {
+                                Ok((loss, _, _)) => *l = loss,
+                                Err(e) => {
+                                    first_err = Err(e);
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    for h in handles {
+                        let r = h.join().expect("fl worker thread panicked");
+                        if first_err.is_ok() {
+                            first_err = r;
+                        }
+                    }
+                });
+                first_err?;
+            }
 
-        // 3. aggregate + broadcast
-        let (payload, _ghat) = self.server.finish_round(participants.len());
-        let bcast_buf = wire::encode(&payload);
-        self.meter.record_broadcast(bcast_buf.len(), participants.len());
-        let payload = wire::decode(&bcast_buf).expect("broadcast must decode");
+            // deterministic reductions, in participant order
+            for (c, &cid) in parts.iter().zip(&participants) {
+                self.meter.record_uplink(cid, c.wire_buf.len());
+            }
+            let echoes: Vec<&SparseVec> = parts.iter().map(|c| &c.echo).collect();
+            overlap = if self.cfg.exact_mask_overlap {
+                mean_pairwise_jaccard(&echoes)
+            } else {
+                mean_jaccard_estimate(&echoes, &mut self.overlap_scratch)
+            };
+            self.server.receive_all(&echoes, pool);
+        }
+        let mut train_loss = 0.0;
+        for &l in &self.loss_scratch {
+            train_loss += l;
+        }
+        train_loss /= n.max(1) as f64;
+
+        // 3. aggregate + broadcast (through the persistent wire buffers)
+        self.server.finish_round_into(n, &mut self.payload_scratch);
+        wire::encode_into(&self.payload_scratch, &mut self.bcast_buf);
+        self.meter.record_broadcast(self.bcast_buf.len(), n);
+        wire::decode_into(&self.bcast_buf, &mut self.last_payload)
+            .expect("broadcast must decode");
 
         // 4. synchronized model update (Alg. 1 line 15)
         let lr = self.cfg.lr.at(round);
-        payload.add_into(&mut self.params, -lr);
-        self.last_payload = payload;
+        self.last_payload.add_into(&mut self.params, -lr);
 
         // 5. diagnostics + eval
-        let refs: Vec<&SparseVec> = grads.iter().collect();
-        let overlap = mean_pairwise_jaccard(&refs);
         let sim_s = self.network.uplink_time(&self.meter.round_uplinks)
-            + self.network.broadcast_time(bcast_buf.len(), &participants);
+            + self.network.broadcast_time(self.bcast_buf.len(), &participants);
 
         let is_last = round + 1 == self.cfg.rounds;
         let do_eval = is_last
@@ -340,6 +510,59 @@ mod tests {
         let (down_gm, up_gm) = run_kind(CompressorKind::DgcWgm);
         assert!(down_gm > down_dgc, "GM downlink {down_gm} vs DGC {down_dgc}");
         assert!((up_gm - up_dgc).abs() / up_dgc < 0.05, "uplinks comparable");
+    }
+
+    #[test]
+    fn steady_state_round_reuses_client_buffers() {
+        // after the warmup rounds grow the buffers, further rounds must not
+        // reallocate any client-side hot-path buffer (upload, wire, echo)
+        let mut engine = NativeEngine::new(8, 12, 4, 1);
+        let (shards, test) = blob_shards(4, 80, 8, 4, 10);
+        let net = Network::uniform(4, Default::default());
+        let mut cfg = quick_cfg(CompressorKind::DgcWgmf);
+        cfg.rounds = 12;
+        let mut run = FlRun::new(&engine, shards, test, net, cfg);
+        for round in 0..3 {
+            run.step_round(&mut engine, round).unwrap();
+        }
+        let snapshot: Vec<(*const u32, *const f32, *const u8, *const u32)> = run
+            .clients
+            .iter()
+            .map(|c| {
+                (
+                    c.upload.indices.as_ptr(),
+                    c.upload.values.as_ptr(),
+                    c.wire_buf.as_ptr(),
+                    c.echo.indices.as_ptr(),
+                )
+            })
+            .collect();
+        for round in 3..12 {
+            run.step_round(&mut engine, round).unwrap();
+        }
+        for (c, snap) in run.clients.iter().zip(&snapshot) {
+            assert_eq!(c.upload.indices.as_ptr(), snap.0, "upload indices reallocated");
+            assert_eq!(c.upload.values.as_ptr(), snap.1, "upload values reallocated");
+            assert_eq!(c.wire_buf.as_ptr(), snap.2, "wire buffer reallocated");
+            assert_eq!(c.echo.indices.as_ptr(), snap.3, "echo reallocated");
+        }
+    }
+
+    #[test]
+    fn explicit_worker_counts_run() {
+        // smoke over several worker settings, including more workers than
+        // clients; numerical equality is covered by tests/determinism.rs
+        for workers in [1usize, 2, 7] {
+            let mut engine = NativeEngine::new(8, 10, 3, 2);
+            let (shards, test) = blob_shards(3, 60, 8, 3, 20);
+            let net = Network::uniform(3, Default::default());
+            let mut cfg = quick_cfg(CompressorKind::Dgc);
+            cfg.rounds = 5;
+            cfg.workers = workers;
+            let mut run = FlRun::new(&engine, shards, test, net, cfg);
+            let summary = run.run(&mut engine).unwrap();
+            assert_eq!(summary.recorder.rounds.len(), 5, "workers={workers}");
+        }
     }
 
     #[test]

@@ -29,6 +29,8 @@ pub struct FlServer {
     /// entries of |momentum| below this are dropped from the broadcast
     /// support (exact 0.0 keeps every touched coordinate forever)
     momentum_prune_eps: f32,
+    /// per-round aggregate Ĝ_t scratch, reused across rounds
+    ghat_scratch: SparseVec,
 }
 
 impl FlServer {
@@ -37,7 +39,14 @@ impl FlServer {
             BroadcastPolicy::ServerMomentum { .. } => vec![0.0; dim],
             BroadcastPolicy::Aggregate => Vec::new(),
         };
-        FlServer { dim, agg: Aggregator::new(dim), policy, momentum, momentum_prune_eps: 0.0 }
+        FlServer {
+            dim,
+            agg: Aggregator::new(dim),
+            policy,
+            momentum,
+            momentum_prune_eps: 0.0,
+            ghat_scratch: SparseVec::empty(dim),
+        }
     }
 
     pub fn dim(&self) -> usize {
@@ -49,37 +58,63 @@ impl FlServer {
         self.agg.add(g);
     }
 
+    /// Receive a whole round of decoded client gradients at once. The merge
+    /// may shard the coordinate space over up to `workers` threads and is
+    /// bit-identical to sequential [`FlServer::receive`] calls in `grads`
+    /// order.
+    pub fn receive_all(&mut self, grads: &[&SparseVec], workers: usize) {
+        self.agg.add_all(grads, workers);
+    }
+
+    /// Allocation-free `finish_round`: writes the broadcast payload into a
+    /// caller-owned reusable vector (cleared, capacity kept) and resets the
+    /// aggregator for the next round. Under `ServerMomentum` the round
+    /// aggregate Ĝ_t is retained internally (`ghat_scratch`) for the
+    /// momentum update.
+    pub fn finish_round_into(&mut self, participants: usize, payload: &mut SparseVec) {
+        match self.policy {
+            BroadcastPolicy::Aggregate => {
+                // payload is Ĝ_t itself
+                self.agg.finish_mean_into(participants, payload);
+            }
+            BroadcastPolicy::ServerMomentum { beta } => {
+                self.agg.finish_mean_into(participants, &mut self.ghat_scratch);
+                for m in self.momentum.iter_mut() {
+                    *m *= beta;
+                }
+                self.ghat_scratch.add_into(&mut self.momentum, 1.0);
+                payload.dim = self.dim;
+                payload.indices.clear();
+                payload.values.clear();
+                let eps = self.momentum_prune_eps;
+                for (i, &m) in self.momentum.iter().enumerate() {
+                    // eps == 0.0 (default) keeps every nonzero coordinate —
+                    // the support-only-accumulates behaviour the paper measures
+                    let keep = if eps > 0.0 { m.abs() > eps } else { m != 0.0 };
+                    if keep {
+                        payload.indices.push(i as u32);
+                        payload.values.push(m);
+                    }
+                }
+            }
+        }
+    }
+
     /// Close the round: aggregate the received gradients and produce
     /// (broadcast payload, aggregate Ĝ_t).
     ///
     /// The aggregate is what clients use for their model update bookkeeping
     /// in all schemes; under `ServerMomentum` the *payload* is M_t and the
     /// model update uses M_t as well (momentum SGD applied at the server).
+    /// Allocating convenience wrapper over [`FlServer::finish_round_into`].
     pub fn finish_round(&mut self, participants: usize) -> (SparseVec, SparseVec) {
-        let ghat = self.agg.finish_mean(participants);
-        match self.policy {
-            BroadcastPolicy::Aggregate => (ghat.clone(), ghat),
-            BroadcastPolicy::ServerMomentum { beta } => {
-                for m in self.momentum.iter_mut() {
-                    *m *= beta;
-                }
-                ghat.add_into(&mut self.momentum, 1.0);
-                let payload = if self.momentum_prune_eps > 0.0 {
-                    let mut idx = Vec::new();
-                    let mut val = Vec::new();
-                    for (i, &m) in self.momentum.iter().enumerate() {
-                        if m.abs() > self.momentum_prune_eps {
-                            idx.push(i as u32);
-                            val.push(m);
-                        }
-                    }
-                    SparseVec::from_sorted(self.dim, idx, val)
-                } else {
-                    SparseVec::from_dense(&self.momentum)
-                };
-                (payload, ghat)
-            }
-        }
+        let mut payload = SparseVec::empty(self.dim);
+        self.finish_round_into(participants, &mut payload);
+        let ghat = match self.policy {
+            BroadcastPolicy::Aggregate => payload.clone(),
+            BroadcastPolicy::ServerMomentum { .. } => self.ghat_scratch.clone(),
+        };
+        (payload, ghat)
     }
 }
 

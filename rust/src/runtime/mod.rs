@@ -3,14 +3,24 @@
 //! * [`pjrt::PjrtEngine`] — the production path: loads the AOT-compiled HLO
 //!   artifacts (L2 JAX models + L1 Pallas kernels, see `python/compile/`)
 //!   and runs them on the PJRT CPU client. Python is never on this path.
+//!   Compiled only with the `pjrt` cargo feature (needs the xla bindings);
+//!   the default build substitutes an API-compatible stub whose constructors
+//!   error at runtime, so the rest of the crate works without libxla.
 //! * [`native::NativeEngine`] — a self-contained pure-Rust model (MLP with
 //!   hand-written backprop) used by unit/integration tests and benches that
 //!   must run without artifacts, and as a cross-check for the FL dynamics.
 //!
-//! Both implement [`TrainEngine`]; the coordinator is engine-agnostic.
+//! Both implement [`TrainEngine`]; the coordinator is engine-agnostic. The
+//! parallel round loop asks an engine for per-worker instances through
+//! [`TrainEngine::spawn_worker`]; engines that cannot be replicated return
+//! `None` and the coordinator falls back to sequential execution.
 
 pub mod manifest;
 pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use manifest::{Manifest, ModelEntry};
@@ -35,6 +45,13 @@ pub trait TrainEngine: Send {
     fn train_step(&mut self, params: &[f32], batch: &Batch) -> anyhow::Result<StepOutput>;
     /// Loss + #correct on one batch (no gradient).
     fn eval_step(&mut self, params: &[f32], batch: &Batch) -> anyhow::Result<(f64, usize)>;
+    /// Spawn an independent engine instance for one parallel worker thread
+    /// of the round loop. Engines wrapping a runtime handle that cannot be
+    /// shared or replicated (e.g. the PJRT client) keep the default `None`,
+    /// which makes the coordinator run its sequential path instead.
+    fn spawn_worker(&self) -> Option<Box<dyn TrainEngine>> {
+        None
+    }
 }
 
 /// Evaluate over a list of batches; returns (mean loss, accuracy).

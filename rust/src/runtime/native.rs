@@ -192,6 +192,12 @@ impl TrainEngine for NativeEngine {
         }
         Ok((loss_sum / n as f64, correct))
     }
+
+    fn spawn_worker(&self) -> Option<Box<dyn TrainEngine>> {
+        // the engine is stateless apart from scratch buffers, so a clone is
+        // a fully independent, numerically identical worker instance
+        Some(Box::new(self.clone()))
+    }
 }
 
 /// Synthetic Gaussian-blob feature dataset for native-engine tests: class c

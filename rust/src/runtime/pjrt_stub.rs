@@ -1,0 +1,103 @@
+//! API-compatible stub for the PJRT engine, compiled when the `pjrt`
+//! feature is disabled (the default: the offline build has no xla bindings
+//! or libxla).
+//!
+//! Every constructor returns an error, so the pjrt-requiring code paths
+//! (`--engine pjrt`, `artifacts-check`, the AOT equivalence tests) fail
+//! gracefully at runtime with an actionable message, while the rest of the
+//! crate — native engine, coordinator, compression, experiments — builds
+//! and runs unchanged. The engine/executor types are uninhabited enums:
+//! they can only ever exist behind the real implementation.
+
+use super::manifest::ModelEntry;
+use super::{StepOutput, TrainEngine};
+use crate::data::dataset::Batch;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+use std::rc::Rc;
+
+fn disabled() -> anyhow::Error {
+    anyhow!(
+        "this build has no PJRT runtime (compiled without the `pjrt` feature); \
+         vendor the xla bindings and rebuild with `--features pjrt`, or use `--engine native`"
+    )
+}
+
+/// Placeholder for the PJRT client handle.
+pub struct StubClient;
+
+impl StubClient {
+    pub fn platform_name(&self) -> String {
+        "pjrt-disabled".to_string()
+    }
+}
+
+/// Stub of the shared PJRT client context; [`PjrtContext::cpu`] always errs.
+pub struct PjrtContext {
+    pub client: StubClient,
+}
+
+impl PjrtContext {
+    pub fn cpu() -> Result<Rc<PjrtContext>> {
+        Err(disabled())
+    }
+
+    /// Load + compile an HLO text artifact (stub: always errs).
+    pub fn load(&self, _path: &Path) -> Result<()> {
+        Err(disabled())
+    }
+}
+
+/// Uninhabited stand-in for the artifact-backed engine.
+pub enum PjrtEngine {}
+
+impl PjrtEngine {
+    pub fn new(_ctx: Rc<PjrtContext>, _entry: &ModelEntry) -> Result<PjrtEngine> {
+        Err(disabled())
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        match *self {}
+    }
+}
+
+impl TrainEngine for PjrtEngine {
+    fn param_count(&self) -> usize {
+        match *self {}
+    }
+
+    fn initial_params(&self) -> Vec<f32> {
+        match *self {}
+    }
+
+    fn train_step(&mut self, _params: &[f32], _batch: &Batch) -> Result<StepOutput> {
+        match *self {}
+    }
+
+    fn eval_step(&mut self, _params: &[f32], _batch: &Batch) -> Result<(f64, usize)> {
+        match *self {}
+    }
+}
+
+/// Uninhabited stand-in for the L1 kernel executor.
+pub enum KernelExecutor {}
+
+impl KernelExecutor {
+    pub fn new(_ctx: &PjrtContext, _entry: &ModelEntry) -> Result<KernelExecutor> {
+        Err(disabled())
+    }
+
+    pub fn gmf_score(&self, _v: &[f32], _m: &[f32], _tau: f32) -> Result<Vec<f32>> {
+        match *self {}
+    }
+
+    pub fn dgc_update(
+        &self,
+        _u: &[f32],
+        _v: &[f32],
+        _g: &[f32],
+        _alpha: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        match *self {}
+    }
+}

@@ -7,17 +7,28 @@
 
 use super::vector::SparseVec;
 
+/// Below this many total incoming nonzeros the sharded merge is not worth
+/// the per-round thread-spawn overhead.
+const PARALLEL_MERGE_MIN_NNZ: usize = 1 << 15;
+
 /// Dense-buffer sparse accumulator, reused across rounds (no allocation in
 /// the round loop once warm).
 pub struct Aggregator {
     acc: Vec<f32>,
     touched: Vec<u32>,
     dirty: Vec<bool>,
+    /// per-shard touched lists for the parallel merge (reused across rounds)
+    shard_touched: Vec<Vec<u32>>,
 }
 
 impl Aggregator {
     pub fn new(dim: usize) -> Self {
-        Aggregator { acc: vec![0.0; dim], touched: Vec::new(), dirty: vec![false; dim] }
+        Aggregator {
+            acc: vec![0.0; dim],
+            touched: Vec::new(),
+            dirty: vec![false; dim],
+            shard_touched: Vec::new(),
+        }
     }
 
     pub fn dim(&self) -> usize {
@@ -37,25 +48,96 @@ impl Aggregator {
         }
     }
 
-    /// Finish the round: divide by `count`, emit the union-support sparse
-    /// aggregate, and reset for the next round.
-    pub fn finish_mean(&mut self, count: usize) -> SparseVec {
+    /// Merge a whole round of client contributions, sharding the coordinate
+    /// space over up to `workers` threads when the volume justifies it.
+    ///
+    /// Bit-identical to sequential [`Aggregator::add`] calls in `grads`
+    /// order: shards partition the coordinate space, so within every
+    /// coordinate the f32 additions still happen in client order.
+    pub fn add_all(&mut self, grads: &[&SparseVec], workers: usize) {
+        let total_nnz: usize = grads.iter().map(|g| g.nnz()).sum();
+        if workers <= 1 || total_nnz < PARALLEL_MERGE_MIN_NNZ || self.acc.is_empty() {
+            for g in grads {
+                self.add(g);
+            }
+            return;
+        }
+        for g in grads {
+            assert_eq!(g.dim, self.acc.len(), "dimension mismatch");
+        }
+        let shards = workers.min(self.acc.len());
+        let shard_len = self.acc.len().div_ceil(shards);
+        if self.shard_touched.len() < shards {
+            self.shard_touched.resize_with(shards, Vec::new);
+        }
+        let shard_touched = &mut self.shard_touched[..shards];
+        let acc = &mut self.acc[..];
+        let dirty = &mut self.dirty[..];
+        std::thread::scope(|s| {
+            let mut acc_rest: &mut [f32] = acc;
+            let mut dirty_rest: &mut [bool] = dirty;
+            let mut base = 0usize;
+            for touched in shard_touched.iter_mut() {
+                let len = shard_len.min(acc_rest.len());
+                let (acc_chunk, ar) = acc_rest.split_at_mut(len);
+                let (dirty_chunk, dr) = dirty_rest.split_at_mut(len);
+                acc_rest = ar;
+                dirty_rest = dr;
+                let lo = base;
+                base += len;
+                s.spawn(move || {
+                    touched.clear();
+                    for g in grads {
+                        let start = g.indices.partition_point(|&i| (i as usize) < lo);
+                        let end = g.indices.partition_point(|&i| (i as usize) < lo + len);
+                        for (&i, &v) in g.indices[start..end].iter().zip(&g.values[start..end]) {
+                            let off = i as usize - lo;
+                            if !dirty_chunk[off] {
+                                dirty_chunk[off] = true;
+                                touched.push(i);
+                            }
+                            acc_chunk[off] += v;
+                        }
+                    }
+                });
+            }
+        });
+        for t in shard_touched.iter() {
+            self.touched.extend_from_slice(t);
+        }
+    }
+
+    /// Allocation-free `finish_mean`: divide by `count`, emit the
+    /// union-support aggregate into `out` (cleared, capacity kept), and
+    /// reset for the next round.
+    pub fn finish_mean_into(&mut self, count: usize, out: &mut SparseVec) {
         let scale = if count == 0 { 0.0 } else { 1.0 / count as f32 };
         self.touched.sort_unstable();
-        let mut indices = Vec::with_capacity(self.touched.len());
-        let mut values = Vec::with_capacity(self.touched.len());
+        out.dim = self.acc.len();
+        out.indices.clear();
+        out.values.clear();
+        out.indices.reserve(self.touched.len());
+        out.values.reserve(self.touched.len());
         for &i in &self.touched {
             let iu = i as usize;
             let v = self.acc[iu] * scale;
             if v != 0.0 {
-                indices.push(i);
-                values.push(v);
+                out.indices.push(i);
+                out.values.push(v);
             }
             self.acc[iu] = 0.0;
             self.dirty[iu] = false;
         }
         self.touched.clear();
-        SparseVec::from_sorted(self.dim(), indices, values)
+        out.debug_check();
+    }
+
+    /// Finish the round: divide by `count`, emit the union-support sparse
+    /// aggregate, and reset for the next round.
+    pub fn finish_mean(&mut self, count: usize) -> SparseVec {
+        let mut out = SparseVec::empty(self.dim());
+        self.finish_mean_into(count, &mut out);
+        out
     }
 }
 
@@ -67,9 +149,58 @@ pub fn support_union(vs: &[&SparseVec]) -> Vec<u32> {
     all
 }
 
+/// Count-based O(total-nnz·log) estimate of the mean pairwise Jaccard
+/// overlap, replacing the O(clients²·nnz) exact diagnostic on the round hot
+/// path (at 100 clients the exact version dominates the round cost).
+///
+/// The mean pairwise *intersection* is computed exactly from coordinate
+/// multiplicities (Σ_i C(c_i, 2) over C(n, 2) pairs); per-pair union sizes
+/// are approximated by the mean mask size. The estimate is exact for n = 2
+/// and for identical masks, and shares the exact statistic's ordering: it is
+/// a strictly increasing function of the mean intersection whenever mask
+/// sizes are equal (the steady-state exact-top-k case).
+///
+/// `scratch` is a reusable index buffer (no allocation when warm).
+pub fn mean_jaccard_estimate(vs: &[&SparseVec], scratch: &mut Vec<u32>) -> f64 {
+    let n = vs.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let total: usize = vs.iter().map(|v| v.nnz()).sum();
+    if total == 0 {
+        return 1.0;
+    }
+    scratch.clear();
+    scratch.reserve(total);
+    for v in vs {
+        scratch.extend_from_slice(&v.indices);
+    }
+    scratch.sort_unstable();
+    let mut inter_pairs = 0u64;
+    let mut run = 1u64;
+    for w in 1..scratch.len() {
+        if scratch[w] == scratch[w - 1] {
+            run += 1;
+        } else {
+            inter_pairs += run * (run - 1) / 2;
+            run = 1;
+        }
+    }
+    inter_pairs += run * (run - 1) / 2;
+    let pairs = (n * (n - 1) / 2) as f64;
+    let mean_inter = inter_pairs as f64 / pairs;
+    let mean_nnz = total as f64 / n as f64;
+    let denom = 2.0 * mean_nnz - mean_inter;
+    if denom <= 0.0 {
+        return 1.0;
+    }
+    (mean_inter / denom).clamp(0.0, 1.0)
+}
+
 /// Mean Jaccard overlap between consecutive client masks — the mask
 /// similarity statistic GMF is designed to raise (higher overlap → smaller
-/// union → cheaper downlink).
+/// union → cheaper downlink). Exact but O(clients²·nnz); the round loop uses
+/// [`mean_jaccard_estimate`] unless configured otherwise.
 pub fn mean_pairwise_jaccard(vs: &[&SparseVec]) -> f64 {
     if vs.len() < 2 {
         return 1.0;
@@ -161,5 +292,97 @@ mod tests {
         let mut agg = Aggregator::new(8);
         let out = agg.finish_mean(0);
         assert_eq!(out.nnz(), 0);
+    }
+
+    fn rand_sparse(dim: usize, nnz: usize, seed: u64) -> SparseVec {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut ids: Vec<u32> = (0..dim as u32).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(nnz);
+        ids.sort_unstable();
+        let vals: Vec<f32> = ids.iter().map(|_| rng.normal()).collect();
+        SparseVec::from_sorted(dim, ids, vals)
+    }
+
+    #[test]
+    fn sharded_merge_is_bit_identical_to_sequential() {
+        // total nnz must clear PARALLEL_MERGE_MIN_NNZ so the sharded path runs
+        let dim = 50_000;
+        let grads: Vec<SparseVec> = (0..8).map(|c| rand_sparse(dim, 8_000, 100 + c)).collect();
+        let refs: Vec<&SparseVec> = grads.iter().collect();
+        assert!(refs.iter().map(|g| g.nnz()).sum::<usize>() >= super::PARALLEL_MERGE_MIN_NNZ);
+
+        let mut seq = Aggregator::new(dim);
+        for g in &refs {
+            seq.add(g);
+        }
+        let a = seq.finish_mean(8);
+
+        for workers in [2usize, 3, 5, 64] {
+            let mut par = Aggregator::new(dim);
+            par.add_all(&refs, workers);
+            let b = par.finish_mean(8);
+            assert_eq!(a.indices, b.indices, "workers={workers}");
+            let bits_a: Vec<u32> = a.values.iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> = b.values.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "workers={workers}: values must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn finish_mean_into_reuses_buffers() {
+        let mut agg = Aggregator::new(16);
+        let mut out = SparseVec::empty(0);
+        agg.add(&SparseVec::new(16, vec![(1, 2.0), (9, 4.0)]));
+        agg.finish_mean_into(1, &mut out);
+        assert_eq!(out.indices, vec![1, 9]);
+        assert_eq!(out.dim, 16);
+        let ptr = out.indices.as_ptr();
+        agg.add(&SparseVec::new(16, vec![(3, 1.0)]));
+        agg.finish_mean_into(1, &mut out);
+        assert_eq!(out.indices, vec![3]);
+        assert_eq!(out.indices.as_ptr(), ptr, "warm finish must not reallocate");
+    }
+
+    #[test]
+    fn jaccard_estimate_exact_for_two_masks_and_identical_masks() {
+        let a = SparseVec::new(10, vec![(1, 1.0), (2, 1.0)]);
+        let b = SparseVec::new(10, vec![(2, 1.0), (3, 1.0)]);
+        let mut scratch = Vec::new();
+        let est = mean_jaccard_estimate(&[&a, &b], &mut scratch);
+        assert!((est - mean_pairwise_jaccard(&[&a, &b])).abs() < 1e-12);
+        let est_same = mean_jaccard_estimate(&[&a, &a, &a], &mut scratch);
+        assert_eq!(est_same, 1.0);
+        assert_eq!(mean_jaccard_estimate(&[&a], &mut scratch), 1.0);
+        let e = SparseVec::empty(10);
+        assert_eq!(mean_jaccard_estimate(&[&e, &e], &mut scratch), 1.0);
+    }
+
+    #[test]
+    fn jaccard_estimate_orders_like_exact_at_equal_k() {
+        // three cohorts with increasing true overlap; the estimate must rank
+        // them the same way the exact statistic does
+        let mk = |shift: u32| -> Vec<SparseVec> {
+            (0..6u32)
+                .map(|c| {
+                    let ids: Vec<u32> = (0..20).map(|j| j * 7 + c * shift).collect();
+                    SparseVec::new(1000, ids.into_iter().map(|i| (i, 1.0)).collect())
+                })
+                .collect()
+        };
+        let mut scratch = Vec::new();
+        let mut last_est = -1.0f64;
+        let mut last_exact = -1.0f64;
+        for shift in [21u32, 7, 0] {
+            let cohort = mk(shift);
+            let refs: Vec<&SparseVec> = cohort.iter().collect();
+            let est = mean_jaccard_estimate(&refs, &mut scratch);
+            let exact = mean_pairwise_jaccard(&refs);
+            assert!(est >= last_est, "shift {shift}: est {est} < {last_est}");
+            assert!(exact >= last_exact);
+            last_est = est;
+            last_exact = exact;
+        }
+        assert_eq!(last_est, 1.0); // shift 0: identical masks
     }
 }

@@ -15,7 +15,8 @@
 use crate::util::rng::Rng;
 
 /// Exact value of the k-th largest element (1-based: k=1 → max).
-/// Returns `f32::NEG_INFINITY` for k == 0 and the minimum for k >= len.
+/// Returns `f32::INFINITY` for k == 0 (a threshold no score can clear, so
+/// nothing is selected) and the minimum for k >= len.
 pub fn threshold_exact(scores: &[f32], k: usize, scratch: &mut Vec<f32>) -> f32 {
     if k == 0 {
         return f32::INFINITY;
@@ -109,10 +110,16 @@ pub fn threshold_sampled(scores: &[f32], k: usize, seed: u64, scratch: &mut Vec<
     *order_stat(scratch, idx)
 }
 
-/// Collect the indices whose score clears `threshold`, capped at `k`
-/// (first-index-wins on ties). Returns sorted indices.
-pub fn select_at_threshold(scores: &[f32], threshold: f32, k: usize) -> Vec<u32> {
-    let mut out = Vec::with_capacity(k.min(scores.len()));
+/// Collect the indices whose score clears `threshold` into a reusable
+/// buffer, capped at `k` (first-index-wins on ties). Indices come out
+/// sorted; `out` keeps its capacity across calls (no allocation when warm).
+pub fn select_at_threshold_into(scores: &[f32], threshold: f32, k: usize, out: &mut Vec<u32>) {
+    out.clear();
+    if k == 0 {
+        // k == 0 must select nothing even for scores that clear an infinite
+        // threshold (s == +INF satisfies s >= f32::INFINITY)
+        return;
+    }
     for (i, &s) in scores.iter().enumerate() {
         if s >= threshold {
             out.push(i as u32);
@@ -121,6 +128,12 @@ pub fn select_at_threshold(scores: &[f32], threshold: f32, k: usize) -> Vec<u32>
             }
         }
     }
+}
+
+/// Allocating convenience wrapper over [`select_at_threshold_into`].
+pub fn select_at_threshold(scores: &[f32], threshold: f32, k: usize) -> Vec<u32> {
+    let mut out = Vec::with_capacity(k.min(scores.len()));
+    select_at_threshold_into(scores, threshold, k, &mut out);
     out
 }
 
@@ -217,6 +230,35 @@ mod tests {
         let scores = vec![2.5f32; 10_000];
         let mut scratch = Vec::new();
         assert_eq!(threshold_sampled(&scores, 100, 1, &mut scratch), 2.5);
+    }
+
+    #[test]
+    fn k_zero_threshold_is_plus_infinity_and_selects_nothing() {
+        // doc contract: k == 0 yields +∞ (an unclearable threshold), NOT
+        // NEG_INFINITY (which would select everything)
+        let scores = vec![1.0f32, 5.0, 3.0];
+        let mut scratch = Vec::new();
+        let t = threshold_exact(&scores, 0, &mut scratch);
+        assert_eq!(t, f32::INFINITY);
+        assert!(select_at_threshold(&scores, t, 0).is_empty());
+        assert_eq!(threshold_sampled(&scores, 0, 1, &mut scratch), f32::INFINITY);
+        // +INF scores clear an infinite threshold; k == 0 must still win
+        let inf_scores = vec![1.0f32, f32::INFINITY, 3.0];
+        assert!(select_at_threshold(&inf_scores, f32::INFINITY, 0).is_empty());
+    }
+
+    #[test]
+    fn select_into_reuses_buffer() {
+        let scores = vec![0.9f32, 0.1, 0.8, 0.2, 0.7];
+        let mut out = Vec::new();
+        select_at_threshold_into(&scores, 0.5, 3, &mut out);
+        assert_eq!(out, vec![0, 2, 4]);
+        let cap = out.capacity();
+        let ptr = out.as_ptr();
+        select_at_threshold_into(&scores, 0.5, 2, &mut out);
+        assert_eq!(out, vec![0, 2]);
+        assert_eq!(out.capacity(), cap);
+        assert_eq!(out.as_ptr(), ptr, "warm select must not reallocate");
     }
 
     #[test]

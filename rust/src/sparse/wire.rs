@@ -48,15 +48,29 @@ fn use_dense(sv: &SparseVec) -> bool {
     8 * sv.nnz() >= 4 * sv.dim
 }
 
-pub fn encode(sv: &SparseVec) -> Vec<u8> {
-    let mut out = Vec::with_capacity(encoded_bytes(sv));
+/// Serialise into a reusable buffer: `out` is cleared and refilled, keeping
+/// its capacity across calls — the round hot path encodes every uplink and
+/// the broadcast through per-client persistent buffers with zero steady-state
+/// allocation. The dense fallback streams zeros directly instead of
+/// materialising a dense copy.
+pub fn encode_into(sv: &SparseVec, out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(encoded_bytes(sv));
     out.extend_from_slice(&MAGIC.to_le_bytes());
     if use_dense(sv) {
         out.push(1);
         out.extend_from_slice(&(sv.dim as u32).to_le_bytes());
-        let dense = sv.to_dense();
-        for v in dense {
+        const ZERO: [u8; 4] = [0, 0, 0, 0];
+        let mut next = 0usize;
+        for (&i, &v) in sv.indices.iter().zip(&sv.values) {
+            for _ in next..i as usize {
+                out.extend_from_slice(&ZERO);
+            }
             out.extend_from_slice(&v.to_le_bytes());
+            next = i as usize + 1;
+        }
+        for _ in next..sv.dim {
+            out.extend_from_slice(&ZERO);
         }
     } else {
         out.push(0);
@@ -70,71 +84,86 @@ pub fn encode(sv: &SparseVec) -> Vec<u8> {
         }
     }
     debug_assert_eq!(out.len(), encoded_bytes(sv));
+}
+
+/// Allocating convenience wrapper over [`encode_into`].
+pub fn encode(sv: &SparseVec) -> Vec<u8> {
+    let mut out = Vec::with_capacity(encoded_bytes(sv));
+    encode_into(sv, &mut out);
     out
 }
 
-pub fn decode(buf: &[u8]) -> Result<SparseVec, WireError> {
-    let mut cur = Cursor { buf, pos: 0 };
-    let magic = cur.u32()?;
+/// Deserialise into a reusable vector: `out.indices` / `out.values` are
+/// cleared and refilled (capacity kept), `out.dim` is overwritten. Index and
+/// value arrays are read in bulk via `chunks_exact` rather than per-element
+/// cursor reads. On error `out` is left in an unspecified (but valid) state.
+pub fn decode_into(buf: &[u8], out: &mut SparseVec) -> Result<(), WireError> {
+    if buf.len() < HEADER_BYTES {
+        return Err(WireError::Truncated(buf.len()));
+    }
+    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
     if magic != MAGIC {
         return Err(WireError::BadMagic(magic));
     }
-    let kind = cur.u8()?;
-    let dim = cur.u32()?;
+    let kind = buf[4];
+    let dim = u32::from_le_bytes(buf[5..9].try_into().unwrap());
+    out.dim = dim as usize;
+    out.indices.clear();
+    out.values.clear();
     match kind {
         1 => {
-            let mut dense = Vec::with_capacity(dim as usize);
-            for _ in 0..dim {
-                dense.push(cur.f32()?);
+            let body_len = 4 * dim as usize;
+            let Some(body) = buf.get(HEADER_BYTES..HEADER_BYTES + body_len) else {
+                return Err(WireError::Truncated(buf.len()));
+            };
+            for (i, c) in body.chunks_exact(4).enumerate() {
+                let v = f32::from_le_bytes(c.try_into().unwrap());
+                if v != 0.0 {
+                    out.indices.push(i as u32);
+                    out.values.push(v);
+                }
             }
-            Ok(SparseVec::from_dense(&dense))
+            Ok(())
         }
         0 => {
-            let nnz = cur.u32()?;
-            let mut indices = Vec::with_capacity(nnz as usize);
-            for _ in 0..nnz {
-                let i = cur.u32()?;
+            let Some(nnz_bytes) = buf.get(HEADER_BYTES..HEADER_BYTES + 4) else {
+                return Err(WireError::Truncated(buf.len()));
+            };
+            let nnz = u32::from_le_bytes(nnz_bytes.try_into().unwrap()) as usize;
+            let idx_off = HEADER_BYTES + 4;
+            let val_off = idx_off + 4 * nnz;
+            if buf.len() < val_off + 4 * nnz {
+                return Err(WireError::Truncated(buf.len()));
+            }
+            out.indices.reserve(nnz);
+            out.values.reserve(nnz);
+            let mut last: i64 = -1;
+            for c in buf[idx_off..val_off].chunks_exact(4) {
+                let i = u32::from_le_bytes(c.try_into().unwrap());
                 if i >= dim {
                     return Err(WireError::IndexOutOfBounds { idx: i, dim });
                 }
-                indices.push(i);
+                if (i as i64) <= last {
+                    return Err(WireError::Unsorted);
+                }
+                last = i as i64;
+                out.indices.push(i);
             }
-            if !indices.windows(2).all(|w| w[0] < w[1]) {
-                return Err(WireError::Unsorted);
+            for c in buf[val_off..val_off + 4 * nnz].chunks_exact(4) {
+                out.values.push(f32::from_le_bytes(c.try_into().unwrap()));
             }
-            let mut values = Vec::with_capacity(nnz as usize);
-            for _ in 0..nnz {
-                values.push(cur.f32()?);
-            }
-            Ok(SparseVec::from_sorted(dim as usize, indices, values))
+            out.debug_check();
+            Ok(())
         }
         k => Err(WireError::BadKind(k)),
     }
 }
 
-struct Cursor<'a> {
-    buf: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
-        if self.pos + n > self.buf.len() {
-            return Err(WireError::Truncated(self.buf.len()));
-        }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
-    }
-    fn u8(&mut self) -> Result<u8, WireError> {
-        Ok(self.take(1)?[0])
-    }
-    fn u32(&mut self) -> Result<u32, WireError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-    fn f32(&mut self) -> Result<f32, WireError> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
+/// Allocating convenience wrapper over [`decode_into`].
+pub fn decode(buf: &[u8]) -> Result<SparseVec, WireError> {
+    let mut out = SparseVec::empty(0);
+    decode_into(buf, &mut out)?;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -194,5 +223,39 @@ mod tests {
     fn empty_vec_roundtrip() {
         let sv = SparseVec::empty(42);
         assert_eq!(decode(&encode(&sv)).unwrap(), sv);
+    }
+
+    #[test]
+    fn into_variants_reuse_buffers() {
+        let a = SparseVec::new(100, vec![(3, 1.5), (50, -2.0), (99, 0.25)]);
+        let b = SparseVec::new(100, vec![(7, 4.0)]);
+        let mut buf = Vec::new();
+        let mut back = SparseVec::empty(0);
+        encode_into(&a, &mut buf);
+        decode_into(&buf, &mut back).unwrap();
+        assert_eq!(back, a);
+        let (buf_cap, buf_ptr) = (buf.capacity(), buf.as_ptr());
+        let idx_ptr = back.indices.as_ptr();
+        // smaller payload through the same buffers: no reallocation
+        encode_into(&b, &mut buf);
+        decode_into(&buf, &mut back).unwrap();
+        assert_eq!(back, b);
+        assert_eq!(buf.capacity(), buf_cap);
+        assert_eq!(buf.as_ptr(), buf_ptr, "warm encode must not reallocate");
+        assert_eq!(back.indices.as_ptr(), idx_ptr, "warm decode must not reallocate");
+    }
+
+    #[test]
+    fn dense_streaming_encode_matches_dense_materialise() {
+        // the dense fallback streams zeros; bytes must equal encoding the
+        // materialised dense vector
+        let pairs: Vec<(u32, f32)> = (0..60).map(|i| (i * 3 % 100, i as f32 - 7.5)).collect();
+        let sv = SparseVec::new(100, pairs.into_iter().collect());
+        let buf = encode(&sv);
+        assert_eq!(buf[4], 1, "must take the dense path");
+        let dense = sv.to_dense();
+        for (i, c) in buf[HEADER_BYTES..].chunks_exact(4).enumerate() {
+            assert_eq!(f32::from_le_bytes(c.try_into().unwrap()), dense[i], "coord {i}");
+        }
     }
 }
