@@ -98,49 +98,54 @@ fn round_e2e(clients: usize, input_dim: usize, hidden: usize, classes: usize, wo
 }
 
 fn main() {
+    // BENCH_QUICK=1: CI smoke mode — small sizes, few iterations, same JSON
+    // shape (validated by the workflow); timings are not representative.
+    let quick = std::env::var("BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let it = |n: usize| if quick { 3 } else { n };
     let mut results: Vec<(String, Stats)> = Vec::new();
-    println!("== fedgmf hot-path micro-benchmarks ==");
-    for &p in &[77_850usize, 1_000_000] {
+    println!("== fedgmf hot-path micro-benchmarks{} ==", if quick { " (quick mode)" } else { "" });
+    let sizes: &[usize] = if quick { &[77_850] } else { &[77_850, 1_000_000] };
+    for &p in sizes {
         let label = if p == 77_850 { "P=77850(resnet8)" } else { "P=1M" };
         let k = p / 10;
         let scores: Vec<f32> = randvec(p, 1).iter().map(|x| x.abs()).collect();
         let mut scratch = Vec::new();
 
-        bench(&mut results, &format!("topk/exact        {label}"), 20, || {
+        bench(&mut results, &format!("topk/exact        {label}"), it(20), || {
             std::hint::black_box(topk::threshold_exact(&scores, k, &mut scratch));
         });
-        bench(&mut results, &format!("topk/sampled      {label}"), 20, || {
+        bench(&mut results, &format!("topk/sampled      {label}"), it(20), || {
             std::hint::black_box(topk::threshold_sampled(&scores, k, 7, &mut scratch));
         });
 
         let v = randvec(p, 2);
         let m = randvec(p, 3);
         let mut z = vec![0.0f32; p];
-        bench(&mut results, &format!("score/abs         {label}"), 30, || {
+        bench(&mut results, &format!("score/abs         {label}"), it(30), || {
             primitives::abs_score(&mut z, &v);
             std::hint::black_box(&z);
         });
-        bench(&mut results, &format!("score/gmf         {label}"), 30, || {
+        bench(&mut results, &format!("score/gmf         {label}"), it(30), || {
             primitives::gmf_score(&mut z, &v, &m, 0.4);
             std::hint::black_box(&z);
         });
 
         let grad = randvec(p, 4);
         let mut dgc = fedgmf::compress::Dgc::new(&CompressConfig::default(), p);
-        bench(&mut results, &format!("compress/dgc      {label}"), 15, || {
+        bench(&mut results, &format!("compress/dgc      {label}"), it(15), || {
             std::hint::black_box(dgc.compress(&grad, k, 1));
         });
         let cfg = CompressConfig { tau: TauSchedule::Constant(0.4), ..Default::default() };
         let mut gmf = fedgmf::compress::DgcGmf::new(&cfg, p);
         gmf.observe_broadcast(&SparseVec::from_dense(&randvec(p, 5)));
-        bench(&mut results, &format!("compress/gmf      {label}"), 15, || {
+        bench(&mut results, &format!("compress/gmf      {label}"), it(15), || {
             std::hint::black_box(gmf.compress(&grad, k, 1));
         });
 
         let cfg2 = CompressConfig { exact_topk: false, ..cfg.clone() };
         let mut gmf2 = fedgmf::compress::DgcGmf::new(&cfg2, p);
         gmf2.observe_broadcast(&SparseVec::from_dense(&randvec(p, 5)));
-        bench(&mut results, &format!("compress/gmf-sampled {label}"), 15, || {
+        bench(&mut results, &format!("compress/gmf-sampled {label}"), it(15), || {
             std::hint::black_box(gmf2.compress(&grad, k, 1));
         });
 
@@ -156,7 +161,7 @@ fn main() {
             .collect();
         let refs: Vec<&SparseVec> = grads.iter().collect();
         let mut agg = Aggregator::new(p);
-        bench(&mut results, &format!("aggregate/20c     {label}"), 15, || {
+        bench(&mut results, &format!("aggregate/20c     {label}"), it(15), || {
             for g in &grads {
                 agg.add(g);
             }
@@ -164,7 +169,7 @@ fn main() {
         });
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         let mut out_sv = SparseVec::empty(p);
-        bench(&mut results, &format!("aggregate/20c-sharded {label}"), 15, || {
+        bench(&mut results, &format!("aggregate/20c-sharded {label}"), it(15), || {
             agg.add_all(&refs, cores);
             agg.finish_mean_into(20, &mut out_sv);
             std::hint::black_box(&out_sv);
@@ -172,18 +177,18 @@ fn main() {
 
         let buf = wire::encode(&grads[0]);
         let mut enc_buf = Vec::new();
-        bench(&mut results, &format!("wire/encode       {label}"), 30, || {
+        bench(&mut results, &format!("wire/encode       {label}"), it(30), || {
             wire::encode_into(&grads[0], &mut enc_buf);
             std::hint::black_box(&enc_buf);
         });
         let mut dec_sv = SparseVec::empty(0);
-        bench(&mut results, &format!("wire/decode       {label}"), 30, || {
+        bench(&mut results, &format!("wire/decode       {label}"), it(30), || {
             wire::decode_into(&buf, &mut dec_sv).unwrap();
             std::hint::black_box(&dec_sv);
         });
 
         let mut mom = randvec(p, 6);
-        bench(&mut results, &format!("momentum/accum    {label}"), 30, || {
+        bench(&mut results, &format!("momentum/accum    {label}"), it(30), || {
             primitives::momentum_accumulate(&mut mom, 0.9, &grads[0]);
             std::hint::black_box(&mom);
         });
@@ -191,11 +196,14 @@ fn main() {
     }
 
     // ---- round-level end-to-end: 20 clients × P≈1M, sequential vs parallel
+    // (quick mode shrinks the model and client count to keep CI fast)
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    println!("== round end-to-end (FlRun::step_round, 20 clients, P≈1M, rate 0.1) ==");
-    let (seq_ms, p) = round_e2e(20, 1024, 976, 16, 1, 4);
+    let (e2e_clients, e2e_in, e2e_hidden, e2e_classes, e2e_rounds) =
+        if quick { (8, 256, 120, 8, 2) } else { (20, 1024, 976, 16, 4) };
+    println!("== round end-to-end (FlRun::step_round, {e2e_clients} clients, rate 0.1) ==");
+    let (seq_ms, p) = round_e2e(e2e_clients, e2e_in, e2e_hidden, e2e_classes, 1, e2e_rounds);
     println!("round/e2e sequential (P={p})            {seq_ms:>9.1} ms/round");
-    let (par_ms, _) = round_e2e(20, 1024, 976, 16, 0, 4);
+    let (par_ms, _) = round_e2e(e2e_clients, e2e_in, e2e_hidden, e2e_classes, 0, e2e_rounds);
     let speedup = seq_ms / par_ms;
     println!("round/e2e parallel   ({cores} cores)          {par_ms:>9.1} ms/round");
     println!("round/e2e speedup                          {speedup:>9.2}x");
@@ -215,11 +223,12 @@ fn main() {
     let doc = Json::obj(vec![
         ("schema", Json::num(1.0)),
         ("generated", Json::Bool(true)),
+        ("quick", Json::Bool(quick)),
         ("host_cores", Json::num(cores as f64)),
         (
             "round_e2e",
             Json::obj(vec![
-                ("clients", Json::num(20.0)),
+                ("clients", Json::num(e2e_clients as f64)),
                 ("param_count", Json::num(p as f64)),
                 ("rate", Json::num(0.1)),
                 ("sequential_ms_per_round", Json::num(seq_ms)),

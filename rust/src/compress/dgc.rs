@@ -71,6 +71,10 @@ impl Compressor for Dgc {
         )
     }
 
+    fn restore_upload(&mut self, upload: &SparseVec) {
+        upload.add_into(&mut self.v, 1.0);
+    }
+
     fn residual_norm(&self) -> f32 {
         l2_norm(&self.v)
     }
@@ -155,6 +159,35 @@ mod tests {
         assert!(!Dgc::new(&cfg(), 8).observes_broadcast());
         assert!(crate::compress::Gmc::new(&CompressConfig::default(), 8).observes_broadcast());
         assert!(crate::compress::DgcGmf::new(&CompressConfig::default(), 8).observes_broadcast());
+    }
+
+    #[test]
+    fn restored_upload_is_retransmitted_verbatim() {
+        // a dropped upload, restored into V, must come back out of the next
+        // compression unchanged when nothing new competes with it (α = 0 so
+        // a zero gradient leaves U — and therefore V — untouched)
+        for kind in crate::compress::CompressorKind::ALL {
+            let dim = 120;
+            let cfg = CompressConfig {
+                alpha: 0.0,
+                exact_topk: true,
+                tau: crate::compress::TauSchedule::Constant(0.0),
+                ..CompressConfig::default()
+            };
+            let mut comp = crate::compress::build(kind, &cfg, dim);
+            let grad = randvec(dim, 77);
+            let first = comp.compress(&grad, 12, 0);
+            assert_eq!(first.gradient.nnz(), 12);
+            // the server never saw `first`: put it back
+            comp.restore_upload(&first.gradient);
+            let zeros = vec![0.0f32; dim];
+            let second = comp.compress(&zeros, 12, 1);
+            assert_eq!(
+                second.gradient, first.gradient,
+                "{}: restored residual must re-enter the next upload verbatim",
+                kind.name()
+            );
+        }
     }
 
     #[test]

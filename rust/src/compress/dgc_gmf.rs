@@ -92,6 +92,10 @@ impl Compressor for DgcGmf {
         ) // 10-12
     }
 
+    fn restore_upload(&mut self, upload: &SparseVec) {
+        upload.add_into(&mut self.v, 1.0);
+    }
+
     fn residual_norm(&self) -> f32 {
         l2_norm(&self.v)
     }

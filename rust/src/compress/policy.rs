@@ -122,6 +122,16 @@ pub trait Compressor: Send {
         Compressed { gradient: out, threshold }
     }
 
+    /// Re-inject a transmitted-but-lost upload into the residual V.
+    ///
+    /// The time-domain scheduler calls this when a client's upload misses
+    /// the round deadline or the client drops out: the extracted mass goes
+    /// back into the compensation buffer, so nothing the client computed is
+    /// lost — the coordinates re-enter a later round's top-k selection
+    /// (error feedback survives the drop). Exactly inverts the `V ⊙= (1−mask)`
+    /// clear of [`Compressor::compress_into`] for the transmitted values.
+    fn restore_upload(&mut self, upload: &SparseVec);
+
     /// Residual (V) L2 norm — over-fitting diagnostic used by Fig. 4 analysis.
     fn residual_norm(&self) -> f32;
 }

@@ -24,6 +24,7 @@ use crate::compress::{CompressConfig, CompressorKind, SparsityWarmup, TauSchedul
 use crate::coordinator::round::{FlConfig, LrSchedule};
 use crate::coordinator::sampler::Sampler;
 use crate::coordinator::traffic::TrafficPolicy;
+use crate::sim::scheduler::{ProfilePreset, SimConfig};
 use anyhow::{anyhow, Result};
 use toml::{get, parse, TomlDoc};
 
@@ -120,6 +121,9 @@ pub struct RunConfig {
     /// record the exact O(clients²·nnz) mask-overlap diagnostic instead of
     /// the O(nnz) estimate (analysis runs; TOML `run.exact_mask_overlap`)
     pub exact_mask_overlap: bool,
+    /// time-domain scheduler knobs (TOML `[sim]` — see `docs/config.md`);
+    /// the default is inert and preserves schedulerless output bit-exactly
+    pub sim: SimConfig,
 }
 
 impl Default for RunConfig {
@@ -151,6 +155,7 @@ impl Default for RunConfig {
             client_fraction: 1.0,
             workers: 0,
             exact_mask_overlap: false,
+            sim: SimConfig::default(),
         }
     }
 }
@@ -238,6 +243,7 @@ impl RunConfig {
             seed: self.seed,
             workers: self.workers,
             exact_mask_overlap: self.exact_mask_overlap,
+            sim: self.sim,
         }
     }
 
@@ -319,6 +325,48 @@ impl RunConfig {
             cfg.downlink_per_client =
                 v.as_bool().ok_or_else(|| anyhow!("traffic.downlink_per_client: bool"))?;
         }
+        // [sim] — time-domain scheduler. Profile shape knobs (slow_every /
+        // slow_factor / sigma) only take effect through `sim.profile`.
+        {
+            let mut slow_every = 4usize;
+            let mut slow_factor = 10.0f64;
+            let mut sigma = 0.8f64;
+            if let Some(v) = get(doc, "sim", "slow_every") {
+                slow_every = v.as_usize().ok_or_else(|| anyhow!("sim.slow_every: wrong type"))?;
+            }
+            if let Some(v) = get(doc, "sim", "slow_factor") {
+                slow_factor = v.as_f64().ok_or_else(|| anyhow!("sim.slow_factor: wrong type"))?;
+            }
+            if let Some(v) = get(doc, "sim", "sigma") {
+                sigma = v.as_f64().ok_or_else(|| anyhow!("sim.sigma: wrong type"))?;
+            }
+            if let Some(v) = get(doc, "sim", "profile") {
+                let name = v.as_str().ok_or_else(|| anyhow!("sim.profile: string"))?;
+                cfg.sim.preset = match name.to_ascii_lowercase().as_str() {
+                    "uniform" => ProfilePreset::Uniform,
+                    "heterogeneous" | "hetero" => {
+                        ProfilePreset::Heterogeneous { slow_every, slow_factor }
+                    }
+                    "longtail" | "long-tail" | "long_tail" => ProfilePreset::LongTail { sigma },
+                    other => return Err(anyhow!("unknown sim.profile `{other}`")),
+                };
+            }
+            if let Some(v) = get(doc, "sim", "deadline_s") {
+                cfg.sim.deadline_s =
+                    v.as_f64().ok_or_else(|| anyhow!("sim.deadline_s: wrong type"))?;
+            }
+            if let Some(v) = get(doc, "sim", "dropout") {
+                cfg.sim.dropout = v.as_f64().ok_or_else(|| anyhow!("sim.dropout: wrong type"))?;
+            }
+            if let Some(v) = get(doc, "sim", "overselect") {
+                cfg.sim.overselect =
+                    v.as_f64().ok_or_else(|| anyhow!("sim.overselect: wrong type"))?;
+            }
+            if let Some(v) = get(doc, "sim", "compute_s") {
+                cfg.sim.compute_s =
+                    v.as_f64().ok_or_else(|| anyhow!("sim.compute_s: wrong type"))?;
+            }
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -336,11 +384,12 @@ impl RunConfig {
         if self.task == Task::Cifar && self.emd > 1.8 {
             return Err(anyhow!("cifar EMD max is 1.8 (10 classes), got {}", self.emd));
         }
+        self.sim.validate().map_err(|e| anyhow!(e))?;
         Ok(())
     }
 
     pub fn describe(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} | {} | {} clients | {} rounds | rate {} | EMD {} | engine {:?}",
             self.task.name(),
             self.technique.name(),
@@ -349,7 +398,18 @@ impl RunConfig {
             self.rate,
             self.emd,
             self.engine
-        )
+        );
+        if self.sim.scheduling_active() {
+            s.push_str(&format!(
+                " | sim: {} deadline={}s dropout={} overselect={} compute={}s",
+                self.sim.preset.name(),
+                self.sim.deadline_s,
+                self.sim.dropout,
+                self.sim.overselect,
+                self.sim.compute_s
+            ));
+        }
+        s
     }
 }
 
@@ -438,6 +498,59 @@ rate = 0.3
         assert_eq!(cfg.workers, 1);
         let cfg = RunConfig::from_toml_str("", &["run.workers=4".to_string()]).unwrap();
         assert_eq!(cfg.workers, 4);
+    }
+
+    #[test]
+    fn sim_section_from_toml() {
+        let cfg = RunConfig::from_toml_str(
+            r#"
+[sim]
+profile = "heterogeneous"
+slow_every = 5
+slow_factor = 8.0
+deadline_s = 0.5
+dropout = 0.02
+overselect = 1.25
+compute_s = 0.05
+"#,
+            &[],
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.sim.preset,
+            ProfilePreset::Heterogeneous { slow_every: 5, slow_factor: 8.0 }
+        );
+        assert!((cfg.sim.deadline_s - 0.5).abs() < 1e-12);
+        assert!((cfg.sim.dropout - 0.02).abs() < 1e-12);
+        assert!((cfg.sim.overselect - 1.25).abs() < 1e-12);
+        assert!((cfg.sim.compute_s - 0.05).abs() < 1e-12);
+        assert!(cfg.sim.scheduling_active());
+        assert_eq!(cfg.fl_config().sim, cfg.sim);
+        assert!(cfg.describe().contains("deadline=0.5"));
+        // default stays inert
+        let plain = RunConfig::from_toml_str("", &[]).unwrap();
+        assert!(!plain.sim.scheduling_active());
+        assert!(!plain.describe().contains("deadline"));
+        // longtail + --set override path
+        let lt = RunConfig::from_toml_str(
+            "[sim]\nprofile = \"longtail\"\nsigma = 1.2\n",
+            &["sim.dropout=0.1".to_string()],
+        )
+        .unwrap();
+        assert_eq!(lt.sim.preset, ProfilePreset::LongTail { sigma: 1.2 });
+        assert!((lt.sim.dropout - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sim_section_rejects_bad_values() {
+        assert!(RunConfig::from_toml_str("[sim]\ndropout = 1.5\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[sim]\noverselect = 0.2\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[sim]\ndeadline_s = -2.0\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[sim]\nprofile = \"nope\"\n", &[]).is_err());
+        assert!(
+            RunConfig::from_toml_str("[sim]\nprofile = \"heterogeneous\"\nslow_every = 0\n", &[])
+                .is_err()
+        );
     }
 
     #[test]

@@ -61,6 +61,13 @@ impl FlClient {
         self.compressor.observe_broadcast(payload);
     }
 
+    /// The server never saw this round's upload (deadline miss or hard
+    /// dropout): fold the extracted values back into the compressor's
+    /// residual so the mass re-enters a later round's top-k selection.
+    pub fn restore_dropped_upload(&mut self) {
+        self.compressor.restore_upload(&self.upload);
+    }
+
     /// One local round, entirely into the persistent buffers: compute the
     /// local gradient at the current global parameters (averaged over
     /// `local_steps` minibatches), compress it into `upload`, serialise into

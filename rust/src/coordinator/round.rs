@@ -22,6 +22,18 @@
 //! outputs, wire encode/decode buffers, the server aggregate and broadcast)
 //! are persistent and reused round over round: once warm, the round loop
 //! performs no heap allocation on those paths.
+//!
+//! ## Time-domain scheduling
+//!
+//! When the [`SimConfig`] knobs are active the round runs under a simulated
+//! clock: the sampler over-provisions the cohort, every selected client's
+//! finish time is `compute_time + uplink_time` from its
+//! [`crate::sim::scheduler::ClientProfile`], uploads past `sim.deadline_s`
+//! are discarded (the client's residual is restored so error feedback
+//! survives — see [`crate::compress::Compressor::restore_upload`]), and
+//! hard dropouts are injected per round from the run RNG. With the default
+//! (inert) `SimConfig` every step below reduces bit-exactly to the PR 1
+//! behaviour; `tests/determinism.rs` pins both directions.
 
 use super::client::FlClient;
 use super::sampler::Sampler;
@@ -30,8 +42,9 @@ use super::traffic::{TrafficMeter, TrafficPolicy};
 use crate::compress::{self, CompressConfig, CompressorKind, SparsityWarmup};
 use crate::data::dataset::{Batch, Dataset};
 use crate::metrics::recorder::{Recorder, RoundRecord};
-use crate::runtime::{evaluate, TrainEngine};
+use crate::runtime::{evaluate_with_pool, TrainEngine};
 use crate::sim::network::Network;
+use crate::sim::scheduler::{ClientFate, Scheduler, SimConfig};
 use crate::sparse::merge::{mean_jaccard_estimate, mean_pairwise_jaccard};
 use crate::sparse::vector::SparseVec;
 use crate::sparse::wire;
@@ -106,6 +119,9 @@ pub struct FlConfig {
     /// instead of the O(total-nnz) count-based estimate (analysis runs only
     /// — the exact statistic dominates round cost at large cohorts)
     pub exact_mask_overlap: bool,
+    /// time-domain scheduler knobs (TOML `[sim]`); the default is inert and
+    /// keeps the run bit-identical to the schedulerless round loop
+    pub sim: SimConfig,
 }
 
 impl FlConfig {
@@ -127,6 +143,7 @@ impl FlConfig {
             seed: 42,
             workers: 0,
             exact_mask_overlap: false,
+            sim: SimConfig::default(),
         }
     }
 }
@@ -143,6 +160,12 @@ pub struct RunSummary {
     pub downlink_gb: f64,
     pub sim_seconds: f64,
     pub mean_mask_overlap: f64,
+    /// uploads discarded for missing the round deadline (whole run)
+    pub dropped_deadline: usize,
+    /// uploads lost to hard dropouts (whole run)
+    pub dropped_offline: usize,
+    /// straggler bytes that crossed the wire but were discarded
+    pub wasted_uplink_gb: f64,
     pub recorder: Recorder,
 }
 
@@ -153,7 +176,9 @@ pub struct FlRun {
     pub clients: Vec<FlClient>,
     pub server: FlServer,
     pub meter: TrafficMeter,
-    pub network: Network,
+    /// per-client capability profiles (built from the constructor's network
+    /// + `sim.profile` preset) and the run's simulated round clock
+    pub scheduler: Scheduler,
     pub recorder: Recorder,
     test_batches: Vec<Batch>,
     last_payload: SparseVec,
@@ -165,6 +190,14 @@ pub struct FlRun {
     loss_scratch: Vec<f64>,
     /// index buffer for the mask-overlap estimator
     overlap_scratch: Vec<u32>,
+    /// per-participant wire payload sizes for the scheduler (reused)
+    bytes_scratch: Vec<usize>,
+    /// per-participant fates for the round (reused)
+    fate_scratch: Vec<ClientFate>,
+    /// per-participant simulated finish times (reused)
+    finish_scratch: Vec<f64>,
+    /// accepted participant ids for broadcast timing (reused)
+    accepted_scratch: Vec<usize>,
     /// worker engine pool, spawned once and reused every round
     worker_engines: Vec<Box<dyn TrainEngine>>,
 }
@@ -193,11 +226,12 @@ impl FlRun {
         } else {
             BroadcastPolicy::Aggregate
         };
+        let scheduler = Scheduler::new(&network, cfg.sim.preset, cfg.seed);
         FlRun {
             params: engine.initial_params(),
             server: FlServer::new(dim, policy),
             meter: TrafficMeter::new(cfg.traffic),
-            network,
+            scheduler,
             recorder: Recorder::new(),
             clients,
             test_batches,
@@ -206,6 +240,10 @@ impl FlRun {
             bcast_buf: Vec::new(),
             loss_scratch: Vec::new(),
             overlap_scratch: Vec::new(),
+            bytes_scratch: Vec::new(),
+            fate_scratch: Vec::new(),
+            finish_scratch: Vec::new(),
+            accepted_scratch: Vec::new(),
             worker_engines: Vec::new(),
             cfg,
         }
@@ -224,7 +262,14 @@ impl FlRun {
         let wall = Instant::now();
         self.meter.begin_round();
         let root = Rng::new(self.cfg.seed);
-        let participants = self.cfg.sampler.sample(self.clients.len(), round, &root);
+        // over-provision the cohort when the scheduler is active (a superset
+        // of the base sample; `overselect = 1` is exactly `sample`)
+        let participants = self.cfg.sampler.sample_overselected(
+            self.clients.len(),
+            round,
+            &root,
+            self.cfg.sim.overselect,
+        );
         let dim = self.params.len();
         let k = self.cfg.warmup.k_at(dim, round);
         let pool = resolve_pool(self.cfg.workers);
@@ -264,6 +309,7 @@ impl FlRun {
         self.loss_scratch.clear();
         self.loss_scratch.resize(n, 0.0);
         let overlap;
+        let uplink_phase;
         {
             let mut parts: Vec<&mut FlClient> = Vec::with_capacity(n);
             let mut client_iter = self.clients.iter_mut().enumerate();
@@ -352,11 +398,47 @@ impl FlRun {
                 first_err?;
             }
 
-            // deterministic reductions, in participant order
-            for (c, &cid) in parts.iter().zip(&participants) {
-                self.meter.record_uplink(cid, c.wire_buf.len());
+            // 3. time-domain schedule: per-client finish times, deadline
+            //    cut, dropout injection. Dropout draws come from a per-round
+            //    RNG derived from the run seed, in participant order — the
+            //    plan is independent of the worker count. With the inert
+            //    default SimConfig every fate is Accepted and the uplink
+            //    phase equals the PR 1 passive estimate bit-exactly.
+            self.bytes_scratch.clear();
+            self.bytes_scratch.extend(parts.iter().map(|c| c.wire_buf.len()));
+            let mut drop_rng = root.derive(0xD30F ^ round as u64);
+            uplink_phase = self.scheduler.plan_round(
+                &self.cfg.sim,
+                &participants,
+                &self.bytes_scratch,
+                self.cfg.local_steps,
+                &mut drop_rng,
+                &mut self.fate_scratch,
+                &mut self.finish_scratch,
+            );
+
+            // 4. deterministic reductions, in participant order: accepted
+            //    uploads are metered and aggregated; stragglers and offline
+            //    clients get their extracted upload folded back into the
+            //    residual so the mass re-enters a later round's selection
+            for ((c, &cid), &fate) in
+                parts.iter_mut().zip(&participants).zip(&self.fate_scratch)
+            {
+                match fate {
+                    ClientFate::Accepted => self.meter.record_uplink(cid, c.wire_buf.len()),
+                    ClientFate::Straggler => {
+                        self.meter.record_wasted_uplink(cid, c.wire_buf.len());
+                        c.restore_dropped_upload();
+                    }
+                    ClientFate::Offline => c.restore_dropped_upload(),
+                }
             }
-            let echoes: Vec<&SparseVec> = parts.iter().map(|c| &c.echo).collect();
+            let mut echoes: Vec<&SparseVec> = Vec::with_capacity(n);
+            for (c, &fate) in parts.iter().zip(&self.fate_scratch) {
+                if fate == ClientFate::Accepted {
+                    echoes.push(&c.echo);
+                }
+            }
             overlap = if self.cfg.exact_mask_overlap {
                 mean_pairwise_jaccard(&echoes)
             } else {
@@ -365,31 +447,53 @@ impl FlRun {
             self.server.receive_all(&echoes, pool);
         }
         let mut train_loss = 0.0;
-        for &l in &self.loss_scratch {
-            train_loss += l;
+        let mut n_accepted = 0usize;
+        let mut dropped_deadline = 0usize;
+        let mut dropped_offline = 0usize;
+        for (&l, &fate) in self.loss_scratch.iter().zip(&self.fate_scratch) {
+            match fate {
+                ClientFate::Accepted => {
+                    train_loss += l;
+                    n_accepted += 1;
+                }
+                ClientFate::Straggler => dropped_deadline += 1,
+                ClientFate::Offline => dropped_offline += 1,
+            }
         }
-        train_loss /= n.max(1) as f64;
+        train_loss /= n_accepted.max(1) as f64;
 
-        // 3. aggregate + broadcast (through the persistent wire buffers)
-        self.server.finish_round_into(n, &mut self.payload_scratch);
+        // 5. aggregate + broadcast (through the persistent wire buffers)
+        self.server.finish_round_into(n_accepted, &mut self.payload_scratch, pool);
         wire::encode_into(&self.payload_scratch, &mut self.bcast_buf);
         self.meter.record_broadcast(self.bcast_buf.len(), n);
         wire::decode_into(&self.bcast_buf, &mut self.last_payload)
             .expect("broadcast must decode");
 
-        // 4. synchronized model update (Alg. 1 line 15)
+        // 6. synchronized model update (Alg. 1 line 15)
         let lr = self.cfg.lr.at(round);
         self.last_payload.add_into(&mut self.params, -lr);
 
-        // 5. diagnostics + eval
-        let sim_s = self.network.uplink_time(&self.meter.round_uplinks)
-            + self.network.broadcast_time(self.bcast_buf.len(), &participants);
+        // 7. round clock + diagnostics + eval
+        self.accepted_scratch.clear();
+        for (&cid, &fate) in participants.iter().zip(&self.fate_scratch) {
+            if fate == ClientFate::Accepted {
+                self.accepted_scratch.push(cid);
+            }
+        }
+        let sim_s = uplink_phase
+            + self.scheduler.broadcast_time(self.bcast_buf.len(), &self.accepted_scratch);
+        let sim_clock = self.scheduler.advance(sim_s);
 
         let is_last = round + 1 == self.cfg.rounds;
         let do_eval = is_last
             || (self.cfg.eval_every > 0 && round % self.cfg.eval_every == self.cfg.eval_every - 1);
         let (test_loss, test_acc) = if do_eval && !self.test_batches.is_empty() {
-            evaluate(engine, &self.params, &self.test_batches)?
+            evaluate_with_pool(
+                engine,
+                &mut self.worker_engines,
+                &self.params,
+                &self.test_batches,
+            )?
         } else {
             (0.0, 0.0)
         };
@@ -405,6 +509,11 @@ impl FlRun {
             mask_overlap: overlap,
             sim_seconds: sim_s,
             wall_seconds: wall.elapsed().as_secs_f64(),
+            selected: n,
+            dropped_deadline,
+            dropped_offline,
+            sim_clock,
+            wasted_uplink_bytes: self.meter.round_wasted_uplink,
         };
         self.recorder.push(rec.clone());
         Ok(rec)
@@ -413,6 +522,23 @@ impl FlRun {
     /// Drive the full configured number of rounds.
     pub fn run(&mut self, engine: &mut dyn TrainEngine) -> anyhow::Result<RunSummary> {
         for round in 0..self.cfg.rounds {
+            self.step_round(engine, round)?;
+        }
+        Ok(self.summary())
+    }
+
+    /// Drive rounds until the simulated round clock reaches `budget_s`
+    /// seconds, capped at the configured round count — the time-to-accuracy
+    /// regime: schemes with cheaper rounds fit more of them into the budget.
+    pub fn run_for_budget(
+        &mut self,
+        engine: &mut dyn TrainEngine,
+        budget_s: f64,
+    ) -> anyhow::Result<RunSummary> {
+        for round in 0..self.cfg.rounds {
+            if self.scheduler.clock() >= budget_s {
+                break;
+            }
             self.step_round(engine, round)?;
         }
         Ok(self.summary())
@@ -435,6 +561,9 @@ impl FlRun {
             downlink_gb: self.meter.total_downlink as f64 / 1e9,
             sim_seconds: self.recorder.total_sim_seconds(),
             mean_mask_overlap: crate::util::math::mean(&overlaps),
+            dropped_deadline: self.recorder.total_dropped_deadline(),
+            dropped_offline: self.recorder.total_dropped_offline(),
+            wasted_uplink_gb: self.meter.total_wasted_uplink as f64 / 1e9,
             recorder: self.recorder.clone(),
         }
     }
@@ -443,6 +572,7 @@ impl FlRun {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::Compressor as _;
     use crate::runtime::native::{BlobDataset, NativeEngine};
 
     fn blob_shards(
@@ -562,6 +692,67 @@ mod tests {
             let mut run = FlRun::new(&engine, shards, test, net, cfg);
             let summary = run.run(&mut engine).unwrap();
             assert_eq!(summary.recorder.rounds.len(), 5, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn deadline_drops_freeze_model_and_residuals_reenter() {
+        let mut engine = NativeEngine::new(8, 12, 4, 1);
+        let (shards, test) = blob_shards(4, 80, 8, 4, 10);
+        let net = Network::uniform(4, Default::default());
+        let mut cfg = quick_cfg(CompressorKind::DgcWgmf);
+        cfg.rounds = 8;
+        cfg.sim.deadline_s = 1e-9; // link latency alone exceeds this: all miss
+        let mut run = FlRun::new(&engine, shards, test, net, cfg);
+        let init = run.params.clone();
+        for round in 0..3 {
+            let rec = run.step_round(&mut engine, round).unwrap();
+            assert_eq!(rec.selected, 4);
+            assert_eq!(rec.dropped_deadline, 4, "round {round}: everyone misses");
+            assert_eq!(rec.aggregate_nnz, 0, "nothing aggregated");
+            assert!(rec.uplink_bytes > 0, "straggler bytes still crossed the wire");
+        }
+        assert_eq!(run.params, init, "no accepted upload → model frozen");
+        assert_eq!(run.meter.total_wasted_uplink, run.meter.total_uplink);
+        for c in &run.clients {
+            assert!(c.compressor.residual_norm() > 0.0, "dropped mass retained client-side");
+        }
+        // relax the deadline mid-run: the held-back mass must re-enter
+        run.cfg.sim.deadline_s = 1e9;
+        let rec = run.step_round(&mut engine, 3).unwrap();
+        assert_eq!(rec.dropped_deadline, 0);
+        assert!(rec.aggregate_nnz > 0, "held-back residuals re-enter the aggregate");
+        assert_ne!(run.params, init, "training resumes");
+    }
+
+    #[test]
+    fn overselect_and_dropout_round_accounting() {
+        let mut engine = NativeEngine::new(8, 12, 4, 1);
+        let (shards, test) = blob_shards(6, 80, 8, 4, 10);
+        let net = Network::uniform(6, Default::default());
+        let mut cfg = quick_cfg(CompressorKind::Dgc);
+        cfg.rounds = 6;
+        cfg.sampler = Sampler::Count(3);
+        cfg.sim.overselect = 1.5; // ceil(1.5 · 3) = 5 selected per round
+        cfg.sim.dropout = 0.4;
+        let mut run = FlRun::new(&engine, shards, test, net, cfg);
+        let summary = run.run(&mut engine).unwrap();
+        for r in &summary.recorder.rounds {
+            assert_eq!(r.selected, 5, "round {}", r.round);
+            assert!(r.dropped_offline <= 5);
+            assert!(r.sim_clock > 0.0);
+        }
+        // P(zero dropouts over 6 rounds × 5 clients at 0.4) ≈ 2e-7
+        assert!(summary.dropped_offline > 0, "dropouts must be injected");
+        assert_eq!(
+            summary.dropped_offline,
+            summary.recorder.total_dropped_offline()
+        );
+        // round clock is the cumulative sum of round times
+        let mut acc = 0.0;
+        for r in &summary.recorder.rounds {
+            acc += r.sim_seconds;
+            assert!((r.sim_clock - acc).abs() < 1e-12, "round {}", r.round);
         }
     }
 

@@ -18,13 +18,36 @@ pub enum Sampler {
 impl Sampler {
     /// Participant ids for `round`, deterministic given `rng` seed.
     pub fn sample(&self, clients: usize, round: usize, rng: &Rng) -> Vec<usize> {
+        self.sample_overselected(clients, round, rng, 1.0)
+    }
+
+    /// Like [`Sampler::sample`], over-provisioned by `overselect` (≥ 1): the
+    /// deadline scheduler selects `ceil(overselect · clients_per_round)` so
+    /// stragglers and dropouts can be discarded without starving the
+    /// aggregate. `overselect <= 1` reproduces `sample` exactly, and the
+    /// over-selected cohort is always a superset of the base cohort (both
+    /// are prefixes of the same per-round shuffle).
+    pub fn sample_overselected(
+        &self,
+        clients: usize,
+        round: usize,
+        rng: &Rng,
+        overselect: f64,
+    ) -> Vec<usize> {
+        let boost = |count: usize| -> usize {
+            if overselect > 1.0 {
+                ((count as f64 * overselect).ceil() as usize).clamp(1, clients)
+            } else {
+                count
+            }
+        };
         match *self {
             Sampler::Full => (0..clients).collect(),
             Sampler::Fraction(f) => {
                 let count = ((clients as f64 * f).round() as usize).clamp(1, clients);
-                Self::choose(clients, count, round, rng)
+                Self::choose(clients, boost(count), round, rng)
             }
-            Sampler::Count(c) => Self::choose(clients, c.clamp(1, clients), round, rng),
+            Sampler::Count(c) => Self::choose(clients, boost(c.clamp(1, clients)), round, rng),
         }
     }
 
@@ -64,6 +87,23 @@ mod tests {
         assert_eq!(a, b);
         let c = Sampler::Count(3).sample(10, 8, &rng);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn overselect_scales_count_and_keeps_superset() {
+        let rng = Rng::new(9);
+        let base = Sampler::Count(4).sample(20, 5, &rng);
+        let over = Sampler::Count(4).sample_overselected(20, 5, &rng, 1.5);
+        assert_eq!(over.len(), 6, "ceil(1.5 * 4)");
+        assert!(base.iter().all(|id| over.contains(id)), "over-selection must be a superset");
+        // factor 1.0 is exactly `sample`
+        let same = Sampler::Count(4).sample_overselected(20, 5, &rng, 1.0);
+        assert_eq!(base, same);
+        // clamped to the population
+        let all = Sampler::Fraction(0.9).sample_overselected(10, 0, &rng, 4.0);
+        assert_eq!(all.len(), 10);
+        // Full cannot over-provision beyond the population
+        assert_eq!(Sampler::Full.sample_overselected(5, 0, &rng, 2.0).len(), 5);
     }
 
     #[test]

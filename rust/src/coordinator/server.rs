@@ -70,15 +70,16 @@ impl FlServer {
     /// caller-owned reusable vector (cleared, capacity kept) and resets the
     /// aggregator for the next round. Under `ServerMomentum` the round
     /// aggregate Ĝ_t is retained internally (`ghat_scratch`) for the
-    /// momentum update.
-    pub fn finish_round_into(&mut self, participants: usize, payload: &mut SparseVec) {
+    /// momentum update. The aggregate emit may shard over up to `workers`
+    /// threads; results are bit-identical at any setting.
+    pub fn finish_round_into(&mut self, participants: usize, payload: &mut SparseVec, workers: usize) {
         match self.policy {
             BroadcastPolicy::Aggregate => {
                 // payload is Ĝ_t itself
-                self.agg.finish_mean_into(participants, payload);
+                self.agg.finish_mean_into_with(participants, payload, workers);
             }
             BroadcastPolicy::ServerMomentum { beta } => {
-                self.agg.finish_mean_into(participants, &mut self.ghat_scratch);
+                self.agg.finish_mean_into_with(participants, &mut self.ghat_scratch, workers);
                 for m in self.momentum.iter_mut() {
                     *m *= beta;
                 }
@@ -109,7 +110,7 @@ impl FlServer {
     /// Allocating convenience wrapper over [`FlServer::finish_round_into`].
     pub fn finish_round(&mut self, participants: usize) -> (SparseVec, SparseVec) {
         let mut payload = SparseVec::empty(self.dim);
-        self.finish_round_into(participants, &mut payload);
+        self.finish_round_into(participants, &mut payload, 1);
         let ghat = match self.policy {
             BroadcastPolicy::Aggregate => payload.clone(),
             BroadcastPolicy::ServerMomentum { .. } => self.ghat_scratch.clone(),

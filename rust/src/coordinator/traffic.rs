@@ -3,6 +3,13 @@
 //! Every gradient that crosses a link is serialised through `sparse::wire`,
 //! and the byte counts recorded here are the lengths of those real buffers —
 //! the "Communication Overheads" columns of Tables 3/4 are sums of these.
+//!
+//! The time-domain scheduler adds two refinements: per-client cumulative
+//! uplink totals (who actually pays for over-provisioning) and a *wasted*
+//! uplink category — bytes a deadline-missed straggler transmitted that the
+//! server then discarded. Wasted bytes still count toward the uplink totals
+//! (they crossed the wire); offline dropouts transmit nothing and are not
+//! recorded at all.
 
 /// Accounting policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -26,8 +33,15 @@ pub struct TrafficMeter {
     pub round_downlink: usize,
     pub total_uplink: usize,
     pub total_downlink: usize,
-    /// per-client uplink bytes this round (for the network simulator)
+    /// accepted per-client uplinks this round, in participant order —
+    /// diagnostic view of who actually reached the aggregate (discarded
+    /// straggler uploads are deliberately absent)
     pub round_uplinks: Vec<(usize, usize)>,
+    /// straggler bytes discarded by the deadline this round / overall
+    pub round_wasted_uplink: usize,
+    pub total_wasted_uplink: usize,
+    /// cumulative uplink bytes per client id (grown on first use)
+    pub per_client_uplink: Vec<usize>,
 }
 
 impl TrafficMeter {
@@ -38,19 +52,46 @@ impl TrafficMeter {
     pub fn begin_round(&mut self) {
         self.round_uplink = 0;
         self.round_downlink = 0;
+        self.round_wasted_uplink = 0;
         self.round_uplinks.clear();
     }
 
+    fn bump_client(&mut self, client: usize, bytes: usize) {
+        if client >= self.per_client_uplink.len() {
+            self.per_client_uplink.resize(client + 1, 0);
+        }
+        self.per_client_uplink[client] += bytes;
+    }
+
+    /// An upload the server accepted into the aggregate.
     pub fn record_uplink(&mut self, client: usize, bytes: usize) {
         self.round_uplink += bytes;
         self.total_uplink += bytes;
         self.round_uplinks.push((client, bytes));
+        self.bump_client(client, bytes);
+    }
+
+    /// An upload that crossed the wire but missed the round deadline: it
+    /// counts toward the uplink totals (the bytes were spent) and toward the
+    /// wasted counters (the server discarded them), but not toward
+    /// `round_uplinks` — it never reached the aggregate.
+    pub fn record_wasted_uplink(&mut self, client: usize, bytes: usize) {
+        self.round_uplink += bytes;
+        self.total_uplink += bytes;
+        self.round_wasted_uplink += bytes;
+        self.total_wasted_uplink += bytes;
+        self.bump_client(client, bytes);
     }
 
     pub fn record_broadcast(&mut self, bytes: usize, participants: usize) {
         let effective = if self.policy.downlink_per_client { bytes * participants } else { bytes };
         self.round_downlink += effective;
         self.total_downlink += effective;
+    }
+
+    /// Cumulative uplink bytes attributed to `client`.
+    pub fn client_uplink(&self, client: usize) -> usize {
+        self.per_client_uplink.get(client).copied().unwrap_or(0)
     }
 
     pub fn total(&self) -> usize {
@@ -96,5 +137,34 @@ mod tests {
         m.begin_round();
         m.record_uplink(3, 42);
         assert_eq!(m.round_uplinks, vec![(3, 42)]);
+    }
+
+    #[test]
+    fn wasted_uplink_counts_toward_totals_but_not_aggregate_list() {
+        let mut m = TrafficMeter::new(TrafficPolicy::default());
+        m.begin_round();
+        m.record_uplink(0, 100);
+        m.record_wasted_uplink(1, 70);
+        assert_eq!(m.round_uplink, 170, "wasted bytes crossed the wire");
+        assert_eq!(m.round_wasted_uplink, 70);
+        assert_eq!(m.round_uplinks, vec![(0, 100)], "discarded upload never aggregated");
+        m.begin_round();
+        assert_eq!(m.round_wasted_uplink, 0);
+        assert_eq!(m.total_wasted_uplink, 70);
+        assert_eq!(m.total_uplink, 170);
+    }
+
+    #[test]
+    fn per_client_totals_accumulate() {
+        let mut m = TrafficMeter::new(TrafficPolicy::default());
+        m.begin_round();
+        m.record_uplink(2, 40);
+        m.record_wasted_uplink(5, 9);
+        m.begin_round();
+        m.record_uplink(2, 60);
+        assert_eq!(m.client_uplink(2), 100);
+        assert_eq!(m.client_uplink(5), 9);
+        assert_eq!(m.client_uplink(7), 0, "never-seen client reads zero");
+        assert_eq!(m.per_client_uplink.len(), 6);
     }
 }

@@ -16,6 +16,18 @@ pub fn execute(
     artifacts: &Path,
     ctx: &mut Option<Rc<PjrtContext>>,
 ) -> Result<(RunSummary, f64)> {
+    execute_with(cfg, artifacts, ctx, None)
+}
+
+/// [`execute`] with an optional simulated-seconds budget: when set, the run
+/// stops as soon as the scheduler's round clock reaches the budget (still
+/// capped at the configured round count) — the time-to-accuracy regime.
+pub fn execute_with(
+    cfg: &RunConfig,
+    artifacts: &Path,
+    ctx: &mut Option<Rc<PjrtContext>>,
+    budget_s: Option<f64>,
+) -> Result<(RunSummary, f64)> {
     cfg.validate()?;
     let workload = build_workload(cfg)?;
     let mut engine = build_engine(cfg, artifacts, ctx)?;
@@ -27,7 +39,10 @@ pub fn execute(
         network,
         cfg.fl_config(),
     );
-    let summary = run.run(engine.as_mut())?;
+    let summary = match budget_s {
+        Some(b) => run.run_for_budget(engine.as_mut(), b)?,
+        None => run.run(engine.as_mut())?,
+    };
     Ok((summary, workload.achieved_emd))
 }
 

@@ -59,6 +59,9 @@ fn print_usage() {
 USAGE:
   fedgmf train [--config FILE] [--set sec.key=val ...] [--out-dir DIR]
                [--technique dgc|gmc|dgcwgm|dgcwgmf] [--scale S]
+               [--budget SIM_SECONDS]   # stop at a simulated-seconds budget
+               # time-domain scheduler: --set sim.deadline_s=0.25 sim.dropout=0.02
+               #   sim.overselect=1.25 sim.compute_s=0.05 sim.profile=\"heterogeneous\"
   fedgmf experiment --id ID [--scale quick|default|paper] [--engine pjrt|native]
                [--techniques a,b] [--levels 0.1,0.5] [--out-dir DIR] [--seed N]
   fedgmf experiment --list
@@ -140,9 +143,11 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     let out_dir = PathBuf::from(f.get("out-dir").unwrap_or("results/train"));
     std::fs::create_dir_all(&out_dir)?;
 
+    let budget = f.get("budget").map(|b| b.parse::<f64>()).transpose()?;
     println!("run: {}", cfg.describe());
     let mut ctx = None;
-    let (summary, emd) = experiments::runner::execute(&cfg, &artifacts_dir(&f), &mut ctx)?;
+    let (summary, emd) =
+        experiments::runner::execute_with(&cfg, &artifacts_dir(&f), &mut ctx, budget)?;
     println!("achieved EMD: {emd:.4}");
     println!(
         "final acc {:.4} | best {:.4} | traffic {:.4} GB (up {:.4} / down {:.4}) | sim {:.1}s",
@@ -153,6 +158,15 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         summary.downlink_gb,
         summary.sim_seconds
     );
+    if cfg.sim.scheduling_active() {
+        println!(
+            "scheduler: {} rounds | {} uploads dropped at the deadline | {} offline | {:.4} GB wasted uplink",
+            summary.recorder.rounds.len(),
+            summary.dropped_deadline,
+            summary.dropped_offline,
+            summary.wasted_uplink_gb
+        );
+    }
     let curve = out_dir.join(format!("{}.csv", summary.technique));
     summary.recorder.write_csv(&curve)?;
     std::fs::write(out_dir.join("summary.json"), summary.recorder.summary_json().to_pretty())?;

@@ -27,6 +27,17 @@ pub struct RoundRecord {
     pub sim_seconds: f64,
     /// wall-clock compute seconds for the round (this testbed)
     pub wall_seconds: f64,
+    /// clients selected for the round (over-provisioned cohort size)
+    pub selected: usize,
+    /// selected clients whose upload missed the round deadline
+    pub dropped_deadline: usize,
+    /// selected clients that dropped out entirely (upload never sent)
+    pub dropped_offline: usize,
+    /// cumulative simulated seconds at the end of this round (round clock)
+    pub sim_clock: f64,
+    /// straggler bytes this round: uploaded but discarded at the deadline
+    /// (included in `uplink_bytes`)
+    pub wasted_uplink_bytes: usize,
 }
 
 /// Accumulates rounds; produces summaries and files.
@@ -65,6 +76,29 @@ impl Recorder {
         self.rounds.iter().map(|r| r.sim_seconds).sum()
     }
 
+    pub fn total_dropped_deadline(&self) -> usize {
+        self.rounds.iter().map(|r| r.dropped_deadline).sum()
+    }
+
+    pub fn total_dropped_offline(&self) -> usize {
+        self.rounds.iter().map(|r| r.dropped_offline).sum()
+    }
+
+    /// Last evaluated accuracy at or before the simulated-seconds `budget`
+    /// (by the round clock); 0 when nothing was evaluated in time.
+    pub fn accuracy_at_sim_seconds(&self, budget: f64) -> f64 {
+        let mut acc = 0.0;
+        for r in &self.rounds {
+            if r.sim_clock > budget {
+                break;
+            }
+            if r.test_accuracy > 0.0 {
+                acc = r.test_accuracy;
+            }
+        }
+        acc
+    }
+
     /// Final test accuracy (last evaluated round).
     pub fn final_accuracy(&self) -> f64 {
         self.rounds
@@ -82,11 +116,11 @@ impl Recorder {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,train_loss,test_loss,test_accuracy,uplink_bytes,downlink_bytes,aggregate_nnz,mask_overlap,sim_seconds,wall_seconds\n",
+            "round,train_loss,test_loss,test_accuracy,uplink_bytes,downlink_bytes,aggregate_nnz,mask_overlap,sim_seconds,wall_seconds,selected,dropped_deadline,dropped_offline,sim_clock,wasted_uplink_bytes\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{:.6},{:.6},{:.6},{},{},{},{:.6},{:.6},{:.6}\n",
+                "{},{:.6},{:.6},{:.6},{},{},{},{:.6},{:.6},{:.6},{},{},{},{:.6},{}\n",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -96,7 +130,12 @@ impl Recorder {
                 r.aggregate_nnz,
                 r.mask_overlap,
                 r.sim_seconds,
-                r.wall_seconds
+                r.wall_seconds,
+                r.selected,
+                r.dropped_deadline,
+                r.dropped_offline,
+                r.sim_clock,
+                r.wasted_uplink_bytes
             ));
         }
         out
@@ -111,6 +150,8 @@ impl Recorder {
             ("total_downlink_bytes", Json::num(self.total_downlink() as f64)),
             ("total_traffic_gb", Json::num(self.total_traffic_gb())),
             ("total_sim_seconds", Json::num(self.total_sim_seconds())),
+            ("total_dropped_deadline", Json::num(self.total_dropped_deadline() as f64)),
+            ("total_dropped_offline", Json::num(self.total_dropped_offline() as f64)),
         ])
     }
 
@@ -175,5 +216,44 @@ mod tests {
         let r = Recorder::new();
         assert_eq!(r.final_accuracy(), 0.0);
         assert_eq!(r.total_traffic(), 0);
+        assert_eq!(r.accuracy_at_sim_seconds(100.0), 0.0);
+    }
+
+    #[test]
+    fn drop_totals_and_budget_accuracy() {
+        let mut r = Recorder::new();
+        r.push(RoundRecord {
+            round: 0,
+            test_accuracy: 0.2,
+            dropped_deadline: 2,
+            dropped_offline: 1,
+            sim_clock: 1.0,
+            ..Default::default()
+        });
+        r.push(RoundRecord {
+            round: 1,
+            test_accuracy: 0.0, // not evaluated
+            dropped_deadline: 1,
+            sim_clock: 2.0,
+            ..Default::default()
+        });
+        r.push(RoundRecord {
+            round: 2,
+            test_accuracy: 0.6,
+            sim_clock: 3.0,
+            ..Default::default()
+        });
+        assert_eq!(r.total_dropped_deadline(), 3);
+        assert_eq!(r.total_dropped_offline(), 1);
+        assert_eq!(r.accuracy_at_sim_seconds(0.5), 0.0);
+        assert_eq!(r.accuracy_at_sim_seconds(1.0), 0.2);
+        assert_eq!(r.accuracy_at_sim_seconds(2.5), 0.2, "round 1 had no eval");
+        assert_eq!(r.accuracy_at_sim_seconds(10.0), 0.6);
+        let csv = r.to_csv();
+        assert!(csv
+            .lines()
+            .next()
+            .unwrap()
+            .ends_with("selected,dropped_deadline,dropped_offline,sim_clock,wasted_uplink_bytes"));
     }
 }

@@ -60,11 +60,70 @@ pub fn evaluate(
     params: &[f32],
     batches: &[Batch],
 ) -> anyhow::Result<(f64, f64)> {
+    evaluate_with_pool(engine, &mut [], params, batches)
+}
+
+/// [`evaluate`] fanned out over the caller's worker-engine pool.
+///
+/// Per-batch results are independent of which engine instance computes them
+/// (eval is a pure forward pass over `params`), and the loss/accuracy
+/// reduction runs in batch order over the gathered per-batch results — the
+/// same additions in the same order as the sequential loop — so the result
+/// is **bit-identical** at any pool size.
+pub fn evaluate_with_pool(
+    engine: &mut dyn TrainEngine,
+    extra: &mut [Box<dyn TrainEngine>],
+    params: &[f32],
+    batches: &[Batch],
+) -> anyhow::Result<(f64, f64)> {
+    let mut results: Vec<(f64, usize)> = vec![(0.0, 0); batches.len()];
+    if extra.is_empty() || batches.len() < 2 {
+        for (b, r) in batches.iter().zip(results.iter_mut()) {
+            *r = engine.eval_step(params, b)?;
+        }
+    } else {
+        let threads = (extra.len() + 1).min(batches.len());
+        let chunk = batches.len().div_ceil(threads);
+        let mut first_err: anyhow::Result<()> = Ok(());
+        std::thread::scope(|s| {
+            let mut batch_chunks = batches.chunks(chunk);
+            let mut res_chunks = results.chunks_mut(chunk);
+            let head_batches = batch_chunks.next();
+            let head_results = res_chunks.next();
+            let mut handles = Vec::with_capacity(threads - 1);
+            for ((bc, rc), eng) in batch_chunks.zip(res_chunks).zip(extra.iter_mut()) {
+                handles.push(s.spawn(move || -> anyhow::Result<()> {
+                    for (b, r) in bc.iter().zip(rc.iter_mut()) {
+                        *r = eng.eval_step(params, b)?;
+                    }
+                    Ok(())
+                }));
+            }
+            // the caller's engine drives the first chunk on this thread
+            if let (Some(bc), Some(rc)) = (head_batches, head_results) {
+                for (b, r) in bc.iter().zip(rc.iter_mut()) {
+                    match engine.eval_step(params, b) {
+                        Ok(x) => *r = x,
+                        Err(e) => {
+                            first_err = Err(e);
+                            break;
+                        }
+                    }
+                }
+            }
+            for h in handles {
+                let r = h.join().expect("eval worker thread panicked");
+                if first_err.is_ok() {
+                    first_err = r;
+                }
+            }
+        });
+        first_err?;
+    }
     let mut loss_sum = 0.0;
     let mut correct = 0usize;
     let mut preds = 0usize;
-    for b in batches {
-        let (loss, nc) = engine.eval_step(params, b)?;
+    for (b, &(loss, nc)) in batches.iter().zip(&results) {
         loss_sum += loss * b.len() as f64;
         correct += nc;
         preds += b.prediction_count();

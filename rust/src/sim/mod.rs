@@ -1,4 +1,7 @@
-//! Network simulation: hub-and-spoke topology, bytes → seconds.
+//! Network simulation: hub-and-spoke topology, bytes → seconds, and the
+//! time-domain round scheduler (deadlines, stragglers, dropouts).
 pub mod network;
+pub mod scheduler;
 
 pub use network::{LinkSpec, Network};
+pub use scheduler::{ClientFate, ClientProfile, ProfilePreset, Scheduler, SimConfig};

@@ -1,0 +1,431 @@
+//! Time-domain round scheduler: stragglers, dropouts, deadlines.
+//!
+//! PR 1 left the network simulator as a passive per-round time estimator —
+//! bytes went in, seconds came out, and no decision ever depended on the
+//! clock. This module promotes it into an active subsystem: every client
+//! gets a capability profile (link spec + a compute-speed multiplier), the
+//! sampler over-provisions the cohort, each selected client's simulated
+//! finish time is `compute_time + uplink_time`, and the server applies a
+//! deadline — uploads that arrive late (or never, for hard dropouts) are
+//! discarded from the aggregate while the client's accumulated gradient
+//! residual is retained, so DGC/GMF error-feedback semantics survive the
+//! drop (see [`crate::compress::Compressor::restore_upload`]).
+//!
+//! ## Determinism contract
+//!
+//! With the default [`SimConfig`] (no deadline, no dropout, no
+//! over-selection, no compute model, uniform profiles) every code path here
+//! reduces to the PR 1 passive estimator *bit-exactly*: finish times are
+//! `0.0 + latency + bytes/up_bps`, every fate is `Accepted`, and the
+//! uplink-phase duration is the same `fold(0.0, f64::max)` the old
+//! `Network::uplink_time` computed. `tests/determinism.rs` pins this.
+//! Dropout draws come from a per-round RNG derived from the run seed, in
+//! participant order, so scheduled runs are also bit-identical at any
+//! worker count.
+
+use super::network::{LinkSpec, Network};
+use crate::util::rng::Rng;
+
+/// How per-client capability profiles are generated from the base network.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ProfilePreset {
+    /// Every client keeps its base link and unit compute speed.
+    Uniform,
+    /// Every `slow_every`-th client is `slow_factor`× slower: link bandwidth
+    /// divided and compute time multiplied (a bimodal fleet — e.g. phones on
+    /// Wi-Fi vs phones on congested cellular).
+    Heterogeneous { slow_every: usize, slow_factor: f64 },
+    /// Log-normal long tail: client slowdown `exp(sigma · |N(0,1)|)` ≥ 1,
+    /// applied to both link and compute — most clients near 1×, a heavy
+    /// tail of very slow devices (the empirical FL fleet shape).
+    LongTail { sigma: f64 },
+}
+
+impl ProfilePreset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProfilePreset::Uniform => "uniform",
+            ProfilePreset::Heterogeneous { .. } => "heterogeneous",
+            ProfilePreset::LongTail { .. } => "longtail",
+        }
+    }
+}
+
+/// The `[sim]` TOML section: time-domain scheduling knobs.
+///
+/// The default is fully inert — see the module docs' determinism contract.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimConfig {
+    pub preset: ProfilePreset,
+    /// Server-side round deadline in simulated seconds; uploads finishing
+    /// later are dropped from aggregation. 0 disables.
+    pub deadline_s: f64,
+    /// Per-round per-client hard-dropout probability in [0, 1): the client
+    /// trains but its upload never arrives. 0 disables.
+    pub dropout: f64,
+    /// Sampler over-provisioning factor (≥ 1): select
+    /// `ceil(overselect · clients_per_round)` so stragglers can be dropped
+    /// without starving the aggregate. 1 disables.
+    pub overselect: f64,
+    /// Base compute seconds per local step on a unit-speed device; a
+    /// client's compute time is `compute_mult · compute_s · local_steps`.
+    /// 0 disables the compute model (uplink-only finish times).
+    pub compute_s: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            preset: ProfilePreset::Uniform,
+            deadline_s: 0.0,
+            dropout: 0.0,
+            overselect: 1.0,
+            compute_s: 0.0,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Whether any scheduling *decision* is active. When false, participant
+    /// selection and acceptance are exactly the PR 1 behaviour (profiles and
+    /// `compute_s` only change reported seconds, never participation).
+    pub fn scheduling_active(&self) -> bool {
+        self.deadline_s > 0.0 || self.dropout > 0.0 || self.overselect > 1.0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.deadline_s < 0.0 || !self.deadline_s.is_finite() {
+            return Err(format!("sim.deadline_s must be finite and >= 0, got {}", self.deadline_s));
+        }
+        if !(0.0..1.0).contains(&self.dropout) {
+            return Err(format!("sim.dropout must be in [0, 1), got {}", self.dropout));
+        }
+        if self.overselect < 1.0 || !self.overselect.is_finite() {
+            return Err(format!("sim.overselect must be >= 1, got {}", self.overselect));
+        }
+        if self.compute_s < 0.0 || !self.compute_s.is_finite() {
+            return Err(format!("sim.compute_s must be finite and >= 0, got {}", self.compute_s));
+        }
+        match self.preset {
+            ProfilePreset::Heterogeneous { slow_every, slow_factor } => {
+                if slow_every == 0 {
+                    return Err("sim.slow_every must be >= 1".into());
+                }
+                if slow_factor < 1.0 || !slow_factor.is_finite() {
+                    return Err(format!("sim.slow_factor must be >= 1, got {slow_factor}"));
+                }
+            }
+            ProfilePreset::LongTail { sigma } => {
+                if sigma < 0.0 || !sigma.is_finite() {
+                    return Err(format!("sim.sigma must be finite and >= 0, got {sigma}"));
+                }
+            }
+            ProfilePreset::Uniform => {}
+        }
+        Ok(())
+    }
+}
+
+/// One client's simulated capability: its link plus how much slower than a
+/// unit-speed device its local training runs.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientProfile {
+    pub link: LinkSpec,
+    /// compute-time multiplier (1.0 = baseline device)
+    pub compute_mult: f64,
+}
+
+/// Fate of one selected client in a scheduled round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClientFate {
+    /// Upload arrived by the deadline and entered the aggregate.
+    Accepted,
+    /// Finished after the deadline: the bytes crossed the wire but the
+    /// server discarded them (wasted traffic; residual restored).
+    Straggler,
+    /// Hard dropout: the upload never arrived (no traffic; residual
+    /// restored).
+    Offline,
+}
+
+/// Per-client profiles + the run's simulated clock. Scheduling *policy*
+/// (deadline, dropout, over-selection) stays in [`SimConfig`], which the
+/// round loop passes per call — so a test (or a live reconfiguration) can
+/// change the policy mid-run without rebuilding profiles.
+#[derive(Clone, Debug)]
+pub struct Scheduler {
+    profiles: Vec<ClientProfile>,
+    clock: f64,
+}
+
+impl Scheduler {
+    /// Build per-client profiles by applying `preset` to the base network's
+    /// links. `seed` only feeds the long-tail draw (deterministic per run).
+    pub fn new(network: &Network, preset: ProfilePreset, seed: u64) -> Self {
+        let scaled = |link: LinkSpec, f: f64| ClientProfile {
+            link: LinkSpec {
+                up_bps: link.up_bps / f,
+                down_bps: link.down_bps / f,
+                latency_s: link.latency_s,
+            },
+            compute_mult: f,
+        };
+        let profiles: Vec<ClientProfile> = match preset {
+            ProfilePreset::Uniform => network
+                .links
+                .iter()
+                .map(|&link| ClientProfile { link, compute_mult: 1.0 })
+                .collect(),
+            ProfilePreset::Heterogeneous { slow_every, slow_factor } => network
+                .links
+                .iter()
+                .enumerate()
+                .map(|(k, &link)| {
+                    if slow_every > 0 && k % slow_every == slow_every - 1 {
+                        scaled(link, slow_factor)
+                    } else {
+                        ClientProfile { link, compute_mult: 1.0 }
+                    }
+                })
+                .collect(),
+            ProfilePreset::LongTail { sigma } => {
+                let mut rng = Rng::new(seed ^ 0x10_46_7A11);
+                network
+                    .links
+                    .iter()
+                    .map(|&link| {
+                        let f = (sigma * (rng.normal() as f64).abs()).exp();
+                        scaled(link, f)
+                    })
+                    .collect()
+            }
+        };
+        Scheduler { profiles, clock: 0.0 }
+    }
+
+    pub fn clients(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn profile(&self, client: usize) -> &ClientProfile {
+        &self.profiles[client % self.profiles.len()]
+    }
+
+    /// Cumulative simulated seconds since the start of the run.
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Advance the round clock by `dt` seconds; returns the new clock.
+    pub fn advance(&mut self, dt: f64) -> f64 {
+        self.clock += dt;
+        self.clock
+    }
+
+    /// Simulated local-training time for `client`.
+    pub fn compute_time(&self, cfg: &SimConfig, client: usize, local_steps: usize) -> f64 {
+        self.profile(client).compute_mult * cfg.compute_s * local_steps.max(1) as f64
+    }
+
+    /// Simulated upload time for `bytes` on `client`'s link.
+    pub fn uplink_time(&self, client: usize, bytes: usize) -> f64 {
+        let l = &self.profile(client).link;
+        l.latency_s + bytes as f64 / l.up_bps
+    }
+
+    /// Multicast completion time: the slowest participant's downlink.
+    pub fn broadcast_time(&self, bytes: usize, participants: &[usize]) -> f64 {
+        participants
+            .iter()
+            .map(|&k| {
+                let l = &self.profile(k).link;
+                l.latency_s + bytes as f64 / l.down_bps
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Decide every selected client's fate for one round and return the
+    /// uplink-phase duration.
+    ///
+    /// `bytes[i]` is participant `participants[i]`'s wire payload size.
+    /// Dropout draws are taken from `rng` in participant order (one draw per
+    /// participant when `cfg.dropout > 0`), so the plan is independent of
+    /// worker count. `fates`/`finishes` are reusable output buffers.
+    ///
+    /// The uplink phase lasts until the slowest accepted upload — unless a
+    /// deadline is set and anyone missed it, in which case the server waits
+    /// out the full deadline before closing the round.
+    #[allow(clippy::too_many_arguments)]
+    pub fn plan_round(
+        &self,
+        cfg: &SimConfig,
+        participants: &[usize],
+        bytes: &[usize],
+        local_steps: usize,
+        rng: &mut Rng,
+        fates: &mut Vec<ClientFate>,
+        finishes: &mut Vec<f64>,
+    ) -> f64 {
+        debug_assert_eq!(participants.len(), bytes.len());
+        fates.clear();
+        finishes.clear();
+        let deadline = cfg.deadline_s;
+        let mut any_missed = false;
+        let mut t_up: f64 = 0.0;
+        for (&cid, &b) in participants.iter().zip(bytes) {
+            let offline = cfg.dropout > 0.0 && rng.f64() < cfg.dropout;
+            let finish = self.compute_time(cfg, cid, local_steps) + self.uplink_time(cid, b);
+            let fate = if offline {
+                ClientFate::Offline
+            } else if deadline > 0.0 && finish > deadline {
+                ClientFate::Straggler
+            } else {
+                ClientFate::Accepted
+            };
+            if fate == ClientFate::Accepted {
+                t_up = f64::max(t_up, finish);
+            } else {
+                any_missed = true;
+            }
+            fates.push(fate);
+            finishes.push(finish);
+        }
+        if deadline > 0.0 && any_missed {
+            t_up = deadline;
+        }
+        t_up
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(n: usize) -> Network {
+        Network::uniform(n, LinkSpec { up_bps: 1000.0, down_bps: 2000.0, latency_s: 0.0 })
+    }
+
+    fn plan(
+        sched: &Scheduler,
+        cfg: &SimConfig,
+        parts: &[usize],
+        bytes: &[usize],
+        seed: u64,
+    ) -> (Vec<ClientFate>, Vec<f64>, f64) {
+        let mut rng = Rng::new(seed);
+        let mut fates = Vec::new();
+        let mut finishes = Vec::new();
+        let t = sched.plan_round(cfg, parts, bytes, 1, &mut rng, &mut fates, &mut finishes);
+        (fates, finishes, t)
+    }
+
+    #[test]
+    fn inert_config_reproduces_passive_estimator() {
+        let network = net(3);
+        let sched = Scheduler::new(&network, ProfilePreset::Uniform, 1);
+        let cfg = SimConfig::default();
+        assert!(!cfg.scheduling_active());
+        let (fates, finishes, t) = plan(&sched, &cfg, &[0, 1, 2], &[1000, 3000, 500], 7);
+        assert!(fates.iter().all(|&f| f == ClientFate::Accepted));
+        let legacy = network.uplink_time(&[(0, 1000), (1, 3000), (2, 500)]);
+        assert_eq!(t.to_bits(), legacy.to_bits(), "must be bit-identical to Network::uplink_time");
+        assert_eq!(finishes[1].to_bits(), 3.0f64.to_bits());
+    }
+
+    #[test]
+    fn deadline_drops_stragglers_and_waits_out_the_deadline() {
+        let sched = Scheduler::new(&net(3), ProfilePreset::Uniform, 1);
+        let cfg = SimConfig { deadline_s: 1.0, ..Default::default() };
+        // finishes: 1000/1000 = 1.0 (makes it), 3000/1000 = 3.0 (late)
+        let (fates, _, t) = plan(&sched, &cfg, &[0, 1], &[1000, 3000], 7);
+        assert_eq!(fates, vec![ClientFate::Accepted, ClientFate::Straggler]);
+        assert_eq!(t, 1.0, "server waits until the deadline when anyone misses");
+    }
+
+    #[test]
+    fn deadline_closes_early_when_everyone_arrives() {
+        let sched = Scheduler::new(&net(2), ProfilePreset::Uniform, 1);
+        let cfg = SimConfig { deadline_s: 10.0, ..Default::default() };
+        let (fates, _, t) = plan(&sched, &cfg, &[0, 1], &[1000, 2000], 7);
+        assert!(fates.iter().all(|&f| f == ClientFate::Accepted));
+        assert_eq!(t, 2.0);
+    }
+
+    #[test]
+    fn compute_model_shifts_finish_times() {
+        let network = net(4);
+        let sched = Scheduler::new(
+            &network,
+            ProfilePreset::Heterogeneous { slow_every: 2, slow_factor: 10.0 },
+            1,
+        );
+        let cfg = SimConfig { compute_s: 0.5, ..Default::default() };
+        // client 0: fast (1× compute, full link); client 1: slow (10×, link/10)
+        assert_eq!(sched.compute_time(&cfg, 0, 2), 1.0);
+        assert_eq!(sched.compute_time(&cfg, 1, 2), 10.0);
+        assert_eq!(sched.uplink_time(0, 1000), 1.0);
+        assert_eq!(sched.uplink_time(1, 1000), 10.0);
+    }
+
+    #[test]
+    fn dropout_draws_follow_rng_and_spare_traffic() {
+        let sched = Scheduler::new(&net(4), ProfilePreset::Uniform, 1);
+        let cfg = SimConfig { dropout: 0.5, ..Default::default() };
+        // deterministic per seed; over many seeds roughly half drop
+        let mut offline = 0usize;
+        let mut total = 0usize;
+        for seed in 0..200u64 {
+            let (fates, _, _) = plan(&sched, &cfg, &[0, 1, 2, 3], &[100; 4], seed);
+            offline += fates.iter().filter(|&&f| f == ClientFate::Offline).count();
+            total += fates.len();
+        }
+        let rate = offline as f64 / total as f64;
+        assert!((rate - 0.5).abs() < 0.1, "offline rate {rate}");
+        // same seed → same plan
+        let a = plan(&sched, &cfg, &[0, 1, 2, 3], &[100; 4], 3);
+        let b = plan(&sched, &cfg, &[0, 1, 2, 3], &[100; 4], 3);
+        assert_eq!(a.0, b.0);
+    }
+
+    #[test]
+    fn longtail_profiles_are_deterministic_and_bounded_below() {
+        let network = net(32);
+        let a = Scheduler::new(&network, ProfilePreset::LongTail { sigma: 0.8 }, 42);
+        let b = Scheduler::new(&network, ProfilePreset::LongTail { sigma: 0.8 }, 42);
+        for k in 0..32 {
+            assert_eq!(a.profile(k).compute_mult.to_bits(), b.profile(k).compute_mult.to_bits());
+            assert!(a.profile(k).compute_mult >= 1.0);
+            assert!(a.profile(k).link.up_bps <= network.links[k].up_bps);
+        }
+        let c = Scheduler::new(&network, ProfilePreset::LongTail { sigma: 0.8 }, 43);
+        let differs = (0..32).any(|k| a.profile(k).compute_mult != c.profile(k).compute_mult);
+        assert!(differs, "different seeds must draw different tails");
+    }
+
+    #[test]
+    fn clock_accumulates() {
+        let mut sched = Scheduler::new(&net(1), ProfilePreset::Uniform, 1);
+        assert_eq!(sched.clock(), 0.0);
+        assert_eq!(sched.advance(1.5), 1.5);
+        assert_eq!(sched.advance(0.5), 2.0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let ok = SimConfig::default();
+        assert!(ok.validate().is_ok());
+        assert!(SimConfig { dropout: 1.0, ..ok }.validate().is_err());
+        assert!(SimConfig { dropout: -0.1, ..ok }.validate().is_err());
+        assert!(SimConfig { overselect: 0.5, ..ok }.validate().is_err());
+        assert!(SimConfig { deadline_s: -1.0, ..ok }.validate().is_err());
+        assert!(SimConfig { compute_s: f64::NAN, ..ok }.validate().is_err());
+        let bad_het = SimConfig {
+            preset: ProfilePreset::Heterogeneous { slow_every: 0, slow_factor: 2.0 },
+            ..ok
+        };
+        assert!(bad_het.validate().is_err());
+        let bad_tail =
+            SimConfig { preset: ProfilePreset::LongTail { sigma: -1.0 }, ..ok };
+        assert!(bad_tail.validate().is_err());
+    }
+}

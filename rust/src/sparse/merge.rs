@@ -19,6 +19,8 @@ pub struct Aggregator {
     dirty: Vec<bool>,
     /// per-shard touched lists for the parallel merge (reused across rounds)
     shard_touched: Vec<Vec<u32>>,
+    /// per-shard output staging for the parallel finish (reused across rounds)
+    shard_out: Vec<SparseVec>,
 }
 
 impl Aggregator {
@@ -28,6 +30,7 @@ impl Aggregator {
             touched: Vec::new(),
             dirty: vec![false; dim],
             shard_touched: Vec::new(),
+            shard_out: Vec::new(),
         }
     }
 
@@ -111,22 +114,85 @@ impl Aggregator {
     /// union-support aggregate into `out` (cleared, capacity kept), and
     /// reset for the next round.
     pub fn finish_mean_into(&mut self, count: usize, out: &mut SparseVec) {
+        self.finish_mean_into_with(count, out, 1);
+    }
+
+    /// [`Aggregator::finish_mean_into`] with the emit phase sharded over up
+    /// to `workers` threads when the touched set justifies it.
+    ///
+    /// Instead of sorting the touched list, each worker scans its disjoint
+    /// slice of the dirty bitmap in ascending coordinate order, emitting and
+    /// resetting locally; concatenating the per-shard outputs in shard order
+    /// is globally sorted. Values are the same `acc[i] * scale` products in
+    /// the same order, so the result is **bit-identical** to the sequential
+    /// sort + scan at any worker count.
+    pub fn finish_mean_into_with(&mut self, count: usize, out: &mut SparseVec, workers: usize) {
         let scale = if count == 0 { 0.0 } else { 1.0 / count as f32 };
-        self.touched.sort_unstable();
         out.dim = self.acc.len();
         out.indices.clear();
         out.values.clear();
-        out.indices.reserve(self.touched.len());
-        out.values.reserve(self.touched.len());
-        for &i in &self.touched {
-            let iu = i as usize;
-            let v = self.acc[iu] * scale;
-            if v != 0.0 {
-                out.indices.push(i);
-                out.values.push(v);
+        if workers <= 1 || self.touched.len() < PARALLEL_MERGE_MIN_NNZ || self.acc.is_empty() {
+            // sequential path: sort the touched list and scan it
+            self.touched.sort_unstable();
+            out.indices.reserve(self.touched.len());
+            out.values.reserve(self.touched.len());
+            for &i in &self.touched {
+                let iu = i as usize;
+                let v = self.acc[iu] * scale;
+                if v != 0.0 {
+                    out.indices.push(i);
+                    out.values.push(v);
+                }
+                self.acc[iu] = 0.0;
+                self.dirty[iu] = false;
             }
-            self.acc[iu] = 0.0;
-            self.dirty[iu] = false;
+            self.touched.clear();
+            out.debug_check();
+            return;
+        }
+        let dim = self.acc.len();
+        let shards = workers.min(dim);
+        let shard_len = dim.div_ceil(shards);
+        if self.shard_out.len() < shards {
+            self.shard_out.resize_with(shards, || SparseVec::empty(0));
+        }
+        let shard_out = &mut self.shard_out[..shards];
+        std::thread::scope(|s| {
+            let mut acc_rest: &mut [f32] = &mut self.acc[..];
+            let mut dirty_rest: &mut [bool] = &mut self.dirty[..];
+            let mut base = 0usize;
+            for so in shard_out.iter_mut() {
+                let len = shard_len.min(acc_rest.len());
+                let (acc_chunk, ar) = acc_rest.split_at_mut(len);
+                let (dirty_chunk, dr) = dirty_rest.split_at_mut(len);
+                acc_rest = ar;
+                dirty_rest = dr;
+                let lo = base;
+                base += len;
+                s.spawn(move || {
+                    so.indices.clear();
+                    so.values.clear();
+                    for (off, (a, d)) in acc_chunk.iter_mut().zip(dirty_chunk.iter_mut()).enumerate()
+                    {
+                        if *d {
+                            let v = *a * scale;
+                            if v != 0.0 {
+                                so.indices.push((lo + off) as u32);
+                                so.values.push(v);
+                            }
+                            *a = 0.0;
+                            *d = false;
+                        }
+                    }
+                });
+            }
+        });
+        let total: usize = shard_out.iter().map(|so| so.indices.len()).sum();
+        out.indices.reserve(total);
+        out.values.reserve(total);
+        for so in shard_out.iter() {
+            out.indices.extend_from_slice(&so.indices);
+            out.values.extend_from_slice(&so.values);
         }
         self.touched.clear();
         out.debug_check();
@@ -326,6 +392,39 @@ mod tests {
             let bits_a: Vec<u32> = a.values.iter().map(|v| v.to_bits()).collect();
             let bits_b: Vec<u32> = b.values.iter().map(|v| v.to_bits()).collect();
             assert_eq!(bits_a, bits_b, "workers={workers}: values must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn parallel_finish_mean_is_bit_identical_to_sequential() {
+        // touched must clear PARALLEL_MERGE_MIN_NNZ so the sharded emit runs
+        let dim = 60_000;
+        let grads: Vec<SparseVec> = (0..6).map(|c| rand_sparse(dim, 9_000, 500 + c)).collect();
+        let refs: Vec<&SparseVec> = grads.iter().collect();
+
+        let mut seq = Aggregator::new(dim);
+        for g in &refs {
+            seq.add(g);
+        }
+        let mut a = SparseVec::empty(0);
+        seq.finish_mean_into_with(6, &mut a, 1);
+        assert!(a.nnz() >= super::PARALLEL_MERGE_MIN_NNZ, "test must exercise the parallel gate");
+
+        for workers in [2usize, 3, 7, 64] {
+            let mut par = Aggregator::new(dim);
+            for g in &refs {
+                par.add(g);
+            }
+            let mut b = SparseVec::empty(0);
+            par.finish_mean_into_with(6, &mut b, workers);
+            assert_eq!(a.indices, b.indices, "workers={workers}");
+            let bits_a: Vec<u32> = a.values.iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> = b.values.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "workers={workers}: values must be bit-identical");
+            // aggregator must be fully reset afterwards
+            let mut empty = SparseVec::empty(0);
+            par.finish_mean_into_with(1, &mut empty, workers);
+            assert_eq!(empty.nnz(), 0, "workers={workers}: dirty state must be cleared");
         }
     }
 

@@ -2,6 +2,13 @@
 //! must be **bit-identical** to the sequential path — same model parameters
 //! (f32 bit patterns), same traffic bytes, same round records. This is the
 //! contract that makes `run.workers` a pure performance knob.
+//!
+//! PR 2 extends the contract to the time-domain scheduler: with the inert
+//! default `SimConfig` a run equals one with every sim knob spelled out at
+//! its disabled value (the scheduler adds nothing), and with scheduling
+//! *active* (deadline + dropout + over-selection + compute model) runs stay
+//! bit-identical across worker counts — dropout draws come from the run
+//! RNG in participant order, never from thread timing.
 
 use fedgmf::compress::CompressorKind;
 use fedgmf::coordinator::round::{FlConfig, FlRun, LrSchedule, RunSummary};
@@ -9,6 +16,7 @@ use fedgmf::coordinator::sampler::Sampler;
 use fedgmf::data::dataset::Dataset;
 use fedgmf::runtime::native::{BlobDataset, NativeEngine};
 use fedgmf::sim::network::Network;
+use fedgmf::sim::scheduler::{ProfilePreset, SimConfig};
 
 const DIM: usize = 16;
 const CLASSES: usize = 4;
@@ -18,7 +26,12 @@ fn engine() -> NativeEngine {
     NativeEngine::new(DIM, 12, CLASSES, 7)
 }
 
-fn run_with(kind: CompressorKind, sampler: Sampler, workers: usize) -> (Vec<u32>, RunSummary) {
+fn run_with_sim(
+    kind: CompressorKind,
+    sampler: Sampler,
+    workers: usize,
+    sim: SimConfig,
+) -> (Vec<u32>, RunSummary) {
     let mut engine = engine();
     let shards: Vec<Box<dyn Dataset + Send>> = (0..CLIENTS)
         .map(|c| {
@@ -32,11 +45,64 @@ fn run_with(kind: CompressorKind, sampler: Sampler, workers: usize) -> (Vec<u32>
     cfg.eval_every = 4;
     cfg.sampler = sampler;
     cfg.workers = workers;
+    cfg.sim = sim;
     let mut run =
         FlRun::new(&engine, shards, test, Network::uniform(CLIENTS, Default::default()), cfg);
     let summary = run.run(&mut engine).unwrap();
     let param_bits: Vec<u32> = run.params.iter().map(|p| p.to_bits()).collect();
     (param_bits, summary)
+}
+
+fn run_with(kind: CompressorKind, sampler: Sampler, workers: usize) -> (Vec<u32>, RunSummary) {
+    run_with_sim(kind, sampler, workers, SimConfig::default())
+}
+
+fn assert_rounds_identical(kind: CompressorKind, sum_seq: &RunSummary, sum_par: &RunSummary) {
+    assert_eq!(sum_seq.recorder.rounds.len(), sum_par.recorder.rounds.len());
+    for (a, b) in sum_seq.recorder.rounds.iter().zip(&sum_par.recorder.rounds) {
+        assert_eq!(a.uplink_bytes, b.uplink_bytes, "{} round {}", kind.name(), a.round);
+        assert_eq!(a.downlink_bytes, b.downlink_bytes, "{} round {}", kind.name(), a.round);
+        assert_eq!(a.aggregate_nnz, b.aggregate_nnz, "{} round {}", kind.name(), a.round);
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "{} round {}: train loss must be bit-identical",
+            kind.name(),
+            a.round
+        );
+        assert_eq!(
+            a.mask_overlap.to_bits(),
+            b.mask_overlap.to_bits(),
+            "{} round {}",
+            kind.name(),
+            a.round
+        );
+        assert_eq!(a.selected, b.selected, "{} round {}", kind.name(), a.round);
+        assert_eq!(a.dropped_deadline, b.dropped_deadline, "{} round {}", kind.name(), a.round);
+        assert_eq!(a.dropped_offline, b.dropped_offline, "{} round {}", kind.name(), a.round);
+        assert_eq!(
+            a.sim_seconds.to_bits(),
+            b.sim_seconds.to_bits(),
+            "{} round {}: simulated time must be bit-identical",
+            kind.name(),
+            a.round
+        );
+        assert_eq!(
+            a.sim_clock.to_bits(),
+            b.sim_clock.to_bits(),
+            "{} round {}",
+            kind.name(),
+            a.round
+        );
+        assert_eq!(
+            a.test_accuracy.to_bits(),
+            b.test_accuracy.to_bits(),
+            "{} round {}: parallel eval must be bit-identical",
+            kind.name(),
+            a.round
+        );
+    }
+    assert_eq!(sum_seq.final_accuracy, sum_par.final_accuracy, "{}", kind.name());
 }
 
 fn assert_identical(kind: CompressorKind, sampler: Sampler) {
@@ -48,27 +114,7 @@ fn assert_identical(kind: CompressorKind, sampler: Sampler) {
             "{}: params must be bit-identical at workers={workers}",
             kind.name()
         );
-        assert_eq!(sum_seq.recorder.rounds.len(), sum_par.recorder.rounds.len());
-        for (a, b) in sum_seq.recorder.rounds.iter().zip(&sum_par.recorder.rounds) {
-            assert_eq!(a.uplink_bytes, b.uplink_bytes, "{} round {}", kind.name(), a.round);
-            assert_eq!(a.downlink_bytes, b.downlink_bytes, "{} round {}", kind.name(), a.round);
-            assert_eq!(a.aggregate_nnz, b.aggregate_nnz, "{} round {}", kind.name(), a.round);
-            assert_eq!(
-                a.train_loss.to_bits(),
-                b.train_loss.to_bits(),
-                "{} round {}: train loss must be bit-identical",
-                kind.name(),
-                a.round
-            );
-            assert_eq!(
-                a.mask_overlap.to_bits(),
-                b.mask_overlap.to_bits(),
-                "{} round {}",
-                kind.name(),
-                a.round
-            );
-        }
-        assert_eq!(sum_seq.final_accuracy, sum_par.final_accuracy, "{}", kind.name());
+        assert_rounds_identical(kind, &sum_seq, &sum_par);
     }
 }
 
@@ -83,6 +129,79 @@ fn all_schemes_bit_identical_under_parallelism() {
 fn partial_participation_bit_identical_under_parallelism() {
     assert_identical(CompressorKind::DgcWgmf, Sampler::Fraction(0.5));
     assert_identical(CompressorKind::DgcWgm, Sampler::Count(3));
+}
+
+#[test]
+fn scheduler_off_equals_explicitly_inert_scheduler() {
+    // the scheduler must add nothing when every knob sits at its disabled
+    // value — guards against "active by default" regressions of the PR 1
+    // behaviour, at both worker counts
+    let inert = SimConfig {
+        preset: ProfilePreset::Uniform,
+        deadline_s: 0.0,
+        dropout: 0.0,
+        overselect: 1.0,
+        compute_s: 0.0,
+    };
+    for workers in [1usize, 4] {
+        let (pa, sa) = run_with(CompressorKind::DgcWgmf, Sampler::Full, workers);
+        let (pb, sb) =
+            run_with_sim(CompressorKind::DgcWgmf, Sampler::Full, workers, inert);
+        assert_eq!(pa, pb, "workers={workers}");
+        assert_rounds_identical(CompressorKind::DgcWgmf, &sa, &sb);
+        assert_eq!(sa.dropped_deadline, 0);
+        assert_eq!(sa.dropped_offline, 0);
+    }
+}
+
+#[test]
+fn scheduler_on_bit_identical_across_worker_counts() {
+    // full straggler regime: heterogeneous profiles, compute model, tight
+    // deadline, dropouts, over-selection — still a pure performance knob
+    let sim = SimConfig {
+        preset: ProfilePreset::Heterogeneous { slow_every: 3, slow_factor: 6.0 },
+        deadline_s: 0.08,
+        dropout: 0.15,
+        overselect: 1.5,
+        compute_s: 0.01,
+    };
+    for (kind, sampler) in [
+        (CompressorKind::DgcWgmf, Sampler::Fraction(0.5)),
+        (CompressorKind::Dgc, Sampler::Full),
+        (CompressorKind::DgcWgm, Sampler::Count(4)),
+    ] {
+        let (params_seq, sum_seq) = run_with_sim(kind, sampler, 1, sim);
+        for workers in [2usize, 4] {
+            let (params_par, sum_par) = run_with_sim(kind, sampler, workers, sim);
+            assert_eq!(
+                params_seq, params_par,
+                "{}: scheduled run must be bit-identical at workers={workers}",
+                kind.name()
+            );
+            assert_rounds_identical(kind, &sum_seq, &sum_par);
+        }
+        // the regime actually drops something, otherwise this test is vacuous
+        assert!(
+            sum_seq.dropped_deadline + sum_seq.dropped_offline > 0,
+            "{}: straggler regime must produce drops",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn longtail_profiles_and_budget_runs_deterministic() {
+    let sim = SimConfig {
+        preset: ProfilePreset::LongTail { sigma: 0.8 },
+        deadline_s: 0.1,
+        dropout: 0.05,
+        overselect: 1.25,
+        compute_s: 0.02,
+    };
+    let (pa, sa) = run_with_sim(CompressorKind::Gmc, Sampler::Fraction(0.6), 1, sim);
+    let (pb, sb) = run_with_sim(CompressorKind::Gmc, Sampler::Fraction(0.6), 4, sim);
+    assert_eq!(pa, pb);
+    assert_rounds_identical(CompressorKind::Gmc, &sa, &sb);
 }
 
 #[test]

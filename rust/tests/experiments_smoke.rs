@@ -66,6 +66,23 @@ fn fig5_quick_native_sweeps() {
 }
 
 #[test]
+fn time_to_accuracy_quick_native() {
+    let mut a = args("tta");
+    a.levels = vec![0.6, 2.0]; // simulated-seconds budgets
+    let report = run("time_to_accuracy", &a).unwrap();
+    assert!(report.contains("Time-to-accuracy"));
+    assert!(report.contains("DGCwGMF"));
+    assert!(report.contains("acc@budget"));
+    let csv =
+        std::fs::read_to_string(a.out_dir.join("time_to_accuracy").join("budgets.csv")).unwrap();
+    assert_eq!(csv.lines().count(), 5, "header + 2 techniques × 2 budgets");
+    // per-round curves carry the scheduler columns
+    let curve =
+        std::fs::read_to_string(a.out_dir.join("time_to_accuracy").join("DGC.csv")).unwrap();
+    assert!(curve.lines().next().unwrap().contains("dropped_deadline"));
+}
+
+#[test]
 fn unknown_id_lists_options() {
     let a = args("bad");
     let err = run("table99", &a).unwrap_err().to_string();

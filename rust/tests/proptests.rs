@@ -70,6 +70,111 @@ fn prop_wire_decode_rejects_truncations() {
     }
 }
 
+#[test]
+fn prop_wire_into_roundtrip_through_reused_buffers() {
+    // the hot-path pair (`encode_into`/`decode_into`) must round-trip every
+    // vector exactly through the same reused buffers, matching the
+    // allocating wrappers byte for byte
+    let mut buf = Vec::new();
+    let mut back = SparseVec::empty(0);
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let sv = rand_sparse(&mut rng, 400);
+        wire::encode_into(&sv, &mut buf);
+        assert_eq!(buf, wire::encode(&sv), "seed {seed}: encode_into != encode");
+        assert_eq!(buf.len(), wire::encoded_bytes(&sv), "seed {seed}");
+        wire::decode_into(&buf, &mut back).unwrap();
+        assert_eq!(back, sv, "seed {seed}: decode_into mismatch");
+    }
+}
+
+#[test]
+fn prop_wire_decode_into_rejects_every_strict_prefix() {
+    // every encoding's length is implied by its header, so *any* strict
+    // prefix — including odd-length slices — must return Err, never panic,
+    // through the reusable-buffer path
+    let mut out = SparseVec::empty(0);
+    for seed in seeds().take(12) {
+        let mut rng = Rng::new(seed);
+        let sv = rand_sparse(&mut rng, 60);
+        let buf = wire::encode(&sv);
+        for cut in 0..buf.len() {
+            assert!(
+                wire::decode_into(&buf[..cut], &mut out).is_err(),
+                "seed {seed}: prefix of {cut} bytes must be rejected"
+            );
+        }
+        // and the full buffer still decodes after all the failed attempts
+        wire::decode_into(&buf, &mut out).unwrap();
+        assert_eq!(out, sv, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_wire_decode_rejects_corrupt_indices_without_panic() {
+    let mut out = SparseVec::empty(0);
+    for seed in seeds().take(20) {
+        let mut rng = Rng::new(seed);
+        // non-empty sparse vector, sparse encoding guaranteed (nnz small)
+        let dim = 50 + rng.below(100);
+        let nnz = 1 + rng.below(5);
+        let pairs: Vec<(u32, f32)> = (0..nnz as u32).map(|i| (i * 7, 1.0 + i as f32)).collect();
+        let sv = SparseVec::new(dim, pairs);
+        let buf = wire::encode(&sv);
+        assert_eq!(buf[4], 0, "seed {seed}: must be sparse-encoded");
+
+        // out-of-range index (>= dim) → Err, never panic
+        let mut bad = buf.clone();
+        let idx_off = 9 + 4; // header + nnz field
+        bad[idx_off..idx_off + 4].copy_from_slice(&(dim as u32).to_le_bytes());
+        assert!(
+            matches!(wire::decode_into(&bad, &mut out), Err(wire::WireError::IndexOutOfBounds { .. })),
+            "seed {seed}"
+        );
+
+        // duplicated/unsorted index → Err
+        if nnz >= 2 {
+            let mut dup = buf.clone();
+            let second = idx_off + 4;
+            let first: [u8; 4] = dup[idx_off..idx_off + 4].try_into().unwrap();
+            dup[second..second + 4].copy_from_slice(&first);
+            assert!(
+                matches!(wire::decode_into(&dup, &mut out), Err(wire::WireError::Unsorted)),
+                "seed {seed}"
+            );
+        }
+
+        // unknown kind byte → Err
+        let mut kindless = buf.clone();
+        kindless[4] = 2 + (seed % 250) as u8;
+        assert!(wire::decode_into(&kindless, &mut out).is_err(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_wire_decode_never_panics_on_garbage() {
+    // random byte strings — with and without a valid magic prefix — must
+    // decode to Ok or Err, never panic, and leave the reused output vector
+    // usable for the next decode
+    let mut out = SparseVec::empty(0);
+    let reference = SparseVec::new(20, vec![(3, 1.0), (9, -2.0)]);
+    let ref_buf = wire::encode(&reference);
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let len = rng.below(64);
+        let mut garbage: Vec<u8> = (0..len).map(|_| (rng.below(256)) as u8).collect();
+        let _ = wire::decode_into(&garbage, &mut out);
+        if garbage.len() >= 9 {
+            garbage[0..4].copy_from_slice(&wire::MAGIC.to_le_bytes());
+            garbage[4] = (seed % 3) as u8; // sometimes a valid kind byte
+            let _ = wire::decode_into(&garbage, &mut out);
+        }
+        // the buffer survives whatever state the failed decode left behind
+        wire::decode_into(&ref_buf, &mut out).unwrap();
+        assert_eq!(out, reference, "seed {seed}");
+    }
+}
+
 // ------------------------------------------------------------------- top-k
 
 #[test]
@@ -130,6 +235,61 @@ fn prop_aggregator_equals_dense_mean() {
             let want = dense_sum[i] / kcount as f64;
             assert!((dense[i] as f64 - want).abs() < 1e-5, "seed {seed} i {i}");
         }
+    }
+}
+
+// ------------------------------------------------------------ mask overlap
+
+#[test]
+fn prop_jaccard_estimate_tracks_exact() {
+    // the O(nnz) estimator from PR 1 vs the exact O(n²·nnz) statistic:
+    // exact on any two masks and on identical masks; on random equal-size
+    // masks it's a Jensen lower bound within a small deviation
+    use fedgmf::sparse::merge::{mean_jaccard_estimate, mean_pairwise_jaccard};
+    let mut scratch = Vec::new();
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+
+        // n = 2: estimator reduces to intersection/union — exact
+        let a = rand_sparse(&mut rng, 200);
+        let mut b = rand_sparse(&mut rng, 200);
+        b.dim = a.dim.max(b.dim);
+        let a2 = SparseVec::from_sorted(b.dim, a.indices.clone(), a.values.clone());
+        let exact2 = mean_pairwise_jaccard(&[&a2, &b]);
+        let est2 = mean_jaccard_estimate(&[&a2, &b], &mut scratch);
+        assert!((est2 - exact2).abs() < 1e-12, "seed {seed}: n=2 must be exact");
+
+        // identical masks: both statistics are exactly 1
+        let copies: Vec<&SparseVec> = std::iter::repeat(&a2).take(2 + seed as usize % 4).collect();
+        assert_eq!(mean_jaccard_estimate(&copies, &mut scratch), 1.0, "seed {seed}");
+        assert_eq!(mean_pairwise_jaccard(&copies), 1.0, "seed {seed}");
+
+        // random equal-k masks: bounded deviation, and never above the exact
+        // statistic (Jensen: x/(2k−x) is convex in the intersection x)
+        let dim = 300;
+        let k = 30;
+        let n = 3 + rng.below(5);
+        let masks: Vec<SparseVec> = (0..n)
+            .map(|_| {
+                let mut ids: Vec<u32> = (0..dim as u32).collect();
+                rng.shuffle(&mut ids);
+                ids.truncate(k);
+                ids.sort_unstable();
+                let vals = vec![1.0f32; k];
+                SparseVec::from_sorted(dim, ids, vals)
+            })
+            .collect();
+        let refs: Vec<&SparseVec> = masks.iter().collect();
+        let exact = mean_pairwise_jaccard(&refs);
+        let est = mean_jaccard_estimate(&refs, &mut scratch);
+        assert!(
+            est <= exact + 1e-9,
+            "seed {seed}: estimate {est} must lower-bound exact {exact} at equal k"
+        );
+        assert!(
+            (exact - est).abs() < 0.05,
+            "seed {seed}: |{exact} - {est}| out of tolerance"
+        );
     }
 }
 
