@@ -42,6 +42,9 @@ fn main() -> anyhow::Result<()> {
         rows.push((kind.name().to_string(), summary));
     }
     println!("\n{}", comparison_rows(&rows));
-    println!("expected shape (paper Table 3, Cifar10-6): DGCwGM has the largest traffic;\nDGCwGMF the smallest, at accuracy >= DGC; GMC degrades at high EMD.");
+    println!(
+        "expected shape (paper Table 3, Cifar10-6): DGCwGM has the largest traffic;\n\
+         DGCwGMF the smallest, at accuracy >= DGC; GMC degrades at high EMD."
+    );
     Ok(())
 }

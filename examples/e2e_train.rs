@@ -34,16 +34,27 @@ fn main() -> anyhow::Result<()> {
     println!("end-to-end run: {}", cfg.describe());
 
     let workload = build_workload(&cfg)?;
-    println!("partitioned: {} clients, achieved EMD {:.3}", workload.shards.len(), workload.achieved_emd);
+    println!(
+        "partitioned: {} clients, achieved EMD {:.3}",
+        workload.shards.len(),
+        workload.achieved_emd
+    );
 
     let mut ctx = None;
     let mut engine = build_engine(&cfg, Path::new("artifacts"), &mut ctx)?;
-    println!("engine ready: P = {} parameters (resnet8 via PJRT artifacts)", engine.param_count());
+    println!(
+        "engine ready: P = {} parameters (resnet8 via PJRT artifacts)",
+        engine.param_count()
+    );
 
     let network = Network::uniform(cfg.clients, Default::default());
-    let mut run = FlRun::new(engine.as_ref(), workload.shards, workload.test, network, cfg.fl_config());
+    let mut run =
+        FlRun::new(engine.as_ref(), workload.shards, workload.test, network, cfg.fl_config());
 
-    println!("\n{:>5} {:>12} {:>10} {:>10} {:>12} {:>10}", "round", "train_loss", "test_acc", "agg_nnz", "uplink(KB)", "sim(s)");
+    println!(
+        "\n{:>5} {:>12} {:>10} {:>10} {:>12} {:>10}",
+        "round", "train_loss", "test_acc", "agg_nnz", "uplink(KB)", "sim(s)"
+    );
     for round in 0..rounds {
         let rec = run.step_round(engine.as_mut(), round)?;
         println!(

@@ -38,7 +38,14 @@ fn main() -> anyhow::Result<()> {
     println!("total traffic:       {:.4} GB", summary.total_traffic_gb);
     println!("  uplink:            {:.4} GB", summary.uplink_gb);
     println!("  downlink:          {:.4} GB", summary.downlink_gb);
-    println!("mean mask overlap:   {:.3}  (GMF raises this → smaller downlink)", summary.mean_mask_overlap);
-    println!("simulated wall time: {:.1} s over {} rounds", summary.sim_seconds, summary.recorder.rounds.len());
+    println!(
+        "mean mask overlap:   {:.3}  (GMF raises this → smaller downlink)",
+        summary.mean_mask_overlap
+    );
+    println!(
+        "simulated wall time: {:.1} s over {} rounds",
+        summary.sim_seconds,
+        summary.recorder.rounds.len()
+    );
     Ok(())
 }

@@ -71,7 +71,14 @@ fn randvec(n: usize, seed: u64) -> Vec<f32> {
 /// Full communication rounds through `FlRun::step_round` on the native
 /// engine: N clients × P params at rate 0.1. Returns mean ms/round over
 /// `rounds` steady-state rounds (one warmup round excluded).
-fn round_e2e(clients: usize, input_dim: usize, hidden: usize, classes: usize, workers: usize, rounds: usize) -> (f64, usize) {
+fn round_e2e(
+    clients: usize,
+    input_dim: usize,
+    hidden: usize,
+    classes: usize,
+    workers: usize,
+    rounds: usize,
+) -> (f64, usize) {
     let engine = NativeEngine::new(input_dim, hidden, classes, 1);
     let p = engine.param_count();
     let shards: Vec<Box<dyn Dataset + Send>> = (0..clients)

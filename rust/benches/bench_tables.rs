@@ -38,7 +38,8 @@ fn round_cost(
     let mut meter = TrafficMeter::new(TrafficPolicy::default());
     let k = ((rate * p as f64) as usize).max(1);
     let mut rng = Rng::new(99);
-    let grads: Vec<Vec<f32>> = (0..clients).map(|_| (0..p).map(|_| rng.normal()).collect()).collect();
+    let grads: Vec<Vec<f32>> =
+        (0..clients).map(|_| (0..p).map(|_| rng.normal()).collect()).collect();
 
     let t0 = Instant::now();
     let mut payload = fedgmf::sparse::vector::SparseVec::empty(p);
@@ -84,7 +85,7 @@ fn main() {
         );
     }
 
-    println!("\n-- fig5/fig6 axis: DGCwGMF round cost vs compression rate (P=77850, 20 clients) --");
+    println!("\n-- fig5/fig6 axis: DGCwGMF round cost vs rate (P=77850, 20 clients) --");
     for rate in [0.1, 0.3, 0.5, 0.7, 0.9] {
         let (ms, bytes) = round_cost(CompressorKind::DgcWgmf, 20, 77_850, rate, 6);
         println!(

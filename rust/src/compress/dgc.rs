@@ -71,8 +71,8 @@ impl Compressor for Dgc {
         )
     }
 
-    fn restore_upload(&mut self, upload: &SparseVec) {
-        upload.add_into(&mut self.v, 1.0);
+    fn restore_upload_scaled(&mut self, upload: &SparseVec, scale: f32) {
+        upload.add_into(&mut self.v, scale);
     }
 
     fn residual_norm(&self) -> f32 {
@@ -116,7 +116,8 @@ mod tests {
         assert!(res > 0.0 && res < norm_before);
         // transmitted + residual energy ≈ total (disjoint support)
         let sent = out.gradient.l2_norm();
-        assert!((sent * sent + res * res - norm_before * norm_before).abs() / (norm_before * norm_before) < 1e-4);
+        let energy_gap = (sent * sent + res * res - norm_before * norm_before).abs();
+        assert!(energy_gap / (norm_before * norm_before) < 1e-4);
     }
 
     #[test]
@@ -187,6 +188,39 @@ mod tests {
                 "{}: restored residual must re-enter the next upload verbatim",
                 kind.name()
             );
+        }
+    }
+
+    #[test]
+    fn partial_restore_returns_exactly_the_scaled_fraction() {
+        // the carry-discount path restores (1 − α)·upload; with a zero
+        // follow-up gradient and α_momentum = 0 the next upload must be the
+        // scaled fraction verbatim (0.25 is a power of two: exact in f32)
+        for kind in crate::compress::CompressorKind::ALL {
+            let dim = 120;
+            let cfg = CompressConfig {
+                alpha: 0.0,
+                exact_topk: true,
+                tau: crate::compress::TauSchedule::Constant(0.0),
+                ..CompressConfig::default()
+            };
+            let mut comp = crate::compress::build(kind, &cfg, dim);
+            // exactly k nonzeros: after round 0 the residual is empty, so
+            // the restored fraction alone defines round 1's top-k
+            let mut grad = vec![0.0f32; dim];
+            let mut r = Rng::new(78);
+            for i in 0..12 {
+                grad[i * 9] = r.normal() + if r.f32() < 0.5 { 1.5 } else { -1.5 };
+            }
+            let first = comp.compress(&grad, 12, 0);
+            assert_eq!(first.gradient.nnz(), 12, "{}", kind.name());
+            comp.restore_upload_scaled(&first.gradient, 0.25);
+            let zeros = vec![0.0f32; dim];
+            let second = comp.compress(&zeros, 12, 1);
+            assert_eq!(second.gradient.indices, first.gradient.indices, "{}", kind.name());
+            for (a, b) in second.gradient.values.iter().zip(&first.gradient.values) {
+                assert_eq!(a.to_bits(), (0.25 * b).to_bits(), "{}", kind.name());
+            }
         }
     }
 

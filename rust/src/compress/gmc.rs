@@ -93,8 +93,8 @@ impl Compressor for Gmc {
         )
     }
 
-    fn restore_upload(&mut self, upload: &SparseVec) {
-        upload.add_into(&mut self.v, 1.0);
+    fn restore_upload_scaled(&mut self, upload: &SparseVec, scale: f32) {
+        upload.add_into(&mut self.v, scale);
     }
 
     fn residual_norm(&self) -> f32 {

@@ -47,10 +47,22 @@ impl CompressorKind {
     /// Paper Table 2 row for this technique.
     pub fn technique_row(&self) -> TechniqueRow {
         match self {
-            CompressorKind::Dgc => TechniqueRow { momentum_correction: true, client_gm: None, server_gm: false },
-            CompressorKind::Gmc => TechniqueRow { momentum_correction: false, client_gm: Some("compensation"), server_gm: false },
-            CompressorKind::DgcWgm => TechniqueRow { momentum_correction: true, client_gm: None, server_gm: true },
-            CompressorKind::DgcWgmf => TechniqueRow { momentum_correction: true, client_gm: Some("compression"), server_gm: false },
+            CompressorKind::Dgc => {
+                TechniqueRow { momentum_correction: true, client_gm: None, server_gm: false }
+            }
+            CompressorKind::Gmc => TechniqueRow {
+                momentum_correction: false,
+                client_gm: Some("compensation"),
+                server_gm: false,
+            },
+            CompressorKind::DgcWgm => {
+                TechniqueRow { momentum_correction: true, client_gm: None, server_gm: true }
+            }
+            CompressorKind::DgcWgmf => TechniqueRow {
+                momentum_correction: true,
+                client_gm: Some("compression"),
+                server_gm: false,
+            },
         }
     }
 }
@@ -130,7 +142,19 @@ pub trait Compressor: Send {
     /// lost — the coordinates re-enter a later round's top-k selection
     /// (error feedback survives the drop). Exactly inverts the `V ⊙= (1−mask)`
     /// clear of [`Compressor::compress_into`] for the transmitted values.
-    fn restore_upload(&mut self, upload: &SparseVec);
+    fn restore_upload(&mut self, upload: &SparseVec) {
+        self.restore_upload_scaled(upload, 1.0);
+    }
+
+    /// Partial restore: fold `scale · upload` back into the residual V.
+    ///
+    /// The semi-synchronous carry-discount path restores exactly the
+    /// `1 − α` fraction the server will *not* apply of a deadline-missed
+    /// upload, so gradient mass is conserved: `α` enters the next round's
+    /// aggregate via the stale queue, `1 − α` re-enters a later round's
+    /// top-k selection through error feedback. `scale = 1` is the full
+    /// restore of [`Compressor::restore_upload`].
+    fn restore_upload_scaled(&mut self, upload: &SparseVec, scale: f32);
 
     /// Residual (V) L2 norm — over-fitting diagnostic used by Fig. 4 analysis.
     fn residual_norm(&self) -> f32;

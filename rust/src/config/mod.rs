@@ -24,7 +24,7 @@ use crate::compress::{CompressConfig, CompressorKind, SparsityWarmup, TauSchedul
 use crate::coordinator::round::{FlConfig, LrSchedule};
 use crate::coordinator::sampler::Sampler;
 use crate::coordinator::traffic::TrafficPolicy;
-use crate::sim::scheduler::{ProfilePreset, SimConfig};
+use crate::sim::scheduler::{ProfilePreset, SelectionPolicy, SimConfig, StalenessPolicy};
 use anyhow::{anyhow, Result};
 use toml::{get, parse, TomlDoc};
 
@@ -366,6 +366,42 @@ impl RunConfig {
                 cfg.sim.compute_s =
                     v.as_f64().ok_or_else(|| anyhow!("sim.compute_s: wrong type"))?;
             }
+            // semi-synchronous aggregation: sim.staleness_alpha only takes
+            // effect through `sim.staleness = "carry_discounted"` (like the
+            // profile shape knobs above)
+            let mut staleness_alpha = 0.5f64;
+            if let Some(v) = get(doc, "sim", "staleness_alpha") {
+                staleness_alpha =
+                    v.as_f64().ok_or_else(|| anyhow!("sim.staleness_alpha: wrong type"))?;
+            }
+            if let Some(v) = get(doc, "sim", "staleness") {
+                let name = v.as_str().ok_or_else(|| anyhow!("sim.staleness: string"))?;
+                cfg.sim.staleness = match name.to_ascii_lowercase().as_str() {
+                    "drop" => StalenessPolicy::Drop,
+                    "carry" => StalenessPolicy::Carry,
+                    "carry_discounted" | "carry-discounted" | "discounted" => {
+                        StalenessPolicy::CarryDiscounted(staleness_alpha)
+                    }
+                    other => return Err(anyhow!("unknown sim.staleness `{other}`")),
+                };
+            }
+            // scheduler-aware selection: sim.selection_beta only takes
+            // effect through `sim.selection = "feasibility"`
+            let mut selection_beta = 0.5f64;
+            if let Some(v) = get(doc, "sim", "selection_beta") {
+                selection_beta =
+                    v.as_f64().ok_or_else(|| anyhow!("sim.selection_beta: wrong type"))?;
+            }
+            if let Some(v) = get(doc, "sim", "selection") {
+                let name = v.as_str().ok_or_else(|| anyhow!("sim.selection: string"))?;
+                cfg.sim.selection = match name.to_ascii_lowercase().as_str() {
+                    "uniform" => SelectionPolicy::Uniform,
+                    "feasibility" | "feasible" => {
+                        SelectionPolicy::Feasibility { beta: selection_beta }
+                    }
+                    other => return Err(anyhow!("unknown sim.selection `{other}`")),
+                };
+            }
         }
         cfg.validate()?;
         Ok(cfg)
@@ -401,12 +437,14 @@ impl RunConfig {
         );
         if self.sim.scheduling_active() {
             s.push_str(&format!(
-                " | sim: {} deadline={}s dropout={} overselect={} compute={}s",
+                " | sim: {} deadline={}s dropout={} overselect={} compute={}s staleness={} selection={}",
                 self.sim.preset.name(),
                 self.sim.deadline_s,
                 self.sim.dropout,
                 self.sim.overselect,
-                self.sim.compute_s
+                self.sim.compute_s,
+                self.sim.staleness.name(),
+                self.sim.selection.name()
             ));
         }
         s
@@ -539,6 +577,60 @@ compute_s = 0.05
         .unwrap();
         assert_eq!(lt.sim.preset, ProfilePreset::LongTail { sigma: 1.2 });
         assert!((lt.sim.dropout - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn staleness_and_selection_from_toml() {
+        let cfg = RunConfig::from_toml_str(
+            r#"
+[sim]
+deadline_s = 0.25
+staleness = "carry_discounted"
+staleness_alpha = 0.3
+selection = "feasibility"
+selection_beta = 0.8
+"#,
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.sim.staleness, StalenessPolicy::CarryDiscounted(0.3));
+        assert_eq!(cfg.sim.selection, SelectionPolicy::Feasibility { beta: 0.8 });
+        assert!(cfg.sim.scheduling_active());
+        assert!(cfg.describe().contains("staleness=carry_discounted"));
+        assert!(cfg.describe().contains("selection=feasibility"));
+        // plain carry, alpha ignored
+        let carry =
+            RunConfig::from_toml_str("[sim]\nstaleness = \"carry\"\n", &[]).unwrap();
+        assert_eq!(carry.sim.staleness, StalenessPolicy::Carry);
+        // --set override path
+        let ov = RunConfig::from_toml_str(
+            "",
+            &["sim.staleness=\"carry\"".to_string(), "sim.selection=\"uniform\"".to_string()],
+        )
+        .unwrap();
+        assert_eq!(ov.sim.staleness, StalenessPolicy::Carry);
+        assert_eq!(ov.sim.selection, SelectionPolicy::Uniform);
+        // defaults stay inert
+        let plain = RunConfig::from_toml_str("", &[]).unwrap();
+        assert_eq!(plain.sim.staleness, StalenessPolicy::Drop);
+        assert_eq!(plain.sim.selection, SelectionPolicy::Uniform);
+    }
+
+    #[test]
+    fn staleness_and_selection_reject_bad_values() {
+        assert!(RunConfig::from_toml_str("[sim]\nstaleness = \"nope\"\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[sim]\nselection = \"nope\"\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str(
+            "[sim]\nstaleness = \"carry_discounted\"\nstaleness_alpha = 1.5\n",
+            &[]
+        )
+        .is_err());
+        assert!(RunConfig::from_toml_str(
+            "[sim]\nselection = \"feasibility\"\nselection_beta = -0.1\n",
+            &[]
+        )
+        .is_err());
+        assert!(RunConfig::from_toml_str("[sim]\nstaleness = 3\n", &[]).is_err());
     }
 
     #[test]

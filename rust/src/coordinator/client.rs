@@ -68,6 +68,14 @@ impl FlClient {
         self.compressor.restore_upload(&self.upload);
     }
 
+    /// Carry-discount restore: the server buffered this round's late upload
+    /// and will apply `α` of it next round, so only the unapplied
+    /// `scale = 1 − α` fraction returns to the residual — together the two
+    /// halves conserve the upload's gradient mass exactly.
+    pub fn restore_dropped_upload_scaled(&mut self, scale: f32) {
+        self.compressor.restore_upload_scaled(&self.upload, scale);
+    }
+
     /// One local round, entirely into the persistent buffers: compute the
     /// local gradient at the current global parameters (averaged over
     /// `local_steps` minibatches), compress it into `upload`, serialise into

@@ -34,9 +34,25 @@
 //! hard dropouts are injected per round from the run RNG. With the default
 //! (inert) `SimConfig` every step below reduces bit-exactly to the PR 1
 //! behaviour; `tests/determinism.rs` pins both directions.
+//!
+//! ## Semi-synchronous aggregation
+//!
+//! `sim.staleness` decides what a deadline miss costs. Under `drop`
+//! (default) the late upload is discarded and the client residual restored
+//! — bit-identical to the scheduler-only behaviour. Under
+//! `carry`/`carry_discounted(α)` the late upload is buffered in the
+//! server-side [`StaleQueue`] and folded into the *next* round's aggregate
+//! with weight α (fresh uploads first, then stale, in deterministic
+//! order), while the client residual gets the unapplied `1 − α` back — so
+//! no transmitted byte is wasted and no gradient mass is lost.
+//! `sim.selection = feasibility(β)` additionally biases the cohort draw
+//! toward clients whose delivery history and uplink spend make them good
+//! picks, under a `1 − β` fairness floor; the per-round `traffic_gini`
+//! column tracks how evenly the uplink bill stays spread. Both knobs keep
+//! the run bit-identical across worker counts.
 
 use super::client::FlClient;
-use super::sampler::Sampler;
+use super::sampler::{feasibility_weights, Sampler, SelectionHistory};
 use super::server::{BroadcastPolicy, FlServer};
 use super::traffic::{TrafficMeter, TrafficPolicy};
 use crate::compress::{self, CompressConfig, CompressorKind, SparsityWarmup};
@@ -44,7 +60,8 @@ use crate::data::dataset::{Batch, Dataset};
 use crate::metrics::recorder::{Recorder, RoundRecord};
 use crate::runtime::{evaluate_with_pool, TrainEngine};
 use crate::sim::network::Network;
-use crate::sim::scheduler::{ClientFate, Scheduler, SimConfig};
+use crate::sim::scheduler::{ClientFate, Scheduler, SelectionPolicy, SimConfig};
+use crate::sim::staleness::StaleQueue;
 use crate::sparse::merge::{mean_jaccard_estimate, mean_pairwise_jaccard};
 use crate::sparse::vector::SparseVec;
 use crate::sparse::wire;
@@ -166,6 +183,10 @@ pub struct RunSummary {
     pub dropped_offline: usize,
     /// straggler bytes that crossed the wire but were discarded
     pub wasted_uplink_gb: f64,
+    /// late uploads folded into a later round's aggregate (whole run)
+    pub carried_total: usize,
+    /// wire bytes of those carried uploads
+    pub carried_gb: f64,
     pub recorder: Recorder,
 }
 
@@ -181,7 +202,6 @@ pub struct FlRun {
     pub scheduler: Scheduler,
     pub recorder: Recorder,
     test_batches: Vec<Batch>,
-    last_payload: SparseVec,
     /// broadcast payload before its wire round-trip (reused across rounds)
     payload_scratch: SparseVec,
     /// broadcast wire bytes (reused across rounds)
@@ -198,6 +218,18 @@ pub struct FlRun {
     finish_scratch: Vec<f64>,
     /// accepted participant ids for broadcast timing (reused)
     accepted_scratch: Vec<usize>,
+    /// server-side buffer of deadline-missed uploads awaiting the next
+    /// round's aggregate (semi-synchronous staleness policies)
+    pub stale_queue: StaleQueue,
+    /// per-client delivery history feeding feasibility-aware selection
+    pub history: SelectionHistory,
+    /// feasibility selection weights (reused)
+    weight_scratch: Vec<f64>,
+    /// Gini sort buffer for the fairness statistic (reused)
+    gini_scratch: Vec<f64>,
+    /// broadcast payload after its wire round-trip — the exact update every
+    /// client applies (public for round-level conservation tests)
+    pub last_payload: SparseVec,
     /// worker engine pool, spawned once and reused every round
     worker_engines: Vec<Box<dyn TrainEngine>>,
 }
@@ -227,6 +259,7 @@ impl FlRun {
             BroadcastPolicy::Aggregate
         };
         let scheduler = Scheduler::new(&network, cfg.sim.preset, cfg.seed);
+        let history = SelectionHistory::new(clients.len());
         FlRun {
             params: engine.initial_params(),
             server: FlServer::new(dim, policy),
@@ -244,6 +277,10 @@ impl FlRun {
             fate_scratch: Vec::new(),
             finish_scratch: Vec::new(),
             accepted_scratch: Vec::new(),
+            stale_queue: StaleQueue::new(),
+            history,
+            weight_scratch: Vec::new(),
+            gini_scratch: Vec::new(),
             worker_engines: Vec::new(),
             cfg,
         }
@@ -261,15 +298,38 @@ impl FlRun {
     ) -> anyhow::Result<RoundRecord> {
         let wall = Instant::now();
         self.meter.begin_round();
+        // rotate the stale queue: last round's late arrivals become this
+        // round's carried-in contributions (empty under the drop policy)
+        self.stale_queue.begin_round();
         let root = Rng::new(self.cfg.seed);
         // over-provision the cohort when the scheduler is active (a superset
-        // of the base sample; `overselect = 1` is exactly `sample`)
-        let participants = self.cfg.sampler.sample_overselected(
-            self.clients.len(),
-            round,
-            &root,
-            self.cfg.sim.overselect,
-        );
+        // of the base sample; `overselect = 1` is exactly `sample`); the
+        // feasibility policy swaps the uniform shuffle for a weighted draw
+        // fed by delivery history + per-client uplink spend
+        let participants = match self.cfg.sim.selection {
+            SelectionPolicy::Uniform => self.cfg.sampler.sample_overselected(
+                self.clients.len(),
+                round,
+                &root,
+                self.cfg.sim.overselect,
+            ),
+            SelectionPolicy::Feasibility { beta } => {
+                feasibility_weights(
+                    &self.history,
+                    &self.meter.per_client_uplink,
+                    self.clients.len(),
+                    beta,
+                    &mut self.weight_scratch,
+                );
+                self.cfg.sampler.sample_weighted(
+                    self.clients.len(),
+                    round,
+                    &root,
+                    self.cfg.sim.overselect,
+                    &self.weight_scratch,
+                )
+            }
+        };
         let dim = self.params.len();
         let k = self.cfg.warmup.k_at(dim, round);
         let pool = resolve_pool(self.cfg.workers);
@@ -310,6 +370,8 @@ impl FlRun {
         self.loss_scratch.resize(n, 0.0);
         let overlap;
         let uplink_phase;
+        let carried_in: usize;
+        let carried_bytes: usize;
         {
             let mut parts: Vec<&mut FlClient> = Vec::with_capacity(n);
             let mut client_iter = self.clients.iter_mut().enumerate();
@@ -418,19 +480,42 @@ impl FlRun {
             );
 
             // 4. deterministic reductions, in participant order: accepted
-            //    uploads are metered and aggregated; stragglers and offline
-            //    clients get their extracted upload folded back into the
-            //    residual so the mass re-enters a later round's selection
+            //    uploads are metered and aggregated. What a deadline miss
+            //    costs depends on the staleness policy: under `drop` the
+            //    bytes are wasted and the full upload returns to the client
+            //    residual; under the carry policies the upload is buffered
+            //    server-side for the next round and only the unapplied
+            //    1 − α fraction returns to the residual. Offline clients
+            //    never transmitted, so they always restore in full.
+            let alpha = self.cfg.sim.staleness.alpha();
+            let carries = self.cfg.sim.staleness.carries();
             for ((c, &cid), &fate) in
                 parts.iter_mut().zip(&participants).zip(&self.fate_scratch)
             {
                 match fate {
-                    ClientFate::Accepted => self.meter.record_uplink(cid, c.wire_buf.len()),
+                    ClientFate::Accepted => {
+                        self.meter.record_uplink(cid, c.wire_buf.len());
+                        self.history.record(cid, true);
+                    }
                     ClientFate::Straggler => {
-                        self.meter.record_wasted_uplink(cid, c.wire_buf.len());
+                        self.history.record(cid, false);
+                        if carries {
+                            // late but not lost: the bytes were spent and
+                            // the server will use them next round
+                            self.meter.record_carried_uplink(cid, c.wire_buf.len());
+                            self.stale_queue.push(cid, round, c.wire_buf.len(), &c.echo);
+                            if alpha < 1.0 {
+                                c.restore_dropped_upload_scaled(1.0 - alpha);
+                            }
+                        } else {
+                            self.meter.record_wasted_uplink(cid, c.wire_buf.len());
+                            c.restore_dropped_upload();
+                        }
+                    }
+                    ClientFate::Offline => {
+                        self.history.record(cid, false);
                         c.restore_dropped_upload();
                     }
-                    ClientFate::Offline => c.restore_dropped_upload(),
                 }
             }
             let mut echoes: Vec<&SparseVec> = Vec::with_capacity(n);
@@ -444,7 +529,17 @@ impl FlRun {
             } else {
                 mean_jaccard_estimate(&echoes, &mut self.overlap_scratch)
             };
+            // fresh uploads first, then last round's carried-over stale
+            // uploads at the staleness discount — a fixed order per
+            // coordinate, so worker counts never change the f32 sums
             self.server.receive_all(&echoes, pool);
+            let stale = self.stale_queue.ready();
+            carried_in = stale.len();
+            carried_bytes = stale.iter().map(|e| e.bytes).sum();
+            if carried_in > 0 {
+                let stale_refs: Vec<&SparseVec> = stale.iter().map(|e| &e.grad).collect();
+                self.server.receive_all_scaled(&stale_refs, alpha, pool);
+            }
         }
         let mut train_loss = 0.0;
         let mut n_accepted = 0usize;
@@ -462,8 +557,12 @@ impl FlRun {
         }
         train_loss /= n_accepted.max(1) as f64;
 
-        // 5. aggregate + broadcast (through the persistent wire buffers)
-        self.server.finish_round_into(n_accepted, &mut self.payload_scratch, pool);
+        // 5. aggregate + broadcast (through the persistent wire buffers).
+        //    Carried-in stale uploads are genuine contributors: they enter
+        //    the mean's denominator at full count (their *values* carry the
+        //    α discount), so stale clients can never dominate a round.
+        self.server.finish_round_into(n_accepted + carried_in, &mut self.payload_scratch, pool);
+        self.stale_queue.recycle_ready();
         wire::encode_into(&self.payload_scratch, &mut self.bcast_buf);
         self.meter.record_broadcast(self.bcast_buf.len(), n);
         wire::decode_into(&self.bcast_buf, &mut self.last_payload)
@@ -498,6 +597,7 @@ impl FlRun {
             (0.0, 0.0)
         };
 
+        let traffic_gini = self.meter.uplink_gini(self.clients.len(), &mut self.gini_scratch);
         let rec = RoundRecord {
             round,
             train_loss,
@@ -514,6 +614,9 @@ impl FlRun {
             dropped_offline,
             sim_clock,
             wasted_uplink_bytes: self.meter.round_wasted_uplink,
+            carried_in,
+            carried_bytes,
+            traffic_gini,
         };
         self.recorder.push(rec.clone());
         Ok(rec)
@@ -564,6 +667,8 @@ impl FlRun {
             dropped_deadline: self.recorder.total_dropped_deadline(),
             dropped_offline: self.recorder.total_dropped_offline(),
             wasted_uplink_gb: self.meter.total_wasted_uplink as f64 / 1e9,
+            carried_total: self.recorder.total_carried_in(),
+            carried_gb: self.recorder.total_carried_bytes() as f64 / 1e9,
             recorder: self.recorder.clone(),
         }
     }
@@ -621,7 +726,8 @@ mod tests {
             let mut run = FlRun::new(&engine, shards, test, net, quick_cfg(kind));
             let summary = run.run(&mut engine).unwrap();
             assert_eq!(summary.technique, kind.name());
-            assert!(summary.final_accuracy > 0.5, "{}: acc {}", kind.name(), summary.final_accuracy);
+            let acc = summary.final_accuracy;
+            assert!(acc > 0.5, "{}: acc {acc}", kind.name());
         }
     }
 
@@ -754,6 +860,66 @@ mod tests {
             acc += r.sim_seconds;
             assert!((r.sim_clock - acc).abs() < 1e-12, "round {}", r.round);
         }
+    }
+
+    #[test]
+    fn carry_applies_late_uploads_next_round_without_waste() {
+        use crate::sim::scheduler::StalenessPolicy;
+        let mut engine = NativeEngine::new(8, 12, 4, 1);
+        let (shards, test) = blob_shards(4, 80, 8, 4, 10);
+        let net = Network::uniform(4, Default::default());
+        let mut cfg = quick_cfg(CompressorKind::DgcWgmf);
+        cfg.rounds = 6;
+        cfg.sim.deadline_s = 1e-9; // link latency alone exceeds this: all miss
+        cfg.sim.staleness = StalenessPolicy::Carry;
+        let mut run = FlRun::new(&engine, shards, test, net, cfg);
+        let init = run.params.clone();
+        let r0 = run.step_round(&mut engine, 0).unwrap();
+        assert_eq!(r0.dropped_deadline, 4, "everyone misses");
+        assert_eq!(r0.carried_in, 0, "nothing was buffered before round 0");
+        assert_eq!(r0.aggregate_nnz, 0);
+        assert!(r0.uplink_bytes > 0, "late bytes still crossed the wire");
+        assert_eq!(run.params, init, "no contribution reached round 0");
+        assert_eq!(run.stale_queue.pending(), 4);
+        let r1 = run.step_round(&mut engine, 1).unwrap();
+        assert_eq!(r1.carried_in, 4, "round 0's late uploads enter round 1's aggregate");
+        assert!(r1.carried_bytes > 0);
+        assert!(r1.aggregate_nnz > 0);
+        assert_ne!(run.params, init, "carried mass moves the model");
+        for round in 2..6 {
+            run.step_round(&mut engine, round).unwrap();
+        }
+        let summary = run.summary();
+        assert_eq!(summary.carried_total, 4 * 5, "every round after the first carries 4");
+        assert_eq!(summary.dropped_deadline, 4 * 6);
+        assert_eq!(run.meter.total_wasted_uplink, 0, "carry never wastes straggler bytes");
+        assert_eq!(summary.wasted_uplink_gb, 0.0);
+        assert_eq!(run.stale_queue.pending(), 4, "the last round's stragglers end buffered");
+    }
+
+    #[test]
+    fn feasibility_selection_keeps_cohort_shape_and_records_fairness() {
+        use crate::sim::scheduler::SelectionPolicy;
+        let mut engine = NativeEngine::new(8, 12, 4, 1);
+        let (shards, test) = blob_shards(6, 80, 8, 4, 10);
+        let net = Network::uniform(6, Default::default());
+        let mut cfg = quick_cfg(CompressorKind::Dgc);
+        cfg.rounds = 6;
+        cfg.sampler = Sampler::Count(3);
+        cfg.sim.selection = SelectionPolicy::Feasibility { beta: 0.6 };
+        cfg.sim.deadline_s = 0.5;
+        cfg.sim.compute_s = 0.01;
+        let mut run = FlRun::new(&engine, shards, test, net, cfg);
+        let summary = run.run(&mut engine).unwrap();
+        let mut total_selected = 0;
+        for r in &summary.recorder.rounds {
+            assert_eq!(r.selected, 3, "round {}", r.round);
+            assert!((0.0..1.0).contains(&r.traffic_gini), "round {}", r.round);
+            total_selected += r.selected;
+        }
+        let recorded: usize =
+            (0..6).map(|c| run.history.times_selected(c)).sum();
+        assert_eq!(recorded, total_selected, "history must see every selection outcome");
     }
 
     #[test]

@@ -2,8 +2,36 @@
 //!
 //! The paper trains with full participation (20 / 100 clients every round);
 //! partial participation is a first-class knob for the ablation benches.
+//! The time-domain scheduler adds two layers on top: cohort
+//! over-provisioning (`sim.overselect`, so stragglers can be dropped
+//! without starving the aggregate) and scheduler-aware *weighted* selection
+//! (`sim.selection = feasibility(β)`), which biases the draw toward clients
+//! whose deadline-hit history and cumulative uplink spend make them good
+//! picks — under a fairness floor that keeps every client selectable.
 
 use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// One-shot warning when over-selection is clamped by the population size:
+/// the request silently degrades toward full participation, which is
+/// usually a misconfiguration (`overselect · cohort > clients`).
+static OVERSELECT_CLAMP_WARNED: AtomicBool = AtomicBool::new(false);
+
+/// Scale a base cohort size by the over-selection factor, clamped to the
+/// population. Warns (once per process) when the clamp actually bites.
+fn boosted_count(count: usize, overselect: f64, clients: usize) -> usize {
+    if overselect <= 1.0 {
+        return count;
+    }
+    let want = (count as f64 * overselect).ceil() as usize;
+    if want > clients && !OVERSELECT_CLAMP_WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!(
+            "warning: sim.overselect requests {want} of {clients} clients; clamping to the \
+             full population (shown once — shrink overselect or the base cohort)"
+        );
+    }
+    want.clamp(1, clients)
+}
 
 #[derive(Clone, Copy, Debug)]
 pub enum Sampler {
@@ -21,12 +49,22 @@ impl Sampler {
         self.sample_overselected(clients, round, rng, 1.0)
     }
 
+    /// Base cohort size for this policy over a population of `clients`.
+    fn base_count(&self, clients: usize) -> usize {
+        match *self {
+            Sampler::Full => clients,
+            Sampler::Fraction(f) => ((clients as f64 * f).round() as usize).clamp(1, clients),
+            Sampler::Count(c) => c.clamp(1, clients),
+        }
+    }
+
     /// Like [`Sampler::sample`], over-provisioned by `overselect` (≥ 1): the
     /// deadline scheduler selects `ceil(overselect · clients_per_round)` so
     /// stragglers and dropouts can be discarded without starving the
     /// aggregate. `overselect <= 1` reproduces `sample` exactly, and the
     /// over-selected cohort is always a superset of the base cohort (both
-    /// are prefixes of the same per-round shuffle).
+    /// are prefixes of the same per-round shuffle). Requests beyond the
+    /// population are clamped, with a one-shot warning.
     pub fn sample_overselected(
         &self,
         clients: usize,
@@ -34,21 +72,48 @@ impl Sampler {
         rng: &Rng,
         overselect: f64,
     ) -> Vec<usize> {
-        let boost = |count: usize| -> usize {
-            if overselect > 1.0 {
-                ((count as f64 * overselect).ceil() as usize).clamp(1, clients)
-            } else {
-                count
-            }
-        };
-        match *self {
-            Sampler::Full => (0..clients).collect(),
-            Sampler::Fraction(f) => {
-                let count = ((clients as f64 * f).round() as usize).clamp(1, clients);
-                Self::choose(clients, boost(count), round, rng)
-            }
-            Sampler::Count(c) => Self::choose(clients, boost(c.clamp(1, clients)), round, rng),
+        if matches!(self, Sampler::Full) {
+            return (0..clients).collect();
         }
+        let count = boosted_count(self.base_count(clients), overselect, clients);
+        Self::choose(clients, count, round, rng)
+    }
+
+    /// Weighted variant of [`Sampler::sample_overselected`] for the
+    /// feasibility selection policy: cohort sizes are identical, but *which*
+    /// clients fill the cohort follows `weights` (one strictly positive
+    /// weight per client) via the Efraimidis–Spirakis key scheme
+    /// (`key_i = u_i^(1/w_i)`, take the largest keys). The over-selected
+    /// cohort is still a superset of the base cohort (both are prefixes of
+    /// the same key ranking) and the draw is a pure function of
+    /// (seed, round, weights) — worker counts never touch it.
+    pub fn sample_weighted(
+        &self,
+        clients: usize,
+        round: usize,
+        rng: &Rng,
+        overselect: f64,
+        weights: &[f64],
+    ) -> Vec<usize> {
+        debug_assert_eq!(weights.len(), clients);
+        if matches!(self, Sampler::Full) {
+            return (0..clients).collect();
+        }
+        let count = boosted_count(self.base_count(clients), overselect, clients);
+        let mut r = rng.derive(0xFEA5 ^ round as u64);
+        let mut keyed: Vec<(f64, usize)> = (0..clients)
+            .map(|i| {
+                let u = r.f64();
+                let w = weights[i].max(1e-12);
+                (u.powf(1.0 / w), i)
+            })
+            .collect();
+        keyed.sort_unstable_by(|a, b| {
+            b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+        });
+        let mut ids: Vec<usize> = keyed.into_iter().take(count).map(|(_, i)| i).collect();
+        ids.sort_unstable();
+        ids
     }
 
     fn choose(clients: usize, count: usize, round: usize, rng: &Rng) -> Vec<usize> {
@@ -58,6 +123,93 @@ impl Sampler {
         ids.truncate(count);
         ids.sort_unstable();
         ids
+    }
+}
+
+/// Per-client participation-outcome history, recorded by the round loop and
+/// consumed by the feasibility selection policy. Only server-observable
+/// facts enter it: how often a client was selected, and how often its
+/// upload actually arrived by the deadline (hard dropouts count as misses —
+/// from the server's side an unreliable client and a slow one look alike).
+#[derive(Clone, Debug, Default)]
+pub struct SelectionHistory {
+    selected: Vec<u32>,
+    delivered: Vec<u32>,
+}
+
+impl SelectionHistory {
+    pub fn new(clients: usize) -> Self {
+        SelectionHistory { selected: vec![0; clients], delivered: vec![0; clients] }
+    }
+
+    fn ensure(&mut self, client: usize) {
+        if client >= self.selected.len() {
+            self.selected.resize(client + 1, 0);
+            self.delivered.resize(client + 1, 0);
+        }
+    }
+
+    /// Record one selection outcome for `client`.
+    pub fn record(&mut self, client: usize, delivered: bool) {
+        self.ensure(client);
+        self.selected[client] += 1;
+        if delivered {
+            self.delivered[client] += 1;
+        }
+    }
+
+    pub fn times_selected(&self, client: usize) -> usize {
+        self.selected.get(client).copied().unwrap_or(0) as usize
+    }
+
+    pub fn times_delivered(&self, client: usize) -> usize {
+        self.delivered.get(client).copied().unwrap_or(0) as usize
+    }
+
+    /// Laplace-smoothed delivery rate in (0, 1):
+    /// `(delivered + 1) / (selected + 2)`. A never-selected client reads
+    /// 0.5 — a neutral prior, so fresh clients are neither favoured nor
+    /// penalised.
+    pub fn hit_rate(&self, client: usize) -> f64 {
+        let sel = self.times_selected(client) as f64;
+        let del = self.times_delivered(client) as f64;
+        (del + 1.0) / (sel + 2.0)
+    }
+}
+
+/// Selection weights for [`Sampler::sample_weighted`] under
+/// `sim.selection = feasibility(β)`:
+///
+/// ```text
+///   w_i = (1 − β) + β · hit_i · parity_i
+/// ```
+///
+/// where `hit_i` is the client's smoothed deadline-hit rate and
+/// `parity_i = mean_uplink / (uplink_i + mean_uplink)` de-prioritises
+/// clients that already spent more uplink bytes than the fleet average
+/// (0.5 at parity, → 1 for clients that paid nothing, → 0 for heavy
+/// spenders). The `1 − β` term is the fairness floor: every client keeps a
+/// strictly positive weight, so nobody is starved out of selection
+/// entirely. `β = 0` weights everyone equally.
+///
+/// `per_client_uplink` is the traffic meter's cumulative per-client byte
+/// list (it may be shorter than `clients`; missing entries count as 0).
+/// `out` is a reusable buffer — no allocation once warm.
+pub fn feasibility_weights(
+    history: &SelectionHistory,
+    per_client_uplink: &[usize],
+    clients: usize,
+    beta: f64,
+    out: &mut Vec<f64>,
+) {
+    out.clear();
+    out.reserve(clients);
+    let total: usize = per_client_uplink.iter().take(clients).sum();
+    let mean = total as f64 / clients.max(1) as f64;
+    for i in 0..clients {
+        let spent = per_client_uplink.get(i).copied().unwrap_or(0) as f64;
+        let parity = if total == 0 { 1.0 } else { mean / (spent + mean) };
+        out.push((1.0 - beta) + beta * history.hit_rate(i) * parity);
     }
 }
 
@@ -107,11 +259,106 @@ mod tests {
     }
 
     #[test]
+    fn overselect_beyond_population_clamps_never_duplicates() {
+        let rng = Rng::new(21);
+        // ceil(8 · 10) = 80 of 8: must clamp to the full population, not
+        // sample with anything replacement-adjacent
+        let ids = Sampler::Count(8).sample_overselected(8, 2, &rng, 10.0);
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+        let ids = Sampler::Fraction(0.75).sample_overselected(4, 0, &rng, 100.0);
+        assert_eq!(ids.len(), 4);
+        assert!(ids.windows(2).all(|w| w[0] < w[1]), "no duplicate ids");
+    }
+
+    #[test]
     fn ids_sorted_unique_in_range() {
         let rng = Rng::new(4);
         let ids = Sampler::Count(6).sample(20, 11, &rng);
         assert_eq!(ids.len(), 6);
         assert!(ids.windows(2).all(|w| w[0] < w[1]));
         assert!(ids.iter().all(|&i| i < 20));
+    }
+
+    #[test]
+    fn weighted_sampling_matches_cohort_shape() {
+        let rng = Rng::new(30);
+        let weights = vec![1.0; 20];
+        let ids = Sampler::Count(4).sample_weighted(20, 3, &rng, 1.0, &weights);
+        assert_eq!(ids.len(), 4);
+        assert!(ids.windows(2).all(|w| w[0] < w[1]));
+        assert!(ids.iter().all(|&i| i < 20));
+        // deterministic in (seed, round)
+        let again = Sampler::Count(4).sample_weighted(20, 3, &rng, 1.0, &weights);
+        assert_eq!(ids, again);
+        let other_round = Sampler::Count(4).sample_weighted(20, 4, &rng, 1.0, &weights);
+        assert_ne!(ids, other_round);
+        // over-selection is a superset of the base draw
+        let over = Sampler::Count(4).sample_weighted(20, 3, &rng, 1.5, &weights);
+        assert_eq!(over.len(), 6);
+        assert!(ids.iter().all(|id| over.contains(id)));
+        // Full ignores weights
+        assert_eq!(
+            Sampler::Full.sample_weighted(5, 0, &rng, 1.0, &[1.0; 5]),
+            vec![0, 1, 2, 3, 4]
+        );
+    }
+
+    #[test]
+    fn weighted_sampling_prefers_heavy_clients() {
+        let rng = Rng::new(31);
+        // client 7 has overwhelming weight: it must appear in (essentially)
+        // every cohort; clients with ~0 weight essentially never beat it
+        let mut weights = vec![1e-9; 10];
+        weights[7] = 1.0;
+        for round in 0..50 {
+            let ids = Sampler::Count(2).sample_weighted(10, round, &rng, 1.0, &weights);
+            assert!(ids.contains(&7), "round {round}: heavy client missing from {ids:?}");
+        }
+    }
+
+    #[test]
+    fn history_hit_rate_smoothing() {
+        let mut h = SelectionHistory::new(3);
+        assert_eq!(h.hit_rate(0), 0.5, "fresh client reads the neutral prior");
+        h.record(0, true);
+        h.record(0, true);
+        h.record(1, false);
+        assert_eq!(h.times_selected(0), 2);
+        assert_eq!(h.times_delivered(0), 2);
+        assert_eq!(h.hit_rate(0), 3.0 / 4.0);
+        assert_eq!(h.hit_rate(1), 1.0 / 3.0);
+        assert_eq!(h.hit_rate(2), 0.5);
+        // out-of-range reads are safe; records grow the table
+        assert_eq!(h.hit_rate(9), 0.5);
+        h.record(9, true);
+        assert_eq!(h.times_selected(9), 1);
+    }
+
+    #[test]
+    fn feasibility_weights_floor_and_bias() {
+        let mut h = SelectionHistory::new(3);
+        for _ in 0..8 {
+            h.record(0, true); // always delivers
+            h.record(1, false); // always misses
+        }
+        let uplink = vec![900usize, 0, 0];
+        let mut w = Vec::new();
+        feasibility_weights(&h, &uplink, 3, 0.6, &mut w);
+        assert_eq!(w.len(), 3);
+        // fairness floor: even the always-missing client keeps ≥ 1 − β
+        for &x in &w {
+            assert!(x >= 0.4, "weight {x} fell through the fairness floor");
+        }
+        // client 2 (fresh, no spend) must outrank client 1 (always misses)
+        assert!(w[2] > w[1]);
+        // heavy spender 0 is discounted by traffic parity despite hitting:
+        // hit₀ = 9/10 · parity₀ = 300/1200 vs hit₂ = 0.5 · parity₂ = 300/300
+        assert!(w[2] > w[0]);
+        // β = 0 is uniform
+        feasibility_weights(&h, &uplink, 3, 0.0, &mut w);
+        assert!(w.iter().all(|&x| x == 1.0));
+        // no traffic recorded at all → parity neutral, no NaNs
+        feasibility_weights(&h, &[], 3, 1.0, &mut w);
+        assert!(w.iter().all(|&x| x.is_finite() && x > 0.0));
     }
 }

@@ -66,13 +66,28 @@ impl FlServer {
         self.agg.add_all(grads, workers);
     }
 
+    /// Receive a batch of *carried-over* stale gradients (last round's
+    /// deadline-missers), each scaled by the staleness discount `scale`
+    /// before entering the aggregate. Same sharding and determinism
+    /// contract as [`FlServer::receive_all`]; call it after the round's
+    /// fresh gradients so the per-coordinate addition order is
+    /// fresh-then-stale at every worker count.
+    pub fn receive_all_scaled(&mut self, grads: &[&SparseVec], scale: f32, workers: usize) {
+        self.agg.add_all_scaled(grads, scale, workers);
+    }
+
     /// Allocation-free `finish_round`: writes the broadcast payload into a
     /// caller-owned reusable vector (cleared, capacity kept) and resets the
     /// aggregator for the next round. Under `ServerMomentum` the round
     /// aggregate Ĝ_t is retained internally (`ghat_scratch`) for the
     /// momentum update. The aggregate emit may shard over up to `workers`
     /// threads; results are bit-identical at any setting.
-    pub fn finish_round_into(&mut self, participants: usize, payload: &mut SparseVec, workers: usize) {
+    pub fn finish_round_into(
+        &mut self,
+        participants: usize,
+        payload: &mut SparseVec,
+        workers: usize,
+    ) {
         match self.policy {
             BroadcastPolicy::Aggregate => {
                 // payload is Ĝ_t itself
@@ -132,6 +147,16 @@ mod tests {
         assert_eq!(payload, ghat);
         assert_eq!(ghat.indices, vec![1, 3]);
         assert_eq!(ghat.values, vec![3.0, 1.0]);
+    }
+
+    #[test]
+    fn scaled_receive_discounts_stale_gradients() {
+        let mut s = FlServer::new(6, BroadcastPolicy::Aggregate);
+        s.receive(&SparseVec::new(6, vec![(1, 2.0)]));
+        s.receive_all_scaled(&[&SparseVec::new(6, vec![(1, 2.0), (4, 4.0)])], 0.5, 1);
+        let (payload, _) = s.finish_round(2);
+        assert_eq!(payload.indices, vec![1, 4]);
+        assert_eq!(payload.values, vec![1.5, 1.0]); // (2 + 1)/2, (0 + 2)/2
     }
 
     #[test]

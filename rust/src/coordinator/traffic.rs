@@ -9,7 +9,10 @@
 //! uplink category — bytes a deadline-missed straggler transmitted that the
 //! server then discarded. Wasted bytes still count toward the uplink totals
 //! (they crossed the wire); offline dropouts transmit nothing and are not
-//! recorded at all.
+//! recorded at all. Under the semi-synchronous carry policies a late upload
+//! is *carried* instead of wasted: its bytes count toward every uplink
+//! total but join `round_uplinks` in no round — the update enters the next
+//! round's aggregate from the server's stale queue, not this one's.
 
 /// Accounting policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -71,6 +74,17 @@ impl TrafficMeter {
         self.bump_client(client, bytes);
     }
 
+    /// An upload that crossed the wire after the deadline and was buffered
+    /// for the *next* round's aggregate (semi-synchronous carry): the bytes
+    /// count toward all uplink totals — they were spent and will be used —
+    /// but not toward `round_uplinks`, which lists only uploads that entered
+    /// this round's aggregate, and not toward the wasted counters.
+    pub fn record_carried_uplink(&mut self, client: usize, bytes: usize) {
+        self.round_uplink += bytes;
+        self.total_uplink += bytes;
+        self.bump_client(client, bytes);
+    }
+
     /// An upload that crossed the wire but missed the round deadline: it
     /// counts toward the uplink totals (the bytes were spent) and toward the
     /// wasted counters (the server discarded them), but not toward
@@ -92,6 +106,36 @@ impl TrafficMeter {
     /// Cumulative uplink bytes attributed to `client`.
     pub fn client_uplink(&self, client: usize) -> usize {
         self.per_client_uplink.get(client).copied().unwrap_or(0)
+    }
+
+    /// Gini coefficient of cumulative per-client uplink bytes over a fleet
+    /// of `clients` (clients beyond the recorded list count as 0 — they
+    /// have paid nothing yet). 0 = everyone paid the same; → 1 = one client
+    /// paid for everyone. This is the selection-fairness statistic the
+    /// recorder surfaces per round: feasibility-biased selection must not
+    /// silently concentrate the uplink bill on the fast clients.
+    ///
+    /// `scratch` is a reusable sort buffer (no allocation when warm).
+    pub fn uplink_gini(&self, clients: usize, scratch: &mut Vec<f64>) -> f64 {
+        if clients == 0 {
+            return 0.0;
+        }
+        scratch.clear();
+        scratch.reserve(clients);
+        for i in 0..clients {
+            scratch.push(self.per_client_uplink.get(i).copied().unwrap_or(0) as f64);
+        }
+        scratch.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let total: f64 = scratch.iter().sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let n = clients as f64;
+        let mut weighted = 0.0;
+        for (i, &x) in scratch.iter().enumerate() {
+            weighted += (i as f64 + 1.0) * x;
+        }
+        (2.0 * weighted / (n * total) - (n + 1.0) / n).max(0.0)
     }
 
     pub fn total(&self) -> usize {
@@ -152,6 +196,41 @@ mod tests {
         assert_eq!(m.round_wasted_uplink, 0);
         assert_eq!(m.total_wasted_uplink, 70);
         assert_eq!(m.total_uplink, 170);
+    }
+
+    #[test]
+    fn carried_uplink_counts_toward_totals_but_not_round_list_or_waste() {
+        let mut m = TrafficMeter::new(TrafficPolicy::default());
+        m.begin_round();
+        m.record_uplink(0, 100);
+        m.record_carried_uplink(1, 70);
+        assert_eq!(m.round_uplink, 170, "carried bytes crossed the wire");
+        assert_eq!(m.round_wasted_uplink, 0, "carried bytes are not wasted");
+        assert_eq!(m.round_uplinks, vec![(0, 100)], "carried upload enters a later aggregate");
+        assert_eq!(m.client_uplink(1), 70, "the client still paid for them");
+        assert_eq!(m.total_uplink, 170);
+    }
+
+    #[test]
+    fn uplink_gini_bounds_and_ordering() {
+        let mut m = TrafficMeter::new(TrafficPolicy::default());
+        let mut scratch = Vec::new();
+        assert_eq!(m.uplink_gini(4, &mut scratch), 0.0, "no traffic → perfectly equal");
+        m.begin_round();
+        m.record_uplink(0, 100);
+        m.record_uplink(1, 100);
+        m.record_uplink(2, 100);
+        m.record_uplink(3, 100);
+        assert!(m.uplink_gini(4, &mut scratch).abs() < 1e-12, "equal spend → 0");
+        // one client pays for everyone → close to the n-client maximum
+        let mut skew = TrafficMeter::new(TrafficPolicy::default());
+        skew.begin_round();
+        skew.record_uplink(0, 1000);
+        let g = skew.uplink_gini(4, &mut scratch);
+        assert!((g - 0.75).abs() < 1e-12, "max Gini for n=4 is (n-1)/n, got {g}");
+        // unseen clients count as zero spend
+        assert!(skew.uplink_gini(8, &mut scratch) > g);
+        assert_eq!(skew.uplink_gini(0, &mut scratch), 0.0);
     }
 
     #[test]

@@ -93,7 +93,11 @@ pub fn partition_by_emd(
         let nk = base + usize::from(k < n % clients);
         let mut want: Vec<f64> = (0..classes)
             .map(|c| {
-                let mix = if c == dominant { gamma + (1.0 - gamma) * p[c] } else { (1.0 - gamma) * p[c] };
+                let mix = if c == dominant {
+                    gamma + (1.0 - gamma) * p[c]
+                } else {
+                    (1.0 - gamma) * p[c]
+                };
                 mix * nk as f64
             })
             .collect();

@@ -92,7 +92,13 @@ impl Shakespeare {
     /// Generate a corpus of `speakers` roles with ~`chars_per_speaker`
     /// characters each. `bias` in [0,1] sets how concentrated a speaker's
     /// phrase-family mixture is (0 = uniform = IID, 1 = single family).
-    pub fn generate(speakers: usize, chars_per_speaker: usize, seq: usize, bias: f64, seed: u64) -> Self {
+    pub fn generate(
+        speakers: usize,
+        chars_per_speaker: usize,
+        seq: usize,
+        bias: f64,
+        seed: u64,
+    ) -> Self {
         let mut out = Vec::with_capacity(speakers);
         let root = Rng::new(seed ^ 0x5AE5);
         for s in 0..speakers {
@@ -100,7 +106,14 @@ impl Shakespeare {
             // speaker mixture over phrase families
             let fam = s % PHRASES.len();
             let weights: Vec<f64> = (0..PHRASES.len())
-                .map(|f| if f == fam { bias + (1.0 - bias) / PHRASES.len() as f64 } else { (1.0 - bias) / PHRASES.len() as f64 })
+                .map(|f| {
+                    let uniform = (1.0 - bias) / PHRASES.len() as f64;
+                    if f == fam {
+                        bias + uniform
+                    } else {
+                        uniform
+                    }
+                })
                 .collect();
             let mut text = String::new();
             while text.len() < chars_per_speaker {

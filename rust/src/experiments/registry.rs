@@ -6,7 +6,7 @@ use crate::config::{EngineKind, RunConfig, Scale, Task};
 use crate::coordinator::round::RunSummary;
 use crate::data::partition::PAPER_EMD_LEVELS;
 use crate::runtime::pjrt::PjrtContext;
-use crate::sim::scheduler::{ProfilePreset, SimConfig};
+use crate::sim::scheduler::{ProfilePreset, SelectionPolicy, SimConfig, StalenessPolicy};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 use std::fmt::Write as _;
@@ -64,7 +64,7 @@ impl ExpArgs {
     }
 }
 
-pub const EXPERIMENTS: [(&str, &str); 9] = [
+pub const EXPERIMENTS: [(&str, &str); 10] = [
     ("table1", "Setup summary of both tasks (paper Table 1)"),
     ("table2", "Technique comparison matrix (paper Table 2)"),
     ("table3", "CIFAR: acc + comm across 7 EMD levels, rate 0.1 (paper Table 3)"),
@@ -73,7 +73,14 @@ pub const EXPERIMENTS: [(&str, &str); 9] = [
     ("table4", "Shakespeare: acc + comm, rate 0.1 (paper Table 4)"),
     ("fig6", "Shakespeare: acc + comm vs compression rate (paper Fig. 6)"),
     ("ablation_tau", "DGCwGMF fusion-ratio ablation on Cifar10-6 (design-choice study)"),
-    ("time_to_accuracy", "CIFAR under the deadline scheduler: accuracy at simulated-seconds budgets"),
+    (
+        "time_to_accuracy",
+        "CIFAR under the deadline scheduler: accuracy at simulated-seconds budgets",
+    ),
+    (
+        "staleness_sweep",
+        "Semi-sync aggregation: drop vs carry vs discounted carry on a longtail fleet",
+    ),
 ];
 
 pub fn list() -> String {
@@ -97,6 +104,7 @@ pub fn run(id: &str, args: &ExpArgs) -> Result<String> {
         "fig6" => fig6(args),
         "ablation_tau" => ablation_tau(args),
         "time_to_accuracy" => time_to_accuracy(args),
+        "staleness_sweep" => staleness_sweep(args),
         other => Err(anyhow!("unknown experiment `{other}`\n{}", list())),
     }
 }
@@ -107,12 +115,20 @@ fn table1(args: &ExpArgs) -> Result<String> {
     let c = args.base_cfg(Task::Cifar);
     let s = args.base_cfg(Task::Shakespeare);
     let mut out = String::from("Table 1 — Summary of tasks (resolved configuration)\n\n");
-    let _ = writeln!(out, "{:<16} {:<28} {:<28}", "", "Image Classification", "Next-Word Prediction");
-    let _ = writeln!(out, "{:<16} {:<28} {:<28}", "Dataset", "Mod-Cifar10 (synthetic)", "Shakespeare (synthetic)");
-    let _ = writeln!(out, "{:<16} {:<28} {:<28}", "Model", c.model, s.model);
-    let _ = writeln!(out, "{:<16} {:<28} {:<28}", "# of clients", c.clients, s.clients);
-    let _ = writeln!(out, "{:<16} {:<28} {:<28}", "# of rounds", c.rounds, s.rounds);
-    let _ = writeln!(out, "\n(paper values: ResNet56 / 20 clients / 220 rounds and LSTM / 100 / 80;\n scale `{:?}` — use --scale paper for the full grid)", args.scale);
+    let row3 = |out: &mut String, a: &str, b: &str, c: &str| {
+        let _ = writeln!(out, "{a:<16} {b:<28} {c:<28}");
+    };
+    row3(&mut out, "", "Image Classification", "Next-Word Prediction");
+    row3(&mut out, "Dataset", "Mod-Cifar10 (synthetic)", "Shakespeare (synthetic)");
+    row3(&mut out, "Model", &c.model, &s.model);
+    row3(&mut out, "# of clients", &c.clients.to_string(), &s.clients.to_string());
+    row3(&mut out, "# of rounds", &c.rounds.to_string(), &s.rounds.to_string());
+    let _ = writeln!(
+        out,
+        "\n(paper values: ResNet56 / 20 clients / 220 rounds and LSTM / 100 / 80;\n scale \
+         `{:?}` — use --scale paper for the full grid)",
+        args.scale
+    );
     Ok(out)
 }
 
@@ -123,7 +139,10 @@ fn table2() -> String {
     let _ = writeln!(
         out,
         "{:<10} {:<20} {:<30} {:<22}",
-        "Technique", "Momentum Correction", "Client-side Global Momentum", "Server-side Global Momentum"
+        "Technique",
+        "Momentum Correction",
+        "Client-side Global Momentum",
+        "Server-side Global Momentum"
     );
     for kind in CompressorKind::ALL {
         let row = kind.technique_row();
@@ -158,9 +177,15 @@ fn table3(args: &ExpArgs) -> Result<String> {
             cfg.emd = emd;
             let (summary, a) = execute(&cfg, &args.artifacts, &mut ctx)?;
             achieved = a;
-            write_curve(&summary, &args.out_dir.join("table3"), &format!("emd{emd}_{}", kind.name()))?;
+            let curve_name = format!("emd{emd}_{}", kind.name());
+            write_curve(&summary, &args.out_dir.join("table3"), &curve_name)?;
             all_json.push(summary_json(&format!("cifar{i}"), emd, &summary));
-            eprintln!("[table3] EMD={emd} {} done: acc={:.4} traffic={:.4} GB", kind.name(), summary.final_accuracy, summary.total_traffic_gb);
+            eprintln!(
+                "[table3] EMD={emd} {} done: acc={:.4} traffic={:.4} GB",
+                kind.name(),
+                summary.final_accuracy,
+                summary.total_traffic_gb
+            );
             rows.push((kind.name().to_string(), summary));
         }
         let _ = writeln!(out, "\nCifar10-{i} (EMD target {emd}, achieved {achieved:.3})");
@@ -223,7 +248,12 @@ fn fig4(args: &ExpArgs) -> Result<String> {
 // -------------------------------------------------------------------- fig5
 
 fn fig5(args: &ExpArgs) -> Result<String> {
-    sweep_rates(args, Task::Cifar, "fig5", "Fig. 5 — accuracy & comm vs compression rate, Cifar10-6 (EMD 1.35)")
+    sweep_rates(
+        args,
+        Task::Cifar,
+        "fig5",
+        "Fig. 5 — accuracy & comm vs compression rate, Cifar10-6 (EMD 1.35)",
+    )
 }
 
 // ------------------------------------------------------------------ table4
@@ -243,7 +273,12 @@ fn table4(args: &ExpArgs) -> Result<String> {
         achieved = a;
         write_curve(&summary, &args.out_dir.join("table4"), kind.name())?;
         all_json.push(summary_json("shakespeare", a, &summary));
-        eprintln!("[table4] {} done: acc={:.4} traffic={:.4} GB", kind.name(), summary.final_accuracy, summary.total_traffic_gb);
+        eprintln!(
+            "[table4] {} done: acc={:.4} traffic={:.4} GB",
+            kind.name(),
+            summary.final_accuracy,
+            summary.total_traffic_gb
+        );
         rows.push((kind.name().to_string(), summary));
     }
     let _ = writeln!(out, "(char-level EMD achieved: {achieved:.4}; paper: 0.1157)\n");
@@ -258,7 +293,12 @@ fn table4(args: &ExpArgs) -> Result<String> {
 // -------------------------------------------------------------------- fig6
 
 fn fig6(args: &ExpArgs) -> Result<String> {
-    sweep_rates(args, Task::Shakespeare, "fig6", "Fig. 6 — accuracy & comm vs compression rate, Shakespeare")
+    sweep_rates(
+        args,
+        Task::Shakespeare,
+        "fig6",
+        "Fig. 6 — accuracy & comm vs compression rate, Shakespeare",
+    )
 }
 
 // ------------------------------------------------------------ ablation_tau
@@ -269,8 +309,11 @@ fn fig6(args: &ExpArgs) -> Result<String> {
 /// data, a larger τ waives parameters that differ from the global
 /// momentum") and justifies the stepped 0→0.6 schedule.
 fn ablation_tau(args: &ExpArgs) -> Result<String> {
-    let taus: Vec<f64> =
-        if args.levels.is_empty() { vec![0.0, 0.2, 0.4, 0.6, 0.8, 1.0] } else { args.levels.clone() };
+    let taus: Vec<f64> = if args.levels.is_empty() {
+        vec![0.0, 0.2, 0.4, 0.6, 0.8, 1.0]
+    } else {
+        args.levels.clone()
+    };
     let mut ctx: Option<Rc<PjrtContext>> = None;
     let mut out = String::from(
         "Ablation — constant fusion ratio τ, DGCwGMF on Cifar10-6 (EMD 1.35), rate 0.1\n\n",
@@ -288,7 +331,10 @@ fn ablation_tau(args: &ExpArgs) -> Result<String> {
         cfg.tau_end = tau as f32;
         cfg.tau_steps = 0; // steps=0 → constant τ from round 0 (isolates τ)
         let (s, _) = execute(&cfg, &args.artifacts, &mut ctx)?;
-        eprintln!("[ablation_tau] tau={tau}: acc={:.4} overlap={:.3}", s.final_accuracy, s.mean_mask_overlap);
+        eprintln!(
+            "[ablation_tau] tau={tau}: acc={:.4} overlap={:.3}",
+            s.final_accuracy, s.mean_mask_overlap
+        );
         let _ = writeln!(
             out,
             "{:<6} {:>10.4} {:>12.4} {:>10.4} {:>9.3}",
@@ -301,7 +347,10 @@ fn ablation_tau(args: &ExpArgs) -> Result<String> {
         );
     }
     std::fs::write(args.out_dir.join("ablation_tau").join("sweep.csv"), csv)?;
-    out.push_str("\nexpected: overlap rises monotonically with τ and downlink falls monotonically;\naccuracy is workload- and horizon-dependent (see EXPERIMENTS.md §Ablation).\n");
+    out.push_str(
+        "\nexpected: overlap rises monotonically with τ and downlink falls monotonically;\n\
+         accuracy is workload- and horizon-dependent (see EXPERIMENTS.md §Ablation).\n",
+    );
     Ok(out)
 }
 
@@ -325,6 +374,7 @@ fn time_to_accuracy(args: &ExpArgs) -> Result<String> {
         dropout: 0.02,
         overselect: 1.25,
         compute_s: 0.05,
+        ..Default::default()
     };
     let explicit_budget = args
         .levels
@@ -402,6 +452,114 @@ fn time_to_accuracy(args: &ExpArgs) -> Result<String> {
     Ok(out)
 }
 
+// -------------------------------------------------------- staleness_sweep
+
+/// Semi-synchronous aggregation study: the same longtail straggler fleet
+/// under each staleness policy. `drop` wastes every straggler upload (the
+/// bytes crossed the wire, the server discarded them — the waste
+/// `time_to_accuracy` measures), `carry` folds late uploads into the next
+/// round at full weight (wasted straggler bytes ≈ 0 by construction), and
+/// `carry_discounted(α)` applies α of the late update server-side while
+/// the client residual keeps 1 − α. A fourth variant pairs `carry` with
+/// feasibility-aware selection (β = 0.5) to show the selection/fairness
+/// interaction (`gini` column: spread of the per-client uplink bill).
+/// `--levels` overrides α (first value); `--techniques` overrides the
+/// default DGCwGMF.
+fn staleness_sweep(args: &ExpArgs) -> Result<String> {
+    let mut ctx: Option<Rc<PjrtContext>> = None;
+    let dir = args.out_dir.join("staleness_sweep");
+    let alpha = args.levels.first().copied().unwrap_or(0.5);
+    let base_sim = SimConfig {
+        preset: ProfilePreset::LongTail { sigma: 1.0 },
+        deadline_s: 0.2,
+        dropout: 0.0,
+        overselect: 1.25,
+        compute_s: 0.08,
+        ..Default::default()
+    };
+    let variants: [(&str, StalenessPolicy, SelectionPolicy); 4] = [
+        ("drop", StalenessPolicy::Drop, SelectionPolicy::Uniform),
+        ("carry", StalenessPolicy::Carry, SelectionPolicy::Uniform),
+        ("carry_disc", StalenessPolicy::CarryDiscounted(alpha), SelectionPolicy::Uniform),
+        ("carry+feas", StalenessPolicy::Carry, SelectionPolicy::Feasibility { beta: 0.5 }),
+    ];
+    let techs = if args.techniques.is_empty() {
+        vec![CompressorKind::DgcWgmf]
+    } else {
+        args.techs()
+    };
+    let mut out = format!(
+        "Staleness sweep — longtail fleet (sigma 1.0) under a 0.2 s round deadline\n\
+         (compute 0.08 s/step; 1.25x over-selection; carry_disc alpha = {alpha};\n\
+         rate 0.1, EMD 1.35; wasted = straggler bytes the server discarded)\n\n"
+    );
+    let mut csv = String::from(
+        "technique,policy,final_accuracy,late,offline,carried,wasted_gb,traffic_gb,gini\n",
+    );
+    let _ = writeln!(
+        out,
+        "{:<10} {:<11} {:>9} {:>6} {:>8} {:>8} {:>11} {:>12} {:>6}",
+        "Technique", "Policy", "accuracy", "late", "offline", "carried", "wasted(GB)",
+        "traffic(GB)", "gini"
+    );
+    for kind in techs {
+        for &(name, staleness, selection) in &variants {
+            let mut cfg = args.base_cfg(Task::Cifar);
+            cfg.technique = kind;
+            cfg.emd = 1.35;
+            cfg.client_fraction = 0.75; // headroom for the over-selection
+            cfg.eval_every = (cfg.rounds / 10).max(1);
+            cfg.sim = SimConfig { staleness, selection, ..base_sim };
+            let (s, _) = execute(&cfg, &args.artifacts, &mut ctx)?;
+            let gini =
+                s.recorder.rounds.last().map(|r| r.traffic_gini).unwrap_or(0.0);
+            eprintln!(
+                "[staleness_sweep] {} {}: acc={:.4} late={} carried={} wasted={:.4} GB",
+                kind.name(),
+                name,
+                s.final_accuracy,
+                s.dropped_deadline,
+                s.carried_total,
+                s.wasted_uplink_gb
+            );
+            write_curve(&s, &dir, &format!("{}_{name}", kind.name()))?;
+            let _ = writeln!(
+                out,
+                "{:<10} {:<11} {:>9.4} {:>6} {:>8} {:>8} {:>11.4} {:>12.4} {:>6.3}",
+                kind.name(),
+                name,
+                s.final_accuracy,
+                s.dropped_deadline,
+                s.dropped_offline,
+                s.carried_total,
+                s.wasted_uplink_gb,
+                s.total_traffic_gb,
+                gini
+            );
+            let _ = writeln!(
+                csv,
+                "{},{name},{:.6},{},{},{},{:.6},{:.6},{:.6}",
+                kind.name(),
+                s.final_accuracy,
+                s.dropped_deadline,
+                s.dropped_offline,
+                s.carried_total,
+                s.wasted_uplink_gb,
+                s.total_traffic_gb,
+                gini
+            );
+        }
+    }
+    std::fs::write(dir.join("sweep.csv"), csv)?;
+    out.push_str(
+        "\nexpected: identical late counts across policies at uniform selection; wasted\n\
+         bytes ~ 0 under the carry policies (the same uploads land one round later as\n\
+         `carried`); feasibility selection trades some cohort diversity (higher gini)\n\
+         for fewer late uploads.\ncurves: results/staleness_sweep/<technique>_<policy>.csv\n",
+    );
+    Ok(out)
+}
+
 // ------------------------------------------------------- rate sweep shared
 
 fn sweep_rates(args: &ExpArgs, task: Task, id: &str, title: &str) -> Result<String> {
@@ -424,7 +582,12 @@ fn sweep_rates(args: &ExpArgs, task: Task, id: &str, title: &str) -> Result<Stri
                 cfg.emd = 1.35;
             }
             let (s, _) = execute(&cfg, &args.artifacts, &mut ctx)?;
-            eprintln!("[{id}] rate={rate} {}: acc={:.4} traffic={:.4}", kind.name(), s.final_accuracy, s.total_traffic_gb);
+            eprintln!(
+                "[{id}] rate={rate} {}: acc={:.4} traffic={:.4}",
+                kind.name(),
+                s.final_accuracy,
+                s.total_traffic_gb
+            );
             let _ = writeln!(
                 out,
                 "{:<7} {:<10} {:>10.4} {:>12.4} {:>10.4} {:>10.4}",

@@ -42,7 +42,8 @@ pub fn build_workload(cfg: &RunConfig) -> Result<Workload> {
                         as Box<dyn Dataset + Send>
                 })
                 .collect();
-            let test_ds = CifarLike::balanced(cfg.test_size.div_ceil(NUM_CLASSES), 0.15, cfg.seed ^ 0x7E57);
+            let per_class = cfg.test_size.div_ceil(NUM_CLASSES);
+            let test_ds = CifarLike::balanced(per_class, 0.15, cfg.seed ^ 0x7E57);
             let test = test_ds.eval_batches(cfg.batch);
             Ok(Workload { shards, test, achieved_emd: achieved })
         }

@@ -62,6 +62,8 @@ USAGE:
                [--budget SIM_SECONDS]   # stop at a simulated-seconds budget
                # time-domain scheduler: --set sim.deadline_s=0.25 sim.dropout=0.02
                #   sim.overselect=1.25 sim.compute_s=0.05 sim.profile=\"heterogeneous\"
+               # semi-sync aggregation: --set sim.staleness=\"carry\" (or carry_discounted
+               #   + sim.staleness_alpha=0.5) and sim.selection=\"feasibility\"
   fedgmf experiment --id ID [--scale quick|default|paper] [--engine pjrt|native]
                [--techniques a,b] [--levels 0.1,0.5] [--out-dir DIR] [--seed N]
   fedgmf experiment --list
@@ -166,6 +168,12 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
             summary.dropped_offline,
             summary.wasted_uplink_gb
         );
+        if summary.carried_total > 0 {
+            println!(
+                "semi-sync: {} late uploads carried into later rounds ({:.4} GB re-used)",
+                summary.carried_total, summary.carried_gb
+            );
+        }
     }
     let curve = out_dir.join(format!("{}.csv", summary.technique));
     summary.recorder.write_csv(&curve)?;

@@ -38,6 +38,16 @@ pub struct RoundRecord {
     /// straggler bytes this round: uploaded but discarded at the deadline
     /// (included in `uplink_bytes`)
     pub wasted_uplink_bytes: usize,
+    /// late uploads carried over from the previous round into this round's
+    /// aggregate (semi-synchronous staleness policies; 0 under `drop`)
+    pub carried_in: usize,
+    /// wire bytes of the carried uploads (spent in the round they were
+    /// produced; attributed here so carry-over cost is visible per round)
+    pub carried_bytes: usize,
+    /// Gini coefficient of cumulative per-client uplink bytes after this
+    /// round — the selection-fairness statistic (0 = equal spend across the
+    /// fleet, → 1 = one client pays for everyone)
+    pub traffic_gini: f64,
 }
 
 /// Accumulates rounds; produces summaries and files.
@@ -84,6 +94,15 @@ impl Recorder {
         self.rounds.iter().map(|r| r.dropped_offline).sum()
     }
 
+    /// Late uploads that were carried into a later round's aggregate.
+    pub fn total_carried_in(&self) -> usize {
+        self.rounds.iter().map(|r| r.carried_in).sum()
+    }
+
+    pub fn total_carried_bytes(&self) -> usize {
+        self.rounds.iter().map(|r| r.carried_bytes).sum()
+    }
+
     /// Last evaluated accuracy at or before the simulated-seconds `budget`
     /// (by the round clock); 0 when nothing was evaluated in time.
     pub fn accuracy_at_sim_seconds(&self, budget: f64) -> f64 {
@@ -116,11 +135,14 @@ impl Recorder {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,train_loss,test_loss,test_accuracy,uplink_bytes,downlink_bytes,aggregate_nnz,mask_overlap,sim_seconds,wall_seconds,selected,dropped_deadline,dropped_offline,sim_clock,wasted_uplink_bytes\n",
+            "round,train_loss,test_loss,test_accuracy,uplink_bytes,downlink_bytes,\
+             aggregate_nnz,mask_overlap,sim_seconds,wall_seconds,selected,dropped_deadline,\
+             dropped_offline,sim_clock,wasted_uplink_bytes,carried_in,carried_bytes,\
+             traffic_gini\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{:.6},{:.6},{:.6},{},{},{},{:.6},{:.6},{:.6},{},{},{},{:.6},{}\n",
+                "{},{:.6},{:.6},{:.6},{},{},{},{:.6},{:.6},{:.6},{},{},{},{:.6},{},{},{},{:.6}\n",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -135,7 +157,10 @@ impl Recorder {
                 r.dropped_deadline,
                 r.dropped_offline,
                 r.sim_clock,
-                r.wasted_uplink_bytes
+                r.wasted_uplink_bytes,
+                r.carried_in,
+                r.carried_bytes,
+                r.traffic_gini
             ));
         }
         out
@@ -152,6 +177,12 @@ impl Recorder {
             ("total_sim_seconds", Json::num(self.total_sim_seconds())),
             ("total_dropped_deadline", Json::num(self.total_dropped_deadline() as f64)),
             ("total_dropped_offline", Json::num(self.total_dropped_offline() as f64)),
+            ("total_carried_in", Json::num(self.total_carried_in() as f64)),
+            ("total_carried_bytes", Json::num(self.total_carried_bytes() as f64)),
+            (
+                "final_traffic_gini",
+                Json::num(self.rounds.last().map(|r| r.traffic_gini).unwrap_or(0.0)),
+            ),
         ])
     }
 
@@ -254,6 +285,23 @@ mod tests {
             .lines()
             .next()
             .unwrap()
-            .ends_with("selected,dropped_deadline,dropped_offline,sim_clock,wasted_uplink_bytes"));
+            .ends_with("sim_clock,wasted_uplink_bytes,carried_in,carried_bytes,traffic_gini"));
+    }
+
+    #[test]
+    fn carry_totals_accumulate() {
+        let mut r = Recorder::new();
+        r.push(RoundRecord { carried_in: 2, carried_bytes: 300, ..Default::default() });
+        r.push(RoundRecord {
+            carried_in: 1,
+            carried_bytes: 120,
+            traffic_gini: 0.25,
+            ..Default::default()
+        });
+        assert_eq!(r.total_carried_in(), 3);
+        assert_eq!(r.total_carried_bytes(), 420);
+        let j = r.summary_json();
+        assert_eq!(j.get("total_carried_in").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("final_traffic_gini").unwrap().as_f64(), Some(0.25));
     }
 }

@@ -77,7 +77,10 @@ impl PjrtEngine {
             Batch::Image { x, y, .. } => {
                 let expect: usize = self.entry.x_shape.iter().product();
                 if x.len() != expect {
-                    return Err(anyhow!("image batch has {} pixels, artifact expects {expect}", x.len()));
+                    return Err(anyhow!(
+                        "image batch has {} pixels, artifact expects {expect}",
+                        x.len()
+                    ));
                 }
                 let lx = xla::Literal::vec1(x.as_slice())
                     .reshape(&dims_x)
@@ -88,7 +91,10 @@ impl PjrtEngine {
             Batch::Tokens { x, y, .. } => {
                 let expect: usize = self.entry.x_shape.iter().product();
                 if x.len() != expect {
-                    return Err(anyhow!("token batch has {} ids, artifact expects {expect}", x.len()));
+                    return Err(anyhow!(
+                        "token batch has {} ids, artifact expects {expect}",
+                        x.len()
+                    ));
                 }
                 let lx = xla::Literal::vec1(x.as_slice())
                     .reshape(&dims_x)
@@ -98,7 +104,9 @@ impl PjrtEngine {
                     .map_err(|e| anyhow!("reshape y: {e}"))?;
                 Ok((lx, ly))
             }
-            Batch::Features { .. } => Err(anyhow!("PJRT engine has no artifact for feature batches")),
+            Batch::Features { .. } => {
+                Err(anyhow!("PJRT engine has no artifact for feature batches"))
+            }
         }
     }
 
@@ -184,7 +192,13 @@ impl KernelExecutor {
     }
 
     /// (U', V') = momentum correction via the AOT Pallas kernel.
-    pub fn dgc_update(&self, u: &[f32], v: &[f32], g: &[f32], alpha: f32) -> Result<(Vec<f32>, Vec<f32>)> {
+    pub fn dgc_update(
+        &self,
+        u: &[f32],
+        v: &[f32],
+        g: &[f32],
+        alpha: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
         let out = PjrtEngine::run(
             &self.dgc_update,
             &[

@@ -1,7 +1,13 @@
-//! Network simulation: hub-and-spoke topology, bytes → seconds, and the
-//! time-domain round scheduler (deadlines, stragglers, dropouts).
+//! Network simulation: hub-and-spoke topology, bytes → seconds, the
+//! time-domain round scheduler (deadlines, stragglers, dropouts) and the
+//! semi-synchronous staleness queue (late-upload carry-over).
 pub mod network;
 pub mod scheduler;
+pub mod staleness;
 
 pub use network::{LinkSpec, Network};
-pub use scheduler::{ClientFate, ClientProfile, ProfilePreset, Scheduler, SimConfig};
+pub use scheduler::{
+    ClientFate, ClientProfile, ProfilePreset, Scheduler, SelectionPolicy, SimConfig,
+    StalenessPolicy,
+};
+pub use staleness::{StaleEntry, StaleQueue};

@@ -41,7 +41,12 @@ impl Network {
     }
 
     /// Heterogeneous helper: every `slow_every`-th client gets `slow` links.
-    pub fn heterogeneous(clients: usize, fast: LinkSpec, slow: LinkSpec, slow_every: usize) -> Self {
+    pub fn heterogeneous(
+        clients: usize,
+        fast: LinkSpec,
+        slow: LinkSpec,
+        slow_every: usize,
+    ) -> Self {
         let links = (0..clients)
             .map(|k| if slow_every > 0 && k % slow_every == slow_every - 1 { slow } else { fast })
             .collect();
@@ -82,7 +87,8 @@ mod tests {
 
     #[test]
     fn uplink_is_slowest_client() {
-        let net = Network::uniform(3, LinkSpec { up_bps: 1000.0, down_bps: 1000.0, latency_s: 0.0 });
+        let spec = LinkSpec { up_bps: 1000.0, down_bps: 1000.0, latency_s: 0.0 };
+        let net = Network::uniform(3, spec);
         let t = net.uplink_time(&[(0, 1000), (1, 3000), (2, 500)]);
         assert!((t - 3.0).abs() < 1e-9);
     }

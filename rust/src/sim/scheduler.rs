@@ -51,6 +51,83 @@ impl ProfilePreset {
     }
 }
 
+/// What the server does with an upload that crossed the wire but missed the
+/// round deadline — the semi-synchronous aggregation policy.
+///
+/// Under `Drop` the bytes are wasted: the client paid the uplink and the
+/// server discards the update (its residual is restored client-side). The
+/// carry policies instead buffer the late upload in the server's
+/// [`crate::sim::staleness::StaleQueue`] and fold it into the *next*
+/// round's aggregate, so paid-for uplink traffic is never thrown away.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StalenessPolicy {
+    /// Discard late uploads; restore the client residual (the default, and
+    /// exactly the pre-semi-sync scheduler behaviour).
+    Drop,
+    /// Fold late uploads into the next round's aggregate at full weight.
+    /// Equivalent to `CarryDiscounted(1.0)`.
+    Carry,
+    /// Fold late uploads in with staleness discount `alpha` in [0, 1]; the
+    /// remaining `1 − alpha` of the upload is restored into the client
+    /// residual, so no gradient mass is ever lost. `alpha = 0` degenerates
+    /// to `Drop` exactly (byte-identical, by construction); `alpha = 1` is
+    /// `Carry`.
+    CarryDiscounted(f64),
+}
+
+impl StalenessPolicy {
+    /// Weight applied to carried uploads when they enter the next round's
+    /// aggregate.
+    pub fn alpha(&self) -> f32 {
+        match self {
+            StalenessPolicy::Drop => 0.0,
+            StalenessPolicy::Carry => 1.0,
+            StalenessPolicy::CarryDiscounted(a) => *a as f32,
+        }
+    }
+
+    /// Whether late uploads are buffered at all (α > 0). A zero discount
+    /// carries nothing, which is what makes `carry_discounted(0)` take the
+    /// `Drop` code path bit-for-bit.
+    pub fn carries(&self) -> bool {
+        self.alpha() > 0.0
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StalenessPolicy::Drop => "drop",
+            StalenessPolicy::Carry => "carry",
+            StalenessPolicy::CarryDiscounted(_) => "carry_discounted",
+        }
+    }
+}
+
+/// How the sampler picks *which* clients fill the round's cohort.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SelectionPolicy {
+    /// Uniform random cohort (the default; exactly the pre-semi-sync
+    /// shuffle-and-truncate draw).
+    Uniform,
+    /// Scheduler-aware selection: weight each client by
+    /// `(1 − β) + β · hit_rate · traffic_parity`, where `hit_rate` is its
+    /// Laplace-smoothed deadline-delivery history and `traffic_parity`
+    /// de-prioritises clients that already spent more uplink bytes than
+    /// the fleet average (see
+    /// [`crate::coordinator::sampler::feasibility_weights`]). The `1 − β`
+    /// term is the fairness floor: every client keeps a strictly positive
+    /// selection weight at any β in [0, 1].
+    Feasibility { beta: f64 },
+}
+
+impl SelectionPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectionPolicy::Uniform => "uniform",
+            SelectionPolicy::Feasibility { .. } => "feasibility",
+        }
+    }
+}
+
 /// The `[sim]` TOML section: time-domain scheduling knobs.
 ///
 /// The default is fully inert — see the module docs' determinism contract.
@@ -71,6 +148,13 @@ pub struct SimConfig {
     /// client's compute time is `compute_mult · compute_s · local_steps`.
     /// 0 disables the compute model (uplink-only finish times).
     pub compute_s: f64,
+    /// Semi-synchronous aggregation: what the server does with uploads that
+    /// miss the deadline. `Drop` (default) preserves the pre-carry
+    /// behaviour bit-exactly.
+    pub staleness: StalenessPolicy,
+    /// How the sampler picks the cohort. `Uniform` (default) preserves the
+    /// shuffle-and-truncate draw bit-exactly.
+    pub selection: SelectionPolicy,
 }
 
 impl Default for SimConfig {
@@ -81,6 +165,8 @@ impl Default for SimConfig {
             dropout: 0.0,
             overselect: 1.0,
             compute_s: 0.0,
+            staleness: StalenessPolicy::Drop,
+            selection: SelectionPolicy::Uniform,
         }
     }
 }
@@ -90,7 +176,11 @@ impl SimConfig {
     /// selection and acceptance are exactly the PR 1 behaviour (profiles and
     /// `compute_s` only change reported seconds, never participation).
     pub fn scheduling_active(&self) -> bool {
-        self.deadline_s > 0.0 || self.dropout > 0.0 || self.overselect > 1.0
+        self.deadline_s > 0.0
+            || self.dropout > 0.0
+            || self.overselect > 1.0
+            || self.staleness != StalenessPolicy::Drop
+            || self.selection != SelectionPolicy::Uniform
     }
 
     pub fn validate(&self) -> Result<(), String> {
@@ -121,6 +211,16 @@ impl SimConfig {
                 }
             }
             ProfilePreset::Uniform => {}
+        }
+        if let StalenessPolicy::CarryDiscounted(a) = self.staleness {
+            if !a.is_finite() || !(0.0..=1.0).contains(&a) {
+                return Err(format!("sim.staleness_alpha must be in [0, 1], got {a}"));
+            }
+        }
+        if let SelectionPolicy::Feasibility { beta } = self.selection {
+            if !beta.is_finite() || !(0.0..=1.0).contains(&beta) {
+                return Err(format!("sim.selection_beta must be in [0, 1], got {beta}"));
+            }
         }
         Ok(())
     }
@@ -427,5 +527,41 @@ mod tests {
         let bad_tail =
             SimConfig { preset: ProfilePreset::LongTail { sigma: -1.0 }, ..ok };
         assert!(bad_tail.validate().is_err());
+        let bad_alpha =
+            SimConfig { staleness: StalenessPolicy::CarryDiscounted(1.5), ..ok };
+        assert!(bad_alpha.validate().is_err());
+        let nan_alpha =
+            SimConfig { staleness: StalenessPolicy::CarryDiscounted(f64::NAN), ..ok };
+        assert!(nan_alpha.validate().is_err());
+        let bad_beta =
+            SimConfig { selection: SelectionPolicy::Feasibility { beta: -0.2 }, ..ok };
+        assert!(bad_beta.validate().is_err());
+        let ok_carry = SimConfig { staleness: StalenessPolicy::Carry, ..ok };
+        assert!(ok_carry.validate().is_ok());
+    }
+
+    #[test]
+    fn staleness_policy_alpha_and_carry_flags() {
+        assert_eq!(StalenessPolicy::Drop.alpha(), 0.0);
+        assert!(!StalenessPolicy::Drop.carries());
+        assert_eq!(StalenessPolicy::Carry.alpha(), 1.0);
+        assert!(StalenessPolicy::Carry.carries());
+        assert_eq!(StalenessPolicy::CarryDiscounted(0.25).alpha(), 0.25);
+        assert!(StalenessPolicy::CarryDiscounted(0.25).carries());
+        // a zero discount carries nothing — the Drop-equivalence guarantee
+        assert!(!StalenessPolicy::CarryDiscounted(0.0).carries());
+        assert_eq!(StalenessPolicy::Carry.name(), "carry");
+        assert_eq!(SelectionPolicy::Feasibility { beta: 0.5 }.name(), "feasibility");
+    }
+
+    #[test]
+    fn semi_sync_knobs_activate_scheduling() {
+        let base = SimConfig::default();
+        assert!(!base.scheduling_active());
+        let carry = SimConfig { staleness: StalenessPolicy::Carry, ..base };
+        assert!(carry.scheduling_active());
+        let feas =
+            SimConfig { selection: SelectionPolicy::Feasibility { beta: 0.0 }, ..base };
+        assert!(feas.scheduling_active());
     }
 }

@@ -1,0 +1,167 @@
+//! Server-side buffering of deadline-missed uploads — the semi-synchronous
+//! half of the time-domain scheduler.
+//!
+//! Under [`crate::sim::scheduler::StalenessPolicy::Drop`] a straggler's
+//! upload is pure waste: the bytes crossed the wire and the server threw
+//! them away. The carry policies route those uploads through this queue
+//! instead: a late upload is copied into a pooled buffer when its round
+//! closes, sits out exactly one round boundary, and is folded into the
+//! *next* round's aggregate with the policy's staleness discount (see
+//! `FlRun::step_round`). The queue is two-phase — `incoming` collects this
+//! round's stragglers while `ready` holds last round's, and
+//! [`StaleQueue::begin_round`] rotates them — so an upload can never enter
+//! the same aggregate it missed.
+//!
+//! Buffers are pooled and reused: once capacities are warm, pushing and
+//! recycling entries performs no heap allocation, preserving the round
+//! loop's steady-state allocation-free property.
+
+use crate::sparse::vector::SparseVec;
+
+/// One buffered late upload.
+#[derive(Clone, Debug)]
+pub struct StaleEntry {
+    /// client that produced the upload
+    pub client: usize,
+    /// round the upload was produced in (its age is visible to diagnostics)
+    pub round: usize,
+    /// wire bytes the upload cost — already metered as uplink when it
+    /// arrived; carried here so the recorder can attribute carried bytes
+    pub bytes: usize,
+    /// the decoded gradient, exactly as the server would have aggregated it
+    pub grad: SparseVec,
+}
+
+/// Two-phase queue of late uploads awaiting the next round's aggregate.
+#[derive(Debug, Default)]
+pub struct StaleQueue {
+    /// last round's stragglers: folded into the current round's aggregate
+    ready: Vec<StaleEntry>,
+    /// this round's stragglers: become `ready` at the next `begin_round`
+    incoming: Vec<StaleEntry>,
+    /// recycled gradient buffers (capacity kept)
+    pool: Vec<SparseVec>,
+}
+
+impl StaleQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Buffer a late upload for the next round. The gradient is copied into
+    /// a pooled buffer — no steady-state allocation once capacities are
+    /// warm.
+    pub fn push(&mut self, client: usize, round: usize, bytes: usize, grad: &SparseVec) {
+        let mut buf = self.pool.pop().unwrap_or_else(|| SparseVec::empty(0));
+        buf.dim = grad.dim;
+        buf.indices.clear();
+        buf.indices.extend_from_slice(&grad.indices);
+        buf.values.clear();
+        buf.values.extend_from_slice(&grad.values);
+        self.incoming.push(StaleEntry { client, round, bytes, grad: buf });
+    }
+
+    /// Rotate the phases: what arrived late last round becomes available
+    /// for this round's aggregate. Call exactly once per round, before any
+    /// `push`, after the previous round's `recycle_ready`.
+    pub fn begin_round(&mut self) {
+        debug_assert!(self.ready.is_empty(), "recycle_ready before the next begin_round");
+        std::mem::swap(&mut self.ready, &mut self.incoming);
+    }
+
+    /// Late uploads to fold into the current round's aggregate.
+    pub fn ready(&self) -> &[StaleEntry] {
+        &self.ready
+    }
+
+    /// Return the applied entries' buffers to the pool.
+    pub fn recycle_ready(&mut self) {
+        for e in self.ready.drain(..) {
+            self.pool.push(e.grad);
+        }
+    }
+
+    /// Uploads buffered but not yet folded into any aggregate (both
+    /// phases). Nonzero at the end of a run means the run closed holding
+    /// paid-for updates that never reached an aggregate.
+    pub fn pending(&self) -> usize {
+        self.ready.len() + self.incoming.len()
+    }
+
+    /// All buffered entries, `ready` first — used by the conservation tests
+    /// to account for mass the run ended holding.
+    pub fn pending_entries(&self) -> impl Iterator<Item = &StaleEntry> + '_ {
+        self.ready.iter().chain(self.incoming.iter())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(dim: usize, pairs: Vec<(u32, f32)>) -> SparseVec {
+        SparseVec::new(dim, pairs)
+    }
+
+    #[test]
+    fn entries_sit_out_exactly_one_round_boundary() {
+        let mut q = StaleQueue::new();
+        q.begin_round(); // round 0 opens: nothing ready
+        assert!(q.ready().is_empty());
+        q.push(3, 0, 120, &sv(8, vec![(1, 2.0), (5, -1.0)]));
+        assert!(q.ready().is_empty(), "a push must not enter the current round");
+        assert_eq!(q.pending(), 1);
+        q.recycle_ready();
+
+        q.begin_round(); // round 1 opens: round 0's straggler is ready
+        assert_eq!(q.ready().len(), 1);
+        assert_eq!(q.ready()[0].client, 3);
+        assert_eq!(q.ready()[0].round, 0);
+        assert_eq!(q.ready()[0].bytes, 120);
+        assert_eq!(q.ready()[0].grad.indices, vec![1, 5]);
+        q.push(4, 1, 90, &sv(8, vec![(2, 1.0)]));
+        assert_eq!(q.pending(), 2);
+        q.recycle_ready();
+        assert_eq!(q.pending(), 1);
+
+        q.begin_round(); // round 2: only round 1's straggler remains
+        assert_eq!(q.ready().len(), 1);
+        assert_eq!(q.ready()[0].client, 4);
+        q.recycle_ready();
+        assert_eq!(q.pending(), 0);
+    }
+
+    #[test]
+    fn buffers_are_pooled_and_reused() {
+        let mut q = StaleQueue::new();
+        q.begin_round();
+        q.push(0, 0, 10, &sv(16, vec![(0, 1.0), (9, 2.0)]));
+        q.recycle_ready();
+        q.begin_round();
+        let ptr = q.ready()[0].grad.indices.as_ptr();
+        q.recycle_ready();
+        q.begin_round();
+        // same-or-smaller payload must reuse the recycled buffer
+        q.push(1, 2, 10, &sv(16, vec![(3, 4.0)]));
+        q.recycle_ready();
+        q.begin_round();
+        assert_eq!(q.ready()[0].grad.indices.as_ptr(), ptr, "pool must recycle buffers");
+        assert_eq!(q.ready()[0].grad.indices, vec![3]);
+        assert_eq!(q.ready()[0].grad.values, vec![4.0]);
+        q.recycle_ready();
+    }
+
+    #[test]
+    fn pending_entries_cover_both_phases() {
+        let mut q = StaleQueue::new();
+        q.begin_round();
+        q.push(0, 0, 5, &sv(4, vec![(1, 1.0)]));
+        q.begin_round();
+        q.push(1, 1, 6, &sv(4, vec![(2, 2.0)]));
+        let clients: Vec<usize> = q.pending_entries().map(|e| e.client).collect();
+        assert_eq!(clients, vec![0, 1], "ready first, then incoming");
+        let mass: f64 =
+            q.pending_entries().flat_map(|e| e.grad.values.iter()).map(|&v| v as f64).sum();
+        assert_eq!(mass, 3.0);
+    }
+}

@@ -40,6 +40,14 @@ impl Aggregator {
 
     /// Add one client contribution.
     pub fn add(&mut self, g: &SparseVec) {
+        self.add_scaled(g, 1.0);
+    }
+
+    /// Add one contribution scaled by `scale` (`acc += scale · g`) — the
+    /// staleness-discount path for carried-over late uploads. `scale = 1`
+    /// is bit-identical to [`Aggregator::add`] (IEEE-754 guarantees
+    /// `1.0 · v == v`).
+    pub fn add_scaled(&mut self, g: &SparseVec, scale: f32) {
         assert_eq!(g.dim, self.acc.len(), "dimension mismatch");
         for (&i, &v) in g.indices.iter().zip(&g.values) {
             let iu = i as usize;
@@ -47,7 +55,7 @@ impl Aggregator {
                 self.dirty[iu] = true;
                 self.touched.push(i);
             }
-            self.acc[iu] += v;
+            self.acc[iu] += scale * v;
         }
     }
 
@@ -58,10 +66,19 @@ impl Aggregator {
     /// order: shards partition the coordinate space, so within every
     /// coordinate the f32 additions still happen in client order.
     pub fn add_all(&mut self, grads: &[&SparseVec], workers: usize) {
+        self.add_all_scaled(grads, 1.0, workers);
+    }
+
+    /// [`Aggregator::add_all`] with every contribution scaled by `scale` —
+    /// how a round's carried-over stale uploads enter the aggregate with
+    /// their staleness discount. Same sharding and determinism contract:
+    /// bit-identical to sequential [`Aggregator::add_scaled`] calls in
+    /// `grads` order at any worker count.
+    pub fn add_all_scaled(&mut self, grads: &[&SparseVec], scale: f32, workers: usize) {
         let total_nnz: usize = grads.iter().map(|g| g.nnz()).sum();
         if workers <= 1 || total_nnz < PARALLEL_MERGE_MIN_NNZ || self.acc.is_empty() {
             for g in grads {
-                self.add(g);
+                self.add_scaled(g, scale);
             }
             return;
         }
@@ -99,7 +116,7 @@ impl Aggregator {
                                 dirty_chunk[off] = true;
                                 touched.push(i);
                             }
-                            acc_chunk[off] += v;
+                            acc_chunk[off] += scale * v;
                         }
                     }
                 });
@@ -172,8 +189,8 @@ impl Aggregator {
                 s.spawn(move || {
                     so.indices.clear();
                     so.values.clear();
-                    for (off, (a, d)) in acc_chunk.iter_mut().zip(dirty_chunk.iter_mut()).enumerate()
-                    {
+                    let chunk = acc_chunk.iter_mut().zip(dirty_chunk.iter_mut());
+                    for (off, (a, d)) in chunk.enumerate() {
                         if *d {
                             let v = *a * scale;
                             if v != 0.0 {
@@ -314,6 +331,54 @@ mod tests {
         let out = agg.finish_mean(2);
         assert_eq!(out.indices, vec![0, 3, 5]);
         assert_eq!(out.values, vec![1.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn scaled_add_discounts_values() {
+        let mut agg = Aggregator::new(6);
+        agg.add(&SparseVec::new(6, vec![(1, 4.0)]));
+        agg.add_scaled(&SparseVec::new(6, vec![(1, 4.0), (3, 8.0)]), 0.5);
+        let out = agg.finish_mean(2);
+        assert_eq!(out.indices, vec![1, 3]);
+        assert_eq!(out.values, vec![3.0, 2.0]); // (4 + 2)/2, (0 + 4)/2
+    }
+
+    #[test]
+    fn scale_one_is_bit_identical_to_plain_add() {
+        let g = rand_sparse(512, 200, 99);
+        let mut a = Aggregator::new(512);
+        a.add(&g);
+        let mut b = Aggregator::new(512);
+        b.add_scaled(&g, 1.0);
+        let (oa, ob) = (a.finish_mean(1), b.finish_mean(1));
+        assert_eq!(oa.indices, ob.indices);
+        let bits_a: Vec<u32> = oa.values.iter().map(|v| v.to_bits()).collect();
+        let bits_b: Vec<u32> = ob.values.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits_a, bits_b);
+    }
+
+    #[test]
+    fn sharded_scaled_merge_is_bit_identical_to_sequential() {
+        let dim = 50_000;
+        let grads: Vec<SparseVec> = (0..8).map(|c| rand_sparse(dim, 8_000, 300 + c)).collect();
+        let refs: Vec<&SparseVec> = grads.iter().collect();
+        assert!(refs.iter().map(|g| g.nnz()).sum::<usize>() >= super::PARALLEL_MERGE_MIN_NNZ);
+
+        let mut seq = Aggregator::new(dim);
+        for g in &refs {
+            seq.add_scaled(g, 0.375); // exactly representable discount
+        }
+        let a = seq.finish_mean(8);
+
+        for workers in [2usize, 5, 64] {
+            let mut par = Aggregator::new(dim);
+            par.add_all_scaled(&refs, 0.375, workers);
+            let b = par.finish_mean(8);
+            assert_eq!(a.indices, b.indices, "workers={workers}");
+            let bits_a: Vec<u32> = a.values.iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> = b.values.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "workers={workers}");
+        }
     }
 
     #[test]

@@ -296,8 +296,8 @@ impl<'a> Parser<'a> {
                             }
                             let hex = std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
                                 .map_err(|_| self.err("bad \\u escape"))?;
-                            let code =
-                                u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
                             out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
                             self.pos += 4;
                         }
@@ -324,8 +324,8 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
-        {
+        let numeric = |c: u8| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-');
+        while matches!(self.peek(), Some(c) if numeric(c)) {
             self.pos += 1;
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();

@@ -16,7 +16,7 @@ use fedgmf::coordinator::sampler::Sampler;
 use fedgmf::data::dataset::Dataset;
 use fedgmf::runtime::native::{BlobDataset, NativeEngine};
 use fedgmf::sim::network::Network;
-use fedgmf::sim::scheduler::{ProfilePreset, SimConfig};
+use fedgmf::sim::scheduler::{ProfilePreset, SelectionPolicy, SimConfig, StalenessPolicy};
 
 const DIM: usize = 16;
 const CLASSES: usize = 4;
@@ -80,6 +80,22 @@ fn assert_rounds_identical(kind: CompressorKind, sum_seq: &RunSummary, sum_par: 
         assert_eq!(a.selected, b.selected, "{} round {}", kind.name(), a.round);
         assert_eq!(a.dropped_deadline, b.dropped_deadline, "{} round {}", kind.name(), a.round);
         assert_eq!(a.dropped_offline, b.dropped_offline, "{} round {}", kind.name(), a.round);
+        assert_eq!(a.carried_in, b.carried_in, "{} round {}", kind.name(), a.round);
+        assert_eq!(a.carried_bytes, b.carried_bytes, "{} round {}", kind.name(), a.round);
+        assert_eq!(
+            a.wasted_uplink_bytes,
+            b.wasted_uplink_bytes,
+            "{} round {}",
+            kind.name(),
+            a.round
+        );
+        assert_eq!(
+            a.traffic_gini.to_bits(),
+            b.traffic_gini.to_bits(),
+            "{} round {}",
+            kind.name(),
+            a.round
+        );
         assert_eq!(
             a.sim_seconds.to_bits(),
             b.sim_seconds.to_bits(),
@@ -142,6 +158,8 @@ fn scheduler_off_equals_explicitly_inert_scheduler() {
         dropout: 0.0,
         overselect: 1.0,
         compute_s: 0.0,
+        staleness: StalenessPolicy::Drop,
+        selection: SelectionPolicy::Uniform,
     };
     for workers in [1usize, 4] {
         let (pa, sa) = run_with(CompressorKind::DgcWgmf, Sampler::Full, workers);
@@ -164,6 +182,7 @@ fn scheduler_on_bit_identical_across_worker_counts() {
         dropout: 0.15,
         overselect: 1.5,
         compute_s: 0.01,
+        ..Default::default()
     };
     for (kind, sampler) in [
         (CompressorKind::DgcWgmf, Sampler::Fraction(0.5)),
@@ -190,6 +209,152 @@ fn scheduler_on_bit_identical_across_worker_counts() {
 }
 
 #[test]
+fn carry_policies_bit_identical_across_worker_counts() {
+    // a deadline below the link latency: every upload is late every round,
+    // so the carry path is exercised on every round after the first —
+    // carried counts are guaranteed nonzero, not regime-dependent
+    for staleness in [StalenessPolicy::Carry, StalenessPolicy::CarryDiscounted(0.4)] {
+        let sim = SimConfig {
+            preset: ProfilePreset::Uniform,
+            deadline_s: 1e-6,
+            dropout: 0.1,
+            overselect: 1.0,
+            compute_s: 0.0,
+            staleness,
+            selection: SelectionPolicy::Uniform,
+        };
+        let (params_seq, sum_seq) =
+            run_with_sim(CompressorKind::DgcWgmf, Sampler::Fraction(0.5), 1, sim);
+        assert!(sum_seq.carried_total > 0, "{staleness:?}: regime must carry uploads");
+        assert!(sum_seq.dropped_deadline > 0);
+        assert_eq!(
+            sum_seq.wasted_uplink_gb, 0.0,
+            "{staleness:?}: carry must leave no wasted straggler bytes"
+        );
+        for workers in [2usize, 4] {
+            let (params_par, sum_par) =
+                run_with_sim(CompressorKind::DgcWgmf, Sampler::Fraction(0.5), workers, sim);
+            assert_eq!(
+                params_seq, params_par,
+                "{staleness:?}: carried run must be bit-identical at workers={workers}"
+            );
+            assert_rounds_identical(CompressorKind::DgcWgmf, &sum_seq, &sum_par);
+        }
+    }
+    // a mixed regime (some hit, some miss) through the same contract
+    let mixed = SimConfig {
+        preset: ProfilePreset::Heterogeneous { slow_every: 3, slow_factor: 6.0 },
+        deadline_s: 0.08,
+        dropout: 0.1,
+        overselect: 1.5,
+        compute_s: 0.01,
+        staleness: StalenessPolicy::CarryDiscounted(0.7),
+        selection: SelectionPolicy::Uniform,
+    };
+    let (ps, ss) = run_with_sim(CompressorKind::Gmc, Sampler::Count(4), 1, mixed);
+    let (pp, sp) = run_with_sim(CompressorKind::Gmc, Sampler::Count(4), 4, mixed);
+    assert_eq!(ps, pp);
+    assert_rounds_identical(CompressorKind::Gmc, &ss, &sp);
+}
+
+#[test]
+fn feasibility_selection_bit_identical_across_worker_counts() {
+    let sim = SimConfig {
+        preset: ProfilePreset::Heterogeneous { slow_every: 3, slow_factor: 6.0 },
+        deadline_s: 0.08,
+        dropout: 0.1,
+        overselect: 1.25,
+        compute_s: 0.01,
+        staleness: StalenessPolicy::Carry,
+        selection: SelectionPolicy::Feasibility { beta: 0.7 },
+    };
+    let (params_seq, sum_seq) =
+        run_with_sim(CompressorKind::DgcWgmf, Sampler::Fraction(0.5), 1, sim);
+    for workers in [2usize, 4] {
+        let (params_par, sum_par) =
+            run_with_sim(CompressorKind::DgcWgmf, Sampler::Fraction(0.5), workers, sim);
+        assert_eq!(
+            params_seq, params_par,
+            "feasibility-selected run must be bit-identical at workers={workers}"
+        );
+        assert_rounds_identical(CompressorKind::DgcWgmf, &sum_seq, &sum_par);
+    }
+}
+
+/// FNV-1a over the run's observable outputs: final parameter bits plus
+/// every per-round record field the round loop promises to keep
+/// deterministic.
+fn run_digest(workers: usize, staleness: StalenessPolicy) -> u64 {
+    let sim = SimConfig {
+        preset: ProfilePreset::Heterogeneous { slow_every: 3, slow_factor: 6.0 },
+        deadline_s: 0.08,
+        dropout: 0.15,
+        overselect: 1.5,
+        compute_s: 0.01,
+        staleness,
+        selection: SelectionPolicy::Uniform,
+    };
+    let (params, sum) = run_with_sim(CompressorKind::DgcWgmf, Sampler::Fraction(0.5), workers, sim);
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |x: u64| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for p in params {
+        eat(p as u64);
+    }
+    for r in &sum.recorder.rounds {
+        eat(r.round as u64);
+        eat(r.train_loss.to_bits());
+        eat(r.test_accuracy.to_bits());
+        eat(r.uplink_bytes as u64);
+        eat(r.downlink_bytes as u64);
+        eat(r.aggregate_nnz as u64);
+        eat(r.mask_overlap.to_bits());
+        eat(r.sim_seconds.to_bits());
+        eat(r.sim_clock.to_bits());
+        eat(r.selected as u64);
+        eat(r.dropped_deadline as u64);
+        eat(r.dropped_offline as u64);
+        eat(r.carried_in as u64);
+        eat(r.carried_bytes as u64);
+        eat(r.wasted_uplink_bytes as u64);
+        eat(r.traffic_gini.to_bits());
+    }
+    h
+}
+
+/// The CI determinism matrix entrypoint: each matrix job pins one
+/// (workers, staleness) combination via `FED_DET_WORKERS` /
+/// `FED_DET_STALENESS` and this test asserts its digest equals the
+/// sequential digest for the same staleness policy. Without the env vars
+/// (local runs) it sweeps the full matrix in-process.
+#[test]
+fn ci_matrix_digest() {
+    let policies: Vec<(&str, StalenessPolicy)> =
+        match std::env::var("FED_DET_STALENESS").ok().as_deref() {
+            Some("drop") => vec![("drop", StalenessPolicy::Drop)],
+            Some("carry") => vec![("carry", StalenessPolicy::Carry)],
+            Some(other) => panic!("FED_DET_STALENESS must be drop|carry, got `{other}`"),
+            None => vec![("drop", StalenessPolicy::Drop), ("carry", StalenessPolicy::Carry)],
+        };
+    let workers: Vec<usize> = match std::env::var("FED_DET_WORKERS").ok() {
+        Some(w) => vec![w.parse().expect("FED_DET_WORKERS must be a worker count")],
+        None => vec![1, 2, 0], // 0 = one worker per core
+    };
+    for (name, policy) in policies {
+        let reference = run_digest(1, policy);
+        for &w in &workers {
+            let d = run_digest(w, policy);
+            eprintln!("determinism digest[staleness={name}, workers={w}] = {d:016x}");
+            assert_eq!(d, reference, "digest diverged: staleness={name} workers={w}");
+        }
+    }
+}
+
+#[test]
 fn longtail_profiles_and_budget_runs_deterministic() {
     let sim = SimConfig {
         preset: ProfilePreset::LongTail { sigma: 0.8 },
@@ -197,6 +362,7 @@ fn longtail_profiles_and_budget_runs_deterministic() {
         dropout: 0.05,
         overselect: 1.25,
         compute_s: 0.02,
+        ..Default::default()
     };
     let (pa, sa) = run_with_sim(CompressorKind::Gmc, Sampler::Fraction(0.6), 1, sim);
     let (pb, sb) = run_with_sim(CompressorKind::Gmc, Sampler::Fraction(0.6), 4, sim);

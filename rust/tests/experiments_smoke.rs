@@ -83,6 +83,29 @@ fn time_to_accuracy_quick_native() {
 }
 
 #[test]
+fn staleness_sweep_quick_native() {
+    let mut a = args("ss");
+    a.techniques = vec![CompressorKind::DgcWgmf];
+    a.levels = vec![0.5]; // carry_discounted alpha
+    let report = run("staleness_sweep", &a).unwrap();
+    assert!(report.contains("Staleness sweep"));
+    assert!(report.contains("drop"));
+    assert!(report.contains("carry"));
+    assert!(report.contains("carry_disc"));
+    assert!(report.contains("carry+feas"));
+    let csv =
+        std::fs::read_to_string(a.out_dir.join("staleness_sweep").join("sweep.csv")).unwrap();
+    assert_eq!(csv.lines().count(), 5, "header + 4 policy variants");
+    // per-policy curves carry the semi-sync recorder columns
+    let curve = std::fs::read_to_string(
+        a.out_dir.join("staleness_sweep").join("DGCwGMF_carry.csv"),
+    )
+    .unwrap();
+    let header = curve.lines().next().unwrap();
+    assert!(header.contains("carried_in") && header.contains("traffic_gini"));
+}
+
+#[test]
 fn unknown_id_lists_options() {
     let a = args("bad");
     let err = run("table99", &a).unwrap_err().to_string();

@@ -127,8 +127,9 @@ fn prop_wire_decode_rejects_corrupt_indices_without_panic() {
         let mut bad = buf.clone();
         let idx_off = 9 + 4; // header + nnz field
         bad[idx_off..idx_off + 4].copy_from_slice(&(dim as u32).to_le_bytes());
+        let verdict = wire::decode_into(&bad, &mut out);
         assert!(
-            matches!(wire::decode_into(&bad, &mut out), Err(wire::WireError::IndexOutOfBounds { .. })),
+            matches!(verdict, Err(wire::WireError::IndexOutOfBounds { .. })),
             "seed {seed}"
         );
 

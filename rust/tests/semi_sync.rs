@@ -1,0 +1,171 @@
+//! Round-level properties of the semi-synchronous aggregation subsystem.
+//!
+//! Two contracts from the staleness-policy design, checked over randomized
+//! runs (in-tree property harness, same conventions as `proptests.rs`:
+//! deterministic seed stream, `PROP_SEED=<n>` replays a failure):
+//!
+//! 1. `carry_discounted(α = 0)` is **byte-identical** to `drop` — a zero
+//!    discount must take the drop code path bit-for-bit, not merely
+//!    approximate it.
+//! 2. `carry(α = 1)` **conserves gradient mass** across straggler rounds:
+//!    every transmitted upload enters exactly one aggregate at full
+//!    weight, so per coordinate, Σ(contributors · aggregate) over the run
+//!    plus whatever the stale queue still holds equals Σ(uploads).
+//!
+//! The straggler regime is constructed, not sampled: every second client
+//! is 8× slower (compute 0.08 s + 25 ms latency > the 0.06 s deadline)
+//! while fast clients finish in ~0.035 s — so every round deterministically
+//! has both accepted and late uploads.
+
+use fedgmf::compress::CompressorKind;
+use fedgmf::coordinator::round::{FlConfig, FlRun, LrSchedule, RunSummary};
+use fedgmf::data::dataset::Dataset;
+use fedgmf::runtime::native::{BlobDataset, NativeEngine};
+use fedgmf::sim::network::Network;
+use fedgmf::sim::scheduler::{ProfilePreset, SimConfig, StalenessPolicy};
+
+const CASES: u64 = 8; // full FL runs per property — heavier than unit props
+const CLIENTS: usize = 5;
+const DIM: usize = 12;
+const CLASSES: usize = 4;
+const ROUNDS: usize = 10;
+
+fn seeds() -> impl Iterator<Item = u64> {
+    let base: u64 =
+        std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x5E31);
+    (0..CASES).map(move |i| base.wrapping_add(i * 7))
+}
+
+fn build_run(seed: u64, staleness: StalenessPolicy) -> (NativeEngine, FlRun) {
+    let engine = NativeEngine::new(DIM, 10, CLASSES, seed ^ 0xA5);
+    let shards: Vec<Box<dyn Dataset + Send>> = (0..CLIENTS)
+        .map(|c| {
+            Box::new(BlobDataset::generate_split(40, DIM, CLASSES, 0.4, seed, seed + 1 + c as u64))
+                as Box<dyn Dataset + Send>
+        })
+        .collect();
+    let mut cfg = FlConfig::new(CompressorKind::DgcWgmf, 0.2, ROUNDS);
+    cfg.lr = LrSchedule::constant(0.3);
+    cfg.eval_every = 0; // no eval: params move only through broadcasts
+    cfg.seed = seed;
+    cfg.workers = 1;
+    cfg.sim = SimConfig {
+        preset: ProfilePreset::Heterogeneous { slow_every: 2, slow_factor: 8.0 },
+        deadline_s: 0.06,
+        compute_s: 0.01,
+        staleness,
+        ..Default::default()
+    };
+    let run = FlRun::new(
+        &engine,
+        shards,
+        Vec::new(),
+        Network::uniform(CLIENTS, Default::default()),
+        cfg,
+    );
+    (engine, run)
+}
+
+fn record_fingerprint(s: &RunSummary) -> Vec<(usize, usize, usize, u64, usize, usize, usize)> {
+    s.recorder
+        .rounds
+        .iter()
+        .map(|r| {
+            (
+                r.uplink_bytes,
+                r.downlink_bytes,
+                r.aggregate_nnz,
+                r.train_loss.to_bits(),
+                r.dropped_deadline,
+                r.carried_in,
+                r.wasted_uplink_bytes,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn prop_carry_discounted_zero_is_byte_identical_to_drop() {
+    for seed in seeds() {
+        let (mut e_drop, mut r_drop) = build_run(seed, StalenessPolicy::Drop);
+        let (mut e_zero, mut r_zero) = build_run(seed, StalenessPolicy::CarryDiscounted(0.0));
+        let s_drop = r_drop.run(&mut e_drop).unwrap();
+        let s_zero = r_zero.run(&mut e_zero).unwrap();
+        let bits_drop: Vec<u32> = r_drop.params.iter().map(|p| p.to_bits()).collect();
+        let bits_zero: Vec<u32> = r_zero.params.iter().map(|p| p.to_bits()).collect();
+        assert_eq!(bits_drop, bits_zero, "seed {seed}: params must be byte-identical");
+        assert_eq!(
+            record_fingerprint(&s_drop),
+            record_fingerprint(&s_zero),
+            "seed {seed}: per-round records must be byte-identical"
+        );
+        assert!(s_drop.dropped_deadline > 0, "seed {seed}: regime must produce stragglers");
+        assert_eq!(s_zero.carried_total, 0, "seed {seed}: a zero discount must carry nothing");
+        assert_eq!(r_zero.stale_queue.pending(), 0, "seed {seed}");
+        // and both policies wasted the same (nonzero) straggler bytes
+        assert!(s_drop.wasted_uplink_gb > 0.0, "seed {seed}");
+        assert_eq!(s_drop.wasted_uplink_gb, s_zero.wasted_uplink_gb, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_carry_conserves_gradient_mass_across_straggler_rounds() {
+    for seed in seeds() {
+        let (mut engine, mut run) = build_run(seed, StalenessPolicy::Carry);
+        // per-coordinate f64 ledgers (immune to cross-coordinate cancellation)
+        let dim = run.params.len();
+        let mut uploaded = vec![0.0f64; dim];
+        let mut delivered = vec![0.0f64; dim];
+        let mut stragglers_seen = 0usize;
+        for round in 0..ROUNDS {
+            let rec = run.step_round(&mut engine, round).unwrap();
+            // full participation + zero dropout: every client transmitted,
+            // so every echo is an upload that crossed the wire this round
+            for c in &run.clients {
+                for (&i, &v) in c.echo.indices.iter().zip(&c.echo.values) {
+                    uploaded[i as usize] += v as f64;
+                }
+            }
+            let accepted = rec.selected - rec.dropped_deadline - rec.dropped_offline;
+            let contributors = (accepted + rec.carried_in) as f64;
+            for (&i, &v) in run.last_payload.indices.iter().zip(&run.last_payload.values) {
+                delivered[i as usize] += contributors * v as f64;
+            }
+            stragglers_seen += rec.dropped_deadline;
+            assert_eq!(rec.wasted_uplink_bytes, 0, "seed {seed} round {round}");
+        }
+        assert!(stragglers_seen > 0, "seed {seed}: regime must produce stragglers");
+        // whatever the run ended holding never reached an aggregate
+        let mut leftover = vec![0.0f64; dim];
+        for e in run.stale_queue.pending_entries() {
+            for (&i, &v) in e.grad.indices.iter().zip(&e.grad.values) {
+                leftover[i as usize] += v as f64;
+            }
+        }
+        assert!(run.stale_queue.pending() > 0, "seed {seed}: last round's stragglers remain");
+        for i in 0..dim {
+            let got = delivered[i] + leftover[i];
+            let want = uploaded[i];
+            let tol = 1e-3 * want.abs().max(1.0);
+            assert!(
+                (got - want).abs() <= tol,
+                "seed {seed} coord {i}: delivered+leftover {got} != uploaded {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn carry_and_discounted_alpha_one_are_byte_identical() {
+    // α = 1 restores nothing and applies everything — exactly `carry`
+    let (mut e_carry, mut r_carry) = build_run(11, StalenessPolicy::Carry);
+    let (mut e_one, mut r_one) = build_run(11, StalenessPolicy::CarryDiscounted(1.0));
+    let s_carry = r_carry.run(&mut e_carry).unwrap();
+    let s_one = r_one.run(&mut e_one).unwrap();
+    assert_eq!(
+        r_carry.params.iter().map(|p| p.to_bits()).collect::<Vec<_>>(),
+        r_one.params.iter().map(|p| p.to_bits()).collect::<Vec<_>>()
+    );
+    assert_eq!(record_fingerprint(&s_carry), record_fingerprint(&s_one));
+    assert!(s_carry.carried_total > 0, "regime must exercise the carry path");
+}
