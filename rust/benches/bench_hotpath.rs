@@ -10,7 +10,9 @@
 //!   score/abs, score/gmf          — selection-score construction
 //!   compress/dgc, compress/gmf    — full client compression step
 //!   aggregate/20clients           — server-side sparse mean
-//!   wire/encode+decode            — serialisation
+//!   wire/encode+decode            — serialisation (v1, incl. dense path)
+//!   codec/<mode>                  — codec v2 encode/decode per mode, with
+//!                                   bytes-per-upload + reduction ratio
 //!   momentum/accumulate           — client M update
 //!   round/e2e                     — full FlRun::step_round, 20 clients ×
 //!                                   P≈1M, sequential vs parallel workers
@@ -24,6 +26,7 @@ use fedgmf::data::dataset::Dataset;
 use fedgmf::runtime::native::{BlobDataset, NativeEngine};
 use fedgmf::runtime::TrainEngine;
 use fedgmf::sim::network::Network;
+use fedgmf::sparse::codec::{CodecParams, IndexCoding, ValueCoding};
 use fedgmf::sparse::merge::Aggregator;
 use fedgmf::sparse::topk;
 use fedgmf::sparse::vector::SparseVec;
@@ -193,6 +196,18 @@ fn main() {
             wire::decode_into(&buf, &mut dec_sv).unwrap();
             std::hint::black_box(&dec_sv);
         });
+        // the v1 dense fallback (bulk zero-run writes) — the downlink shape
+        // once server-side momentum densifies the aggregate
+        let dense_sv = {
+            let raw = randvec(p, 7);
+            let ids: Vec<u32> = (0..p as u32).filter(|i| i % 5 != 0).collect();
+            let vals: Vec<f32> = ids.iter().map(|&i| raw[i as usize]).collect();
+            SparseVec::from_sorted(p, ids, vals)
+        };
+        bench(&mut results, &format!("wire/encode-dense {label}"), it(15), || {
+            wire::encode_into(&dense_sv, &mut enc_buf);
+            std::hint::black_box(&enc_buf);
+        });
 
         let mut mom = randvec(p, 6);
         bench(&mut results, &format!("momentum/accum    {label}"), it(30), || {
@@ -201,6 +216,91 @@ fn main() {
         });
         println!();
     }
+
+    // ---- codec v2 micro-benchmarks: encode/decode per mode at the table3
+    // uplink shape (P = 77 850, rate 0.1), plus a mid-density bitmap shape.
+    // Throughput is reported against the v1-equivalent payload bytes, so
+    // modes are comparable on one axis; bytes-per-upload + ratio land in
+    // the JSON for the byte-reduction trajectory.
+    println!("== codec v2 (per-upload encode/decode, P=77850 rate 0.1) ==");
+    let codec_rows = {
+        let p = 77_850usize;
+        let k = p / 10;
+        let raw = randvec(p, 40);
+        let abs: Vec<f32> = raw.iter().map(|x| x.abs()).collect();
+        let ids = topk::select_topk(&abs, k);
+        let vals: Vec<f32> = ids.iter().map(|&i| raw[i as usize]).collect();
+        let topk_sv = SparseVec::from_sorted(p, ids, vals);
+        let mid_sv = {
+            let ids: Vec<u32> = (0..p as u32).filter(|i| i % 3 == 0).collect();
+            let vals: Vec<f32> = ids.iter().map(|&i| raw[i as usize]).collect();
+            SparseVec::from_sorted(p, ids, vals)
+        };
+        let modes: Vec<(String, &SparseVec, CodecParams)> = vec![
+            ("raw-f32(v1)".into(), &topk_sv, CodecParams::V1),
+            (
+                "varint-f32".into(),
+                &topk_sv,
+                CodecParams { index: IndexCoding::Varint, value: ValueCoding::F32 },
+            ),
+            (
+                "varint-f16".into(),
+                &topk_sv,
+                CodecParams { index: IndexCoding::Varint, value: ValueCoding::F16 },
+            ),
+            (
+                "varint-q8".into(),
+                &topk_sv,
+                CodecParams { index: IndexCoding::Varint, value: ValueCoding::Q8 },
+            ),
+            (
+                "bitmap-f16(d=0.33)".into(),
+                &mid_sv,
+                CodecParams { index: IndexCoding::Varint, value: ValueCoding::F16 },
+            ),
+        ];
+        let mut rows: Vec<Json> = Vec::new();
+        let mut enc_buf = Vec::new();
+        let mut dec_sv = SparseVec::empty(0);
+        for (name, sv, params) in &modes {
+            let v1_bytes = wire::encoded_bytes(sv);
+            let mut enc_stats = Vec::new();
+            bench(&mut enc_stats, &format!("codec/encode {name}"), it(20), || {
+                wire::encode_with(sv, &mut enc_buf, *params);
+                std::hint::black_box(&enc_buf);
+            });
+            let bytes = enc_buf.len();
+            let mut dec_stats = Vec::new();
+            bench(&mut dec_stats, &format!("codec/decode {name}"), it(20), || {
+                wire::decode_into(&enc_buf, &mut dec_sv).unwrap();
+                std::hint::black_box(&dec_sv);
+            });
+            let enc = enc_stats[0].1;
+            let dec = dec_stats[0].1;
+            let gbps = |ms: f64| v1_bytes as f64 / 1e9 / (ms / 1e3).max(1e-12);
+            let ratio = v1_bytes as f64 / bytes as f64;
+            println!(
+                "codec/{name:<20} {bytes:>8} B/upload  ratio {ratio:>5.2}x  \
+                 enc {:>7.2} GB/s  dec {:>7.2} GB/s",
+                gbps(enc.median_ms),
+                gbps(dec.median_ms)
+            );
+            rows.push(Json::obj(vec![
+                ("name", Json::str(name.as_str())),
+                ("bytes_per_upload", Json::num(bytes as f64)),
+                ("v1_bytes_per_upload", Json::num(v1_bytes as f64)),
+                ("ratio", Json::num(ratio)),
+                ("encode_ms", Json::num(enc.median_ms)),
+                ("decode_ms", Json::num(dec.median_ms)),
+                ("encode_gbps_v1eq", Json::num(gbps(enc.median_ms))),
+                ("decode_gbps_v1eq", Json::num(gbps(dec.median_ms))),
+            ]));
+            results.push((format!("codec/encode {name}"), enc));
+            results.push((format!("codec/decode {name}"), dec));
+        }
+        println!();
+        rows
+    };
 
     // ---- round-level end-to-end: 20 clients × P≈1M, sequential vs parallel
     // (quick mode shrinks the model and client count to keep CI fast)
@@ -228,10 +328,11 @@ fn main() {
         })
         .collect();
     let doc = Json::obj(vec![
-        ("schema", Json::num(1.0)),
+        ("schema", Json::num(2.0)),
         ("generated", Json::Bool(true)),
         ("quick", Json::Bool(quick)),
         ("host_cores", Json::num(cores as f64)),
+        ("codec", Json::Arr(codec_rows)),
         (
             "round_e2e",
             Json::obj(vec![

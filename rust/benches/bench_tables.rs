@@ -14,19 +14,22 @@
 use fedgmf::compress::{CompressConfig, Compressor, CompressorKind, TauSchedule};
 use fedgmf::coordinator::server::{BroadcastPolicy, FlServer};
 use fedgmf::coordinator::traffic::{TrafficMeter, TrafficPolicy};
+use fedgmf::sparse::codec::{CodecParams, IndexCoding, ValueCoding};
 use fedgmf::sparse::wire;
 use fedgmf::util::rng::Rng;
 use std::time::Instant;
 
 /// One synthetic FL round over pre-generated gradients: compress on every
-/// client, ship, aggregate, broadcast. No model step — pure system cost.
-fn round_cost(
+/// client, ship (through `codec`), aggregate, broadcast. No model step —
+/// pure system cost. Returns (ms/round, total bytes, v1-equivalent bytes).
+fn round_cost_with(
     kind: CompressorKind,
     clients: usize,
     p: usize,
     rate: f64,
     rounds: usize,
-) -> (f64, usize) {
+    codec: CodecParams,
+) -> (f64, usize, usize) {
     let cfg = CompressConfig { tau: TauSchedule::Constant(0.4), ..Default::default() };
     let mut comps: Vec<_> = (0..clients).map(|_| fedgmf::compress::build(kind, &cfg, p)).collect();
     let policy = if kind.server_momentum() {
@@ -43,21 +46,34 @@ fn round_cost(
 
     let t0 = Instant::now();
     let mut payload = fedgmf::sparse::vector::SparseVec::empty(p);
+    let mut buf = Vec::new();
     for round in 0..rounds {
         meter.begin_round();
         for (c, comp) in comps.iter_mut().enumerate() {
             comp.observe_broadcast(&payload);
             let out = comp.compress(&grads[c], k, round);
-            let buf = wire::encode(&out.gradient);
-            meter.record_uplink(c, buf.len());
+            wire::encode_with(&out.gradient, &mut buf, codec);
+            meter.record_uplink(c, buf.len(), wire::encoded_bytes(&out.gradient));
             server.receive(&wire::decode(&buf).unwrap());
         }
         let (pl, _ghat) = server.finish_round(clients);
-        let buf = wire::encode(&pl);
-        meter.record_broadcast(buf.len(), clients);
+        wire::encode_with(&pl, &mut buf, codec);
+        meter.record_broadcast(buf.len(), wire::encoded_bytes(&pl), clients);
         payload = pl;
     }
-    (t0.elapsed().as_secs_f64() * 1e3 / rounds as f64, meter.total())
+    let ms = t0.elapsed().as_secs_f64() * 1e3 / rounds as f64;
+    (ms, meter.total(), meter.total_precodec)
+}
+
+fn round_cost(
+    kind: CompressorKind,
+    clients: usize,
+    p: usize,
+    rate: f64,
+    rounds: usize,
+) -> (f64, usize) {
+    let (ms, bytes, _) = round_cost_with(kind, clients, p, rate, rounds, CodecParams::V1);
+    (ms, bytes)
 }
 
 fn main() {
@@ -92,6 +108,25 @@ fn main() {
             "rate {rate:<4} {:>9.2} ms/round   {:>10.2} KB/round",
             ms,
             bytes as f64 / 6.0 / 1e3
+        );
+    }
+
+    println!("\n-- codec v2: DGCwGMF bytes/round per wire mode (table3 shape, rate 0.1) --");
+    let modes: [(&str, CodecParams); 4] = [
+        ("raw-f32(v1)", CodecParams::V1),
+        ("varint-f32", CodecParams { index: IndexCoding::Varint, value: ValueCoding::F32 }),
+        ("varint-f16", CodecParams { index: IndexCoding::Varint, value: ValueCoding::F16 }),
+        ("varint-q8", CodecParams { index: IndexCoding::Varint, value: ValueCoding::Q8 }),
+    ];
+    for (name, codec) in modes {
+        let (ms, bytes, precodec) =
+            round_cost_with(CompressorKind::DgcWgmf, 20, 77_850, 0.1, 6, codec);
+        println!(
+            "{:<12} {:>9.2} ms/round   {:>10.2} KB/round   ratio {:>5.2}x",
+            name,
+            ms,
+            bytes as f64 / 6.0 / 1e3,
+            precodec as f64 / bytes as f64
         );
     }
 

@@ -25,6 +25,7 @@ use crate::coordinator::round::{FlConfig, LrSchedule};
 use crate::coordinator::sampler::Sampler;
 use crate::coordinator::traffic::TrafficPolicy;
 use crate::sim::scheduler::{ProfilePreset, SelectionPolicy, SimConfig, StalenessPolicy};
+use crate::sparse::codec::{IndexCoding, ValueCoding, WireCodec};
 use anyhow::{anyhow, Result};
 use toml::{get, parse, TomlDoc};
 
@@ -124,6 +125,25 @@ pub struct RunConfig {
     /// time-domain scheduler knobs (TOML `[sim]` — see `docs/config.md`);
     /// the default is inert and preserves schedulerless output bit-exactly
     pub sim: SimConfig,
+    /// per-direction wire codec (TOML `[codec]` — see `docs/wire.md`); the
+    /// default (raw u32 + f32) emits v1 bytes and trajectories bit-exactly
+    pub codec: WireCodec,
+}
+
+/// Read one `[codec]` key through the coding's parser (shared by the
+/// index and value variants — they differ only in the parse fn).
+fn read_codec_key<T>(
+    doc: &TomlDoc,
+    key: &str,
+    parse: fn(&str) -> Option<T>,
+) -> Result<Option<T>> {
+    match get(doc, "codec", key) {
+        None => Ok(None),
+        Some(v) => {
+            let s = v.as_str().ok_or_else(|| anyhow!("codec.{key}: string"))?;
+            parse(s).map(Some).ok_or_else(|| anyhow!("unknown codec.{key} `{s}`"))
+        }
+    }
 }
 
 impl Default for RunConfig {
@@ -156,6 +176,7 @@ impl Default for RunConfig {
             workers: 0,
             exact_mask_overlap: false,
             sim: SimConfig::default(),
+            codec: WireCodec::default(),
         }
     }
 }
@@ -244,6 +265,7 @@ impl RunConfig {
             workers: self.workers,
             exact_mask_overlap: self.exact_mask_overlap,
             sim: self.sim,
+            codec: self.codec,
         }
     }
 
@@ -403,6 +425,30 @@ impl RunConfig {
                 };
             }
         }
+        // [codec] — wire codec v2. `index`/`value` set both directions,
+        // `uplink_*`/`downlink_*` override per direction.
+        {
+            if let Some(ix) = read_codec_key(doc, "index", IndexCoding::parse)? {
+                cfg.codec.uplink.index = ix;
+                cfg.codec.downlink.index = ix;
+            }
+            if let Some(val) = read_codec_key(doc, "value", ValueCoding::parse)? {
+                cfg.codec.uplink.value = val;
+                cfg.codec.downlink.value = val;
+            }
+            if let Some(ix) = read_codec_key(doc, "uplink_index", IndexCoding::parse)? {
+                cfg.codec.uplink.index = ix;
+            }
+            if let Some(val) = read_codec_key(doc, "uplink_value", ValueCoding::parse)? {
+                cfg.codec.uplink.value = val;
+            }
+            if let Some(ix) = read_codec_key(doc, "downlink_index", IndexCoding::parse)? {
+                cfg.codec.downlink.index = ix;
+            }
+            if let Some(val) = read_codec_key(doc, "downlink_value", ValueCoding::parse)? {
+                cfg.codec.downlink.value = val;
+            }
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -445,6 +491,13 @@ impl RunConfig {
                 self.sim.compute_s,
                 self.sim.staleness.name(),
                 self.sim.selection.name()
+            ));
+        }
+        if !self.codec.is_v1() {
+            s.push_str(&format!(
+                " | codec: up={} down={}",
+                self.codec.uplink.describe(),
+                self.codec.downlink.describe()
             ));
         }
         s
@@ -643,6 +696,53 @@ selection_beta = 0.8
             RunConfig::from_toml_str("[sim]\nprofile = \"heterogeneous\"\nslow_every = 0\n", &[])
                 .is_err()
         );
+    }
+
+    #[test]
+    fn codec_section_from_toml() {
+        // default: inert (v1) in both directions
+        let plain = RunConfig::from_toml_str("", &[]).unwrap();
+        assert!(plain.codec.is_v1());
+        assert!(!plain.describe().contains("codec"));
+        // both directions via index/value
+        let cfg = RunConfig::from_toml_str(
+            "[codec]\nindex = \"varint\"\nvalue = \"f16\"\n",
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.codec.uplink.index, IndexCoding::Varint);
+        assert_eq!(cfg.codec.uplink.value, ValueCoding::F16);
+        assert_eq!(cfg.codec.downlink, cfg.codec.uplink);
+        assert_eq!(cfg.fl_config().codec, cfg.codec);
+        assert!(cfg.describe().contains("codec: up=varint+f16 down=varint+f16"));
+        // per-direction overrides win over the shared keys
+        let mixed = RunConfig::from_toml_str(
+            r#"
+[codec]
+index = "varint"
+value = "q8"
+downlink_value = "f32"
+uplink_index = "raw"
+"#,
+            &[],
+        )
+        .unwrap();
+        assert_eq!(mixed.codec.uplink.index, IndexCoding::Raw);
+        assert_eq!(mixed.codec.uplink.value, ValueCoding::Q8);
+        assert_eq!(mixed.codec.downlink.index, IndexCoding::Varint);
+        assert_eq!(mixed.codec.downlink.value, ValueCoding::F32);
+        // --set override path
+        let ov = RunConfig::from_toml_str("", &["codec.index=\"varint\"".to_string()]).unwrap();
+        assert_eq!(ov.codec.uplink.index, IndexCoding::Varint);
+        assert_eq!(ov.codec.uplink.value, ValueCoding::F32);
+    }
+
+    #[test]
+    fn codec_section_rejects_bad_values() {
+        assert!(RunConfig::from_toml_str("[codec]\nindex = \"nope\"\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[codec]\nvalue = \"f8\"\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[codec]\nuplink_value = 3\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[codec]\ndownlink_index = true\n", &[]).is_err());
     }
 
     #[test]

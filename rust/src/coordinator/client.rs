@@ -9,6 +9,20 @@
 //! after the first round a client round performs no heap allocation for
 //! gradient accumulation, compression output or wire encode/decode.
 //!
+//! ## Wire codec + quantisation error feedback
+//!
+//! The upload is serialised through the run's uplink [`CodecParams`]. Under
+//! a lossy value coding (f16/q8) the bytes on the wire carry `Q(upload)`,
+//! not `upload` — so immediately after the encode/decode round-trip the
+//! client folds the quantisation error `upload − echo` back into the
+//! compressor residual V ([`Compressor::restore_upload`]). From that point
+//! on the *in-flight* mass is exactly `echo` (what the server will see):
+//! a deadline miss or dropout restores `echo`, not `upload`, and the
+//! DGC/GMC/GMF error-feedback invariant — nothing the client computed is
+//! ever lost — holds bit-for-bit at every codec setting. Under the default
+//! f32 coding the round-trip is exact (`echo == upload`), no error is
+//! restored, and behaviour is byte- and bit-identical to codec v1.
+//!
 //! All per-round state is exclusively per-client, which is what lets the
 //! coordinator fan `local_round` calls out over worker threads with results
 //! bit-identical to sequential execution.
@@ -16,6 +30,7 @@
 use crate::compress::Compressor;
 use crate::data::dataset::{Batch, Dataset};
 use crate::runtime::TrainEngine;
+use crate::sparse::codec::CodecParams;
 use crate::sparse::vector::SparseVec;
 use crate::sparse::wire;
 use crate::util::rng::Rng;
@@ -25,6 +40,8 @@ pub struct FlClient {
     pub compressor: Box<dyn Compressor>,
     pub shard: Box<dyn Dataset + Send>,
     pub rng: Rng,
+    /// uplink wire codec for this run
+    codec: CodecParams,
     /// local-gradient accumulator, zeroed and refilled each round
     grad_acc: Vec<f32>,
     /// compressed upload, reused round over round (capacity kept)
@@ -33,6 +50,11 @@ pub struct FlClient {
     pub wire_buf: Vec<u8>,
     /// the upload decoded back, i.e. the gradient as the server sees it
     pub echo: SparseVec,
+    /// v1-equivalent (raw u32 + f32) bytes of the last upload — the
+    /// pre-codec size the traffic meter reports byte reduction against
+    pub precodec_bytes: usize,
+    /// quantisation error (`upload − echo`) scratch, reused across rounds
+    quant_err: SparseVec,
 }
 
 impl FlClient {
@@ -42,16 +64,20 @@ impl FlClient {
         shard: Box<dyn Dataset + Send>,
         root_rng: &Rng,
         dim: usize,
+        codec: CodecParams,
     ) -> Self {
         FlClient {
             id,
             compressor,
             shard,
             rng: root_rng.derive(0xC11E ^ id as u64),
+            codec,
             grad_acc: vec![0.0; dim],
             upload: SparseVec::empty(dim),
             wire_buf: Vec::new(),
             echo: SparseVec::empty(dim),
+            precodec_bytes: 0,
+            quant_err: SparseVec::empty(dim),
         }
     }
 
@@ -62,24 +88,40 @@ impl FlClient {
     }
 
     /// The server never saw this round's upload (deadline miss or hard
-    /// dropout): fold the extracted values back into the compressor's
+    /// dropout): fold the in-flight values back into the compressor's
     /// residual so the mass re-enters a later round's top-k selection.
+    /// Under a lossy value coding the in-flight mass is `echo` (the
+    /// quantisation error `upload − echo` was already restored at compress
+    /// time); under exact f32 coding it is `upload`, byte-for-byte the
+    /// pre-codec behaviour.
     pub fn restore_dropped_upload(&mut self) {
-        self.compressor.restore_upload(&self.upload);
+        if self.codec.lossy() {
+            self.compressor.restore_upload(&self.echo);
+        } else {
+            self.compressor.restore_upload(&self.upload);
+        }
     }
 
     /// Carry-discount restore: the server buffered this round's late upload
     /// and will apply `α` of it next round, so only the unapplied
-    /// `scale = 1 − α` fraction returns to the residual — together the two
-    /// halves conserve the upload's gradient mass exactly.
+    /// `scale = 1 − α` fraction of the in-flight mass returns to the
+    /// residual — together the two halves conserve the upload's gradient
+    /// mass exactly (the server aggregates `echo`, so the in-flight mass is
+    /// `echo` under lossy codings, `upload` under exact f32).
     pub fn restore_dropped_upload_scaled(&mut self, scale: f32) {
-        self.compressor.restore_upload_scaled(&self.upload, scale);
+        if self.codec.lossy() {
+            self.compressor.restore_upload_scaled(&self.echo, scale);
+        } else {
+            self.compressor.restore_upload_scaled(&self.upload, scale);
+        }
     }
 
     /// One local round, entirely into the persistent buffers: compute the
     /// local gradient at the current global parameters (averaged over
-    /// `local_steps` minibatches), compress it into `upload`, serialise into
-    /// `wire_buf` and decode into `echo`.
+    /// `local_steps` minibatches), compress it into `upload`, serialise
+    /// through the uplink codec into `wire_buf`, decode into `echo`, and —
+    /// under a lossy value coding — restore the quantisation error into
+    /// the compressor residual.
     ///
     /// Returns (mean training loss, #correct, #seen).
     pub fn local_round(
@@ -113,9 +155,16 @@ impl FlClient {
             }
         }
         let _threshold = self.compressor.compress_into(&self.grad_acc, k, round, &mut self.upload);
-        wire::encode_into(&self.upload, &mut self.wire_buf);
+        self.precodec_bytes = wire::encoded_bytes(&self.upload);
+        wire::encode_with(&self.upload, &mut self.wire_buf, self.codec);
         wire::decode_into(&self.wire_buf, &mut self.echo)
             .expect("self-encoded gradient must decode");
+        if self.codec.lossy() {
+            // error feedback absorbs the wire's quantisation error: what the
+            // encoder rounded away re-enters a later round's top-k selection
+            self.upload.diff_into(&self.echo, &mut self.quant_err);
+            self.compressor.restore_upload(&self.quant_err);
+        }
         Ok((loss_sum / steps as f64, correct, seen))
     }
 }

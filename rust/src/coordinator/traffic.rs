@@ -13,6 +13,12 @@
 //! is *carried* instead of wasted: its bytes count toward every uplink
 //! total but join `round_uplinks` in no round — the update enters the next
 //! round's aggregate from the server's stale queue, not this one's.
+//!
+//! Codec v2 adds a *pre-codec* ledger: every record call takes both the
+//! actual buffer length and the v1-equivalent (raw u32 + f32) size of the
+//! same payload (`wire::encoded_bytes`), so per-round and cumulative byte
+//! reduction ratios are exact. Under the default codec the two ledgers are
+//! equal and the ratio is 1.
 
 /// Accounting policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -43,6 +49,10 @@ pub struct TrafficMeter {
     /// straggler bytes discarded by the deadline this round / overall
     pub round_wasted_uplink: usize,
     pub total_wasted_uplink: usize,
+    /// v1-equivalent bytes of everything that crossed a link this round /
+    /// overall (uplink incl. wasted and carried, plus the broadcast)
+    pub round_precodec: usize,
+    pub total_precodec: usize,
     /// cumulative uplink bytes per client id (grown on first use)
     pub per_client_uplink: Vec<usize>,
 }
@@ -56,6 +66,7 @@ impl TrafficMeter {
         self.round_uplink = 0;
         self.round_downlink = 0;
         self.round_wasted_uplink = 0;
+        self.round_precodec = 0;
         self.round_uplinks.clear();
     }
 
@@ -66,12 +77,19 @@ impl TrafficMeter {
         self.per_client_uplink[client] += bytes;
     }
 
-    /// An upload the server accepted into the aggregate.
-    pub fn record_uplink(&mut self, client: usize, bytes: usize) {
+    fn bump_precodec(&mut self, precodec_bytes: usize) {
+        self.round_precodec += precodec_bytes;
+        self.total_precodec += precodec_bytes;
+    }
+
+    /// An upload the server accepted into the aggregate. `bytes` is the
+    /// wire buffer length, `precodec_bytes` its v1-equivalent size.
+    pub fn record_uplink(&mut self, client: usize, bytes: usize, precodec_bytes: usize) {
         self.round_uplink += bytes;
         self.total_uplink += bytes;
         self.round_uplinks.push((client, bytes));
         self.bump_client(client, bytes);
+        self.bump_precodec(precodec_bytes);
     }
 
     /// An upload that crossed the wire after the deadline and was buffered
@@ -79,28 +97,53 @@ impl TrafficMeter {
     /// count toward all uplink totals — they were spent and will be used —
     /// but not toward `round_uplinks`, which lists only uploads that entered
     /// this round's aggregate, and not toward the wasted counters.
-    pub fn record_carried_uplink(&mut self, client: usize, bytes: usize) {
+    pub fn record_carried_uplink(&mut self, client: usize, bytes: usize, precodec_bytes: usize) {
         self.round_uplink += bytes;
         self.total_uplink += bytes;
         self.bump_client(client, bytes);
+        self.bump_precodec(precodec_bytes);
     }
 
     /// An upload that crossed the wire but missed the round deadline: it
     /// counts toward the uplink totals (the bytes were spent) and toward the
     /// wasted counters (the server discarded them), but not toward
     /// `round_uplinks` — it never reached the aggregate.
-    pub fn record_wasted_uplink(&mut self, client: usize, bytes: usize) {
+    pub fn record_wasted_uplink(&mut self, client: usize, bytes: usize, precodec_bytes: usize) {
         self.round_uplink += bytes;
         self.total_uplink += bytes;
         self.round_wasted_uplink += bytes;
         self.total_wasted_uplink += bytes;
         self.bump_client(client, bytes);
+        self.bump_precodec(precodec_bytes);
     }
 
-    pub fn record_broadcast(&mut self, bytes: usize, participants: usize) {
-        let effective = if self.policy.downlink_per_client { bytes * participants } else { bytes };
-        self.round_downlink += effective;
-        self.total_downlink += effective;
+    pub fn record_broadcast(&mut self, bytes: usize, precodec_bytes: usize, participants: usize) {
+        let mult = if self.policy.downlink_per_client { participants } else { 1 };
+        self.round_downlink += bytes * mult;
+        self.total_downlink += bytes * mult;
+        self.bump_precodec(precodec_bytes * mult);
+    }
+
+    /// Pre-codec over post-codec bytes for the round — the codec's byte
+    /// reduction factor (1 under the default codec, > 1 when v2 coding
+    /// shrinks the wire). 1 when nothing crossed the wire.
+    pub fn round_codec_ratio(&self) -> f64 {
+        let actual = self.round_uplink + self.round_downlink;
+        if actual == 0 {
+            1.0
+        } else {
+            self.round_precodec as f64 / actual as f64
+        }
+    }
+
+    /// Whole-run pre-codec over post-codec byte ratio.
+    pub fn total_codec_ratio(&self) -> f64 {
+        let actual = self.total();
+        if actual == 0 {
+            1.0
+        } else {
+            self.total_precodec as f64 / actual as f64
+        }
     }
 
     /// Cumulative uplink bytes attributed to `client`.
@@ -155,13 +198,13 @@ mod tests {
     fn accumulates_across_rounds() {
         let mut m = TrafficMeter::new(TrafficPolicy::default());
         m.begin_round();
-        m.record_uplink(0, 100);
-        m.record_uplink(1, 150);
-        m.record_broadcast(80, 2);
+        m.record_uplink(0, 100, 100);
+        m.record_uplink(1, 150, 150);
+        m.record_broadcast(80, 80, 2);
         assert_eq!(m.round_uplink, 250);
         assert_eq!(m.round_downlink, 80);
         m.begin_round();
-        m.record_uplink(0, 10);
+        m.record_uplink(0, 10, 10);
         assert_eq!(m.round_uplink, 10);
         assert_eq!(m.total_uplink, 260);
         assert_eq!(m.total(), 340);
@@ -171,15 +214,16 @@ mod tests {
     fn per_client_downlink_multiplies() {
         let mut m = TrafficMeter::new(TrafficPolicy { downlink_per_client: true });
         m.begin_round();
-        m.record_broadcast(100, 5);
+        m.record_broadcast(100, 130, 5);
         assert_eq!(m.round_downlink, 500);
+        assert_eq!(m.round_precodec, 650, "precodec multiplies like the actual bytes");
     }
 
     #[test]
     fn uplinks_listed_for_simulator() {
         let mut m = TrafficMeter::new(TrafficPolicy::default());
         m.begin_round();
-        m.record_uplink(3, 42);
+        m.record_uplink(3, 42, 42);
         assert_eq!(m.round_uplinks, vec![(3, 42)]);
     }
 
@@ -187,8 +231,8 @@ mod tests {
     fn wasted_uplink_counts_toward_totals_but_not_aggregate_list() {
         let mut m = TrafficMeter::new(TrafficPolicy::default());
         m.begin_round();
-        m.record_uplink(0, 100);
-        m.record_wasted_uplink(1, 70);
+        m.record_uplink(0, 100, 100);
+        m.record_wasted_uplink(1, 70, 70);
         assert_eq!(m.round_uplink, 170, "wasted bytes crossed the wire");
         assert_eq!(m.round_wasted_uplink, 70);
         assert_eq!(m.round_uplinks, vec![(0, 100)], "discarded upload never aggregated");
@@ -202,8 +246,8 @@ mod tests {
     fn carried_uplink_counts_toward_totals_but_not_round_list_or_waste() {
         let mut m = TrafficMeter::new(TrafficPolicy::default());
         m.begin_round();
-        m.record_uplink(0, 100);
-        m.record_carried_uplink(1, 70);
+        m.record_uplink(0, 100, 100);
+        m.record_carried_uplink(1, 70, 70);
         assert_eq!(m.round_uplink, 170, "carried bytes crossed the wire");
         assert_eq!(m.round_wasted_uplink, 0, "carried bytes are not wasted");
         assert_eq!(m.round_uplinks, vec![(0, 100)], "carried upload enters a later aggregate");
@@ -212,20 +256,44 @@ mod tests {
     }
 
     #[test]
+    fn precodec_ledger_and_ratio() {
+        let mut m = TrafficMeter::new(TrafficPolicy::default());
+        assert_eq!(m.round_codec_ratio(), 1.0, "no traffic reads as ratio 1");
+        assert_eq!(m.total_codec_ratio(), 1.0);
+        m.begin_round();
+        // 3 uploads shrunk 2× by the codec (incl. a wasted and a carried
+        // one — every transmitted byte counts), broadcast shrunk 1.5×
+        m.record_uplink(0, 50, 100);
+        m.record_wasted_uplink(1, 50, 100);
+        m.record_carried_uplink(2, 50, 100);
+        m.record_broadcast(100, 150, 3);
+        assert_eq!(m.round_precodec, 450);
+        let want = 450.0 / 250.0;
+        assert!((m.round_codec_ratio() - want).abs() < 1e-12);
+        m.begin_round();
+        assert_eq!(m.round_precodec, 0, "round ledger resets");
+        assert_eq!(m.total_precodec, 450, "run ledger accumulates");
+        m.record_uplink(0, 25, 25); // default-codec round: ratio contribution 1
+        assert_eq!(m.round_codec_ratio(), 1.0);
+        let total_want = 475.0 / 275.0;
+        assert!((m.total_codec_ratio() - total_want).abs() < 1e-12);
+    }
+
+    #[test]
     fn uplink_gini_bounds_and_ordering() {
         let mut m = TrafficMeter::new(TrafficPolicy::default());
         let mut scratch = Vec::new();
         assert_eq!(m.uplink_gini(4, &mut scratch), 0.0, "no traffic → perfectly equal");
         m.begin_round();
-        m.record_uplink(0, 100);
-        m.record_uplink(1, 100);
-        m.record_uplink(2, 100);
-        m.record_uplink(3, 100);
+        m.record_uplink(0, 100, 100);
+        m.record_uplink(1, 100, 100);
+        m.record_uplink(2, 100, 100);
+        m.record_uplink(3, 100, 100);
         assert!(m.uplink_gini(4, &mut scratch).abs() < 1e-12, "equal spend → 0");
         // one client pays for everyone → close to the n-client maximum
         let mut skew = TrafficMeter::new(TrafficPolicy::default());
         skew.begin_round();
-        skew.record_uplink(0, 1000);
+        skew.record_uplink(0, 1000, 1000);
         let g = skew.uplink_gini(4, &mut scratch);
         assert!((g - 0.75).abs() < 1e-12, "max Gini for n=4 is (n-1)/n, got {g}");
         // unseen clients count as zero spend
@@ -237,10 +305,10 @@ mod tests {
     fn per_client_totals_accumulate() {
         let mut m = TrafficMeter::new(TrafficPolicy::default());
         m.begin_round();
-        m.record_uplink(2, 40);
-        m.record_wasted_uplink(5, 9);
+        m.record_uplink(2, 40, 40);
+        m.record_wasted_uplink(5, 9, 9);
         m.begin_round();
-        m.record_uplink(2, 60);
+        m.record_uplink(2, 60, 60);
         assert_eq!(m.client_uplink(2), 100);
         assert_eq!(m.client_uplink(5), 9);
         assert_eq!(m.client_uplink(7), 0, "never-seen client reads zero");

@@ -175,6 +175,12 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
             );
         }
     }
+    if !cfg.codec.is_v1() {
+        println!(
+            "codec: {:.4} GB on the wire vs {:.4} GB v1-equivalent ({:.2}x reduction)",
+            summary.total_traffic_gb, summary.precodec_gb, summary.codec_ratio
+        );
+    }
     let curve = out_dir.join(format!("{}.csv", summary.technique));
     summary.recorder.write_csv(&curve)?;
     std::fs::write(out_dir.join("summary.json"), summary.recorder.summary_json().to_pretty())?;

@@ -48,6 +48,15 @@ pub struct RoundRecord {
     /// round — the selection-fairness statistic (0 = equal spend across the
     /// fleet, → 1 = one client pays for everyone)
     pub traffic_gini: f64,
+    /// v1-equivalent (raw u32 index + f32 value) bytes of everything that
+    /// crossed the wire this round — what the round would have cost before
+    /// codec v2 (equals `uplink_bytes + downlink_bytes` under the default
+    /// codec)
+    pub precodec_bytes: usize,
+    /// `precodec_bytes / (uplink_bytes + downlink_bytes)` — the wire
+    /// codec's byte reduction factor for the round (1 under the default
+    /// codec; 1 when nothing crossed the wire)
+    pub codec_ratio: f64,
 }
 
 /// Accumulates rounds; produces summaries and files.
@@ -103,6 +112,21 @@ impl Recorder {
         self.rounds.iter().map(|r| r.carried_bytes).sum()
     }
 
+    /// Whole-run v1-equivalent bytes (pre-codec ledger).
+    pub fn total_precodec_bytes(&self) -> usize {
+        self.rounds.iter().map(|r| r.precodec_bytes).sum()
+    }
+
+    /// Whole-run pre-codec over post-codec byte ratio (1 when no traffic).
+    pub fn overall_codec_ratio(&self) -> f64 {
+        let actual = self.total_traffic();
+        if actual == 0 {
+            1.0
+        } else {
+            self.total_precodec_bytes() as f64 / actual as f64
+        }
+    }
+
     /// Last evaluated accuracy at or before the simulated-seconds `budget`
     /// (by the round clock); 0 when nothing was evaluated in time.
     pub fn accuracy_at_sim_seconds(&self, budget: f64) -> f64 {
@@ -138,11 +162,12 @@ impl Recorder {
             "round,train_loss,test_loss,test_accuracy,uplink_bytes,downlink_bytes,\
              aggregate_nnz,mask_overlap,sim_seconds,wall_seconds,selected,dropped_deadline,\
              dropped_offline,sim_clock,wasted_uplink_bytes,carried_in,carried_bytes,\
-             traffic_gini\n",
+             traffic_gini,precodec_bytes,codec_ratio\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{:.6},{:.6},{:.6},{},{},{},{:.6},{:.6},{:.6},{},{},{},{:.6},{},{},{},{:.6}\n",
+                "{},{:.6},{:.6},{:.6},{},{},{},{:.6},{:.6},{:.6},{},{},{},{:.6},{},{},{},\
+                 {:.6},{},{:.6}\n",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -160,7 +185,9 @@ impl Recorder {
                 r.wasted_uplink_bytes,
                 r.carried_in,
                 r.carried_bytes,
-                r.traffic_gini
+                r.traffic_gini,
+                r.precodec_bytes,
+                r.codec_ratio
             ));
         }
         out
@@ -183,6 +210,8 @@ impl Recorder {
                 "final_traffic_gini",
                 Json::num(self.rounds.last().map(|r| r.traffic_gini).unwrap_or(0.0)),
             ),
+            ("total_precodec_bytes", Json::num(self.total_precodec_bytes() as f64)),
+            ("overall_codec_ratio", Json::num(self.overall_codec_ratio())),
         ])
     }
 
@@ -281,11 +310,10 @@ mod tests {
         assert_eq!(r.accuracy_at_sim_seconds(2.5), 0.2, "round 1 had no eval");
         assert_eq!(r.accuracy_at_sim_seconds(10.0), 0.6);
         let csv = r.to_csv();
-        assert!(csv
-            .lines()
-            .next()
-            .unwrap()
-            .ends_with("sim_clock,wasted_uplink_bytes,carried_in,carried_bytes,traffic_gini"));
+        assert!(csv.lines().next().unwrap().ends_with(
+            "sim_clock,wasted_uplink_bytes,carried_in,carried_bytes,traffic_gini,\
+             precodec_bytes,codec_ratio"
+        ));
     }
 
     #[test]
@@ -303,5 +331,29 @@ mod tests {
         let j = r.summary_json();
         assert_eq!(j.get("total_carried_in").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("final_traffic_gini").unwrap().as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn precodec_totals_and_ratio() {
+        let mut r = Recorder::new();
+        assert_eq!(r.overall_codec_ratio(), 1.0, "no traffic → ratio 1");
+        r.push(RoundRecord {
+            uplink_bytes: 60,
+            downlink_bytes: 40,
+            precodec_bytes: 250,
+            codec_ratio: 2.5,
+            ..Default::default()
+        });
+        r.push(RoundRecord {
+            uplink_bytes: 100,
+            precodec_bytes: 100,
+            codec_ratio: 1.0,
+            ..Default::default()
+        });
+        assert_eq!(r.total_precodec_bytes(), 350);
+        assert!((r.overall_codec_ratio() - 1.75).abs() < 1e-12);
+        let j = r.summary_json();
+        assert_eq!(j.get("total_precodec_bytes").unwrap().as_usize(), Some(350));
+        assert_eq!(j.get("overall_codec_ratio").unwrap().as_f64(), Some(1.75));
     }
 }

@@ -1,0 +1,942 @@
+//! Wire codec v2 — delta-varint indices, bitmap containers, quantised
+//! payloads. Full byte-level specification in `docs/wire.md`.
+//!
+//! The v1 format (`wire.rs`) spends 8 bytes per sparse coordinate (raw u32
+//! index + f32 value). For the sorted top-k supports and momentum-corrected
+//! gradients this system actually ships, that leaves a 2–4× byte reduction
+//! on the table; codec v2 takes it along three independent axes:
+//!
+//! * **Index coding** — [`IndexCoding::Varint`] stores the *gaps* of the
+//!   sorted-unique index stream as LEB128 varints (first gap = first index,
+//!   later gaps = difference to the previous index, always ≥ 1). At keep
+//!   rate 0.1 the mean gap is ~10, so almost every index costs 1 byte
+//!   instead of 4. When a pathological gap distribution would make the
+//!   varint stream larger than raw u32s, the encoder falls back to raw for
+//!   that buffer — the header records which coding actually shipped.
+//! * **Container selection** — the encoder picks the smallest of three
+//!   self-describing containers: *sparse* (index stream + values), *bitmap*
+//!   (`ceil(dim/8)`-byte presence bitmap + packed values — wins at mid
+//!   density, where indices dominate sparse but zeros dominate dense) and
+//!   *dense* (all `dim` values). Ties break sparse ≺ bitmap ≺ dense.
+//! * **Value coding** — [`ValueCoding::F32`] (exact), [`ValueCoding::F16`]
+//!   (IEEE 754 half, round-to-nearest-even, overflow saturates to ±65504),
+//!   or [`ValueCoding::Q8`] (blocks of [`Q8_BLOCK`] values, one f32 scale =
+//!   maxabs/127 per block + one int8 per value). Lossy codings rely on the
+//!   caller restoring `upload − decode(encode(upload))` into the client
+//!   residual (`Compressor::restore_upload`), so DGC/GMC/GMF error feedback
+//!   absorbs the quantisation error — see `coordinator::client`.
+//!
+//! The default [`CodecParams`] (raw + f32) never reaches this module:
+//! `wire::encode_with` routes it to the v1 encoder, keeping default-config
+//! buffers byte-identical to v1. Decoding is always self-describing — a
+//! receiver needs no configuration to decode either version.
+//!
+//! Values are encoded in support order; sparse and bitmap containers keep
+//! explicit entries whose value quantises to exactly 0 (support is
+//! preserved), while the dense container drops zeros on decode like v1.
+
+use super::vector::SparseVec;
+use super::wire::{WireError, MAGIC};
+
+/// Kind byte marking a v2-coded buffer (v1 uses 0 = sparse, 1 = dense).
+pub const KIND_V2: u8 = 2;
+
+/// v2 header: magic u32, kind u8, container u8, index u8, value u8, dim u32.
+pub const V2_HEADER_BYTES: usize = 12;
+
+/// Values per q8 block — one f32 scale each, ~1.6 % overhead.
+pub const Q8_BLOCK: usize = 256;
+
+/// Container byte values (buffer offset 5).
+pub const CONTAINER_SPARSE: u8 = 0;
+pub const CONTAINER_BITMAP: u8 = 1;
+pub const CONTAINER_DENSE: u8 = 2;
+
+/// How the sparse container's index stream is coded.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum IndexCoding {
+    /// Raw little-endian u32 per index (v1-compatible cost: 4 bytes each).
+    #[default]
+    Raw,
+    /// LEB128 varints over the gaps of the sorted-unique index stream.
+    Varint,
+}
+
+impl IndexCoding {
+    pub fn parse(s: &str) -> Option<IndexCoding> {
+        match s.to_ascii_lowercase().as_str() {
+            "raw" | "u32" => Some(IndexCoding::Raw),
+            "varint" | "delta-varint" | "delta_varint" | "leb128" => Some(IndexCoding::Varint),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            IndexCoding::Raw => "raw",
+            IndexCoding::Varint => "varint",
+        }
+    }
+
+    fn byte(self) -> u8 {
+        match self {
+            IndexCoding::Raw => 0,
+            IndexCoding::Varint => 1,
+        }
+    }
+
+    fn from_byte(b: u8) -> Result<IndexCoding, WireError> {
+        match b {
+            0 => Ok(IndexCoding::Raw),
+            1 => Ok(IndexCoding::Varint),
+            b => Err(WireError::BadCoding(b)),
+        }
+    }
+}
+
+/// How the value stream is coded.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ValueCoding {
+    /// Exact little-endian f32 (v1-compatible cost: 4 bytes each).
+    #[default]
+    F32,
+    /// IEEE 754 binary16, round-to-nearest-even, saturating at ±65504.
+    F16,
+    /// Blockwise int8: per [`Q8_BLOCK`] values one f32 scale (maxabs/127)
+    /// followed by one signed byte per value.
+    Q8,
+}
+
+impl ValueCoding {
+    pub fn parse(s: &str) -> Option<ValueCoding> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "float" => Some(ValueCoding::F32),
+            "f16" | "half" => Some(ValueCoding::F16),
+            "q8" | "int8" => Some(ValueCoding::Q8),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ValueCoding::F32 => "f32",
+            ValueCoding::F16 => "f16",
+            ValueCoding::Q8 => "q8",
+        }
+    }
+
+    fn byte(self) -> u8 {
+        match self {
+            ValueCoding::F32 => 0,
+            ValueCoding::F16 => 1,
+            ValueCoding::Q8 => 2,
+        }
+    }
+
+    fn from_byte(b: u8) -> Result<ValueCoding, WireError> {
+        match b {
+            0 => Ok(ValueCoding::F32),
+            1 => Ok(ValueCoding::F16),
+            2 => Ok(ValueCoding::Q8),
+            b => Err(WireError::BadCoding(b)),
+        }
+    }
+}
+
+/// Codec selection for one direction (one buffer family).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct CodecParams {
+    pub index: IndexCoding,
+    pub value: ValueCoding,
+}
+
+impl CodecParams {
+    /// The v1-compatible default: raw u32 indices, f32 values.
+    pub const V1: CodecParams = CodecParams { index: IndexCoding::Raw, value: ValueCoding::F32 };
+
+    /// Whether these params emit the v1 byte layout (the default config).
+    pub fn is_v1(&self) -> bool {
+        *self == CodecParams::V1
+    }
+
+    /// Whether the value coding loses precision (quantisation error must be
+    /// fed back into the client residual).
+    pub fn lossy(&self) -> bool {
+        self.value != ValueCoding::F32
+    }
+
+    pub fn describe(&self) -> String {
+        format!("{}+{}", self.index.name(), self.value.name())
+    }
+}
+
+/// Per-direction codec configuration for a run (TOML `[codec]`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct WireCodec {
+    pub uplink: CodecParams,
+    pub downlink: CodecParams,
+}
+
+impl WireCodec {
+    pub fn is_v1(&self) -> bool {
+        self.uplink.is_v1() && self.downlink.is_v1()
+    }
+}
+
+// ---------------------------------------------------------------- f16 / q8
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even. Out-of-range
+/// magnitudes saturate to ±65504 (the largest finite half) and NaN maps to
+/// 0 — gradient payloads are finite by contract, and saturation keeps the
+/// error-feedback residual finite even if one slips through.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // NaN → 0 (finite-payload contract), ±Inf saturates
+        return if man != 0 { 0 } else { sign | 0x7BFF };
+    }
+    let e = exp - 127 + 15;
+    if e >= 31 {
+        return sign | 0x7BFF; // saturate to ±65504
+    }
+    if e <= 0 {
+        // subnormal half (or underflow to zero)
+        if e < -10 {
+            return sign;
+        }
+        let man = man | 0x0080_0000; // implicit leading bit
+        let shift = (14 - e) as u32; // 14..=24
+        let half = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let round_up = rem > halfway || (rem == halfway && (half & 1) == 1);
+        // a round-up carry lands exactly on the smallest normal (0x0400)
+        return sign | (half + round_up as u32) as u16;
+    }
+    let half = ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1FFF;
+    let round_up = rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1);
+    let rounded = half + round_up as u32;
+    if rounded >= 0x7C00 {
+        return sign | 0x7BFF; // carry overflowed the exponent: saturate
+    }
+    sign | rounded as u16
+}
+
+/// IEEE 754 binary16 bits → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // subnormal half: man · 2⁻²⁴ — normalise into f32
+            let p = 31 - man.leading_zeros(); // msb position, 0..=9
+            let r = man & !(1u32 << p);
+            sign | ((103 + p) << 23) | (r << (23 - p))
+        }
+    } else if exp == 31 {
+        sign | 0x7F80_0000 | (man << 13) // ±Inf / NaN (never encoded)
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ----------------------------------------------------------------- varints
+
+#[inline]
+fn varint_len(mut x: u32) -> usize {
+    let mut n = 1;
+    while x >= 0x80 {
+        x >>= 7;
+        n += 1;
+    }
+    n
+}
+
+#[inline]
+fn push_varint(out: &mut Vec<u8>, mut x: u32) {
+    while x >= 0x80 {
+        out.push((x as u8 & 0x7F) | 0x80);
+        x >>= 7;
+    }
+    out.push(x as u8);
+}
+
+#[inline]
+fn read_varint(buf: &[u8], pos: &mut usize) -> Result<u32, WireError> {
+    let mut x: u32 = 0;
+    let mut shift = 0u32;
+    loop {
+        let Some(&b) = buf.get(*pos) else {
+            return Err(WireError::Truncated(buf.len()));
+        };
+        *pos += 1;
+        let low = (b & 0x7F) as u32;
+        if shift == 28 && low > 0x0F {
+            return Err(WireError::BadVarint(*pos - 1));
+        }
+        x |= low << shift;
+        if b & 0x80 == 0 {
+            return Ok(x);
+        }
+        shift += 7;
+        if shift > 28 {
+            return Err(WireError::BadVarint(*pos - 1));
+        }
+    }
+}
+
+/// Exact bytes of the delta-varint coding of a sorted-unique index stream.
+fn varint_index_bytes(indices: &[u32]) -> usize {
+    let mut total = 0;
+    let mut prev = 0u32;
+    let mut first = true;
+    for &i in indices {
+        let gap = if first {
+            first = false;
+            i
+        } else {
+            i - prev
+        };
+        total += varint_len(gap);
+        prev = i;
+    }
+    total
+}
+
+// ------------------------------------------------------------ value stream
+
+/// Exact byte size of the value stream for `n` values under `coding`.
+pub fn value_stream_bytes(coding: ValueCoding, n: usize) -> usize {
+    match coding {
+        ValueCoding::F32 => 4 * n,
+        ValueCoding::F16 => 2 * n,
+        ValueCoding::Q8 => n + 4 * n.div_ceil(Q8_BLOCK),
+    }
+}
+
+fn push_values(out: &mut Vec<u8>, coding: ValueCoding, values: &[f32]) {
+    match coding {
+        ValueCoding::F32 => {
+            for &v in values {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        ValueCoding::F16 => {
+            for &v in values {
+                out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+            }
+        }
+        ValueCoding::Q8 => {
+            for block in values.chunks(Q8_BLOCK) {
+                let maxabs = block.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 0.0 };
+                out.extend_from_slice(&scale.to_le_bytes());
+                if scale > 0.0 {
+                    let inv = 127.0 / maxabs;
+                    for &v in block {
+                        // saturating float→int cast: NaN → 0, out-of-range
+                        // clamps — quantised code stays in [-127, 127]
+                        out.push((v * inv).round().clamp(-127.0, 127.0) as i8 as u8);
+                    }
+                } else {
+                    out.resize(out.len() + block.len(), 0);
+                }
+            }
+        }
+    }
+}
+
+fn read_values(
+    buf: &[u8],
+    pos: &mut usize,
+    coding: ValueCoding,
+    n: usize,
+    out: &mut Vec<f32>,
+) -> Result<(), WireError> {
+    let need = value_stream_bytes(coding, n);
+    let Some(body) = buf.get(*pos..*pos + need) else {
+        return Err(WireError::Truncated(buf.len()));
+    };
+    *pos += need;
+    match coding {
+        ValueCoding::F32 => {
+            for c in body.chunks_exact(4) {
+                out.push(f32::from_le_bytes(c.try_into().unwrap()));
+            }
+        }
+        ValueCoding::F16 => {
+            for c in body.chunks_exact(2) {
+                out.push(f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())));
+            }
+        }
+        ValueCoding::Q8 => {
+            let mut off = 0usize;
+            let mut left = n;
+            while left > 0 {
+                let take = left.min(Q8_BLOCK);
+                let scale = f32::from_le_bytes(body[off..off + 4].try_into().unwrap());
+                off += 4;
+                for &b in &body[off..off + take] {
+                    out.push((b as i8) as f32 * scale);
+                }
+                off += take;
+                left -= take;
+            }
+        }
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------- encoder
+
+struct Plan {
+    container: u8,
+    index: IndexCoding,
+    exact: usize,
+    /// `reserve()` bound that is stable across rounds at fixed nnz/dim —
+    /// varint sizes wobble a few bytes round to round, and reserving the
+    /// raw-index worst case keeps warm buffers from ever reallocating.
+    bound: usize,
+}
+
+fn plan(sv: &SparseVec, params: CodecParams) -> Plan {
+    let n = sv.nnz();
+    let vb = value_stream_bytes(params.value, n);
+    let raw_idx = 4 * n;
+    // per-buffer fallback: varint never ships when it loses to raw u32s
+    let (index, idx_bytes) = match params.index {
+        IndexCoding::Raw => (IndexCoding::Raw, raw_idx),
+        IndexCoding::Varint => {
+            let var = varint_index_bytes(&sv.indices);
+            if var <= raw_idx {
+                (IndexCoding::Varint, var)
+            } else {
+                (IndexCoding::Raw, raw_idx)
+            }
+        }
+    };
+    let sparse_exact = V2_HEADER_BYTES + 4 + idx_bytes + vb;
+    let sparse_bound = V2_HEADER_BYTES + 4 + raw_idx + vb;
+    let bitmap_exact = V2_HEADER_BYTES + sv.dim.div_ceil(8) + vb;
+    let dense_exact = V2_HEADER_BYTES + value_stream_bytes(params.value, sv.dim);
+    if sparse_exact <= bitmap_exact && sparse_exact <= dense_exact {
+        Plan { container: CONTAINER_SPARSE, index, exact: sparse_exact, bound: sparse_bound }
+    } else if bitmap_exact <= dense_exact {
+        let (exact, bound) = (bitmap_exact, bitmap_exact);
+        Plan { container: CONTAINER_BITMAP, index: IndexCoding::Raw, exact, bound }
+    } else {
+        let (exact, bound) = (dense_exact, dense_exact);
+        Plan { container: CONTAINER_DENSE, index: IndexCoding::Raw, exact, bound }
+    }
+}
+
+/// Exact number of bytes [`encode_v2`] will produce.
+pub fn encoded_bytes_v2(sv: &SparseVec, params: CodecParams) -> usize {
+    plan(sv, params).exact
+}
+
+/// Serialise in the v2 layout into a reusable buffer (cleared and refilled,
+/// capacity kept — no steady-state allocation once warm). The container is
+/// chosen per buffer by exact byte count; the header records every choice,
+/// so decoding needs no configuration.
+pub fn encode_v2(sv: &SparseVec, out: &mut Vec<u8>, params: CodecParams) {
+    let plan = plan(sv, params);
+    out.clear();
+    out.reserve(plan.bound);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(KIND_V2);
+    out.push(plan.container);
+    out.push(plan.index.byte());
+    out.push(params.value.byte());
+    out.extend_from_slice(&(sv.dim as u32).to_le_bytes());
+    match plan.container {
+        CONTAINER_SPARSE => {
+            out.extend_from_slice(&(sv.nnz() as u32).to_le_bytes());
+            match plan.index {
+                IndexCoding::Raw => {
+                    for &i in &sv.indices {
+                        out.extend_from_slice(&i.to_le_bytes());
+                    }
+                }
+                IndexCoding::Varint => {
+                    let mut prev = 0u32;
+                    let mut first = true;
+                    for &i in &sv.indices {
+                        let gap = if first {
+                            first = false;
+                            i
+                        } else {
+                            i - prev
+                        };
+                        push_varint(out, gap);
+                        prev = i;
+                    }
+                }
+            }
+            push_values(out, params.value, &sv.values);
+        }
+        CONTAINER_BITMAP => {
+            let base = out.len();
+            out.resize(base + sv.dim.div_ceil(8), 0);
+            for &i in &sv.indices {
+                out[base + (i as usize >> 3)] |= 1u8 << (i % 8);
+            }
+            push_values(out, params.value, &sv.values);
+        }
+        _ => push_dense_values(out, params.value, sv),
+    }
+    debug_assert_eq!(out.len(), plan.exact);
+}
+
+/// Dense value stream straight from the sparse representation — zero runs
+/// are bulk-written (`resize`), never materialised as a dense f32 copy.
+fn push_dense_values(out: &mut Vec<u8>, coding: ValueCoding, sv: &SparseVec) {
+    match coding {
+        // same writer as the v1 dense body — byte-identical by contract
+        ValueCoding::F32 => super::wire::push_dense_f32(out, sv),
+        ValueCoding::F16 => {
+            let mut next = 0usize;
+            for (&i, &v) in sv.indices.iter().zip(&sv.values) {
+                let run = i as usize - next;
+                if run > 0 {
+                    out.resize(out.len() + 2 * run, 0);
+                }
+                out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+                next = i as usize + 1;
+            }
+            out.resize(out.len() + 2 * (sv.dim - next), 0);
+        }
+        ValueCoding::Q8 => {
+            // q8 blocks span the dense coordinate stream: per block, find
+            // the entries inside it (cursor walk), scale by the block's
+            // maxabs, bulk-zero the rest
+            let mut e = 0usize;
+            let mut block_start = 0usize;
+            while block_start < sv.dim {
+                let block_end = (block_start + Q8_BLOCK).min(sv.dim);
+                let e0 = e;
+                while e < sv.indices.len() && (sv.indices[e] as usize) < block_end {
+                    e += 1;
+                }
+                let mut maxabs = 0.0f32;
+                for &v in &sv.values[e0..e] {
+                    maxabs = maxabs.max(v.abs());
+                }
+                let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 0.0 };
+                out.extend_from_slice(&scale.to_le_bytes());
+                let base = out.len();
+                out.resize(base + (block_end - block_start), 0);
+                if maxabs > 0.0 {
+                    let inv = 127.0 / maxabs;
+                    for (&ix, &v) in sv.indices[e0..e].iter().zip(&sv.values[e0..e]) {
+                        let off = ix as usize - block_start;
+                        out[base + off] = (v * inv).round().clamp(-127.0, 127.0) as i8 as u8;
+                    }
+                }
+                block_start = block_end;
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------- decoder
+
+/// Decode a v2 buffer (kind byte 2; magic + kind already verified by
+/// `wire::decode_into`) into a reusable vector. Self-describing: the header
+/// carries the container and both codings. On error `out` is left in an
+/// unspecified (but valid) state, like the v1 decoder.
+pub(crate) fn decode_v2(buf: &[u8], out: &mut SparseVec) -> Result<(), WireError> {
+    if buf.len() < V2_HEADER_BYTES {
+        return Err(WireError::Truncated(buf.len()));
+    }
+    let container = buf[5];
+    let index = IndexCoding::from_byte(buf[6])?;
+    let value = ValueCoding::from_byte(buf[7])?;
+    let dim = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    out.dim = dim as usize;
+    out.indices.clear();
+    out.values.clear();
+    let mut pos = V2_HEADER_BYTES;
+    match container {
+        CONTAINER_SPARSE => {
+            let Some(nnz_bytes) = buf.get(pos..pos + 4) else {
+                return Err(WireError::Truncated(buf.len()));
+            };
+            let nnz = u32::from_le_bytes(nnz_bytes.try_into().unwrap()) as usize;
+            pos += 4;
+            // lower-bound availability check before reserving anything:
+            // each index costs ≥ 1 byte (varint) / exactly 4 (raw)
+            let idx_min = match index {
+                IndexCoding::Raw => 4 * nnz,
+                IndexCoding::Varint => nnz,
+            };
+            let vb = value_stream_bytes(value, nnz);
+            if buf.len() < pos + idx_min + vb {
+                return Err(WireError::Truncated(buf.len()));
+            }
+            out.indices.reserve(nnz);
+            out.values.reserve(nnz);
+            match index {
+                IndexCoding::Raw => {
+                    let end = pos + 4 * nnz;
+                    let mut last: i64 = -1;
+                    for c in buf[pos..end].chunks_exact(4) {
+                        let i = u32::from_le_bytes(c.try_into().unwrap());
+                        if i >= dim {
+                            return Err(WireError::IndexOutOfBounds { idx: i, dim });
+                        }
+                        if (i as i64) <= last {
+                            return Err(WireError::Unsorted);
+                        }
+                        last = i as i64;
+                        out.indices.push(i);
+                    }
+                    pos = end;
+                }
+                IndexCoding::Varint => {
+                    let mut acc = 0u64;
+                    for slot in 0..nnz {
+                        let gap = read_varint(buf, &mut pos)? as u64;
+                        if slot == 0 {
+                            acc = gap;
+                        } else {
+                            if gap == 0 {
+                                return Err(WireError::Unsorted);
+                            }
+                            acc += gap;
+                        }
+                        if acc >= dim as u64 {
+                            let idx = acc.min(u32::MAX as u64) as u32;
+                            return Err(WireError::IndexOutOfBounds { idx, dim });
+                        }
+                        out.indices.push(acc as u32);
+                    }
+                    // the varint stream was wider than the 1-byte lower
+                    // bound: re-check the value bytes at the real offset
+                    if buf.len() < pos + vb {
+                        return Err(WireError::Truncated(buf.len()));
+                    }
+                }
+            }
+            read_values(buf, &mut pos, value, nnz, &mut out.values)?;
+            out.debug_check();
+            Ok(())
+        }
+        CONTAINER_BITMAP => {
+            let bm_len = (dim as usize).div_ceil(8);
+            let Some(bm) = buf.get(pos..pos + bm_len) else {
+                return Err(WireError::Truncated(buf.len()));
+            };
+            if dim % 8 != 0 {
+                let mask = 0xFFu8 << (dim % 8); // bits at positions ≥ dim
+                if bm[bm_len - 1] & mask != 0 {
+                    return Err(WireError::BadBitmap);
+                }
+            }
+            let nnz: usize = bm.iter().map(|b| b.count_ones() as usize).sum();
+            let vb = value_stream_bytes(value, nnz);
+            if buf.len() < pos + bm_len + vb {
+                return Err(WireError::Truncated(buf.len()));
+            }
+            out.indices.reserve(nnz);
+            out.values.reserve(nnz);
+            for (byte_i, &b) in bm.iter().enumerate() {
+                let mut bits = b;
+                while bits != 0 {
+                    let bit = bits.trailing_zeros() as usize;
+                    out.indices.push((byte_i * 8 + bit) as u32);
+                    bits &= bits - 1;
+                }
+            }
+            pos += bm_len;
+            read_values(buf, &mut pos, value, nnz, &mut out.values)?;
+            out.debug_check();
+            Ok(())
+        }
+        CONTAINER_DENSE => {
+            let n = dim as usize;
+            let need = value_stream_bytes(value, n);
+            let Some(body) = buf.get(pos..pos + need) else {
+                return Err(WireError::Truncated(buf.len()));
+            };
+            match value {
+                ValueCoding::F32 => {
+                    for (i, c) in body.chunks_exact(4).enumerate() {
+                        let v = f32::from_le_bytes(c.try_into().unwrap());
+                        if v != 0.0 {
+                            out.indices.push(i as u32);
+                            out.values.push(v);
+                        }
+                    }
+                }
+                ValueCoding::F16 => {
+                    for (i, c) in body.chunks_exact(2).enumerate() {
+                        let v = f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap()));
+                        if v != 0.0 {
+                            out.indices.push(i as u32);
+                            out.values.push(v);
+                        }
+                    }
+                }
+                ValueCoding::Q8 => {
+                    let mut off = 0usize;
+                    let mut idx = 0usize;
+                    while idx < n {
+                        let take = (n - idx).min(Q8_BLOCK);
+                        let scale = f32::from_le_bytes(body[off..off + 4].try_into().unwrap());
+                        off += 4;
+                        for (j, &b) in body[off..off + take].iter().enumerate() {
+                            let q = b as i8;
+                            if q != 0 && scale != 0.0 {
+                                out.indices.push((idx + j) as u32);
+                                out.values.push(q as f32 * scale);
+                            }
+                        }
+                        off += take;
+                        idx += take;
+                    }
+                }
+            }
+            out.debug_check();
+            Ok(())
+        }
+        c => Err(WireError::BadContainer(c)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::wire;
+    use crate::util::rng::Rng;
+
+    fn params(index: IndexCoding, value: ValueCoding) -> CodecParams {
+        CodecParams { index, value }
+    }
+
+    #[test]
+    fn f16_known_values() {
+        for (x, bits) in [
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3C00),
+            (-1.0, 0xBC00),
+            (0.5, 0x3800),
+            (65504.0, 0x7BFF),
+            (6.103_515_6e-5, 0x0400), // smallest normal half
+            (5.960_464_5e-8, 0x0001), // smallest subnormal half
+        ] {
+            assert_eq!(f32_to_f16_bits(x), bits, "{x}");
+            assert_eq!(f16_bits_to_f32(bits), x, "{bits:#06x}");
+        }
+        // saturation + NaN policy
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e9)), 65504.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e9)), -65504.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), 65504.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)), 0.0);
+        // negative zero keeps its sign bit
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+    }
+
+    #[test]
+    fn f16_roundtrip_relative_error_bounded() {
+        let mut rng = Rng::new(1);
+        for _ in 0..5000 {
+            let x = rng.normal() * 10f32.powi(rng.below(9) as i32 - 4);
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            if x.abs() >= 6.2e-5 && x.abs() <= 65504.0 {
+                assert!((x - y).abs() <= x.abs() / 1024.0, "{x} -> {y}");
+            }
+            // idempotence: a decoded half re-encodes to the same bits
+            assert_eq!(f32_to_f16_bits(y), f32_to_f16_bits(x), "{x}");
+        }
+    }
+
+    #[test]
+    fn varint_roundtrip_and_lengths() {
+        let mut buf = Vec::new();
+        for x in [0u32, 1, 127, 128, 300, 16_383, 16_384, 1 << 21, u32::MAX] {
+            buf.clear();
+            push_varint(&mut buf, x);
+            assert_eq!(buf.len(), varint_len(x), "{x}");
+            let mut pos = 0;
+            assert_eq!(read_varint(&buf, &mut pos).unwrap(), x, "{x}");
+            assert_eq!(pos, buf.len(), "{x}");
+        }
+        assert_eq!(varint_len(127), 1);
+        assert_eq!(varint_len(128), 2);
+        assert_eq!(varint_len(u32::MAX), 5);
+    }
+
+    #[test]
+    fn varint_rejects_overflow_and_truncation() {
+        // 5 continuation bytes → shift past 32 bits
+        let over = [0x80u8, 0x80, 0x80, 0x80, 0x80, 0x01];
+        let mut pos = 0;
+        assert!(matches!(read_varint(&over, &mut pos), Err(WireError::BadVarint(_))));
+        // 5th byte carrying more than the top 4 bits of a u32
+        let wide = [0xFFu8, 0xFF, 0xFF, 0xFF, 0x1F];
+        pos = 0;
+        assert!(matches!(read_varint(&wide, &mut pos), Err(WireError::BadVarint(_))));
+        // dangling continuation bit
+        let cut = [0x80u8];
+        pos = 0;
+        assert!(matches!(read_varint(&cut, &mut pos), Err(WireError::Truncated(_))));
+    }
+
+    fn rand_support(rng: &mut Rng, dim: usize, nnz: usize) -> SparseVec {
+        let mut ids: Vec<u32> = (0..dim as u32).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(nnz);
+        ids.sort_unstable();
+        let values: Vec<f32> = ids.iter().map(|_| rng.normal()).collect();
+        SparseVec::from_sorted(dim, ids, values)
+    }
+
+    #[test]
+    fn v2_f32_roundtrip_exact_across_densities() {
+        let mut rng = Rng::new(7);
+        let mut buf = Vec::new();
+        let mut back = SparseVec::empty(0);
+        for &dim in &[1usize, 8, 100, 1000] {
+            for &frac in &[0.0f64, 0.05, 0.3, 0.8, 1.0] {
+                let nnz = ((dim as f64 * frac) as usize).min(dim);
+                let sv = rand_support(&mut rng, dim, nnz);
+                for index in [IndexCoding::Raw, IndexCoding::Varint] {
+                    let p = params(index, ValueCoding::F32);
+                    if p.is_v1() {
+                        continue; // routed to v1 by encode_with
+                    }
+                    encode_v2(&sv, &mut buf, p);
+                    assert_eq!(buf.len(), encoded_bytes_v2(&sv, p), "dim {dim} frac {frac}");
+                    wire::decode_into(&buf, &mut back).unwrap();
+                    assert_eq!(back.to_dense(), sv.to_dense(), "dim {dim} frac {frac}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn container_selection_tracks_density() {
+        let mut rng = Rng::new(9);
+        let dim = 4096;
+        let p = params(IndexCoding::Varint, ValueCoding::F16);
+        let mut buf = Vec::new();
+        // low density → sparse
+        encode_v2(&rand_support(&mut rng, dim, dim / 50), &mut buf, p);
+        assert_eq!(buf[5], CONTAINER_SPARSE);
+        // mid density → bitmap (indices dominate sparse, zeros dominate dense)
+        encode_v2(&rand_support(&mut rng, dim, dim * 3 / 10), &mut buf, p);
+        assert_eq!(buf[5], CONTAINER_BITMAP);
+        // near-full → dense
+        encode_v2(&rand_support(&mut rng, dim, dim * 95 / 100), &mut buf, p);
+        assert_eq!(buf[5], CONTAINER_DENSE);
+    }
+
+    #[test]
+    fn v2_never_larger_than_v1_plus_header_slack() {
+        // sparse container: v2 header (16 incl. nnz) vs v1 (13), and the
+        // index stream is min(varint, raw) — so v2 ≤ v1 + 3 always
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let dim = 1 + rng.below(2000);
+            let nnz = rng.below(dim + 1);
+            let sv = rand_support(&mut rng, dim, nnz);
+            let p = params(IndexCoding::Varint, ValueCoding::F32);
+            let v2 = encoded_bytes_v2(&sv, p);
+            let v1 = wire::encoded_bytes(&sv);
+            assert!(v2 <= v1 + 3, "dim {dim} nnz {nnz}: v2 {v2} v1 {v1}");
+        }
+    }
+
+    #[test]
+    fn varint_fallback_on_adversarial_gaps() {
+        // gaps ≥ 2^28 need 5-byte varints — three of them cost 15 bytes
+        // against 12 raw, so the encoder must ship raw u32s and record
+        // that in the header
+        let dim = (1usize << 31) + 7;
+        let ids = vec![1u32 << 29, 1 << 30, (1 << 30) + (1 << 29)];
+        let sv = SparseVec::from_sorted(dim, ids, vec![1.0, 2.0, 3.0]);
+        let p = params(IndexCoding::Varint, ValueCoding::F32);
+        let mut buf = Vec::new();
+        encode_v2(&sv, &mut buf, p);
+        assert_eq!(buf[5], CONTAINER_SPARSE);
+        assert_eq!(buf[6], 0, "adversarial gaps must fall back to raw indices");
+        let back = wire::decode(&buf).unwrap();
+        assert_eq!(back, sv);
+    }
+
+    #[test]
+    fn q8_error_bounded_by_block_scale() {
+        let mut rng = Rng::new(13);
+        let dim = 2000;
+        let sv = rand_support(&mut rng, dim, 700);
+        let p = params(IndexCoding::Varint, ValueCoding::Q8);
+        let mut buf = Vec::new();
+        encode_v2(&sv, &mut buf, p);
+        let back = wire::decode(&buf).unwrap();
+        assert_eq!(back.indices, sv.indices, "q8 preserves the support");
+        for block in 0..sv.nnz().div_ceil(Q8_BLOCK) {
+            let lo = block * Q8_BLOCK;
+            let hi = (lo + Q8_BLOCK).min(sv.nnz());
+            let maxabs = sv.values[lo..hi].iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            // half a quantisation step plus f32 rounding noise (the scale
+            // and its reciprocal are rounded independently)
+            let tol = maxabs / 127.0 * 0.5 + maxabs * 1e-6 + 1e-7;
+            for i in lo..hi {
+                let err = (sv.values[i] - back.values[i]).abs();
+                assert!(err <= tol, "i {i}: err {err} tol {tol}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_vectors_roundtrip_every_mode() {
+        let mut buf = Vec::new();
+        let mut back = SparseVec::empty(0);
+        for value in [ValueCoding::F32, ValueCoding::F16, ValueCoding::Q8] {
+            for index in [IndexCoding::Raw, IndexCoding::Varint] {
+                let p = params(index, value);
+                if p.is_v1() {
+                    continue;
+                }
+                for sv in [
+                    SparseVec::empty(0),
+                    SparseVec::empty(17),
+                    SparseVec::from_sorted(1, vec![0], vec![1.0]),
+                    SparseVec::from_sorted(9, vec![8], vec![-2.0]),
+                ] {
+                    encode_v2(&sv, &mut buf, p);
+                    assert_eq!(buf.len(), encoded_bytes_v2(&sv, p));
+                    wire::decode_into(&buf, &mut back).unwrap();
+                    assert_eq!(back.dim, sv.dim, "{p:?}");
+                    assert_eq!(back.indices, sv.indices, "{p:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_encode_reuses_buffer_across_varying_gaps() {
+        // round-over-round varint sizes wobble; the stable reserve bound
+        // must keep the warm buffer from reallocating
+        let mut rng = Rng::new(17);
+        let dim = 5000;
+        let p = params(IndexCoding::Varint, ValueCoding::F16);
+        let mut buf = Vec::new();
+        encode_v2(&rand_support(&mut rng, dim, 500), &mut buf, p);
+        let (cap, ptr) = (buf.capacity(), buf.as_ptr());
+        for _ in 0..20 {
+            encode_v2(&rand_support(&mut rng, dim, 500), &mut buf, p);
+            assert_eq!(buf.capacity(), cap);
+            assert_eq!(buf.as_ptr(), ptr, "warm v2 encode must not reallocate");
+        }
+    }
+}

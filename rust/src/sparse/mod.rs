@@ -1,9 +1,11 @@
 //! Sparse gradient substrate: COO vectors, top-k selection, aggregation,
-//! wire format with exact byte accounting.
+//! wire formats (v1 + codec v2) with exact byte accounting.
+pub mod codec;
 pub mod merge;
 pub mod topk;
 pub mod vector;
 pub mod wire;
 
+pub use codec::{CodecParams, IndexCoding, ValueCoding, WireCodec};
 pub use merge::Aggregator;
 pub use vector::SparseVec;

@@ -12,7 +12,7 @@
 //!   policy (first-index-wins, matching `jax.lax.top_k` determinism closely
 //!   enough for the equivalence tests, which compare sets at distinct scores).
 
-use crate::util::rng::Rng;
+use crate::util::rng::splitmix64;
 
 /// Exact value of the k-th largest element (1-based: k=1 → max).
 /// Returns `f32::INFINITY` for k == 0 (a threshold no score can clear, so
@@ -74,12 +74,25 @@ fn median3(a: f32, b: f32, c: f32) -> f32 {
 
 /// DGC-style sampled threshold estimation — *exact* result, sampled speed.
 ///
-/// Samples `max(1024, P/100)` scores deterministically (seeded) and picks a
+/// Samples `max(1024, P/100)` scores deterministically and picks a
 /// deliberately *low* candidate threshold (targeting ~2k survivors), so that
 /// the survivor set almost surely contains the true top-k; the exact k-th
 /// largest is then selected among the survivors only (≈2k ≪ P elements).
-/// Falls back to a full exact select in the rare undershoot case, so the
-/// returned threshold always equals [`threshold_exact`]'s.
+///
+/// **Determinism contract of `seed`:** the returned threshold always equals
+/// [`threshold_exact`]'s for the same `scores`/`k`, *for every seed* — the
+/// seed only decorrelates which elements feed the candidate estimate
+/// (callers pass the round number), so it is purely a performance knob: a
+/// resonant sampling pattern can only cost a slower refinement pass, never
+/// a different result. Sampling is strided with a per-slot jittered offset
+/// (sequential memory order, one `splitmix64` per slot) rather than a
+/// random gather, which keeps the pass prefetch-friendly and avoids the
+/// per-call PRNG construction the previous implementation paid.
+///
+/// On undershoot (the candidate overshot the true threshold — heavy ties
+/// or an adversarial distribution) the survivor set is topped up with the
+/// remaining scores in place, so the fallback costs one extra filter pass
+/// over `scores` instead of a second full clear-and-copy.
 pub fn threshold_sampled(scores: &[f32], k: usize, seed: u64, scratch: &mut Vec<f32>) -> f32 {
     let n = scores.len();
     if k == 0 {
@@ -89,10 +102,16 @@ pub fn threshold_sampled(scores: &[f32], k: usize, seed: u64, scratch: &mut Vec<
         return scores.iter().cloned().fold(f32::INFINITY, f32::min);
     }
     let sample_n = (n / 100).max(1024).min(n);
-    let mut rng = Rng::new(seed);
+    let mut h = seed ^ 0x9E37_79B9_7F4A_7C15;
     scratch.clear();
-    for _ in 0..sample_n {
-        scratch.push(scores[rng.below(n)]);
+    scratch.reserve(n); // the survivor pass below reuses this allocation
+    for s in 0..sample_n {
+        // one jittered pick per stratum [s·n/N, (s+1)·n/N): sequential
+        // memory order, full-range coverage, no per-call PRNG state
+        let lo = s * n / sample_n;
+        let hi = ((s + 1) * n / sample_n).max(lo + 1);
+        let jitter = (splitmix64(&mut h) % (hi - lo) as u64) as usize;
+        scratch.push(scores[lo + jitter]);
     }
     // target 2k survivors (safety margin against sampling noise)
     let k_sample = ((2.0 * k as f64) * (sample_n as f64) / (n as f64)).ceil() as usize;
@@ -103,8 +122,15 @@ pub fn threshold_sampled(scores: &[f32], k: usize, seed: u64, scratch: &mut Vec<
     scratch.clear();
     scratch.extend(scores.iter().cloned().filter(|&s| s >= candidate));
     if scratch.len() < k {
-        // undershoot (heavy ties / adversarial distribution): full fallback
-        return threshold_exact(scores, k, scratch);
+        // undershoot: top up with the non-survivors — scratch then holds a
+        // permutation of all of `scores` and the select below is the full
+        // exact one
+        scratch.extend(scores.iter().cloned().filter(|&s| s < candidate));
+        if scratch.len() < n {
+            // non-finite scores defeated the two-way partition; preserve
+            // the legacy exact-fallback behaviour
+            return threshold_exact(scores, k, scratch);
+        }
     }
     let idx = scratch.len() - k;
     *order_stat(scratch, idx)
@@ -147,6 +173,7 @@ pub fn select_topk(scores: &[f32], k: usize) -> Vec<u32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     fn brute_topk(scores: &[f32], k: usize) -> Vec<u32> {
         let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
@@ -230,6 +257,42 @@ mod tests {
         let scores = vec![2.5f32; 10_000];
         let mut scratch = Vec::new();
         assert_eq!(threshold_sampled(&scores, 100, 1, &mut scratch), 2.5);
+    }
+
+    #[test]
+    fn sampled_result_is_seed_independent() {
+        // the documented contract: the seed picks the sampling pattern,
+        // never the result — every seed returns the exact threshold
+        let mut rng = Rng::new(8);
+        let n = 30_000;
+        let scores: Vec<f32> = (0..n).map(|_| rng.normal().abs()).collect();
+        let mut scratch = Vec::new();
+        for k in [1usize, 500, 3000, 29_999] {
+            let exact = threshold_exact(&scores, k, &mut scratch);
+            for seed in [0u64, 1, 7, 0xDEAD_BEEF, u64::MAX] {
+                assert_eq!(
+                    threshold_sampled(&scores, k, seed, &mut scratch),
+                    exact,
+                    "k={k} seed={seed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_undershoot_topup_matches_exact() {
+        // heavy ties around the threshold — the regime where the candidate
+        // estimate can overshoot and the top-up backstop has to produce the
+        // exact answer anyway
+        let mut scores = vec![1.0f32; 5000];
+        for (i, s) in scores.iter_mut().enumerate().take(200) {
+            *s = 2.0 + i as f32 * 1e-3;
+        }
+        let mut scratch = Vec::new();
+        for k in [300usize, 1000, 4999] {
+            let exact = threshold_exact(&scores, k, &mut scratch);
+            assert_eq!(threshold_sampled(&scores, k, 3, &mut scratch), exact, "k={k}");
+        }
     }
 
     #[test]

@@ -80,6 +80,60 @@ impl SparseVec {
         }
     }
 
+    /// Coordinate-wise difference into a reusable vector: `out = self −
+    /// other` over the union support, with exact-zero differences dropped
+    /// (`out` is cleared and refilled, capacity kept). Both inputs must
+    /// share `dim`. The wire codec's quantisation error feedback uses this
+    /// to compute `upload − decode(encode(upload))`, where `other`'s
+    /// support is a subset of `self`'s by construction.
+    pub fn diff_into(&self, other: &SparseVec, out: &mut SparseVec) {
+        debug_assert_eq!(self.dim, other.dim);
+        out.dim = self.dim;
+        out.indices.clear();
+        out.values.clear();
+        let (na, nb) = (self.indices.len(), other.indices.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < na && j < nb {
+            let (ia, ib) = (self.indices[i], other.indices[j]);
+            if ia == ib {
+                let v = self.values[i] - other.values[j];
+                if v != 0.0 {
+                    out.indices.push(ia);
+                    out.values.push(v);
+                }
+                i += 1;
+                j += 1;
+            } else if ia < ib {
+                if self.values[i] != 0.0 {
+                    out.indices.push(ia);
+                    out.values.push(self.values[i]);
+                }
+                i += 1;
+            } else {
+                if other.values[j] != 0.0 {
+                    out.indices.push(ib);
+                    out.values.push(-other.values[j]);
+                }
+                j += 1;
+            }
+        }
+        while i < na {
+            if self.values[i] != 0.0 {
+                out.indices.push(self.indices[i]);
+                out.values.push(self.values[i]);
+            }
+            i += 1;
+        }
+        while j < nb {
+            if other.values[j] != 0.0 {
+                out.indices.push(other.indices[j]);
+                out.values.push(-other.values[j]);
+            }
+            j += 1;
+        }
+        out.debug_check();
+    }
+
     /// Scale all values in place.
     pub fn scale(&mut self, s: f32) {
         for v in &mut self.values {
@@ -139,5 +193,29 @@ mod tests {
         let sv = SparseVec::empty(16);
         assert_eq!(sv.nnz(), 0);
         assert_eq!(sv.to_dense(), vec![0.0; 16]);
+    }
+
+    #[test]
+    fn diff_into_matches_dense_subtraction() {
+        let a = SparseVec::new(10, vec![(1, 2.0), (3, -1.0), (7, 4.0)]);
+        let b = SparseVec::new(10, vec![(1, 2.0), (4, 0.5), (7, 1.0)]);
+        let mut out = SparseVec::empty(0);
+        a.diff_into(&b, &mut out);
+        let want: Vec<f32> =
+            a.to_dense().iter().zip(&b.to_dense()).map(|(x, y)| x - y).collect();
+        assert_eq!(out.to_dense(), want);
+        // identical entries cancel entirely (index 1 vanishes)
+        assert_eq!(out.indices, vec![3, 4, 7]);
+        // warm reuse: a second diff through the same buffers
+        let ptr = out.indices.as_ptr();
+        a.diff_into(&b, &mut out);
+        assert_eq!(out.indices.as_ptr(), ptr, "warm diff must not reallocate");
+        // empty edges
+        let empty = SparseVec::empty(10);
+        a.diff_into(&empty, &mut out);
+        assert_eq!(out.to_dense(), a.to_dense());
+        empty.diff_into(&a, &mut out);
+        let neg: Vec<f32> = a.to_dense().iter().map(|x| -x).collect();
+        assert_eq!(out.to_dense(), neg);
     }
 }

@@ -15,7 +15,14 @@
 //! The encoder auto-selects dense when `8·nnz >= 4·dim` (sparse would be
 //! larger) — this is exactly the "aggregated gradient becomes nearly full
 //! size" effect of server-side global momentum the paper's §2.1 measures.
+//!
+//! This module is the **v1** layout (and the version-dispatching decoder).
+//! The v2 layout — delta-varint indices, bitmap containers, f16/q8 value
+//! coding, kind byte 2 — lives in [`super::codec`]; [`encode_with`] routes
+//! between the two (the default [`CodecParams`] emits v1 byte-identically)
+//! and [`decode_into`] transparently accepts both versions.
 
+use super::codec::{self, CodecParams};
 use super::vector::SparseVec;
 
 pub const MAGIC: u32 = 0x4647_4D46;
@@ -33,14 +40,33 @@ pub enum WireError {
     IndexOutOfBounds { idx: u32, dim: u32 },
     #[error("indices not sorted-unique")]
     Unsorted,
+    #[error("bad v2 container byte {0}")]
+    BadContainer(u8),
+    #[error("bad v2 coding byte {0}")]
+    BadCoding(u8),
+    #[error("malformed varint at byte {0}")]
+    BadVarint(usize),
+    #[error("bitmap has bits set at positions >= dim")]
+    BadBitmap,
 }
 
-/// Exact number of bytes [`encode`] will produce.
+/// Exact number of bytes [`encode`] will produce — the **v1** (raw u32 +
+/// f32) size. The traffic meter also uses this as the pre-codec byte count
+/// a v2-coded upload is compared against.
 pub fn encoded_bytes(sv: &SparseVec) -> usize {
     if use_dense(sv) {
         HEADER_BYTES + 4 * sv.dim
     } else {
         HEADER_BYTES + 4 + 8 * sv.nnz()
+    }
+}
+
+/// Exact number of bytes [`encode_with`] will produce under `params`.
+pub fn encoded_bytes_with(sv: &SparseVec, params: CodecParams) -> usize {
+    if params.is_v1() {
+        encoded_bytes(sv)
+    } else {
+        codec::encoded_bytes_v2(sv, params)
     }
 }
 
@@ -60,18 +86,7 @@ pub fn encode_into(sv: &SparseVec, out: &mut Vec<u8>) {
     if use_dense(sv) {
         out.push(1);
         out.extend_from_slice(&(sv.dim as u32).to_le_bytes());
-        const ZERO: [u8; 4] = [0, 0, 0, 0];
-        let mut next = 0usize;
-        for (&i, &v) in sv.indices.iter().zip(&sv.values) {
-            for _ in next..i as usize {
-                out.extend_from_slice(&ZERO);
-            }
-            out.extend_from_slice(&v.to_le_bytes());
-            next = i as usize + 1;
-        }
-        for _ in next..sv.dim {
-            out.extend_from_slice(&ZERO);
-        }
+        push_dense_f32(out, sv);
     } else {
         out.push(0);
         out.extend_from_slice(&(sv.dim as u32).to_le_bytes());
@@ -86,11 +101,43 @@ pub fn encode_into(sv: &SparseVec, out: &mut Vec<u8>) {
     debug_assert_eq!(out.len(), encoded_bytes(sv));
 }
 
+/// Dense f32 value stream (all `dim` coordinates): zero runs are
+/// bulk-written (`resize` → memset), not streamed one 4-byte slice at a
+/// time — this is the downlink broadcast hot path once server-side global
+/// momentum densifies the aggregate. Shared by the v1 dense body and the
+/// v2 dense container's f32 mode, which are byte-identical by contract.
+pub(crate) fn push_dense_f32(out: &mut Vec<u8>, sv: &SparseVec) {
+    let mut next = 0usize;
+    for (&i, &v) in sv.indices.iter().zip(&sv.values) {
+        let run = i as usize - next;
+        if run > 0 {
+            out.resize(out.len() + 4 * run, 0);
+        }
+        out.extend_from_slice(&v.to_le_bytes());
+        next = i as usize + 1;
+    }
+    out.resize(out.len() + 4 * (sv.dim - next), 0);
+}
+
 /// Allocating convenience wrapper over [`encode_into`].
 pub fn encode(sv: &SparseVec) -> Vec<u8> {
     let mut out = Vec::with_capacity(encoded_bytes(sv));
     encode_into(sv, &mut out);
     out
+}
+
+/// Serialise through the configured codec: the default (raw u32 + f32)
+/// params emit the v1 byte layout exactly — byte-identical to
+/// [`encode_into`] — while anything else emits the self-describing v2
+/// layout (see `docs/wire.md`). Either way `out` is cleared and refilled
+/// with its capacity kept, and [`decode_into`] accepts the result without
+/// being told which codec produced it.
+pub fn encode_with(sv: &SparseVec, out: &mut Vec<u8>, params: CodecParams) {
+    if params.is_v1() {
+        encode_into(sv, out);
+    } else {
+        codec::encode_v2(sv, out, params);
+    }
 }
 
 /// Deserialise into a reusable vector: `out.indices` / `out.values` are
@@ -106,6 +153,9 @@ pub fn decode_into(buf: &[u8], out: &mut SparseVec) -> Result<(), WireError> {
         return Err(WireError::BadMagic(magic));
     }
     let kind = buf[4];
+    if kind == codec::KIND_V2 {
+        return codec::decode_v2(buf, out);
+    }
     let dim = u32::from_le_bytes(buf[5..9].try_into().unwrap());
     out.dim = dim as usize;
     out.indices.clear();

@@ -1,0 +1,361 @@
+//! Codec v2 integration properties: round-trips through reused buffers for
+//! every (index, value, container) mode combination, strict-prefix and
+//! corruption rejection, v1 ↔ v2 cross-version decoding, default-config
+//! byte identity with v1, and the rate-0.1 bytes-per-round bars the issue
+//! pins (varint never exceeds v1 sparse bytes; ≥ 1.5× reduction).
+//!
+//! Same in-tree property-harness conventions as `proptests.rs`: `CASES`
+//! deterministic seeds, replayable via `PROP_SEED=<n>`.
+
+use fedgmf::sparse::codec::{
+    self, CodecParams, IndexCoding, ValueCoding, CONTAINER_BITMAP, CONTAINER_DENSE,
+    CONTAINER_SPARSE, KIND_V2,
+};
+use fedgmf::sparse::vector::SparseVec;
+use fedgmf::sparse::wire;
+use fedgmf::util::rng::Rng;
+
+const CASES: u64 = 40;
+
+fn seeds() -> impl Iterator<Item = u64> {
+    let base: u64 = std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0DE);
+    (0..CASES).map(move |i| base.wrapping_add(i))
+}
+
+fn all_params() -> Vec<CodecParams> {
+    let mut out = Vec::new();
+    for index in [IndexCoding::Raw, IndexCoding::Varint] {
+        for value in [ValueCoding::F32, ValueCoding::F16, ValueCoding::Q8] {
+            out.push(CodecParams { index, value });
+        }
+    }
+    out
+}
+
+fn rand_support(rng: &mut Rng, dim: usize, nnz: usize) -> SparseVec {
+    let mut ids: Vec<u32> = (0..dim as u32).collect();
+    rng.shuffle(&mut ids);
+    ids.truncate(nnz);
+    ids.sort_unstable();
+    let values: Vec<f32> = ids.iter().map(|_| rng.normal() * 3.0).collect();
+    SparseVec::from_sorted(dim, ids, values)
+}
+
+/// The value each coding is contractually allowed to deliver: exact for
+/// f32, the f16 round-trip for f16. (q8 is block-dependent; its error
+/// bound is asserted separately.)
+fn expected_value(coding: ValueCoding, v: f32) -> f32 {
+    match coding {
+        ValueCoding::F32 => v,
+        ValueCoding::F16 => codec::f16_bits_to_f32(codec::f32_to_f16_bits(v)),
+        ValueCoding::Q8 => unreachable!("q8 asserted via error bound"),
+    }
+}
+
+// ------------------------------------------------------------- round-trips
+
+#[test]
+fn prop_roundtrip_reused_buffers_every_mode_and_container() {
+    let mut buf = Vec::new();
+    let mut back = SparseVec::empty(0);
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let dim = 16 + rng.below(600);
+        // sweep densities so every container gets picked across the run
+        for frac in [0.02f64, 0.15, 0.35, 0.7, 0.98] {
+            let nnz = ((dim as f64 * frac).ceil() as usize).min(dim);
+            let sv = rand_support(&mut rng, dim, nnz);
+            for p in all_params() {
+                wire::encode_with(&sv, &mut buf, p);
+                assert_eq!(buf.len(), wire::encoded_bytes_with(&sv, p), "seed {seed} {p:?}");
+                wire::decode_into(&buf, &mut back).unwrap();
+                assert_eq!(back.dim, sv.dim, "seed {seed} {p:?}");
+                match p.value {
+                    ValueCoding::F32 => {
+                        assert_eq!(back.to_dense(), sv.to_dense(), "seed {seed} {p:?}");
+                    }
+                    ValueCoding::F16 => {
+                        // dense containers drop entries that quantise to 0;
+                        // compare coordinate-wise against the f16 round-trip
+                        let dense = back.to_dense();
+                        let mut want = vec![0.0f32; sv.dim];
+                        for (&i, &v) in sv.indices.iter().zip(&sv.values) {
+                            want[i as usize] = expected_value(p.value, v);
+                        }
+                        assert_eq!(dense, want, "seed {seed} {p:?}");
+                    }
+                    ValueCoding::Q8 => {
+                        let dense = back.to_dense();
+                        let orig = sv.to_dense();
+                        // block scale ≤ global maxabs / 127; half-step
+                        // rounding error ≤ scale/2 (+ f32 noise)
+                        let maxabs = sv.values.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                        let tol = maxabs / 127.0 * 0.5 + maxabs * 1e-6 + 1e-7;
+                        for i in 0..sv.dim {
+                            let err = (dense[i] - orig[i]).abs();
+                            assert!(err <= tol, "seed {seed} {p:?} i {i}: {err} > {tol}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_all_containers_appear_and_roundtrip() {
+    // force each container explicitly and count them, so a selection bug
+    // cannot silently reduce coverage to one container
+    let mut rng = Rng::new(99);
+    let mut counts = [0usize; 3];
+    let p = CodecParams { index: IndexCoding::Varint, value: ValueCoding::F16 };
+    let mut buf = Vec::new();
+    for round in 0..20 {
+        let dim = 512 + 37 * round;
+        // densities placed safely on each side of the two crossovers:
+        // 2 % → sparse, 30 % → bitmap, 97 % → dense (f16 values)
+        for (frac, want) in
+            [(0.02f64, CONTAINER_SPARSE), (0.3, CONTAINER_BITMAP), (0.97, CONTAINER_DENSE)]
+        {
+            let nnz = ((dim as f64 * frac).round() as usize).clamp(1, dim);
+            let sv = rand_support(&mut rng, dim, nnz);
+            wire::encode_with(&sv, &mut buf, p);
+            assert_eq!(buf[4], KIND_V2);
+            assert_eq!(buf[5], want, "dim {dim} nnz {nnz}");
+            match buf[5] {
+                CONTAINER_SPARSE => counts[0] += 1,
+                CONTAINER_BITMAP => counts[1] += 1,
+                CONTAINER_DENSE => counts[2] += 1,
+                c => panic!("unknown container byte {c}"),
+            }
+            let back = wire::decode(&buf).unwrap();
+            assert_eq!(back.indices, sv.indices, "support must survive every container");
+        }
+    }
+    assert!(
+        counts.iter().all(|&c| c > 0),
+        "density sweep must exercise sparse, bitmap and dense: {counts:?}"
+    );
+}
+
+#[test]
+fn default_codec_is_byte_identical_to_v1() {
+    let mut rng = Rng::new(5);
+    let mut buf = Vec::new();
+    for _ in 0..40 {
+        let dim = 1 + rng.below(400);
+        let nnz = rng.below(dim + 1);
+        let sv = rand_support(&mut rng, dim, nnz);
+        wire::encode_with(&sv, &mut buf, CodecParams::default());
+        assert_eq!(buf, wire::encode(&sv), "default codec must emit v1 bytes");
+        assert_eq!(wire::encoded_bytes_with(&sv, CodecParams::default()), buf.len());
+    }
+}
+
+#[test]
+fn cross_version_decode_v1_and_v2_through_one_decoder() {
+    // a v1 buffer and every v2 mode of the same vector must decode to the
+    // same support through the same reused output vector, with no codec
+    // configuration on the decode side
+    let mut rng = Rng::new(6);
+    let sv = rand_support(&mut rng, 300, 30);
+    let mut out = SparseVec::empty(0);
+    let v1 = wire::encode(&sv);
+    wire::decode_into(&v1, &mut out).unwrap();
+    assert_eq!(out, sv);
+    let mut buf = Vec::new();
+    for p in all_params() {
+        wire::encode_with(&sv, &mut buf, p);
+        wire::decode_into(&buf, &mut out).unwrap();
+        assert_eq!(out.indices, sv.indices, "{p:?}");
+        // and back to v1 through the same buffers — version interleaving
+        // must leave no stale state behind
+        wire::decode_into(&v1, &mut out).unwrap();
+        assert_eq!(out, sv, "{p:?}");
+    }
+}
+
+// ------------------------------------------------- prefixes and corruption
+
+#[test]
+fn prop_every_strict_prefix_rejected_every_mode() {
+    let mut out = SparseVec::empty(0);
+    for seed in seeds().take(8) {
+        let mut rng = Rng::new(seed);
+        let dim = 16 + rng.below(80);
+        let nnz = rng.below(dim + 1);
+        let sv = rand_support(&mut rng, dim, nnz);
+        for p in all_params() {
+            let mut buf = Vec::new();
+            wire::encode_with(&sv, &mut buf, p);
+            for cut in 0..buf.len() {
+                assert!(
+                    wire::decode_into(&buf[..cut], &mut out).is_err(),
+                    "seed {seed} {p:?}: prefix of {cut}/{} bytes must be rejected",
+                    buf.len()
+                );
+            }
+            wire::decode_into(&buf, &mut out).unwrap();
+            assert_eq!(out.indices, sv.indices, "seed {seed} {p:?}");
+        }
+    }
+}
+
+#[test]
+fn corrupt_varint_stream_rejected_without_panic() {
+    // a sparse varint buffer with every index byte forced to a dangling
+    // continuation marker must error (varint overflow / truncation), and a
+    // zero gap (duplicate index) must read as unsorted
+    let sv = SparseVec::new(1000, vec![(3, 1.0), (700, -2.0), (980, 0.5)]);
+    let p = CodecParams { index: IndexCoding::Varint, value: ValueCoding::F32 };
+    let mut buf = Vec::new();
+    wire::encode_with(&sv, &mut buf, p);
+    assert_eq!((buf[4], buf[5], buf[6]), (KIND_V2, CONTAINER_SPARSE, 1));
+    let idx_off = codec::V2_HEADER_BYTES + 4;
+    let mut out = SparseVec::empty(0);
+    // continuation bit on every byte of the stream → overflow or truncation
+    let mut bad = buf.clone();
+    for b in &mut bad[idx_off..] {
+        *b |= 0x80;
+    }
+    assert!(wire::decode_into(&bad, &mut out).is_err());
+    // zero gap after the first index decodes as a duplicate → Unsorted
+    let mut dup = buf.clone();
+    dup[idx_off + 1] = 0; // second gap (700-3 = 697 is 2 bytes, overwrite low)
+    let verdict = wire::decode_into(&dup, &mut out);
+    assert!(verdict.is_err(), "zero/garbled gap must not decode silently");
+    // gap overrunning dim → IndexOutOfBounds
+    let mut far = buf.clone();
+    far[idx_off] = 0x7F; // first index 127, later gaps unchanged → may pass
+    let _ = wire::decode_into(&far, &mut out); // must simply not panic
+}
+
+#[test]
+fn corrupt_bitmap_and_headers_rejected_without_panic() {
+    let mut rng = Rng::new(21);
+    // mid density forces the bitmap container at f16
+    let sv = rand_support(&mut rng, 257, 90);
+    let p = CodecParams { index: IndexCoding::Varint, value: ValueCoding::F16 };
+    let mut buf = Vec::new();
+    wire::encode_with(&sv, &mut buf, p);
+    assert_eq!(buf[5], CONTAINER_BITMAP);
+    let mut out = SparseVec::empty(0);
+    // a bit beyond dim (dim 257 → last byte may only use bit 0)
+    let bm_last = codec::V2_HEADER_BYTES + 257usize.div_ceil(8) - 1;
+    let mut bad = buf.clone();
+    bad[bm_last] |= 0x80;
+    assert!(
+        matches!(wire::decode_into(&bad, &mut out), Err(wire::WireError::BadBitmap)),
+        "bit at position >= dim must be rejected"
+    );
+    // setting an extra in-range bit grows nnz past the value stream → Err
+    let mut extra = buf.clone();
+    let first_bm = codec::V2_HEADER_BYTES;
+    extra[first_bm] = 0xFF;
+    if extra[first_bm] != buf[first_bm] {
+        assert!(wire::decode_into(&extra, &mut out).is_err());
+    }
+    // bad container / coding bytes
+    for (off, err_is) in [(5usize, "container"), (6, "coding"), (7, "coding")] {
+        let mut bad = buf.clone();
+        bad[off] = 0x7E;
+        let verdict = wire::decode_into(&bad, &mut out);
+        assert!(verdict.is_err(), "corrupt {err_is} byte at {off} must be rejected");
+    }
+}
+
+#[test]
+fn prop_garbage_never_panics_and_buffers_stay_usable() {
+    let reference = SparseVec::new(50, vec![(7, 1.5), (31, -0.25)]);
+    let p = CodecParams { index: IndexCoding::Varint, value: ValueCoding::Q8 };
+    let mut ref_buf = Vec::new();
+    wire::encode_with(&reference, &mut ref_buf, p);
+    let mut out = SparseVec::empty(0);
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let len = rng.below(96);
+        let mut garbage: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let _ = wire::decode_into(&garbage, &mut out);
+        if garbage.len() >= codec::V2_HEADER_BYTES {
+            garbage[0..4].copy_from_slice(&wire::MAGIC.to_le_bytes());
+            garbage[4] = KIND_V2;
+            garbage[5] = (seed % 4) as u8; // container, sometimes valid
+            garbage[6] = (seed % 3) as u8; // index coding, sometimes valid
+            garbage[7] = (seed % 4) as u8; // value coding, sometimes valid
+            let _ = wire::decode_into(&garbage, &mut out);
+        }
+        // the reused buffer must survive whatever the failed decode left
+        wire::decode_into(&ref_buf, &mut out).unwrap();
+        assert_eq!(out.indices, reference.indices, "seed {seed}");
+    }
+}
+
+// --------------------------------------------------- rate-0.1 byte budgets
+
+/// Build a realistic top-k upload: the k largest of P gaussian scores.
+fn topk_upload(p: usize, k: usize, seed: u64) -> SparseVec {
+    let mut rng = Rng::new(seed);
+    let raw: Vec<f32> = (0..p).map(|_| rng.normal()).collect();
+    let abs: Vec<f32> = raw.iter().map(|x| x.abs()).collect();
+    let ids = fedgmf::sparse::topk::select_topk(&abs, k);
+    let vals: Vec<f32> = ids.iter().map(|&i| raw[i as usize]).collect();
+    SparseVec::from_sorted(p, ids, vals)
+}
+
+#[test]
+fn varint_never_exceeds_v1_sparse_bytes_per_round_at_rate_01() {
+    // the quick-mode CI bar: one simulated round of 20 clients at the
+    // table3 shape (P = 77 850, rate 0.1). Varint coding must never exceed
+    // the v1 sparse bytes, and must beat them by ≥ 1.5×.
+    let p_dim = 77_850;
+    let k = p_dim / 10;
+    let varint = CodecParams { index: IndexCoding::Varint, value: ValueCoding::F32 };
+    let mut buf = Vec::new();
+    let (mut v1_total, mut v2_total) = (0usize, 0usize);
+    for client in 0..20u64 {
+        let sv = topk_upload(p_dim, k, 1000 + client);
+        assert_eq!(sv.nnz(), k);
+        let v1 = wire::encoded_bytes(&sv);
+        wire::encode_with(&sv, &mut buf, varint);
+        assert!(
+            buf.len() <= v1,
+            "client {client}: varint {} exceeds v1 sparse {v1}",
+            buf.len()
+        );
+        v1_total += v1;
+        v2_total += buf.len();
+    }
+    let ratio = v1_total as f64 / v2_total as f64;
+    assert!(ratio >= 1.5, "rate-0.1 uplink reduction {ratio:.3}x below the 1.5x bar");
+}
+
+#[test]
+fn prop_varint_f32_never_exceeds_v1_plus_constant_header_gap() {
+    // buffer-level guarantee behind the round-level bar: min(varint, raw)
+    // index coding and min-byte container selection keep every v2 f32
+    // buffer within the 3-byte header gap of v1
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let dim = 1 + rng.below(3000);
+        let nnz = rng.below(dim + 1);
+        let sv = rand_support(&mut rng, dim, nnz);
+        let p = CodecParams { index: IndexCoding::Varint, value: ValueCoding::F32 };
+        let v2 = wire::encoded_bytes_with(&sv, p);
+        let v1 = wire::encoded_bytes(&sv);
+        assert!(v2 <= v1 + 3, "seed {seed} dim {dim} nnz {nnz}: v2 {v2} v1 {v1}");
+    }
+}
+
+#[test]
+fn f16_and_q8_compound_the_reduction() {
+    let p_dim = 77_850;
+    let k = p_dim / 10;
+    let sv = topk_upload(p_dim, k, 7);
+    let v1 = wire::encoded_bytes(&sv) as f64;
+    let f16 = CodecParams { index: IndexCoding::Varint, value: ValueCoding::F16 };
+    let q8 = CodecParams { index: IndexCoding::Varint, value: ValueCoding::Q8 };
+    let f16_bytes = wire::encoded_bytes_with(&sv, f16) as f64;
+    let q8_bytes = wire::encoded_bytes_with(&sv, q8) as f64;
+    assert!(v1 / f16_bytes >= 2.4, "varint+f16 ratio {:.2}", v1 / f16_bytes);
+    assert!(v1 / q8_bytes >= 3.5, "varint+q8 ratio {:.2}", v1 / q8_bytes);
+}

@@ -17,6 +17,7 @@ use fedgmf::data::dataset::Dataset;
 use fedgmf::runtime::native::{BlobDataset, NativeEngine};
 use fedgmf::sim::network::Network;
 use fedgmf::sim::scheduler::{ProfilePreset, SelectionPolicy, SimConfig, StalenessPolicy};
+use fedgmf::sparse::codec::{CodecParams, IndexCoding, ValueCoding, WireCodec};
 
 const DIM: usize = 16;
 const CLASSES: usize = 4;
@@ -26,11 +27,12 @@ fn engine() -> NativeEngine {
     NativeEngine::new(DIM, 12, CLASSES, 7)
 }
 
-fn run_with_sim(
+fn run_with_codec(
     kind: CompressorKind,
     sampler: Sampler,
     workers: usize,
     sim: SimConfig,
+    codec: WireCodec,
 ) -> (Vec<u32>, RunSummary) {
     let mut engine = engine();
     let shards: Vec<Box<dyn Dataset + Send>> = (0..CLIENTS)
@@ -46,6 +48,7 @@ fn run_with_sim(
     cfg.sampler = sampler;
     cfg.workers = workers;
     cfg.sim = sim;
+    cfg.codec = codec;
     let mut run =
         FlRun::new(&engine, shards, test, Network::uniform(CLIENTS, Default::default()), cfg);
     let summary = run.run(&mut engine).unwrap();
@@ -53,8 +56,23 @@ fn run_with_sim(
     (param_bits, summary)
 }
 
+fn run_with_sim(
+    kind: CompressorKind,
+    sampler: Sampler,
+    workers: usize,
+    sim: SimConfig,
+) -> (Vec<u32>, RunSummary) {
+    run_with_codec(kind, sampler, workers, sim, WireCodec::default())
+}
+
 fn run_with(kind: CompressorKind, sampler: Sampler, workers: usize) -> (Vec<u32>, RunSummary) {
     run_with_sim(kind, sampler, workers, SimConfig::default())
+}
+
+/// The varint+f16 matrix configuration (both directions).
+fn varint_f16() -> WireCodec {
+    let p = CodecParams { index: IndexCoding::Varint, value: ValueCoding::F16 };
+    WireCodec { uplink: p, downlink: p }
 }
 
 fn assert_rounds_identical(kind: CompressorKind, sum_seq: &RunSummary, sum_par: &RunSummary) {
@@ -85,6 +103,14 @@ fn assert_rounds_identical(kind: CompressorKind, sum_seq: &RunSummary, sum_par: 
         assert_eq!(
             a.wasted_uplink_bytes,
             b.wasted_uplink_bytes,
+            "{} round {}",
+            kind.name(),
+            a.round
+        );
+        assert_eq!(a.precodec_bytes, b.precodec_bytes, "{} round {}", kind.name(), a.round);
+        assert_eq!(
+            a.codec_ratio.to_bits(),
+            b.codec_ratio.to_bits(),
             "{} round {}",
             kind.name(),
             a.round
@@ -284,7 +310,7 @@ fn feasibility_selection_bit_identical_across_worker_counts() {
 /// FNV-1a over the run's observable outputs: final parameter bits plus
 /// every per-round record field the round loop promises to keep
 /// deterministic.
-fn run_digest(workers: usize, staleness: StalenessPolicy) -> u64 {
+fn run_digest(workers: usize, staleness: StalenessPolicy, codec: WireCodec) -> u64 {
     let sim = SimConfig {
         preset: ProfilePreset::Heterogeneous { slow_every: 3, slow_factor: 6.0 },
         deadline_s: 0.08,
@@ -294,7 +320,8 @@ fn run_digest(workers: usize, staleness: StalenessPolicy) -> u64 {
         staleness,
         selection: SelectionPolicy::Uniform,
     };
-    let (params, sum) = run_with_sim(CompressorKind::DgcWgmf, Sampler::Fraction(0.5), workers, sim);
+    let (params, sum) =
+        run_with_codec(CompressorKind::DgcWgmf, Sampler::Fraction(0.5), workers, sim, codec);
     let mut h: u64 = 0xcbf29ce484222325;
     let mut eat = |x: u64| {
         for b in x.to_le_bytes() {
@@ -322,15 +349,17 @@ fn run_digest(workers: usize, staleness: StalenessPolicy) -> u64 {
         eat(r.carried_bytes as u64);
         eat(r.wasted_uplink_bytes as u64);
         eat(r.traffic_gini.to_bits());
+        eat(r.precodec_bytes as u64);
+        eat(r.codec_ratio.to_bits());
     }
     h
 }
 
 /// The CI determinism matrix entrypoint: each matrix job pins one
-/// (workers, staleness) combination via `FED_DET_WORKERS` /
-/// `FED_DET_STALENESS` and this test asserts its digest equals the
-/// sequential digest for the same staleness policy. Without the env vars
-/// (local runs) it sweeps the full matrix in-process.
+/// (workers, staleness, codec) combination via `FED_DET_WORKERS` /
+/// `FED_DET_STALENESS` / `FED_DET_CODEC` and this test asserts its digest
+/// equals the sequential digest for the same (staleness, codec) pair.
+/// Without the env vars (local runs) it sweeps the full matrix in-process.
 #[test]
 fn ci_matrix_digest() {
     let policies: Vec<(&str, StalenessPolicy)> =
@@ -340,17 +369,69 @@ fn ci_matrix_digest() {
             Some(other) => panic!("FED_DET_STALENESS must be drop|carry, got `{other}`"),
             None => vec![("drop", StalenessPolicy::Drop), ("carry", StalenessPolicy::Carry)],
         };
+    let codecs: Vec<(&str, WireCodec)> = match std::env::var("FED_DET_CODEC").ok().as_deref() {
+        Some("v1") => vec![("v1", WireCodec::default())],
+        Some("varint_f16") => vec![("varint_f16", varint_f16())],
+        Some(other) => panic!("FED_DET_CODEC must be v1|varint_f16, got `{other}`"),
+        None => vec![("v1", WireCodec::default()), ("varint_f16", varint_f16())],
+    };
     let workers: Vec<usize> = match std::env::var("FED_DET_WORKERS").ok() {
         Some(w) => vec![w.parse().expect("FED_DET_WORKERS must be a worker count")],
         None => vec![1, 2, 0], // 0 = one worker per core
     };
-    for (name, policy) in policies {
-        let reference = run_digest(1, policy);
-        for &w in &workers {
-            let d = run_digest(w, policy);
-            eprintln!("determinism digest[staleness={name}, workers={w}] = {d:016x}");
-            assert_eq!(d, reference, "digest diverged: staleness={name} workers={w}");
+    for (sname, policy) in &policies {
+        for (cname, codec) in &codecs {
+            let reference = run_digest(1, *policy, *codec);
+            eprintln!(
+                "determinism digest[staleness={sname}, codec={cname}, workers=1] \
+                 = {reference:016x}"
+            );
+            // workers=1 IS the reference — re-running it would only assert
+            // same-process repeatability at double the job cost
+            for &w in workers.iter().filter(|&&w| w != 1) {
+                let d = run_digest(w, *policy, *codec);
+                eprintln!(
+                    "determinism digest[staleness={sname}, codec={cname}, workers={w}] \
+                     = {d:016x}"
+                );
+                assert_eq!(
+                    d, reference,
+                    "digest diverged: staleness={sname} codec={cname} workers={w}"
+                );
+            }
         }
+    }
+}
+
+#[test]
+fn varint_f16_codec_bit_identical_across_worker_counts() {
+    // quantised uplink + downlink: the codec's error feedback runs on
+    // every client, and the run must still be a pure function of the seed
+    // at any worker count
+    let (params_seq, sum_seq) = run_with_codec(
+        CompressorKind::DgcWgmf,
+        Sampler::Full,
+        1,
+        SimConfig::default(),
+        varint_f16(),
+    );
+    assert!(
+        sum_seq.recorder.rounds.iter().all(|r| r.codec_ratio > 1.0),
+        "the quantised run must actually shrink the wire"
+    );
+    for workers in [2usize, 4] {
+        let (params_par, sum_par) = run_with_codec(
+            CompressorKind::DgcWgmf,
+            Sampler::Full,
+            workers,
+            SimConfig::default(),
+            varint_f16(),
+        );
+        assert_eq!(
+            params_seq, params_par,
+            "varint+f16 run must be bit-identical at workers={workers}"
+        );
+        assert_rounds_identical(CompressorKind::DgcWgmf, &sum_seq, &sum_par);
     }
 }
 
