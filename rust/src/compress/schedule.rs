@@ -30,7 +30,9 @@ impl TauSchedule {
                 if total_rounds == 0 || steps == 0 {
                     return end;
                 }
-                let step = (round * steps) / total_rounds;
+                // saturating: a round count near usize::MAX must clamp to
+                // the ramp's end, not overflow the multiply
+                let step = round.saturating_mul(steps) / total_rounds;
                 end * (step.min(steps) as f32) / steps as f32
             }
         }
@@ -65,8 +67,15 @@ impl SparsityWarmup {
         keep.max(self.rate)
     }
 
-    /// k for a parameter vector of length `dim` at `round` (at least 1).
+    /// k for a parameter vector of length `dim` at `round`: at least 1 and
+    /// at most `dim` for any nonempty vector — a keep-rate of 1e-9 still
+    /// transmits one coordinate, a rate of 1.0 never overruns the vector.
+    /// `dim = 0` returns 0 (there is nothing to select; `clamp(1, 0)`
+    /// would panic).
     pub fn k_at(&self, dim: usize, round: usize) -> usize {
+        if dim == 0 {
+            return 0;
+        }
         ((self.at(round) * dim as f64).ceil() as usize).clamp(1, dim)
     }
 }
@@ -132,5 +141,41 @@ mod tests {
         assert_eq!(tiny.k_at(1000, 0), 1); // never zero
         let full = SparsityWarmup::none(1.0);
         assert_eq!(full.k_at(1000, 0), 1000);
+    }
+
+    #[test]
+    fn k_at_degenerate_dims_never_panic_or_overrun() {
+        // dim = 0: nothing to select — 0, not a clamp(1, 0) panic
+        for rate in [1e-12, 0.1, 1.0] {
+            let w = SparsityWarmup { rate, warmup_rounds: 3 };
+            for round in [0usize, 1, 3, 1000] {
+                assert_eq!(w.k_at(0, round), 0, "rate {rate} round {round}");
+                let k1 = w.k_at(1, round);
+                assert_eq!(k1, 1, "dim 1 always transmits its one coordinate");
+                let k = w.k_at(7, round);
+                assert!((1..=7).contains(&k), "rate {rate} round {round}: k {k}");
+            }
+        }
+        // warmup inflates k toward dim but never past it
+        let w = SparsityWarmup { rate: 0.5, warmup_rounds: 4 };
+        for round in 0..8 {
+            assert!(w.k_at(10, round) <= 10);
+            assert!(w.k_at(10, round) >= w.k_at(10, round + 1), "warmup k non-increasing");
+        }
+    }
+
+    #[test]
+    fn tau_round_boundaries() {
+        // round 0 and round >= total_rounds under the stepped schedule
+        let s = TauSchedule::Stepped { end: 0.6, steps: 10, total_rounds: 100 };
+        assert_eq!(s.at(0), 0.0, "ramp starts at zero");
+        assert!((s.at(99) - 0.54).abs() < 1e-6, "last in-range round");
+        assert!((s.at(100) - 0.6).abs() < 1e-6, "round == total clamps to end");
+        assert!((s.at(usize::MAX) - 0.6).abs() < 1e-6, "far past the end stays clamped");
+        // degenerate schedules: zero rounds / zero steps read the end value
+        assert_eq!(TauSchedule::Stepped { end: 0.3, steps: 10, total_rounds: 0 }.at(0), 0.3);
+        assert_eq!(TauSchedule::Stepped { end: 0.3, steps: 0, total_rounds: 50 }.at(25), 0.3);
+        // constants ignore the round entirely
+        assert_eq!(TauSchedule::Constant(0.4).at(usize::MAX), 0.4);
     }
 }

@@ -68,6 +68,7 @@ use super::server::{BroadcastPolicy, FlServer};
 use super::traffic::{TrafficMeter, TrafficPolicy};
 use crate::compress::{self, CompressConfig, CompressorKind, SparsityWarmup};
 use crate::data::dataset::{Batch, Dataset};
+use crate::metrics::ledger::RoundLedger;
 use crate::metrics::recorder::{Recorder, RoundRecord};
 use crate::runtime::{evaluate_with_pool, TrainEngine};
 use crate::sim::network::Network;
@@ -254,6 +255,10 @@ pub struct FlRun {
     pub last_payload: SparseVec,
     /// worker engine pool, spawned once and reused every round
     worker_engines: Vec<Box<dyn TrainEngine>>,
+    /// optional round-event observer (conformance invariant ledgers — see
+    /// `metrics::ledger`); `None` (the default) costs one branch per hook
+    /// site and nothing else
+    pub ledger: Option<Box<dyn RoundLedger>>,
 }
 
 impl FlRun {
@@ -306,6 +311,7 @@ impl FlRun {
             weight_scratch: Vec::new(),
             gini_scratch: Vec::new(),
             worker_engines: Vec::new(),
+            ledger: None,
             cfg,
         }
     }
@@ -325,6 +331,9 @@ impl FlRun {
         // rotate the stale queue: last round's late arrivals become this
         // round's carried-in contributions (empty under the drop policy)
         self.stale_queue.begin_round();
+        if let Some(l) = self.ledger.as_deref_mut() {
+            l.begin_round(round);
+        }
         let root = Rng::new(self.cfg.seed);
         // over-provision the cohort when the scheduler is active (a superset
         // of the base sample; `overselect = 1` is exactly `sample`); the
@@ -516,6 +525,9 @@ impl FlRun {
             for ((c, &cid), &fate) in
                 parts.iter_mut().zip(&participants).zip(&self.fate_scratch)
             {
+                if let Some(l) = self.ledger.as_deref_mut() {
+                    l.on_upload(cid, fate, &c.echo, c.wire_buf.len(), c.precodec_bytes);
+                }
                 match fate {
                     ClientFate::Accepted => {
                         self.meter.record_uplink(cid, c.wire_buf.len(), c.precodec_bytes);
@@ -594,6 +606,10 @@ impl FlRun {
         //    the mean's denominator at full count (their *values* carry the
         //    α discount), so stale clients can never dominate a round.
         self.server.finish_round_into(n_accepted + carried_in, &mut self.payload_scratch, pool);
+        if let Some(l) = self.ledger.as_deref_mut() {
+            let aggregate = self.server.round_aggregate(&self.payload_scratch);
+            l.on_aggregate(aggregate, n_accepted + carried_in);
+        }
         self.stale_queue.recycle_ready();
         wire::encode_with(&self.payload_scratch, &mut self.bcast_buf, self.cfg.codec.downlink);
         let bcast_precodec = wire::encoded_bytes(&self.payload_scratch);

@@ -116,6 +116,19 @@ impl FlServer {
         }
     }
 
+    /// The round aggregate Ĝ_t behind the last
+    /// [`FlServer::finish_round_into`] call: the payload itself under the
+    /// `Aggregate` policy, the retained `ghat_scratch` under
+    /// `ServerMomentum` (whose payload is the momentum M_t, not Ĝ_t).
+    /// The conformance ledger uses this so mass-conservation checks audit
+    /// the aggregate, never the momentum state.
+    pub fn round_aggregate<'a>(&'a self, payload: &'a SparseVec) -> &'a SparseVec {
+        match self.policy {
+            BroadcastPolicy::Aggregate => payload,
+            BroadcastPolicy::ServerMomentum { .. } => &self.ghat_scratch,
+        }
+    }
+
     /// Close the round: aggregate the received gradients and produce
     /// (broadcast payload, aggregate Ĝ_t).
     ///
@@ -185,6 +198,24 @@ mod tests {
         assert_eq!(p1.values, vec![8.0]);
         let (p2, _) = s.finish_round(1); // no contributions: pure decay
         assert_eq!(p2.values, vec![4.0]);
+    }
+
+    #[test]
+    fn round_aggregate_is_ghat_under_both_policies() {
+        // Aggregate policy: the payload IS Ĝ_t
+        let mut s = FlServer::new(6, BroadcastPolicy::Aggregate);
+        s.receive(&SparseVec::new(6, vec![(1, 2.0)]));
+        let (payload, ghat) = s.finish_round(1);
+        assert_eq!(s.round_aggregate(&payload), &ghat);
+        // ServerMomentum: the payload is M_t, the aggregate is Ĝ_t
+        let mut m = FlServer::new(6, BroadcastPolicy::ServerMomentum { beta: 0.5 });
+        m.receive(&SparseVec::new(6, vec![(2, 4.0)]));
+        let (_, _) = m.finish_round(1);
+        m.receive(&SparseVec::new(6, vec![(3, 2.0)]));
+        let (p2, g2) = m.finish_round(1);
+        assert_eq!(p2.nnz(), 2, "momentum payload keeps old support");
+        assert_eq!(m.round_aggregate(&p2), &g2, "aggregate is the fresh Ĝ_t");
+        assert_eq!(g2.indices, vec![3]);
     }
 
     #[test]

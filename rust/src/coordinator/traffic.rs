@@ -126,23 +126,24 @@ impl TrafficMeter {
 
     /// Pre-codec over post-codec bytes for the round — the codec's byte
     /// reduction factor (1 under the default codec, > 1 when v2 coding
-    /// shrinks the wire). 1 when nothing crossed the wire.
+    /// shrinks the wire). A zero-byte round reads 1 — the neutral "no
+    /// reduction observed" element — never NaN or an infinity, so empty
+    /// rounds (whole cohort offline before any broadcast) stay plottable.
     pub fn round_codec_ratio(&self) -> f64 {
-        let actual = self.round_uplink + self.round_downlink;
-        if actual == 0 {
-            1.0
-        } else {
-            self.round_precodec as f64 / actual as f64
-        }
+        Self::ratio_of(self.round_precodec, self.round_uplink + self.round_downlink)
     }
 
-    /// Whole-run pre-codec over post-codec byte ratio.
+    /// Whole-run pre-codec over post-codec byte ratio (same zero-byte
+    /// guarantee as [`TrafficMeter::round_codec_ratio`]).
     pub fn total_codec_ratio(&self) -> f64 {
-        let actual = self.total();
+        Self::ratio_of(self.total_precodec, self.total())
+    }
+
+    fn ratio_of(precodec: usize, actual: usize) -> f64 {
         if actual == 0 {
             1.0
         } else {
-            self.total_precodec as f64 / actual as f64
+            precodec as f64 / actual as f64
         }
     }
 
@@ -159,6 +160,12 @@ impl TrafficMeter {
     /// silently concentrate the uplink bill on the fast clients.
     ///
     /// `scratch` is a reusable sort buffer (no allocation when warm).
+    ///
+    /// Guaranteed to return a finite value in `[0, (n-1)/n]` for every
+    /// input: an empty fleet or a fleet with zero recorded bytes reads
+    /// 0.0 (perfect equality), never NaN or an infinity — the statistic
+    /// feeds the per-round recorder and must stay plottable through
+    /// empty/degenerate rounds (asserted by the testkit traffic ledger).
     pub fn uplink_gini(&self, clients: usize, scratch: &mut Vec<f64>) -> f64 {
         if clients == 0 {
             return 0.0;
@@ -168,9 +175,11 @@ impl TrafficMeter {
         for i in 0..clients {
             scratch.push(self.per_client_uplink.get(i).copied().unwrap_or(0) as f64);
         }
-        scratch.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: byte counts come from usize so NaN cannot occur, but a
+        // panicking comparator inside a metrics read is never worth it
+        scratch.sort_unstable_by(|a, b| a.total_cmp(b));
         let total: f64 = scratch.iter().sum();
-        if total <= 0.0 {
+        if total <= 0.0 || !total.is_finite() {
             return 0.0;
         }
         let n = clients as f64;
@@ -178,7 +187,7 @@ impl TrafficMeter {
         for (i, &x) in scratch.iter().enumerate() {
             weighted += (i as f64 + 1.0) * x;
         }
-        (2.0 * weighted / (n * total) - (n + 1.0) / n).max(0.0)
+        (2.0 * weighted / (n * total) - (n + 1.0) / n).clamp(0.0, (n - 1.0) / n)
     }
 
     pub fn total(&self) -> usize {
@@ -299,6 +308,52 @@ mod tests {
         // unseen clients count as zero spend
         assert!(skew.uplink_gini(8, &mut scratch) > g);
         assert_eq!(skew.uplink_gini(0, &mut scratch), 0.0);
+    }
+
+    #[test]
+    fn gini_and_ratio_survive_empty_fleet_and_zero_byte_rounds() {
+        // the degenerate corners the recorder can hit: nothing selected,
+        // nothing transmitted, or a fleet of size zero — every statistic
+        // must come back finite and in range, never NaN/inf
+        let m = TrafficMeter::new(TrafficPolicy::default());
+        let mut scratch = Vec::new();
+        for clients in [0usize, 1, 4, 1000] {
+            let g = m.uplink_gini(clients, &mut scratch);
+            assert_eq!(g, 0.0, "untouched meter, {clients} clients");
+        }
+        assert_eq!(m.round_codec_ratio(), 1.0);
+        assert_eq!(m.total_codec_ratio(), 1.0);
+        // a round that opened but saw no traffic at all
+        let mut m = TrafficMeter::new(TrafficPolicy::default());
+        m.begin_round();
+        assert_eq!(m.round_codec_ratio(), 1.0, "zero-byte round is neutral, not NaN");
+        assert!(m.round_codec_ratio().is_finite());
+        assert_eq!(m.uplink_gini(8, &mut scratch), 0.0);
+        // traffic in an earlier round, then an empty round: round-scoped
+        // stats reset to the neutral values, run-scoped ones persist
+        m.record_uplink(0, 100, 200);
+        m.begin_round();
+        assert_eq!(m.round_codec_ratio(), 1.0);
+        assert!((m.total_codec_ratio() - 2.0).abs() < 1e-12);
+        let g = m.uplink_gini(4, &mut scratch);
+        assert!(g.is_finite() && (0.0..1.0).contains(&g));
+        // single-client fleet: Gini is 0 by definition ((n-1)/n = 0)
+        assert_eq!(m.uplink_gini(1, &mut scratch), 0.0);
+    }
+
+    #[test]
+    fn gini_upper_bound_is_clamped_to_n_minus_one_over_n() {
+        let mut m = TrafficMeter::new(TrafficPolicy::default());
+        m.begin_round();
+        m.record_uplink(0, usize::MAX / 4, usize::MAX / 4);
+        let mut scratch = Vec::new();
+        for n in [2usize, 3, 16] {
+            let g = m.uplink_gini(n, &mut scratch);
+            let max = (n as f64 - 1.0) / n as f64;
+            assert!(g.is_finite());
+            assert!(g <= max + 1e-15, "n={n}: {g} > {max}");
+            assert!((g - max).abs() < 1e-9, "one payer ~= the n-client maximum");
+        }
     }
 
     #[test]

@@ -121,6 +121,55 @@ pub fn build_workload(cfg: &RunConfig) -> Result<Workload> {
     }
 }
 
+/// Everything one `fedgmf verify` scenario run needs: deterministic blob
+/// shards, a four-tier link fleet, and a fresh native engine.
+pub struct VerifyFixture {
+    pub shards: Vec<Box<dyn Dataset + Send>>,
+    pub network: crate::sim::network::Network,
+    pub engine: NativeEngine,
+}
+
+/// Tiny-scale deterministic fixture for the conformance matrix
+/// (`crate::testkit`): `clients` blob shards over shared class centers
+/// (same task, disjoint per-client noise), no eval set (the trajectory is
+/// pinned through losses and parameter bits), and a hub network whose
+/// uplink tiers repeat every 4 clients. The slowest tier
+/// (`up_bps = 1200`) cannot meet the fixture deadline under **any** codec
+/// axis — even the ~150-byte q8 upload takes ≥ 0.12 s — so every scenario
+/// that can produce stragglers does, and the carry policies genuinely
+/// diverge from drop. Everything is a pure function of `seed`.
+pub fn verify_fixture(clients: usize, seed: u64) -> VerifyFixture {
+    use crate::runtime::native::BlobDataset;
+    use crate::sim::network::{LinkSpec, Network};
+    const DIM: usize = 16;
+    const CLASSES: usize = 4;
+    const PER_CLIENT: usize = 40;
+    let shards: Vec<Box<dyn Dataset + Send>> = (0..clients)
+        .map(|c| {
+            Box::new(BlobDataset::generate_split(
+                PER_CLIENT,
+                DIM,
+                CLASSES,
+                0.4,
+                seed,
+                seed + 1 + c as u64,
+            )) as Box<dyn Dataset + Send>
+        })
+        .collect();
+    let links: Vec<LinkSpec> = (0..clients)
+        .map(|i| LinkSpec {
+            up_bps: [24_000.0, 12_000.0, 8_000.0, 1_200.0][i % 4],
+            down_bps: 96_000.0,
+            latency_s: 0.004 + 0.002 * (i % 3) as f64,
+        })
+        .collect();
+    VerifyFixture {
+        shards,
+        network: Network { links },
+        engine: NativeEngine::new(DIM, 12, CLASSES, seed),
+    }
+}
+
 /// Build the engine side of a run.
 pub fn build_engine(
     cfg: &RunConfig,
@@ -187,6 +236,23 @@ mod tests {
         assert_eq!(w.shards.len(), 8);
         assert!(w.achieved_emd > 0.02 && w.achieved_emd < 0.4, "emd {}", w.achieved_emd);
         assert!(!w.test.is_empty());
+    }
+
+    #[test]
+    fn verify_fixture_is_deterministic_and_has_a_hopeless_tier() {
+        let a = verify_fixture(10, 42);
+        let b = verify_fixture(10, 42);
+        assert_eq!(a.shards.len(), 10);
+        assert_eq!(a.network.links.len(), 10);
+        assert_eq!(a.engine.param_count(), b.engine.param_count());
+        for (la, lb) in a.network.links.iter().zip(&b.network.links) {
+            assert_eq!(la.up_bps.to_bits(), lb.up_bps.to_bits());
+            assert_eq!(la.latency_s.to_bits(), lb.latency_s.to_bits());
+        }
+        // the slowest tier cannot ship even a minimal ~150-byte upload
+        // inside the testkit deadline (0.095 s): 150 / 1200 = 0.125 s
+        let slowest = a.network.links.iter().map(|l| l.up_bps).fold(f64::MAX, f64::min);
+        assert!(150.0 / slowest > 0.095, "slowest tier must straggle under every codec");
     }
 
     #[test]

@@ -26,4 +26,5 @@ pub mod metrics;
 pub mod runtime;
 pub mod sim;
 pub mod sparse;
+pub mod testkit;
 pub mod util;

@@ -4,6 +4,7 @@
 //! fedgmf train --config configs/cifar_gmf.toml [--set compress.rate=0.3 ...]
 //! fedgmf experiment --id table3 [--scale quick|default|paper] [--engine native]
 //! fedgmf experiment --list
+//! fedgmf verify --scale quick [--bless]     # scenario-matrix conformance
 //! fedgmf data --task cifar --emd 1.35       # inspect partition statistics
 //! fedgmf artifacts-check                    # verify AOT artifacts load
 //! ```
@@ -39,6 +40,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(rest),
         "experiment" | "exp" => cmd_experiment(rest),
+        "verify" => cmd_verify(rest),
         "data" => cmd_data(rest),
         "artifacts-check" => cmd_artifacts_check(rest),
         "help" | "--help" | "-h" => {
@@ -67,6 +69,11 @@ USAGE:
   fedgmf experiment --id ID [--scale quick|default|paper] [--engine pjrt|native]
                [--techniques a,b] [--levels 0.1,0.5] [--out-dir DIR] [--seed N]
   fedgmf experiment --list
+  fedgmf verify [--scale quick|default] [--bless] [--golden FILE] [--report FILE]
+               # run the full scenario-matrix conformance harness (see
+               # docs/testing.md): technique x codec x staleness x selection x
+               # preset x workers, with invariant ledgers and golden digests;
+               # --bless regenerates the golden registry
   fedgmf data --task cifar|shakespeare [--emd X] [--clients N]
   fedgmf artifacts-check [--artifacts DIR]
 "
@@ -85,8 +92,9 @@ impl Flags {
         while i < args.len() {
             let k = &args[i];
             if let Some(name) = k.strip_prefix("--") {
-                if name == "list" {
-                    vals.push(("list".into(), "true".into()));
+                // value-less boolean flags
+                if name == "list" || name == "bless" {
+                    vals.push((name.to_string(), "true".into()));
                     i += 1;
                     continue;
                 }
@@ -229,6 +237,37 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
     let report_path = ea.out_dir.join(id).join("report.txt");
     std::fs::write(&report_path, &report)?;
     println!("(report saved to {})", report_path.display());
+    Ok(())
+}
+
+fn cmd_verify(args: &[String]) -> anyhow::Result<()> {
+    use fedgmf::testkit::{self, VerifyOptions};
+    let f = Flags::parse(args)?;
+    let scale = match f.get("scale") {
+        None => Scale::Quick,
+        Some(s) => Scale::parse(s).ok_or_else(|| anyhow::anyhow!("unknown scale `{s}`"))?,
+    };
+    let opts = VerifyOptions {
+        scale,
+        bless: f.has("bless"),
+        golden_path: f
+            .get("golden")
+            .map(PathBuf::from)
+            .unwrap_or_else(testkit::default_golden_path),
+        report_path: f.get("report").map(PathBuf::from),
+    };
+    let report = testkit::run_verify(&opts)?;
+    print!("{}", report.render());
+    if let Some(path) = &opts.report_path {
+        println!("(conformance report saved to {})", path.display());
+    }
+    if !report.passed() {
+        return Err(anyhow::anyhow!(
+            "verify failed: {} invariant check(s) failed, {} digest mismatch(es)",
+            report.invariant_failures(),
+            report.digest_mismatches.len()
+        ));
+    }
     Ok(())
 }
 

@@ -1,0 +1,60 @@
+//! Round-event ledger hooks — the observation surface behind `fedgmf
+//! verify`'s invariant checks.
+//!
+//! The conformance harness (`crate::testkit`) needs to see, per round, what
+//! the coordinator's reductions actually did: which decoded upload met
+//! which fate, and what aggregate the server produced from how many
+//! contributors. Threading that state out of `FlRun` piecemeal would either
+//! expose private scratch buffers or force every caller to re-derive fates
+//! from the recorder. Instead the round loop carries an optional
+//! [`RoundLedger`]: when installed (`FlRun::ledger`), the loop calls the
+//! hooks at the deterministic reduction points; when absent (the default,
+//! and every production path) the only cost is a branch on a `None` — no
+//! allocation, no virtual call, no observable behaviour change.
+//!
+//! Hooks fire on the coordinator thread only, in deterministic participant
+//! order, so a ledger sees the same event stream at every worker count —
+//! which is exactly what lets the testkit assert cross-worker digest
+//! equality and per-coordinate mass conservation from one implementation.
+
+use crate::sim::scheduler::ClientFate;
+use crate::sparse::vector::SparseVec;
+use std::any::Any;
+
+/// Observer of one FL run's per-round reduction events.
+///
+/// All hooks default to no-ops so a ledger implements only what it audits.
+/// `into_any` is the retrieval path: after the run, the owner takes the
+/// boxed ledger back out of `FlRun::ledger` and downcasts it to read the
+/// accumulated state.
+pub trait RoundLedger: Any {
+    /// A communication round opened (after the stale-queue rotation,
+    /// before any upload event of that round).
+    fn begin_round(&mut self, _round: usize) {}
+
+    /// One selected participant's fate was decided. `echo` is the decoded
+    /// upload exactly as the server would aggregate it (post wire
+    /// round-trip — under a lossy codec this is the in-flight mass, not
+    /// the pre-quantisation upload). `Offline` clients never transmitted;
+    /// their `echo` is reported for completeness but no byte of it crossed
+    /// the wire.
+    fn on_upload(
+        &mut self,
+        _client: usize,
+        _fate: ClientFate,
+        _echo: &SparseVec,
+        _wire_bytes: usize,
+        _precodec_bytes: usize,
+    ) {
+    }
+
+    /// The server closed the round: `aggregate` is the round aggregate
+    /// Ĝ_t *before* the downlink codec (under the server-momentum
+    /// broadcast policy this is Ĝ_t, not the momentum payload), and
+    /// `contributors` is the mean's denominator — fresh accepted uploads
+    /// plus carried-in stale uploads.
+    fn on_aggregate(&mut self, _aggregate: &SparseVec, _contributors: usize) {}
+
+    /// Recover the concrete ledger after the run.
+    fn into_any(self: Box<Self>) -> Box<dyn Any>;
+}

@@ -1,4 +1,6 @@
 //! Metric recording and reporting.
+pub mod ledger;
 pub mod recorder;
 
+pub use ledger::RoundLedger;
 pub use recorder::{Recorder, RoundRecord};

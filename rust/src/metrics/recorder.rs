@@ -59,6 +59,53 @@ pub struct RoundRecord {
     pub codec_ratio: f64,
 }
 
+impl RoundRecord {
+    /// Internal-consistency violations of this record — the per-round half
+    /// of the traffic invariant ledger `fedgmf verify` runs over every
+    /// scenario (see `crate::testkit::invariants`). Empty means the record
+    /// is self-consistent: every derived statistic is finite and in range,
+    /// and the codec-ratio/pre-codec relation holds to the bit contract
+    /// the round loop promises.
+    pub fn consistency_violations(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        let r = self.round;
+        if !self.codec_ratio.is_finite() || self.codec_ratio <= 0.0 {
+            out.push(format!("round {r}: codec_ratio {} not finite/positive", self.codec_ratio));
+        }
+        if !self.traffic_gini.is_finite() || !(0.0..1.0).contains(&self.traffic_gini) {
+            out.push(format!("round {r}: traffic_gini {} outside [0, 1)", self.traffic_gini));
+        }
+        if self.wasted_uplink_bytes > self.uplink_bytes {
+            out.push(format!(
+                "round {r}: wasted {} exceeds uplink {}",
+                self.wasted_uplink_bytes, self.uplink_bytes
+            ));
+        }
+        let actual = self.uplink_bytes + self.downlink_bytes;
+        let want_ratio =
+            if actual == 0 { 1.0 } else { self.precodec_bytes as f64 / actual as f64 };
+        if (self.codec_ratio - want_ratio).abs() > 1e-12 {
+            out.push(format!(
+                "round {r}: codec_ratio {} != precodec/actual {}",
+                self.codec_ratio, want_ratio
+            ));
+        }
+        if self.dropped_deadline + self.dropped_offline > self.selected {
+            out.push(format!(
+                "round {r}: drops {}+{} exceed cohort {}",
+                self.dropped_deadline, self.dropped_offline, self.selected
+            ));
+        }
+        if !self.sim_seconds.is_finite() || self.sim_seconds < 0.0 {
+            out.push(format!("round {r}: sim_seconds {} invalid", self.sim_seconds));
+        }
+        if !self.train_loss.is_finite() {
+            out.push(format!("round {r}: train_loss {} not finite", self.train_loss));
+        }
+        out
+    }
+}
+
 /// Accumulates rounds; produces summaries and files.
 #[derive(Clone, Debug, Default)]
 pub struct Recorder {
@@ -331,6 +378,56 @@ mod tests {
         let j = r.summary_json();
         assert_eq!(j.get("total_carried_in").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("final_traffic_gini").unwrap().as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn consistency_violations_flag_bad_records() {
+        // a well-formed round reads clean
+        let good = RoundRecord {
+            round: 3,
+            uplink_bytes: 100,
+            downlink_bytes: 50,
+            precodec_bytes: 300,
+            codec_ratio: 2.0,
+            selected: 4,
+            dropped_deadline: 1,
+            traffic_gini: 0.2,
+            ..Default::default()
+        };
+        assert!(good.consistency_violations().is_empty(), "{:?}", good.consistency_violations());
+        // an empty-wire round must read ratio 1, not 0/NaN
+        let empty = RoundRecord { codec_ratio: 1.0, ..Default::default() };
+        assert!(empty.consistency_violations().is_empty());
+        // broken records are each caught
+        let bad_ratio = RoundRecord { codec_ratio: f64::NAN, ..Default::default() };
+        assert!(!bad_ratio.consistency_violations().is_empty());
+        let bad_gini = RoundRecord { codec_ratio: 1.0, traffic_gini: 1.5, ..Default::default() };
+        assert!(!bad_gini.consistency_violations().is_empty());
+        let bad_waste = RoundRecord {
+            codec_ratio: 1.0,
+            uplink_bytes: 10,
+            downlink_bytes: 0,
+            precodec_bytes: 10,
+            wasted_uplink_bytes: 20,
+            ..Default::default()
+        };
+        assert!(!bad_waste.consistency_violations().is_empty());
+        let bad_relation = RoundRecord {
+            uplink_bytes: 100,
+            downlink_bytes: 0,
+            precodec_bytes: 100,
+            codec_ratio: 2.0,
+            ..Default::default()
+        };
+        assert!(!bad_relation.consistency_violations().is_empty());
+        let bad_drops = RoundRecord {
+            codec_ratio: 1.0,
+            selected: 2,
+            dropped_deadline: 2,
+            dropped_offline: 1,
+            ..Default::default()
+        };
+        assert!(!bad_drops.consistency_violations().is_empty());
     }
 
     #[test]

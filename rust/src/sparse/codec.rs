@@ -322,6 +322,24 @@ pub fn value_stream_bytes(coding: ValueCoding, n: usize) -> usize {
     }
 }
 
+/// Per-block q8 scale: `maxabs / 127`, or 0 for an all-zero block. One
+/// implementation shared by both encoder paths and by the testkit's
+/// round-trip invariant (`testkit::invariants::check_q8_roundtrip`), so
+/// the checked bound is the shipped bound by construction.
+pub fn q8_block_scale(block: &[f32]) -> f32 {
+    q8_scale_from_maxabs(block.iter().fold(0.0f32, |a, &v| a.max(v.abs())))
+}
+
+/// Scale from an already-computed block maxabs (the encoders fold the
+/// block once for both the scale and the `127/maxabs` quantiser).
+fn q8_scale_from_maxabs(maxabs: f32) -> f32 {
+    if maxabs > 0.0 {
+        maxabs / 127.0
+    } else {
+        0.0
+    }
+}
+
 fn push_values(out: &mut Vec<u8>, coding: ValueCoding, values: &[f32]) {
     match coding {
         ValueCoding::F32 => {
@@ -337,7 +355,7 @@ fn push_values(out: &mut Vec<u8>, coding: ValueCoding, values: &[f32]) {
         ValueCoding::Q8 => {
             for block in values.chunks(Q8_BLOCK) {
                 let maxabs = block.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
-                let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 0.0 };
+                let scale = q8_scale_from_maxabs(maxabs);
                 out.extend_from_slice(&scale.to_le_bytes());
                 if scale > 0.0 {
                     let inv = 127.0 / maxabs;
@@ -530,7 +548,7 @@ fn push_dense_values(out: &mut Vec<u8>, coding: ValueCoding, sv: &SparseVec) {
                 for &v in &sv.values[e0..e] {
                     maxabs = maxabs.max(v.abs());
                 }
-                let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 0.0 };
+                let scale = q8_scale_from_maxabs(maxabs);
                 out.extend_from_slice(&scale.to_le_bytes());
                 let base = out.len();
                 out.resize(base + (block_end - block_start), 0);
@@ -871,6 +889,34 @@ mod tests {
         assert_eq!(buf[6], 0, "adversarial gaps must fall back to raw indices");
         let back = wire::decode(&buf).unwrap();
         assert_eq!(back, sv);
+    }
+
+    #[test]
+    fn q8_block_scale_definition() {
+        assert_eq!(q8_block_scale(&[]), 0.0);
+        assert_eq!(q8_block_scale(&[0.0, 0.0]), 0.0, "all-zero block has no scale");
+        assert_eq!(q8_block_scale(&[1.0, -127.0, 3.5]), 1.0);
+        assert_eq!(q8_block_scale(&[-0.254]), 0.254 / 127.0);
+        // the encoder ships exactly this scale in the block header
+        let values: Vec<f32> = (0..Q8_BLOCK).map(|i| (i as f32) - 100.0).collect();
+        // dim far above the bitmap crossover so the sparse container wins
+        let sv = SparseVec::from_sorted(
+            Q8_BLOCK * 64,
+            (0..Q8_BLOCK as u32).collect(),
+            values.clone(),
+        );
+        let mut buf = Vec::new();
+        encode_v2(&sv, &mut buf, params(IndexCoding::Varint, ValueCoding::Q8));
+        assert_eq!(buf[5], CONTAINER_SPARSE);
+        let nnz_off = V2_HEADER_BYTES;
+        let nnz = u32::from_le_bytes(buf[nnz_off..nnz_off + 4].try_into().unwrap()) as usize;
+        assert_eq!(nnz, Q8_BLOCK);
+        // value stream starts after nnz + varint index stream; recover its
+        // offset from the known total layout (values are the tail)
+        let tail = value_stream_bytes(ValueCoding::Q8, nnz);
+        let val_off = buf.len() - tail;
+        let shipped = f32::from_le_bytes(buf[val_off..val_off + 4].try_into().unwrap());
+        assert_eq!(shipped, q8_block_scale(&values));
     }
 
     #[test]

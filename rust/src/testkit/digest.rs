@@ -1,0 +1,144 @@
+//! Trajectory digests — one u64 fingerprint per run, stable across
+//! machines, worker counts and rebuilds.
+//!
+//! The digest folds the final model parameter bits and every per-round
+//! record field the round loop promises to keep deterministic through an
+//! FNV-1a hash. Two runs produce the same digest iff they are
+//! bit-identical on every promised observable — which makes the digest
+//! both the cross-worker-equality invariant (`fedgmf verify`) and the CI
+//! determinism-matrix fingerprint (`tests/determinism.rs`), from one
+//! implementation.
+//!
+//! The field order is part of the golden-registry format: appending a new
+//! `RoundRecord` field here invalidates committed digests, which is
+//! exactly the right failure mode (the registry must be re-blessed when
+//! the observable surface grows) — but do it deliberately.
+
+use crate::metrics::recorder::RoundRecord;
+
+/// Incremental FNV-1a over little-endian u64 words.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+
+    pub fn new() -> Self {
+        Fnv64(Self::OFFSET)
+    }
+
+    /// Fold one word (byte-at-a-time, little-endian).
+    pub fn eat(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    pub fn value(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Digest of one run's observable trajectory: final parameter bit patterns
+/// plus every deterministic per-round record field, in a fixed order.
+pub fn trajectory_digest(param_bits: &[u32], rounds: &[RoundRecord]) -> u64 {
+    let mut h = Fnv64::new();
+    for &p in param_bits {
+        h.eat(p as u64);
+    }
+    for r in rounds {
+        h.eat(r.round as u64);
+        h.eat(r.train_loss.to_bits());
+        h.eat(r.test_accuracy.to_bits());
+        h.eat(r.uplink_bytes as u64);
+        h.eat(r.downlink_bytes as u64);
+        h.eat(r.aggregate_nnz as u64);
+        h.eat(r.mask_overlap.to_bits());
+        h.eat(r.sim_seconds.to_bits());
+        h.eat(r.sim_clock.to_bits());
+        h.eat(r.selected as u64);
+        h.eat(r.dropped_deadline as u64);
+        h.eat(r.dropped_offline as u64);
+        h.eat(r.carried_in as u64);
+        h.eat(r.carried_bytes as u64);
+        h.eat(r.wasted_uplink_bytes as u64);
+        h.eat(r.traffic_gini.to_bits());
+        h.eat(r.precodec_bytes as u64);
+        h.eat(r.codec_ratio.to_bits());
+    }
+    h.value()
+}
+
+/// Render a digest the way the golden registry stores it.
+pub fn hex(d: u64) -> String {
+    format!("{d:016x}")
+}
+
+/// Parse a registry digest string.
+pub fn from_hex(s: &str) -> Option<u64> {
+    if s.len() == 16 {
+        u64::from_str_radix(s, 16).ok()
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_matches_reference_vector() {
+        // FNV-1a over the bytes of one zero word
+        let mut h = Fnv64::new();
+        h.eat(0);
+        let mut want = Fnv64::OFFSET;
+        for _ in 0..8 {
+            want ^= 0;
+            want = want.wrapping_mul(Fnv64::PRIME);
+        }
+        assert_eq!(h.value(), want);
+    }
+
+    #[test]
+    fn digest_sensitive_to_every_promised_field() {
+        let base = RoundRecord {
+            round: 1,
+            train_loss: 0.5,
+            uplink_bytes: 100,
+            codec_ratio: 1.0,
+            ..Default::default()
+        };
+        let d0 = trajectory_digest(&[1, 2, 3], &[base.clone()]);
+        assert_eq!(d0, trajectory_digest(&[1, 2, 3], &[base.clone()]), "digest is a pure fn");
+        let mut param_change = trajectory_digest(&[1, 2, 4], &[base.clone()]);
+        assert_ne!(d0, param_change);
+        let mut r = base.clone();
+        r.carried_in = 1;
+        param_change = trajectory_digest(&[1, 2, 3], &[r]);
+        assert_ne!(d0, param_change);
+        let mut r = base.clone();
+        r.traffic_gini = 0.25;
+        assert_ne!(d0, trajectory_digest(&[1, 2, 3], &[r]));
+        let mut r = base;
+        r.precodec_bytes = 7;
+        assert_ne!(d0, trajectory_digest(&[1, 2, 3], &[r]));
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        for d in [0u64, 1, 0xdead_beef_cafe_f00d, u64::MAX] {
+            assert_eq!(from_hex(&hex(d)), Some(d));
+        }
+        assert_eq!(from_hex("xyz"), None);
+        assert_eq!(from_hex("123"), None);
+    }
+}

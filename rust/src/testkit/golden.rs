@@ -1,0 +1,175 @@
+//! Golden trajectory-digest registry for `fedgmf verify`.
+//!
+//! The registry (`rust/tests/golden/verify_matrix.json`) maps every
+//! scenario key to the trajectory digest a conforming build must
+//! reproduce, per scale. `fedgmf verify --bless` regenerates it; because
+//! digests are pure functions of the fixture and the file serialises
+//! through the in-tree deterministic JSON writer (BTreeMap ordering,
+//! stable number formatting), re-blessing an unchanged tree is
+//! byte-identical.
+//!
+//! A freshly grown axis (or an intentional trajectory change) shows up as
+//! a digest/coverage mismatch; the fix is to review the behaviour change
+//! and re-bless. `blessed: false` marks a placeholder written in an
+//! environment that could not execute the matrix — the digest gate then
+//! self-arms on the first blessed commit, the same pattern as the bench
+//! regression gate (see `docs/ci.md`).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Registry file schema version.
+pub const GOLDEN_SCHEMA: u64 = 1;
+
+/// In-memory registry: scale name → (scenario key → digest).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GoldenRegistry {
+    pub blessed: bool,
+    pub scales: BTreeMap<String, BTreeMap<String, u64>>,
+}
+
+impl GoldenRegistry {
+    /// Load a registry. A missing file reads as an unblessed empty
+    /// registry (the self-arming state); a present-but-malformed file is
+    /// an error — silent fallback would disarm the gate.
+    pub fn load(path: &Path) -> Result<GoldenRegistry> {
+        if !path.exists() {
+            return Ok(GoldenRegistry::default());
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading golden registry {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("golden registry {}: {e}", path.display()))?;
+        let schema = j.get("schema").and_then(|v| v.as_usize()).unwrap_or(0);
+        if schema as u64 != GOLDEN_SCHEMA {
+            return Err(anyhow!(
+                "golden registry {}: schema {schema} != {GOLDEN_SCHEMA}",
+                path.display()
+            ));
+        }
+        let blessed = matches!(j.get("blessed"), Some(Json::Bool(true)));
+        let mut scales = BTreeMap::new();
+        if let Some(sc) = j.get("scales").and_then(|v| v.as_obj()) {
+            for (scale, digests) in sc {
+                let map = digests
+                    .as_obj()
+                    .ok_or_else(|| anyhow!("golden registry: scale {scale} is not an object"))?;
+                let mut parsed = BTreeMap::new();
+                for (key, dv) in map {
+                    let hex = dv
+                        .as_str()
+                        .ok_or_else(|| anyhow!("golden registry: {scale}/{key}: not a string"))?;
+                    let d = super::digest::from_hex(hex).ok_or_else(|| {
+                        anyhow!("golden registry: {scale}/{key}: bad digest `{hex}`")
+                    })?;
+                    parsed.insert(key.clone(), d);
+                }
+                scales.insert(scale.clone(), parsed);
+            }
+        }
+        Ok(GoldenRegistry { blessed, scales })
+    }
+
+    /// Committed digests for one scale (None when the scale was never
+    /// blessed).
+    pub fn digests(&self, scale: &str) -> Option<&BTreeMap<String, u64>> {
+        self.scales.get(scale)
+    }
+
+    /// Replace one scale's digests and mark the registry blessed.
+    pub fn bless(&mut self, scale: &str, digests: BTreeMap<String, u64>) {
+        self.blessed = true;
+        self.scales.insert(scale.to_string(), digests);
+    }
+
+    /// Deterministic serialisation (byte-identical for equal contents).
+    pub fn to_json(&self) -> Json {
+        let scales = Json::Obj(
+            self.scales
+                .iter()
+                .map(|(scale, digests)| {
+                    let map = Json::Obj(
+                        digests
+                            .iter()
+                            .map(|(k, &d)| (k.clone(), Json::str(super::digest::hex(d))))
+                            .collect(),
+                    );
+                    (scale.clone(), map)
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema", Json::num(GOLDEN_SCHEMA as f64)),
+            ("blessed", Json::Bool(self.blessed)),
+            ("scales", scales),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing golden registry {}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fedgmf-golden-{}-{name}.json", std::process::id()))
+    }
+
+    #[test]
+    fn missing_file_reads_unblessed_empty() {
+        let g = GoldenRegistry::load(Path::new("/nonexistent/registry.json")).unwrap();
+        assert!(!g.blessed);
+        assert!(g.scales.is_empty());
+        assert!(g.digests("quick").is_none());
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_byte_identical_rewrite() {
+        let mut g = GoldenRegistry::default();
+        let mut d = BTreeMap::new();
+        d.insert("DGC/v1/drop/uniform/uniform".to_string(), 0xdead_beef_u64);
+        d.insert("GMC/varint_q8/carry/feasibility/longtail".to_string(), 7);
+        g.bless("quick", d);
+        let path = tmp("roundtrip");
+        g.save(&path).unwrap();
+        let first = std::fs::read(&path).unwrap();
+        let back = GoldenRegistry::load(&path).unwrap();
+        assert_eq!(back, g);
+        assert!(back.blessed);
+        assert_eq!(back.digests("quick").unwrap().len(), 2);
+        assert_eq!(
+            back.digests("quick").unwrap()["DGC/v1/drop/uniform/uniform"],
+            0xdead_beef_u64
+        );
+        // re-saving the reloaded registry is byte-identical
+        back.save(&path).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), first);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn malformed_registry_is_an_error_not_a_fallback() {
+        let path = tmp("malformed");
+        std::fs::write(&path, "{ not json").unwrap();
+        assert!(GoldenRegistry::load(&path).is_err());
+        std::fs::write(&path, r#"{"schema": 99, "blessed": true, "scales": {}}"#).unwrap();
+        assert!(GoldenRegistry::load(&path).is_err(), "wrong schema must not disarm the gate");
+        std::fs::write(
+            &path,
+            r#"{"schema": 1, "blessed": true, "scales": {"quick": {"k": "nothex"}}}"#,
+        )
+        .unwrap();
+        assert!(GoldenRegistry::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,388 @@
+//! Invariant ledgers: the machine-checkable contracts `fedgmf verify`
+//! asserts for every scenario in the matrix.
+//!
+//! Three families:
+//!
+//! * **Mass conservation** ([`MassLedger`], installed via
+//!   `FlRun::ledger`): per coordinate in f64, every unit of transmitted
+//!   gradient mass ends up in exactly one place — an aggregate (times its
+//!   contributor count), the client residual (via a restore path), or the
+//!   server's stale queue at the staleness discount. This generalises the
+//!   carry-only ledger `tests/semi_sync.rs` introduced to **all** staleness
+//!   policies, selection policies, codecs (the in-flight mass under a
+//!   lossy coding is the echo — quantisation error is restored at compress
+//!   time and cancels out of the balance) and techniques (the
+//!   server-momentum broadcast is audited through the round aggregate
+//!   Ĝ_t, never the momentum state).
+//! * **Traffic consistency** ([`check_traffic`]): the per-round records
+//!   are internally consistent ([`RoundRecord::consistency_violations`])
+//!   and the meter's cumulative ledgers equal the per-round sums,
+//!   including the per-client attribution and the pre-codec ledger.
+//! * **q8 value coding** ([`check_q8_roundtrip`]): blockwise-int8
+//!   round-trip error is bounded by half a quantisation step per
+//!   coordinate and exact zeros survive exactly — the same check
+//!   `tests/proptests.rs` drives with randomized vectors.
+
+use crate::coordinator::traffic::TrafficMeter;
+use crate::metrics::ledger::RoundLedger;
+use crate::metrics::recorder::Recorder;
+use crate::sim::scheduler::{ClientFate, StalenessPolicy};
+use crate::sim::staleness::StaleQueue;
+use crate::sparse::codec::{q8_block_scale, Q8_BLOCK};
+use crate::sparse::vector::SparseVec;
+use std::any::Any;
+
+/// Relative tolerance for the f64 mass balance (f32 arithmetic underneath).
+const MASS_REL_TOL: f64 = 1e-3;
+
+/// Per-coordinate gradient-mass conservation ledger.
+///
+/// Balance, per coordinate `i`, at the end of a run:
+///
+/// ```text
+///   uploaded[i] = delivered[i] + restored[i] + α · pending[i]
+/// ```
+///
+/// where `uploaded` sums the echo of every upload that crossed the wire
+/// (fates `Accepted` and `Straggler`; `Offline` clients never transmitted
+/// and their full client-side restore cancels), `delivered` sums
+/// `contributors × Ĝ_t` over all rounds, `restored` is the mass the
+/// coordinator returned to client residuals (full echo for dropped
+/// stragglers, the unapplied `1 − α` fraction for carried ones), and
+/// `pending` is what the stale queue still holds when the run ends.
+pub struct MassLedger {
+    dim: usize,
+    alpha: f64,
+    carries: bool,
+    uploaded: Vec<f64>,
+    delivered: Vec<f64>,
+    restored: Vec<f64>,
+    /// transmitted uploads seen (diagnostic; a zero count would make the
+    /// balance vacuously true)
+    pub uploads_seen: usize,
+    /// straggler fates seen (diagnostic for regime assertions)
+    pub stragglers_seen: usize,
+}
+
+impl MassLedger {
+    pub fn new(dim: usize, staleness: StalenessPolicy) -> Self {
+        MassLedger {
+            dim,
+            alpha: staleness.alpha() as f64,
+            carries: staleness.carries(),
+            uploaded: vec![0.0; dim],
+            delivered: vec![0.0; dim],
+            restored: vec![0.0; dim],
+            uploads_seen: 0,
+            stragglers_seen: 0,
+        }
+    }
+
+    /// Close the books: check the balance against what the stale queue
+    /// still holds. Returns human-readable violations (empty = conserved).
+    pub fn check(&self, stale: &StaleQueue) -> Vec<String> {
+        let mut pending = vec![0.0f64; self.dim];
+        for e in stale.pending_entries() {
+            for (&i, &v) in e.grad.indices.iter().zip(&e.grad.values) {
+                pending[i as usize] += v as f64;
+            }
+        }
+        let mut out = Vec::new();
+        if self.uploads_seen == 0 {
+            out.push("mass: no transmitted upload observed (vacuous balance)".into());
+        }
+        for i in 0..self.dim {
+            let want = self.uploaded[i];
+            let got = self.delivered[i] + self.restored[i] + self.alpha * pending[i];
+            let tol = MASS_REL_TOL * want.abs().max(1.0);
+            if (got - want).abs() > tol {
+                out.push(format!(
+                    "mass: coord {i}: delivered {} + restored {} + {}*pending {} = {got} \
+                     != uploaded {want}",
+                    self.delivered[i], self.restored[i], self.alpha, pending[i]
+                ));
+                if out.len() >= 8 {
+                    out.push("mass: (further coordinate violations elided)".into());
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl RoundLedger for MassLedger {
+    fn on_upload(
+        &mut self,
+        _client: usize,
+        fate: ClientFate,
+        echo: &SparseVec,
+        _wire_bytes: usize,
+        _precodec_bytes: usize,
+    ) {
+        match fate {
+            ClientFate::Accepted => {
+                self.uploads_seen += 1;
+                for (&i, &v) in echo.indices.iter().zip(&echo.values) {
+                    self.uploaded[i as usize] += v as f64;
+                }
+            }
+            ClientFate::Straggler => {
+                self.uploads_seen += 1;
+                self.stragglers_seen += 1;
+                // the bytes crossed the wire; what the server will not
+                // apply (everything under drop, 1 − α under carry) went
+                // back into the client residual
+                let back = if self.carries { 1.0 - self.alpha } else { 1.0 };
+                for (&i, &v) in echo.indices.iter().zip(&echo.values) {
+                    self.uploaded[i as usize] += v as f64;
+                    self.restored[i as usize] += back * v as f64;
+                }
+            }
+            // never transmitted: the full client-side restore cancels the
+            // never-uploaded mass — nothing enters the balance
+            ClientFate::Offline => {}
+        }
+    }
+
+    fn on_aggregate(&mut self, aggregate: &SparseVec, contributors: usize) {
+        let c = contributors as f64;
+        for (&i, &v) in aggregate.indices.iter().zip(&aggregate.values) {
+            self.delivered[i as usize] += c * v as f64;
+        }
+    }
+
+    fn into_any(self: Box<Self>) -> Box<dyn Any> {
+        self
+    }
+}
+
+/// Traffic-meter ⇄ recorder consistency: per-round record sanity plus the
+/// cumulative-equals-sum-of-rounds contract for every ledger the meter
+/// keeps (actual bytes, wasted bytes, pre-codec bytes, per-client
+/// attribution). `v1_codec` additionally pins the pre-codec ledger to the
+/// actual bytes (the default codec ships v1 bytes exactly).
+pub fn check_traffic(
+    meter: &TrafficMeter,
+    recorder: &Recorder,
+    clients: usize,
+    v1_codec: bool,
+) -> Vec<String> {
+    let mut out = Vec::new();
+    for r in &recorder.rounds {
+        out.extend(r.consistency_violations());
+        if v1_codec {
+            if r.precodec_bytes != r.uplink_bytes + r.downlink_bytes {
+                out.push(format!(
+                    "traffic: round {}: v1 codec precodec {} != actual {}",
+                    r.round,
+                    r.precodec_bytes,
+                    r.uplink_bytes + r.downlink_bytes
+                ));
+            }
+            if r.codec_ratio != 1.0 {
+                out.push(format!(
+                    "traffic: round {}: v1 codec ratio {} != 1",
+                    r.round, r.codec_ratio
+                ));
+            }
+        }
+    }
+    let sums = [
+        ("uplink", recorder.total_uplink(), meter.total_uplink),
+        ("downlink", recorder.total_downlink(), meter.total_downlink),
+        (
+            "wasted",
+            recorder.rounds.iter().map(|r| r.wasted_uplink_bytes).sum::<usize>(),
+            meter.total_wasted_uplink,
+        ),
+        ("precodec", recorder.total_precodec_bytes(), meter.total_precodec),
+    ];
+    for (name, rec, met) in sums {
+        if rec != met {
+            out.push(format!("traffic: {name}: recorder sum {rec} != meter total {met}"));
+        }
+    }
+    let per_client: usize = meter.per_client_uplink.iter().sum();
+    if per_client != meter.total_uplink {
+        out.push(format!(
+            "traffic: per-client attribution {per_client} != total uplink {}",
+            meter.total_uplink
+        ));
+    }
+    // the final recorded Gini must be recomputable from the meter state
+    let mut scratch = Vec::new();
+    let gini = meter.uplink_gini(clients, &mut scratch);
+    if !gini.is_finite() || !(0.0..1.0).contains(&gini) {
+        out.push(format!("traffic: final gini {gini} outside [0, 1)"));
+    }
+    if let Some(last) = recorder.rounds.last() {
+        if last.traffic_gini.to_bits() != gini.to_bits() {
+            out.push(format!(
+                "traffic: final recorded gini {} != recomputed {gini}",
+                last.traffic_gini
+            ));
+        }
+    }
+    out
+}
+
+/// q8 round-trip contract over the *value stream* (support order): the
+/// decoded support equals the original (sparse/bitmap containers keep
+/// explicit zero entries), exact zeros decode to exact zeros, and every
+/// value's round-trip error is bounded by half the block's quantisation
+/// step (`scale/2`, scale = block maxabs / 127) plus f32 rounding noise.
+///
+/// `original` is the pre-encode vector, `decoded` the post-decode one.
+/// Callers must arrange a sparse or bitmap container (a dense container
+/// drops zero entries; its error bound is asserted elsewhere).
+pub fn check_q8_roundtrip(original: &SparseVec, decoded: &SparseVec) -> Vec<String> {
+    let mut out = Vec::new();
+    if decoded.indices != original.indices {
+        out.push(format!(
+            "q8: support changed: {} entries in, {} out",
+            original.nnz(),
+            decoded.nnz()
+        ));
+        return out;
+    }
+    for (block_no, (orig_block, dec_block)) in original
+        .values
+        .chunks(Q8_BLOCK)
+        .zip(decoded.values.chunks(Q8_BLOCK))
+        .enumerate()
+    {
+        let scale = q8_block_scale(orig_block);
+        let maxabs = scale * 127.0;
+        // half a step, plus the independent f32 roundings of the scale and
+        // its reciprocal
+        let tol = scale * 0.5 + maxabs * 1e-6 + 1e-7;
+        for (j, (&a, &b)) in orig_block.iter().zip(dec_block).enumerate() {
+            if a == 0.0 && b != 0.0 {
+                out.push(format!("q8: block {block_no} slot {j}: exact zero became {b}"));
+                continue;
+            }
+            let err = (a - b).abs();
+            if err as f64 > tol as f64 {
+                out.push(format!(
+                    "q8: block {block_no} slot {j}: |{a} - {b}| = {err} > tol {tol} \
+                     (scale {scale})"
+                ));
+            }
+        }
+        if out.len() >= 8 {
+            out.push("q8: (further violations elided)".into());
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::traffic::TrafficPolicy;
+    use crate::metrics::recorder::RoundRecord;
+    use crate::sparse::codec::{CodecParams, IndexCoding, ValueCoding};
+    use crate::sparse::wire;
+
+    #[test]
+    fn mass_ledger_balances_a_hand_built_round() {
+        // 3 clients: one accepted, one straggler (carried at α = 0.5), one
+        // offline. Aggregate = (accepted + 0·stale)/1 this round; the
+        // straggler's upload stays pending.
+        let dim = 4;
+        let mut l = MassLedger::new(dim, StalenessPolicy::CarryDiscounted(0.5));
+        let acc = SparseVec::new(dim, vec![(0, 2.0), (2, -1.0)]);
+        let late = SparseVec::new(dim, vec![(1, 4.0)]);
+        let off = SparseVec::new(dim, vec![(3, 9.0)]);
+        l.on_upload(0, ClientFate::Accepted, &acc, 10, 10);
+        l.on_upload(1, ClientFate::Straggler, &late, 10, 10);
+        l.on_upload(2, ClientFate::Offline, &off, 0, 0);
+        l.on_aggregate(&acc, 1); // mean of one contributor = the upload
+        let mut q = StaleQueue::new();
+        q.begin_round();
+        q.push(1, 0, 10, &late);
+        let violations = l.check(&q);
+        assert!(violations.is_empty(), "{violations:?}");
+        assert_eq!(l.uploads_seen, 2, "offline never transmitted");
+        assert_eq!(l.stragglers_seen, 1);
+    }
+
+    #[test]
+    fn mass_ledger_catches_lost_mass() {
+        let dim = 2;
+        let mut l = MassLedger::new(dim, StalenessPolicy::Drop);
+        let up = SparseVec::new(dim, vec![(0, 1.0)]);
+        l.on_upload(0, ClientFate::Accepted, &up, 10, 10);
+        // the aggregate never arrives: delivered stays 0
+        let q = StaleQueue::new();
+        let violations = l.check(&q);
+        assert!(violations.iter().any(|v| v.contains("coord 0")), "{violations:?}");
+    }
+
+    #[test]
+    fn mass_ledger_flags_vacuous_runs() {
+        let l = MassLedger::new(2, StalenessPolicy::Drop);
+        let q = StaleQueue::new();
+        assert!(l.check(&q).iter().any(|v| v.contains("vacuous")));
+    }
+
+    #[test]
+    fn traffic_check_accepts_consistent_books() {
+        let mut m = TrafficMeter::new(TrafficPolicy::default());
+        m.begin_round();
+        m.record_uplink(0, 100, 100);
+        m.record_wasted_uplink(1, 40, 40);
+        m.record_broadcast(60, 60, 2);
+        let mut rec = Recorder::new();
+        let mut scratch = Vec::new();
+        rec.push(RoundRecord {
+            round: 0,
+            uplink_bytes: 140,
+            downlink_bytes: 60,
+            wasted_uplink_bytes: 40,
+            precodec_bytes: 200,
+            codec_ratio: 1.0,
+            selected: 2,
+            dropped_deadline: 1,
+            traffic_gini: m.uplink_gini(2, &mut scratch),
+            ..Default::default()
+        });
+        let violations = check_traffic(&m, &rec, 2, true);
+        assert!(violations.is_empty(), "{violations:?}");
+        // corrupt one book: the check must notice
+        let mut bad = rec.clone();
+        bad.rounds[0].precodec_bytes = 999;
+        assert!(!check_traffic(&m, &bad, 2, true).is_empty());
+    }
+
+    #[test]
+    fn q8_check_passes_real_roundtrips_and_catches_corruption() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        let dim = 4000;
+        let mut ids: Vec<u32> = (0..dim as u32).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(300);
+        ids.sort_unstable();
+        let mut values: Vec<f32> = ids.iter().map(|_| rng.normal() * 2.0).collect();
+        values[7] = 0.0; // exact zero must survive exactly
+        let sv = SparseVec::from_sorted(dim, ids, values);
+        let p = CodecParams { index: IndexCoding::Varint, value: ValueCoding::Q8 };
+        let mut buf = Vec::new();
+        wire::encode_with(&sv, &mut buf, p);
+        let back = wire::decode(&buf).unwrap();
+        let violations = check_q8_roundtrip(&sv, &back);
+        assert!(violations.is_empty(), "{violations:?}");
+        // corrupting one decoded value beyond the step must be caught
+        let mut bad = back.clone();
+        let maxabs = sv.values.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        bad.values[0] += maxabs; // far outside scale/2
+        assert!(!check_q8_roundtrip(&sv, &bad).is_empty());
+        // support change must be caught
+        let mut shifted = back.clone();
+        shifted.indices[0] += 1;
+        assert!(!check_q8_roundtrip(&sv, &shifted).is_empty());
+    }
+}

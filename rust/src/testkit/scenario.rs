@@ -1,0 +1,282 @@
+//! Scenario-matrix enumeration for `fedgmf verify`.
+//!
+//! One [`Scenario`] is a point in the cross-product of every behavioural
+//! axis the system has grown: compressor technique × wire codec ×
+//! staleness policy × selection policy × scheduler capability preset.
+//! Worker count is a sixth axis handled by the runner (every scenario is
+//! executed at each [`WORKERS`] entry and the trajectory digests must be
+//! equal — the cross-worker invariant), so it never appears in a
+//! scenario's registry key.
+//!
+//! **Adding an axis value is one edit**: push it onto the matching `AXIS_*`
+//! slice (and its `name()`); [`Scenario::all`] is the cross-product over
+//! those slices, so enumeration, invariant checking, digest comparison and
+//! the golden-registry coverage check (missing *and* stale keys both fail)
+//! all pick the new value up automatically. Adding a whole new axis means
+//! extending [`Scenario`] and its `key()` — the registry key format is the
+//! compatibility surface, so re-bless after either change.
+
+use crate::compress::CompressorKind;
+use crate::coordinator::round::{FlConfig, LrSchedule};
+use crate::coordinator::sampler::Sampler;
+use crate::sim::scheduler::{ProfilePreset, SelectionPolicy, SimConfig, StalenessPolicy};
+use crate::sparse::codec::{CodecParams, IndexCoding, ValueCoding, WireCodec};
+
+/// Wire-codec axis values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecAxis {
+    /// raw u32 + f32 — the v1-identical default
+    V1,
+    /// delta-varint indices + IEEE half values
+    VarintF16,
+    /// delta-varint indices + blockwise int8 values
+    VarintQ8,
+}
+
+impl CodecAxis {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecAxis::V1 => "v1",
+            CodecAxis::VarintF16 => "varint_f16",
+            CodecAxis::VarintQ8 => "varint_q8",
+        }
+    }
+
+    pub fn wire_codec(&self) -> WireCodec {
+        let p = match self {
+            CodecAxis::V1 => CodecParams::V1,
+            CodecAxis::VarintF16 => {
+                CodecParams { index: IndexCoding::Varint, value: ValueCoding::F16 }
+            }
+            CodecAxis::VarintQ8 => {
+                CodecParams { index: IndexCoding::Varint, value: ValueCoding::Q8 }
+            }
+        };
+        WireCodec { uplink: p, downlink: p }
+    }
+}
+
+/// Staleness-policy axis values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StalenessAxis {
+    Drop,
+    Carry,
+    /// `carry_discounted` at the fixture α below.
+    CarryDiscounted,
+}
+
+impl StalenessAxis {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StalenessAxis::Drop => "drop",
+            StalenessAxis::Carry => "carry",
+            StalenessAxis::CarryDiscounted => "carry_discounted",
+        }
+    }
+
+    pub fn policy(&self) -> StalenessPolicy {
+        match self {
+            StalenessAxis::Drop => StalenessPolicy::Drop,
+            StalenessAxis::Carry => StalenessPolicy::Carry,
+            StalenessAxis::CarryDiscounted => StalenessPolicy::CarryDiscounted(FIXTURE_ALPHA),
+        }
+    }
+}
+
+/// Cohort-selection axis values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectionAxis {
+    Uniform,
+    /// feasibility-weighted at the fixture β below.
+    Feasibility,
+}
+
+impl SelectionAxis {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectionAxis::Uniform => "uniform",
+            SelectionAxis::Feasibility => "feasibility",
+        }
+    }
+
+    pub fn policy(&self) -> SelectionPolicy {
+        match self {
+            SelectionAxis::Uniform => SelectionPolicy::Uniform,
+            SelectionAxis::Feasibility => SelectionPolicy::Feasibility { beta: FIXTURE_BETA },
+        }
+    }
+}
+
+/// Scheduler capability-preset axis values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PresetAxis {
+    Uniform,
+    LongTail,
+}
+
+impl PresetAxis {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PresetAxis::Uniform => "uniform",
+            PresetAxis::LongTail => "longtail",
+        }
+    }
+
+    pub fn preset(&self) -> ProfilePreset {
+        match self {
+            PresetAxis::Uniform => ProfilePreset::Uniform,
+            PresetAxis::LongTail => ProfilePreset::LongTail { sigma: FIXTURE_SIGMA },
+        }
+    }
+}
+
+// ------------------------------------------------------------- axis values
+
+pub const AXIS_TECHNIQUES: &[CompressorKind] = &CompressorKind::ALL;
+pub const AXIS_CODECS: &[CodecAxis] =
+    &[CodecAxis::V1, CodecAxis::VarintF16, CodecAxis::VarintQ8];
+pub const AXIS_STALENESS: &[StalenessAxis] =
+    &[StalenessAxis::Drop, StalenessAxis::Carry, StalenessAxis::CarryDiscounted];
+pub const AXIS_SELECTION: &[SelectionAxis] =
+    &[SelectionAxis::Uniform, SelectionAxis::Feasibility];
+pub const AXIS_PRESETS: &[PresetAxis] = &[PresetAxis::Uniform, PresetAxis::LongTail];
+
+/// Worker-count runs per scenario: sequential reference and one-per-core.
+/// Digests must be equal across all entries (the determinism contract).
+pub const WORKERS: &[(&str, usize)] = &[("w1", 1), ("wpc", 0)];
+
+// ---------------------------------------------------------------- fixture
+
+/// Staleness discount for the `carry_discounted` axis value.
+pub const FIXTURE_ALPHA: f64 = 0.5;
+/// Feasibility bias for the `feasibility` axis value.
+pub const FIXTURE_BETA: f64 = 0.5;
+/// Long-tail sigma for the `longtail` axis value.
+pub const FIXTURE_SIGMA: f64 = 0.8;
+
+/// Fixture shape: the slowest link tier misses the deadline under every
+/// codec axis (see `experiments::workload::verify_fixture`), so the carry
+/// and drop policies genuinely diverge in every scenario that can reach
+/// them.
+pub const FIXTURE_CLIENTS: usize = 10;
+pub const FIXTURE_SEED: u64 = 42;
+pub const FIXTURE_RATE: f64 = 0.25;
+pub const FIXTURE_WARMUP_ROUNDS: usize = 2;
+pub const FIXTURE_COHORT: usize = 6;
+pub const FIXTURE_DEADLINE_S: f64 = 0.095;
+pub const FIXTURE_DROPOUT: f64 = 0.1;
+pub const FIXTURE_OVERSELECT: f64 = 1.25;
+pub const FIXTURE_COMPUTE_S: f64 = 0.02;
+
+/// One point of the scenario matrix (worker count excluded — see module
+/// docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Scenario {
+    pub technique: CompressorKind,
+    pub codec: CodecAxis,
+    pub staleness: StalenessAxis,
+    pub selection: SelectionAxis,
+    pub preset: PresetAxis,
+}
+
+impl Scenario {
+    /// Full cross-product over the `AXIS_*` slices, in a fixed
+    /// lexicographic order (stable registry ordering).
+    pub fn all() -> Vec<Scenario> {
+        let mut out = Vec::new();
+        for &technique in AXIS_TECHNIQUES {
+            for &codec in AXIS_CODECS {
+                for &staleness in AXIS_STALENESS {
+                    for &selection in AXIS_SELECTION {
+                        for &preset in AXIS_PRESETS {
+                            out.push(Scenario { technique, codec, staleness, selection, preset });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Registry key — the stable identity of this scenario.
+    pub fn key(&self) -> String {
+        format!(
+            "{}/{}/{}/{}/{}",
+            self.technique.name(),
+            self.codec.name(),
+            self.staleness.name(),
+            self.selection.name(),
+            self.preset.name()
+        )
+    }
+
+    /// The scenario's `[sim]` knobs over the shared fixture regime.
+    pub fn sim_config(&self) -> SimConfig {
+        SimConfig {
+            preset: self.preset.preset(),
+            deadline_s: FIXTURE_DEADLINE_S,
+            dropout: FIXTURE_DROPOUT,
+            overselect: FIXTURE_OVERSELECT,
+            compute_s: FIXTURE_COMPUTE_S,
+            staleness: self.staleness.policy(),
+            selection: self.selection.policy(),
+        }
+    }
+
+    /// Full coordinator config for this scenario at `workers` threads.
+    pub fn fl_config(&self, workers: usize, rounds: usize) -> FlConfig {
+        let mut cfg = FlConfig::new(self.technique, FIXTURE_RATE, rounds);
+        cfg.lr = LrSchedule::constant(0.3);
+        cfg.warmup.warmup_rounds = FIXTURE_WARMUP_ROUNDS;
+        cfg.sampler = Sampler::Count(FIXTURE_COHORT);
+        cfg.eval_every = 0;
+        cfg.seed = FIXTURE_SEED;
+        cfg.workers = workers;
+        cfg.sim = self.sim_config();
+        cfg.codec = self.codec.wire_codec();
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn matrix_is_the_full_cross_product() {
+        let all = Scenario::all();
+        let want = AXIS_TECHNIQUES.len()
+            * AXIS_CODECS.len()
+            * AXIS_STALENESS.len()
+            * AXIS_SELECTION.len()
+            * AXIS_PRESETS.len();
+        assert_eq!(all.len(), want);
+        assert!(all.len() * WORKERS.len() >= 200, "the matrix must stay >= 200 runs");
+        let keys: BTreeSet<String> = all.iter().map(|s| s.key()).collect();
+        assert_eq!(keys.len(), all.len(), "scenario keys must be unique");
+    }
+
+    #[test]
+    fn every_scenario_sim_config_validates() {
+        for s in Scenario::all() {
+            s.sim_config().validate().unwrap_or_else(|e| panic!("{}: {e}", s.key()));
+            let cfg = s.fl_config(1, 4);
+            assert_eq!(cfg.kind, s.technique);
+            assert_eq!(cfg.codec, s.codec.wire_codec());
+            assert!(cfg.sim.scheduling_active(), "{}: fixture regime must schedule", s.key());
+        }
+    }
+
+    #[test]
+    fn keys_are_stable_strings() {
+        let s = Scenario {
+            technique: CompressorKind::DgcWgmf,
+            codec: CodecAxis::VarintQ8,
+            staleness: StalenessAxis::CarryDiscounted,
+            selection: SelectionAxis::Feasibility,
+            preset: PresetAxis::LongTail,
+        };
+        assert_eq!(s.key(), "DGCwGMF/varint_q8/carry_discounted/feasibility/longtail");
+    }
+}

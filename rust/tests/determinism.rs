@@ -307,9 +307,10 @@ fn feasibility_selection_bit_identical_across_worker_counts() {
     }
 }
 
-/// FNV-1a over the run's observable outputs: final parameter bits plus
-/// every per-round record field the round loop promises to keep
-/// deterministic.
+/// Digest of the run's observable outputs — the shared
+/// `testkit::digest::trajectory_digest` (final parameter bits plus every
+/// per-round record field the round loop promises to keep deterministic),
+/// so the CI matrix and `fedgmf verify` fingerprint runs identically.
 fn run_digest(workers: usize, staleness: StalenessPolicy, codec: WireCodec) -> u64 {
     let sim = SimConfig {
         preset: ProfilePreset::Heterogeneous { slow_every: 3, slow_factor: 6.0 },
@@ -322,37 +323,7 @@ fn run_digest(workers: usize, staleness: StalenessPolicy, codec: WireCodec) -> u
     };
     let (params, sum) =
         run_with_codec(CompressorKind::DgcWgmf, Sampler::Fraction(0.5), workers, sim, codec);
-    let mut h: u64 = 0xcbf29ce484222325;
-    let mut eat = |x: u64| {
-        for b in x.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-    };
-    for p in params {
-        eat(p as u64);
-    }
-    for r in &sum.recorder.rounds {
-        eat(r.round as u64);
-        eat(r.train_loss.to_bits());
-        eat(r.test_accuracy.to_bits());
-        eat(r.uplink_bytes as u64);
-        eat(r.downlink_bytes as u64);
-        eat(r.aggregate_nnz as u64);
-        eat(r.mask_overlap.to_bits());
-        eat(r.sim_seconds.to_bits());
-        eat(r.sim_clock.to_bits());
-        eat(r.selected as u64);
-        eat(r.dropped_deadline as u64);
-        eat(r.dropped_offline as u64);
-        eat(r.carried_in as u64);
-        eat(r.carried_bytes as u64);
-        eat(r.wasted_uplink_bytes as u64);
-        eat(r.traffic_gini.to_bits());
-        eat(r.precodec_bytes as u64);
-        eat(r.codec_ratio.to_bits());
-    }
-    h
+    fedgmf::testkit::digest::trajectory_digest(&params, &sum.recorder.rounds)
 }
 
 /// The CI determinism matrix entrypoint: each matrix job pins one

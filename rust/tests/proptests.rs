@@ -5,7 +5,9 @@
 //! cases from a deterministic seed stream; failures print the case seed so
 //! they can be replayed exactly (`PROP_SEED=<n>`).
 
-use fedgmf::compress::{primitives, CompressConfig, Compressor, CompressorKind, TauSchedule};
+use fedgmf::compress::{
+    primitives, CompressConfig, Compressor, CompressorKind, SparsityWarmup, TauSchedule,
+};
 use fedgmf::data::partition::{emd_of_partition, partition_by_emd};
 use fedgmf::sparse::merge::Aggregator;
 use fedgmf::sparse::topk;
@@ -440,6 +442,94 @@ fn rand_json(rng: &mut Rng, depth: usize) -> Json {
                 .map(|i| (format!("k{i}"), rand_json(rng, depth - 1)))
                 .collect(),
         ),
+    }
+}
+
+// -------------------------------------------------- schedules (boundaries)
+
+#[test]
+fn prop_schedule_boundaries_hold_for_random_shapes() {
+    // randomized (rate, warmup, dim, total_rounds, steps) shapes: k_at is
+    // always in [1, dim] for dim > 0 (0 at dim 0), warmup keep-rates decay
+    // monotonically to the target, and tau ramps monotonically into a
+    // clamped end value at and past total_rounds
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let rate = 10f64.powf(-(rng.below(9) as f64)).max(1e-9);
+        let warmup = rng.below(12);
+        let w = SparsityWarmup { rate, warmup_rounds: warmup };
+        let dim = rng.below(2000);
+        for round in [0usize, 1, warmup.saturating_sub(1), warmup, warmup + 1, 10_000] {
+            let k = w.k_at(dim, round);
+            if dim == 0 {
+                assert_eq!(k, 0, "seed {seed} round {round}");
+            } else {
+                assert!((1..=dim).contains(&k), "seed {seed} dim {dim} round {round}: k {k}");
+            }
+            let keep = w.at(round);
+            assert!(keep >= rate - 1e-15 && keep <= 1.0, "seed {seed}: keep {keep}");
+            if round >= warmup {
+                assert_eq!(keep, rate, "seed {seed}: past warmup the rate is flat");
+            }
+        }
+        let total = 1 + rng.below(300);
+        let steps = 1 + rng.below(20);
+        let end = rng.f32();
+        let s = TauSchedule::Stepped { end, steps, total_rounds: total };
+        let mut last = -1.0f32;
+        for round in 0..total {
+            let tau = s.at(round);
+            assert!(tau >= last, "seed {seed} round {round}: tau must not decrease");
+            assert!((0.0..=end.max(0.0)).contains(&tau), "seed {seed}: tau {tau}");
+            last = tau;
+        }
+        // end·steps/steps can differ from end by an ulp — compare loosely
+        let done = s.at(total);
+        assert!((done - end).abs() <= end.abs() * 1e-6, "seed {seed}: {done} vs {end}");
+        assert_eq!(s.at(total + rng.below(10_000)).to_bits(), done.to_bits(), "seed {seed}");
+        assert_eq!(s.at(usize::MAX).to_bits(), done.to_bits(), "seed {seed}: no overflow");
+    }
+}
+
+// ----------------------------------------------------- q8 value coding
+
+#[test]
+fn prop_q8_roundtrip_error_bounded_and_zeros_exact() {
+    // the blockwise-int8 contract, checked by the exact invariant
+    // `fedgmf verify` uses (testkit::invariants::check_q8_roundtrip):
+    // support preserved, exact zeros exact, per-coordinate error within
+    // half a block quantisation step. Low density keeps the sparse
+    // container selected so explicit zero entries survive the trip.
+    use fedgmf::sparse::codec::{CodecParams, IndexCoding, ValueCoding};
+    use fedgmf::testkit::invariants::check_q8_roundtrip;
+    let mut buf = Vec::new();
+    let mut back = SparseVec::empty(0);
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let dim = 600 + rng.below(8000);
+        let nnz = 1 + rng.below(dim / 20 + 1); // sparse container territory
+        let mut ids: Vec<u32> = (0..dim as u32).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(nnz);
+        ids.sort_unstable();
+        let mut values: Vec<f32> = ids
+            .iter()
+            .map(|_| rng.normal() * 10f32.powi(rng.below(5) as i32 - 2))
+            .collect();
+        // sprinkle exact zeros (an all-zero block is a valid edge too)
+        for slot in 0..values.len() {
+            if rng.below(5) == 0 {
+                values[slot] = 0.0;
+            }
+        }
+        let sv = SparseVec::from_sorted(dim, ids, values);
+        for index in [IndexCoding::Raw, IndexCoding::Varint] {
+            let p = CodecParams { index, value: ValueCoding::Q8 };
+            wire::encode_with(&sv, &mut buf, p);
+            wire::decode_into(&buf, &mut back).unwrap();
+            let violations = check_q8_roundtrip(&sv, &back);
+            assert!(violations.is_empty(), "seed {seed} {p:?}: {violations:?}");
+        }
     }
 }
 

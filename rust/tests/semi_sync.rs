@@ -7,10 +7,12 @@
 //! 1. `carry_discounted(α = 0)` is **byte-identical** to `drop` — a zero
 //!    discount must take the drop code path bit-for-bit, not merely
 //!    approximate it.
-//! 2. `carry(α = 1)` **conserves gradient mass** across straggler rounds:
-//!    every transmitted upload enters exactly one aggregate at full
-//!    weight, so per coordinate, Σ(contributors · aggregate) over the run
-//!    plus whatever the stale queue still holds equals Σ(uploads).
+//! 2. every staleness policy **conserves gradient mass** across straggler
+//!    rounds: per coordinate, transmitted upload mass equals
+//!    Σ(contributors · aggregate) plus what was restored into client
+//!    residuals plus α · (still-buffered stale uploads) — checked by the
+//!    testkit's `MassLedger`, the same invariant `fedgmf verify` asserts
+//!    over the full scenario matrix.
 //!
 //! The straggler regime is constructed, not sampled: every second client
 //! is 8× slower (compute 0.08 s + 25 ms latency > the 0.06 s deadline)
@@ -109,48 +111,46 @@ fn prop_carry_discounted_zero_is_byte_identical_to_drop() {
 }
 
 #[test]
-fn prop_carry_conserves_gradient_mass_across_straggler_rounds() {
-    for seed in seeds() {
-        let (mut engine, mut run) = build_run(seed, StalenessPolicy::Carry);
-        // per-coordinate f64 ledgers (immune to cross-coordinate cancellation)
-        let dim = run.params.len();
-        let mut uploaded = vec![0.0f64; dim];
-        let mut delivered = vec![0.0f64; dim];
-        let mut stragglers_seen = 0usize;
-        for round in 0..ROUNDS {
-            let rec = run.step_round(&mut engine, round).unwrap();
-            // full participation + zero dropout: every client transmitted,
-            // so every echo is an upload that crossed the wire this round
-            for c in &run.clients {
-                for (&i, &v) in c.echo.indices.iter().zip(&c.echo.values) {
-                    uploaded[i as usize] += v as f64;
+fn prop_staleness_policies_conserve_gradient_mass_across_straggler_rounds() {
+    // the per-coordinate f64 mass ledger is the testkit's (the same
+    // implementation `fedgmf verify` installs across the whole scenario
+    // matrix): per coordinate, transmitted echo mass = contributors ×
+    // aggregate + residual restores + α × still-pending stale uploads
+    use fedgmf::testkit::invariants::MassLedger;
+    for policy in [
+        StalenessPolicy::Carry,
+        StalenessPolicy::Drop,
+        StalenessPolicy::CarryDiscounted(0.4),
+    ] {
+        for seed in seeds() {
+            let (mut engine, mut run) = build_run(seed, policy);
+            let dim = run.params.len();
+            run.ledger = Some(Box::new(MassLedger::new(dim, policy)));
+            let mut stragglers_seen = 0usize;
+            for round in 0..ROUNDS {
+                let rec = run.step_round(&mut engine, round).unwrap();
+                stragglers_seen += rec.dropped_deadline;
+                if policy == StalenessPolicy::Carry {
+                    assert_eq!(rec.wasted_uplink_bytes, 0, "seed {seed} round {round}");
                 }
             }
-            let accepted = rec.selected - rec.dropped_deadline - rec.dropped_offline;
-            let contributors = (accepted + rec.carried_in) as f64;
-            for (&i, &v) in run.last_payload.indices.iter().zip(&run.last_payload.values) {
-                delivered[i as usize] += contributors * v as f64;
+            assert!(stragglers_seen > 0, "seed {seed}: regime must produce stragglers");
+            if policy == StalenessPolicy::Carry {
+                assert!(
+                    run.stale_queue.pending() > 0,
+                    "seed {seed}: last round's stragglers remain buffered"
+                );
             }
-            stragglers_seen += rec.dropped_deadline;
-            assert_eq!(rec.wasted_uplink_bytes, 0, "seed {seed} round {round}");
-        }
-        assert!(stragglers_seen > 0, "seed {seed}: regime must produce stragglers");
-        // whatever the run ended holding never reached an aggregate
-        let mut leftover = vec![0.0f64; dim];
-        for e in run.stale_queue.pending_entries() {
-            for (&i, &v) in e.grad.indices.iter().zip(&e.grad.values) {
-                leftover[i as usize] += v as f64;
-            }
-        }
-        assert!(run.stale_queue.pending() > 0, "seed {seed}: last round's stragglers remain");
-        for i in 0..dim {
-            let got = delivered[i] + leftover[i];
-            let want = uploaded[i];
-            let tol = 1e-3 * want.abs().max(1.0);
-            assert!(
-                (got - want).abs() <= tol,
-                "seed {seed} coord {i}: delivered+leftover {got} != uploaded {want}"
-            );
+            let ledger = run
+                .ledger
+                .take()
+                .unwrap()
+                .into_any()
+                .downcast::<MassLedger>()
+                .unwrap();
+            assert_eq!(ledger.stragglers_seen, stragglers_seen, "seed {seed} {policy:?}");
+            let violations = ledger.check(&run.stale_queue);
+            assert!(violations.is_empty(), "seed {seed} {policy:?}: {violations:?}");
         }
     }
 }

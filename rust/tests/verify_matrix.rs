@@ -1,0 +1,103 @@
+//! In-process run of the `fedgmf verify` scenario-matrix conformance
+//! harness: the full technique × codec × staleness × selection × preset
+//! cross-product at both worker counts, with the invariant ledgers armed.
+//!
+//! This makes `cargo test` itself a matrix gate: mass conservation,
+//! traffic-ledger consistency and cross-worker digest equality must hold
+//! for every scenario. The golden-digest comparison additionally arms
+//! itself once `tests/golden/verify_matrix.json` is blessed (see
+//! docs/testing.md), so an accidental trajectory change in any axis
+//! combination fails here before it reaches CI.
+
+use fedgmf::config::Scale;
+use fedgmf::testkit::scenario::{Scenario, WORKERS};
+use fedgmf::testkit::{run_verify, VerifyOptions};
+use std::path::PathBuf;
+
+fn committed_golden() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/verify_matrix.json")
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fedgmf-verify-{}-{name}.json", std::process::id()))
+}
+
+#[test]
+fn quick_matrix_passes_invariants_and_golden_gate() {
+    let report_path = tmp("report");
+    let opts = VerifyOptions {
+        scale: Scale::Quick,
+        bless: false,
+        golden_path: committed_golden(),
+        report_path: Some(report_path.clone()),
+    };
+    let report = run_verify(&opts).unwrap();
+    // the acceptance bar: the matrix is the full cross-product and at
+    // least 200 scenario runs deep
+    assert_eq!(report.scenarios.len(), Scenario::all().len());
+    assert_eq!(report.runs, Scenario::all().len() * WORKERS.len());
+    assert!(report.runs >= 200, "matrix shrank below the 200-run floor: {}", report.runs);
+    // every invariant ledger must be clean in every scenario
+    for s in &report.scenarios {
+        assert!(s.violations.is_empty(), "{}: {:?}", s.key, s.violations);
+    }
+    assert!(report.codec_selfcheck.is_empty(), "{:?}", report.codec_selfcheck);
+    // digest gate: clean when armed; self-arming notice when not
+    assert!(
+        report.digest_mismatches.is_empty(),
+        "golden digest mismatches: {:?}",
+        report.digest_mismatches
+    );
+    assert!(report.passed());
+    // the report artifact round-trips as JSON with the headline fields
+    let j = fedgmf::util::json::Json::parse(&std::fs::read_to_string(&report_path).unwrap())
+        .unwrap();
+    assert_eq!(j.get("runs").unwrap().as_usize(), Some(report.runs));
+    assert_eq!(j.get("invariant_failures").unwrap().as_usize(), Some(0));
+    assert_eq!(
+        j.get("digests").unwrap().as_obj().unwrap().len(),
+        report.scenarios.len(),
+        "report must carry the full would-be registry"
+    );
+    let _ = std::fs::remove_file(&report_path);
+}
+
+#[test]
+fn bless_arms_the_gate_and_is_byte_identical_on_rewrite() {
+    // one bless run (matrix sweep 1), then a gated run against it (sweep
+    // 2): the gate only passes if every scenario digest reproduces across
+    // independent run_verify invocations — the "byte-identical on
+    // re-bless" acceptance reduces to that digest stability plus the
+    // deterministic registry serialisation, which reload → re-save proves
+    // without a third full sweep
+    let a = tmp("bless");
+    let _ = std::fs::remove_file(&a);
+    let opts = VerifyOptions {
+        scale: Scale::Quick,
+        bless: true,
+        golden_path: a.clone(),
+        report_path: None,
+    };
+    let report = run_verify(&opts).unwrap();
+    assert!(report.blessed_now, "a clean tree must bless");
+    assert!(report.passed());
+    // reload → re-save is byte-identical (deterministic serialisation)
+    let first = std::fs::read(&a).unwrap();
+    let reg = fedgmf::testkit::golden::GoldenRegistry::load(&a).unwrap();
+    assert!(reg.blessed);
+    reg.save(&a).unwrap();
+    assert_eq!(std::fs::read(&a).unwrap(), first, "re-save must be byte-identical");
+    // a blessed registry arms the gate, and a fresh matrix run matches it
+    // digest-for-digest (run-to-run digest determinism, end to end)
+    let opts = VerifyOptions {
+        scale: Scale::Quick,
+        bless: false,
+        golden_path: a.clone(),
+        report_path: None,
+    };
+    let report = run_verify(&opts).unwrap();
+    assert!(report.digest_gate_armed);
+    assert!(report.digest_mismatches.is_empty(), "{:?}", report.digest_mismatches);
+    assert!(report.passed());
+    let _ = std::fs::remove_file(&a);
+}
