@@ -26,6 +26,8 @@ use crate::coordinator::sampler::Sampler;
 use crate::coordinator::traffic::TrafficPolicy;
 use crate::sim::scheduler::{ProfilePreset, SelectionPolicy, SimConfig, StalenessPolicy};
 use crate::sparse::codec::{IndexCoding, ValueCoding, WireCodec};
+use crate::transport::fault::FaultPlan;
+use crate::transport::TransportConfig;
 use anyhow::{anyhow, Result};
 use toml::{get, parse, TomlDoc};
 
@@ -128,6 +130,11 @@ pub struct RunConfig {
     /// per-direction wire codec (TOML `[codec]` — see `docs/wire.md`); the
     /// default (raw u32 + f32) emits v1 bytes and trajectories bit-exactly
     pub codec: WireCodec,
+    /// service-mode socket settings + chaos plan (TOML `[transport]` — see
+    /// `docs/transport.md`); the fault plan also reaches the in-process
+    /// simulator through [`FlConfig::fault`], everything else only matters
+    /// to `fedgmf serve` / `fedgmf client`
+    pub transport: TransportConfig,
 }
 
 /// Read one `[codec]` key through the coding's parser (shared by the
@@ -177,6 +184,7 @@ impl Default for RunConfig {
             exact_mask_overlap: false,
             sim: SimConfig::default(),
             codec: WireCodec::default(),
+            transport: TransportConfig::default(),
         }
     }
 }
@@ -266,6 +274,7 @@ impl RunConfig {
             exact_mask_overlap: self.exact_mask_overlap,
             sim: self.sim,
             codec: self.codec,
+            fault: self.transport.fault,
         }
     }
 
@@ -447,6 +456,39 @@ impl RunConfig {
             }
             if let Some(val) = read_codec_key(doc, "downlink_value", ValueCoding::parse)? {
                 cfg.codec.downlink.value = val;
+            }
+        }
+        // [transport] — service-mode sockets + chaos (see docs/transport.md).
+        // `fault` defaults its seed to the run seed so every party that
+        // agrees on run.seed agrees on the chaos plan.
+        {
+            if let Some(v) = get(doc, "transport", "addr") {
+                cfg.transport.addr =
+                    v.as_str().ok_or_else(|| anyhow!("transport.addr: string"))?.to_string();
+            }
+            let mut read_ms = |key: &str, field: &mut u64| -> Result<()> {
+                if let Some(v) = get(doc, "transport", key) {
+                    *field = v
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("transport.{key}: wrong type"))?
+                        as u64;
+                }
+                Ok(())
+            };
+            read_ms("read_timeout_ms", &mut cfg.transport.read_timeout_ms)?;
+            read_ms("write_timeout_ms", &mut cfg.transport.write_timeout_ms)?;
+            read_ms("round_deadline_ms", &mut cfg.transport.round_deadline_ms)?;
+            read_ms("backoff_base_ms", &mut cfg.transport.backoff_base_ms)?;
+            read_ms("backoff_max_ms", &mut cfg.transport.backoff_max_ms)?;
+            if let Some(v) = get(doc, "transport", "max_retries") {
+                cfg.transport.max_retries =
+                    v.as_usize().ok_or_else(|| anyhow!("transport.max_retries: wrong type"))?
+                        as u32;
+            }
+            if let Some(v) = get(doc, "transport", "fault") {
+                let s = v.as_str().ok_or_else(|| anyhow!("transport.fault: string"))?;
+                cfg.transport.fault =
+                    Some(FaultPlan::parse(s, cfg.seed).map_err(|e| anyhow!(e))?);
             }
         }
         cfg.validate()?;
@@ -743,6 +785,68 @@ uplink_index = "raw"
         assert!(RunConfig::from_toml_str("[codec]\nvalue = \"f8\"\n", &[]).is_err());
         assert!(RunConfig::from_toml_str("[codec]\nuplink_value = 3\n", &[]).is_err());
         assert!(RunConfig::from_toml_str("[codec]\ndownlink_index = true\n", &[]).is_err());
+    }
+
+    #[test]
+    fn transport_section_from_toml() {
+        use crate::transport::fault::FaultKind;
+        // default: loopback TCP, no chaos, inert for the simulator
+        let plain = RunConfig::from_toml_str("", &[]).unwrap();
+        assert_eq!(plain.transport, TransportConfig::default());
+        assert_eq!(plain.fl_config().fault, None);
+        let cfg = RunConfig::from_toml_str(
+            r#"
+[run]
+seed = 9
+[transport]
+addr = "unix:/tmp/fedgmf.sock"
+read_timeout_ms = 500
+write_timeout_ms = 600
+round_deadline_ms = 5000
+max_retries = 3
+backoff_base_ms = 10
+backoff_max_ms = 80
+fault = "drop:0.25"
+"#,
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.transport.addr, "unix:/tmp/fedgmf.sock");
+        assert_eq!(cfg.transport.read_timeout_ms, 500);
+        assert_eq!(cfg.transport.write_timeout_ms, 600);
+        assert_eq!(cfg.transport.round_deadline_ms, 5000);
+        assert_eq!(cfg.transport.max_retries, 3);
+        assert_eq!(cfg.transport.backoff_base_ms, 10);
+        assert_eq!(cfg.transport.backoff_max_ms, 80);
+        let plan = cfg.transport.fault.unwrap();
+        assert_eq!(plan.kind, FaultKind::Drop);
+        assert!((plan.rate - 0.25).abs() < 1e-12);
+        assert_eq!(plan.seed, 9, "fault seed defaults to the run seed");
+        // the chaos plan reaches the simulator through FlConfig
+        assert_eq!(cfg.fl_config().fault, Some(plan));
+        // explicit @seed wins over the run seed
+        let pinned = RunConfig::from_toml_str(
+            "[transport]\nfault = \"delay:0.5@77\"\n",
+            &[],
+        )
+        .unwrap();
+        assert_eq!(pinned.transport.fault.unwrap().seed, 77);
+        // --set override path
+        let ov = RunConfig::from_toml_str(
+            "",
+            &["transport.fault=\"dup:0.1\"".to_string()],
+        )
+        .unwrap();
+        assert_eq!(ov.transport.fault.unwrap().kind, FaultKind::Duplicate);
+    }
+
+    #[test]
+    fn transport_section_rejects_bad_values() {
+        assert!(RunConfig::from_toml_str("[transport]\nfault = \"nope:0.5\"\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[transport]\nfault = \"drop\"\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[transport]\nfault = 3\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[transport]\naddr = 3\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[transport]\nmax_retries = \"x\"\n", &[]).is_err());
     }
 
     #[test]

@@ -7,11 +7,14 @@
 //!   terms of §2.1 (client uploads, server broadcast).
 //! * [`round::FlRun`] — the synchronous round loop tying it all together.
 //! * [`sampler`] — client participation policies.
+//! * [`service`] — the same round loop replayed over a
+//!   [`crate::transport::Transport`] (in-process or socket fleet).
 
 pub mod client;
 pub mod round;
 pub mod sampler;
 pub mod server;
+pub mod service;
 pub mod traffic;
 
 pub use round::{FlConfig, FlRun, RunSummary};

@@ -72,8 +72,9 @@ use crate::metrics::ledger::RoundLedger;
 use crate::metrics::recorder::{Recorder, RoundRecord};
 use crate::runtime::{evaluate_with_pool, TrainEngine};
 use crate::sim::network::Network;
-use crate::sim::scheduler::{ClientFate, Scheduler, SelectionPolicy, SimConfig};
+use crate::sim::scheduler::{uplink_close, ClientFate, Scheduler, SelectionPolicy, SimConfig};
 use crate::sim::staleness::StaleQueue;
+use crate::transport::fault::{FaultKind, FaultPlan, DELAY_S};
 use crate::sparse::codec::WireCodec;
 use crate::sparse::merge::{mean_jaccard_estimate, mean_pairwise_jaccard};
 use crate::sparse::vector::SparseVec;
@@ -86,7 +87,7 @@ use std::time::Instant;
 const PARALLEL_OBSERVE_MIN_WORK: usize = 1 << 15;
 
 /// Resolve a configured worker count: 0 = one per available core.
-fn resolve_pool(workers: usize) -> usize {
+pub(crate) fn resolve_pool(workers: usize) -> usize {
     if workers == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     } else {
@@ -157,6 +158,12 @@ pub struct FlConfig {
     /// trajectories, lossy value codings feed their quantisation error
     /// into client-side error feedback (see `coordinator::client`)
     pub codec: WireCodec,
+    /// deterministic chaos plan (`kind:rate[@seed]`, see
+    /// `transport::fault`): the simulator applies the same per-(client,
+    /// round) fault decisions the service transports inject on the wire, so
+    /// a faulted service run stays digest-comparable with the in-process
+    /// run. `None` (the default) is bit-identical to the pre-fault loop.
+    pub fault: Option<FaultPlan>,
 }
 
 impl FlConfig {
@@ -180,6 +187,7 @@ impl FlConfig {
             exact_mask_overlap: false,
             sim: SimConfig::default(),
             codec: WireCodec::default(),
+            fault: None,
         }
     }
 }
@@ -402,9 +410,13 @@ impl FlRun {
         self.loss_scratch.clear();
         self.loss_scratch.resize(n, 0.0);
         let overlap;
-        let uplink_phase;
+        let mut uplink_phase;
         let carried_in: usize;
         let carried_bytes: usize;
+        // frame-level chaos the simulator books but a real transport would
+        // have absorbed (retried resends, deduplicated frames)
+        let mut chaos_retries = 0usize;
+        let mut chaos_dups = 0usize;
         {
             let mut parts: Vec<&mut FlClient> = Vec::with_capacity(n);
             let mut client_iter = self.clients.iter_mut().enumerate();
@@ -512,6 +524,46 @@ impl FlRun {
                 &mut self.finish_scratch,
             );
 
+            // 3b. chaos overrides: replay the fault plan's per-(client,
+            //     round) decisions on the planned fates, exactly the way the
+            //     service backends experience them. `drop` silences the
+            //     upload (offline), `delay` lands it DELAY_S later (which
+            //     can flip an accepted upload into a straggler when a
+            //     deadline is armed); duplicate/reorder/truncate/disconnect
+            //     are frame-level mischief a transport absorbs — the
+            //     simulator only books the counters. The dropout RNG above
+            //     is consumed for every participant regardless, so a
+            //     faulted run stays aligned with the service fleet.
+            if let Some(plan) = self.cfg.fault {
+                let deadline = self.cfg.sim.deadline_s;
+                for ((&cid, fate), finish) in participants
+                    .iter()
+                    .zip(self.fate_scratch.iter_mut())
+                    .zip(self.finish_scratch.iter_mut())
+                {
+                    if !plan.hits(cid, round) {
+                        continue;
+                    }
+                    match plan.kind {
+                        FaultKind::Drop => *fate = ClientFate::Offline,
+                        FaultKind::Delay => {
+                            *finish += DELAY_S;
+                            if *fate == ClientFate::Accepted
+                                && deadline > 0.0
+                                && *finish > deadline
+                            {
+                                *fate = ClientFate::Straggler;
+                            }
+                        }
+                        FaultKind::Duplicate => chaos_dups += 1,
+                        FaultKind::Truncate | FaultKind::Disconnect => chaos_retries += 1,
+                        FaultKind::Reorder => {}
+                    }
+                }
+                uplink_phase =
+                    uplink_close(&self.cfg.sim, &self.fate_scratch, &self.finish_scratch);
+            }
+
             // 4. deterministic reductions, in participant order: accepted
             //    uploads are metered and aggregated. What a deadline miss
             //    costs depends on the staleness policy: under `drop` the
@@ -543,8 +595,12 @@ impl FlRun {
                                 c.wire_buf.len(),
                                 c.precodec_bytes,
                             );
-                            self.stale_queue.push(cid, round, c.wire_buf.len(), &c.echo);
-                            if alpha < 1.0 {
+                            // push is (client, round)-idempotent: exactly
+                            // one restore may pair with one queued entry,
+                            // or carried mass would be double-counted
+                            if self.stale_queue.push(cid, round, c.wire_buf.len(), &c.echo)
+                                && alpha < 1.0
+                            {
                                 c.restore_dropped_upload_scaled(1.0 - alpha);
                             }
                         } else {
@@ -668,6 +724,10 @@ impl FlRun {
             traffic_gini,
             precodec_bytes: self.meter.round_precodec,
             codec_ratio: self.meter.round_codec_ratio(),
+            retries: chaos_retries,
+            timeouts: 0,
+            stale_frames: 0,
+            dup_frames: chaos_dups,
         };
         self.recorder.push(rec.clone());
         Ok(rec)

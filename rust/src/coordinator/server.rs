@@ -31,6 +31,9 @@ pub struct FlServer {
     momentum_prune_eps: f32,
     /// per-round aggregate Ĝ_t scratch, reused across rounds
     ghat_scratch: SparseVec,
+    /// clients whose upload already entered this round's aggregate — the
+    /// idempotent-receive guard for [`FlServer::receive_upload`] (sorted)
+    round_seen: Vec<usize>,
 }
 
 impl FlServer {
@@ -46,7 +49,16 @@ impl FlServer {
             momentum,
             momentum_prune_eps: 0.0,
             ghat_scratch: SparseVec::empty(dim),
+            round_seen: Vec::new(),
         }
+    }
+
+    /// Open a round: reset the idempotent-receive guard. Callers feeding
+    /// uploads through [`FlServer::receive_upload`] (the service round
+    /// loop) must call this once per round; the batch paths
+    /// ([`FlServer::receive_all`]) are unaffected.
+    pub fn begin_round(&mut self) {
+        self.round_seen.clear();
     }
 
     pub fn dim(&self) -> usize {
@@ -56,6 +68,23 @@ impl FlServer {
     /// Receive one (already-decoded) client gradient.
     pub fn receive(&mut self, g: &SparseVec) {
         self.agg.add(g);
+    }
+
+    /// Idempotent per-client receive: folds `g` into the aggregate unless
+    /// `client` already contributed since the last [`FlServer::begin_round`]
+    /// — a duplicated transport frame must never enter the mean twice.
+    /// Returns whether the gradient was applied. Bit-identical to
+    /// [`FlServer::receive`] calls in the same order when no duplicates
+    /// occur.
+    pub fn receive_upload(&mut self, client: usize, g: &SparseVec) -> bool {
+        match self.round_seen.binary_search(&client) {
+            Ok(_) => false,
+            Err(at) => {
+                self.round_seen.insert(at, client);
+                self.agg.add(g);
+                true
+            }
+        }
     }
 
     /// Receive a whole round of decoded client gradients at once. The merge
@@ -216,6 +245,31 @@ mod tests {
         assert_eq!(p2.nnz(), 2, "momentum payload keeps old support");
         assert_eq!(m.round_aggregate(&p2), &g2, "aggregate is the fresh Ĝ_t");
         assert_eq!(g2.indices, vec![3]);
+    }
+
+    #[test]
+    fn duplicate_upload_is_rejected_and_mass_ledger_stays_balanced() {
+        use crate::metrics::ledger::RoundLedger;
+        use crate::sim::scheduler::{ClientFate, StalenessPolicy};
+        use crate::sim::staleness::StaleQueue;
+        use crate::testkit::invariants::MassLedger;
+        let dim = 6;
+        let mut s = FlServer::new(dim, BroadcastPolicy::Aggregate);
+        let mut ledger = MassLedger::new(dim, StalenessPolicy::Drop);
+        let g = SparseVec::new(dim, vec![(1, 2.0), (4, -3.0)]);
+        s.begin_round();
+        // the client uploaded once; the wire delivered the frame twice
+        ledger.on_upload(0, ClientFate::Accepted, &g, 24, 24);
+        assert!(s.receive_upload(0, &g), "first frame enters the aggregate");
+        assert!(!s.receive_upload(0, &g), "duplicated frame must be rejected");
+        let (payload, ghat) = s.finish_round(1);
+        ledger.on_aggregate(&ghat, 1);
+        assert_eq!(payload.values, vec![2.0, -3.0], "mean over ONE contributor");
+        let violations = ledger.check(&StaleQueue::new());
+        assert!(violations.is_empty(), "{violations:?}");
+        // a new round admits the same client again
+        s.begin_round();
+        assert!(s.receive_upload(0, &g));
     }
 
     #[test]

@@ -1,0 +1,665 @@
+//! Service-mode round loop: `FlRun`'s coordinator logic replayed over a
+//! [`Transport`] instead of direct method calls on in-process clients.
+//!
+//! The split mirrors a real deployment. [`ServiceRun`] owns everything
+//! server-side — selection, fates, the stale queue, aggregation, the
+//! broadcast codec, metering — and talks to clients exclusively through
+//! `Transport::broadcast` / `Transport::collect`. [`ServiceClient`] owns
+//! everything client-side — shard, engine, compressor, its own mirror of
+//! the global parameters — and reacts to frames through the
+//! [`ClientHandler`] trait, so the same client state machine runs behind
+//! the in-process transport and behind a socket in another process.
+//!
+//! ## Digest identity with the simulator
+//!
+//! A service run over the loopback (or in-process) transport is required to
+//! reproduce the in-process simulator's `trajectory_digest` **bit-exactly**
+//! under [`service_config`]: same selection draws (both sides derive every
+//! RNG from the run seed), same per-client training (the engine's
+//! `train_step` is a pure function of `(params, batch)` and every client
+//! re-derives `FlRun`'s per-client RNG), same scheduler arithmetic (the
+//! simulated finish times are recomputed server-side from the arrived wire
+//! bytes through the shared [`uplink_close`]), and same reduction order
+//! (arrivals are re-walked in participant order, never arrival order).
+//! Wall-clock effects — retries, timeouts, frame duplicates — land only in
+//! the non-digested transport counter columns.
+//!
+//! ## Fates on the wire
+//!
+//! The simulator restores a dropped upload into the client residual in the
+//! same iteration that decides its fate. Over a wire the client cannot know
+//! its fate until the server tells it: the fate byte for round `r` rides on
+//! the client's next ROUND frame (round `r + 1`) or the final DONE frame,
+//! and [`ServiceClient::apply_fate`] performs exactly the restore the
+//! simulator would have. The only exception is a plan-`drop` fault: the
+//! client knows it never sent, restores immediately, and ignores the
+//! (offline) fate echo.
+//!
+//! ## Late frames and mass conservation
+//!
+//! A frame for a closed round reaches the round loop through
+//! [`RoundArrivals::late`]. It is folded into the stale queue **only** when
+//! the staleness policy carries *and* the server fated that exact
+//! `(client, round)` upload a straggler — i.e. the frame is a retransmit of
+//! an upload the round already charged as carried. Any other late frame
+//! (typically an offline-fated client whose upload limped in after the
+//! deadline) is discarded: the fate byte told that client to restore its
+//! residual in full, so aggregating the late copy would mint gradient mass
+//! that exists nowhere else — exactly the double-count the
+//! `MassLedger` invariant rejects.
+
+use super::client::FlClient;
+use super::round::{resolve_pool, FlConfig, FlRun, LrSchedule, RunSummary};
+use super::sampler::{feasibility_weights, Sampler};
+use crate::compress::{self, CompressorKind};
+use crate::data::dataset::Dataset;
+use crate::experiments::workload::verify_fixture;
+use crate::metrics::recorder::RoundRecord;
+use crate::runtime::TrainEngine;
+use crate::sim::scheduler::{uplink_close, ClientFate, SelectionPolicy};
+use crate::sparse::vector::SparseVec;
+use crate::sparse::wire;
+use crate::transport::fault::{FaultKind, FaultPlan, DELAY_S};
+use crate::transport::framing::{FATE_ACCEPTED, FATE_NONE, FATE_OFFLINE, FATE_STRAGGLER};
+use crate::transport::{ClientHandler, Transport, TransportStats, Upload};
+use std::time::Instant;
+
+/// Wire byte for a simulator fate.
+pub fn fate_byte(fate: ClientFate) -> u8 {
+    match fate {
+        ClientFate::Accepted => FATE_ACCEPTED,
+        ClientFate::Straggler => FATE_STRAGGLER,
+        ClientFate::Offline => FATE_OFFLINE,
+    }
+}
+
+/// The client half of a service run: `FlClient`'s compression state machine
+/// plus everything `FlRun` used to do *for* the client — parameter mirror,
+/// broadcast application, fate-driven residual restores — reacting to
+/// transport frames.
+pub struct ServiceClient {
+    inner: FlClient,
+    engine: Box<dyn TrainEngine>,
+    cfg: FlConfig,
+    /// this client's mirror of the synchronized global parameters
+    params: Vec<f32>,
+    /// last broadcast decoded (observed by GM/GMF compressors)
+    last_payload: SparseVec,
+    /// round whose upload is in flight, fate not yet known
+    awaiting: Option<usize>,
+    /// round whose residual was already restored client-side (plan-`drop`
+    /// faults: the client knows it never sent) — the fate echo is ignored
+    self_restored: Option<usize>,
+}
+
+impl ServiceClient {
+    pub fn new(
+        id: usize,
+        cfg: FlConfig,
+        shard: Box<dyn Dataset + Send>,
+        engine: Box<dyn TrainEngine>,
+    ) -> Self {
+        let dim = engine.param_count();
+        let root = crate::util::rng::Rng::new(cfg.seed);
+        let comp = compress::build(cfg.kind, &cfg.compress, dim);
+        let inner = FlClient::new(id, comp, shard, &root, dim, cfg.codec.uplink);
+        let params = engine.initial_params();
+        ServiceClient {
+            inner,
+            engine,
+            params,
+            last_payload: SparseVec::empty(dim),
+            awaiting: None,
+            self_restored: None,
+            cfg,
+        }
+    }
+
+    /// Apply the server's verdict on the in-flight upload — the same
+    /// residual restore `FlRun::step_round` performs, deferred until the
+    /// fate byte reaches this side of the wire.
+    fn apply_fate(&mut self, fate: u8) {
+        let Some(round) = self.awaiting.take() else { return };
+        if self.self_restored.take() == Some(round) {
+            return; // plan-drop: restored at send time, fate echo is stale
+        }
+        match fate {
+            FATE_STRAGGLER => {
+                let alpha = self.cfg.sim.staleness.alpha();
+                if self.cfg.sim.staleness.carries() {
+                    // the server buffered the upload and will apply α of it;
+                    // only the unapplied fraction returns to the residual
+                    if alpha < 1.0 {
+                        self.inner.restore_dropped_upload_scaled(1.0 - alpha);
+                    }
+                } else {
+                    self.inner.restore_dropped_upload();
+                }
+            }
+            FATE_OFFLINE => self.inner.restore_dropped_upload(),
+            _ => {} // accepted (or none): nothing to restore
+        }
+    }
+}
+
+impl ClientHandler for ServiceClient {
+    fn id(&self) -> usize {
+        self.inner.id
+    }
+
+    fn handle_round(
+        &mut self,
+        round: usize,
+        payload: &[u8],
+        participate: bool,
+        fate: u8,
+    ) -> anyhow::Result<Option<Upload>> {
+        // 1. settle the previous round's upload (fate piggybacks here)
+        self.apply_fate(fate);
+
+        // 2. apply the broadcast: decode, fold into the parameter mirror at
+        //    the *previous* round's learning rate (the payload is round
+        //    r-1's aggregate), and let momentum-observing schemes see it
+        if round > 0 && !payload.is_empty() {
+            wire::decode_into(payload, &mut self.last_payload)
+                .map_err(|e| anyhow::anyhow!("client {}: broadcast decode: {e:?}", self.inner.id))?;
+            let lr = self.cfg.lr.at(round - 1);
+            self.last_payload.add_into(&mut self.params, -lr);
+            if self.inner.compressor.observes_broadcast() {
+                self.inner.observe_broadcast(&self.last_payload);
+            }
+        }
+
+        if !participate {
+            return Ok(None);
+        }
+
+        // 3. local training + compression + wire encode, exactly the
+        //    simulator's client fan-out body
+        let k = self.cfg.warmup.k_at(self.params.len(), round);
+        let (loss, _, _) = self.inner.local_round(
+            self.engine.as_mut(),
+            &self.params,
+            self.cfg.batch_size,
+            self.cfg.local_steps,
+            k,
+            round,
+        )?;
+        self.awaiting = Some(round);
+
+        // 4. a plan-`drop` fault silences the upload at the source; the
+        //    client restores immediately (it knows nothing was sent)
+        if matches!(self.cfg.fault, Some(p) if p.kind == FaultKind::Drop && p.hits(self.inner.id, round))
+        {
+            self.inner.restore_dropped_upload();
+            self.self_restored = Some(round);
+            return Ok(None);
+        }
+
+        Ok(Some(Upload {
+            client: self.inner.id,
+            round,
+            loss,
+            precodec_bytes: self.inner.precodec_bytes,
+            bytes: self.inner.wire_buf.clone(),
+        }))
+    }
+
+    fn handle_done(&mut self, fate: u8) -> anyhow::Result<()> {
+        self.apply_fate(fate);
+        Ok(())
+    }
+}
+
+/// The server half of a service run: `FlRun`'s round loop with the client
+/// fan-out replaced by transport frames. Wraps an `FlRun` for its state
+/// (server, meter, scheduler, stale queue, history, recorder) — the wrapped
+/// run's `clients` are never trained; clients live behind the transport.
+pub struct ServiceRun {
+    pub run: FlRun,
+    /// wall-clock budget `Transport::collect` waits per round before closing
+    /// the round with whoever arrived
+    pub round_deadline_ms: u64,
+    /// per-client fate byte of each client's *last* participation — rides
+    /// on the next ROUND frame (clients ignore fates they already settled)
+    wire_fates: Vec<u8>,
+    /// last `(round, fate)` per client — gates late-frame admission
+    last_fate: Vec<(usize, u8)>,
+    fates: Vec<ClientFate>,
+    finishes: Vec<f64>,
+    weight_scratch: Vec<f64>,
+    overlap_scratch: Vec<u32>,
+    gini_scratch: Vec<f64>,
+    /// decoded current-round arrivals, index-aligned with `uploads`
+    echo_scratch: Vec<SparseVec>,
+    payload_scratch: SparseVec,
+    /// broadcast wire bytes of the previous round (what `broadcast` ships)
+    bcast_buf: Vec<u8>,
+    accepted_scratch: Vec<usize>,
+    prev_stats: TransportStats,
+}
+
+impl ServiceRun {
+    pub fn new(run: FlRun, round_deadline_ms: u64) -> Self {
+        let n = run.clients.len();
+        ServiceRun {
+            wire_fates: vec![FATE_NONE; n],
+            last_fate: vec![(usize::MAX, FATE_NONE); n],
+            fates: Vec::new(),
+            finishes: Vec::new(),
+            weight_scratch: Vec::new(),
+            overlap_scratch: Vec::new(),
+            gini_scratch: Vec::new(),
+            echo_scratch: Vec::new(),
+            payload_scratch: SparseVec::empty(run.params.len()),
+            bcast_buf: Vec::new(),
+            accepted_scratch: Vec::new(),
+            prev_stats: TransportStats::default(),
+            round_deadline_ms,
+            run,
+        }
+    }
+
+    /// One communication round over the transport. Mirrors
+    /// `FlRun::step_round` stage for stage; every divergence is a comment.
+    pub fn step_round(
+        &mut self,
+        transport: &mut dyn Transport,
+        round: usize,
+    ) -> anyhow::Result<RoundRecord> {
+        let wall = Instant::now();
+        let r = &mut self.run;
+        r.meter.begin_round();
+        r.stale_queue.begin_round();
+        r.server.begin_round();
+        if let Some(l) = r.ledger.as_deref_mut() {
+            l.begin_round(round);
+        }
+        let root = crate::util::rng::Rng::new(r.cfg.seed);
+        let participants = match r.cfg.sim.selection {
+            SelectionPolicy::Uniform => r.cfg.sampler.sample_overselected(
+                r.clients.len(),
+                round,
+                &root,
+                r.cfg.sim.overselect,
+            ),
+            SelectionPolicy::Feasibility { beta } => {
+                feasibility_weights(
+                    &r.history,
+                    &r.meter.per_client_uplink,
+                    r.clients.len(),
+                    beta,
+                    &mut self.weight_scratch,
+                );
+                r.cfg.sampler.sample_weighted(
+                    r.clients.len(),
+                    round,
+                    &root,
+                    r.cfg.sim.overselect,
+                    &self.weight_scratch,
+                )
+            }
+        };
+        let n = participants.len();
+        let pool = resolve_pool(r.cfg.workers);
+
+        // open the round on the wire: the previous round's broadcast bytes
+        // (empty on round 0) plus each client's pending fate byte
+        transport.broadcast(round, &self.bcast_buf, &participants, &self.wire_fates)?;
+
+        // a plan-`drop` client never sends — both sides derive that from the
+        // shared plan, so the server must not wait out the deadline for it
+        let fault = r.cfg.fault;
+        let dropped_by_plan =
+            |cid: usize| matches!(fault, Some(p) if p.kind == FaultKind::Drop && p.hits(cid, round));
+        let expected: Vec<usize> =
+            participants.iter().copied().filter(|&c| !dropped_by_plan(c)).collect();
+        let arrivals = transport.collect(round, &expected, self.round_deadline_ms)?;
+
+        // fates, in participant order: the simulator's schedule arithmetic
+        // recomputed from the arrived wire bytes. The dropout RNG is drawn
+        // per participant exactly as `plan_round` draws it.
+        let mut drop_rng = root.derive(0xD30F ^ round as u64);
+        self.fates.clear();
+        self.finishes.clear();
+        let deadline = r.cfg.sim.deadline_s;
+        for &cid in &participants {
+            let offline_draw = r.cfg.sim.dropout > 0.0 && drop_rng.f64() < r.cfg.sim.dropout;
+            let arrived = arrivals.uploads.binary_search_by_key(&cid, |u| u.client).ok();
+            let (fate, finish) = match arrived {
+                // no frame: plan-drop, or a genuinely lost/timed-out client
+                None => (ClientFate::Offline, 0.0),
+                Some(_) if offline_draw => (ClientFate::Offline, 0.0),
+                Some(i) => {
+                    let up = &arrivals.uploads[i];
+                    let mut finish = r
+                        .scheduler
+                        .compute_time(&r.cfg.sim, cid, r.cfg.local_steps)
+                        + r.scheduler.uplink_time(cid, up.bytes.len());
+                    if matches!(fault, Some(p) if p.kind == FaultKind::Delay && p.hits(cid, round))
+                    {
+                        finish += DELAY_S;
+                    }
+                    if deadline > 0.0 && finish > deadline {
+                        (ClientFate::Straggler, finish)
+                    } else {
+                        (ClientFate::Accepted, finish)
+                    }
+                }
+            };
+            self.fates.push(fate);
+            self.finishes.push(finish);
+        }
+        let uplink_phase = uplink_close(&r.cfg.sim, &self.fates, &self.finishes);
+
+        // decode every current-round arrival once, index-aligned
+        if self.echo_scratch.len() < arrivals.uploads.len() {
+            let dim = r.params.len();
+            self.echo_scratch.resize_with(arrivals.uploads.len(), || SparseVec::empty(dim));
+        }
+        for (up, echo) in arrivals.uploads.iter().zip(self.echo_scratch.iter_mut()) {
+            wire::decode_into(&up.bytes, echo)
+                .map_err(|e| anyhow::anyhow!("upload from client {}: {e:?}", up.client))?;
+        }
+
+        // deterministic reductions, in participant order — never arrival
+        // order. The client-side residual restores the simulator performs
+        // here happen remotely when the fate byte lands (`apply_fate`).
+        let alpha = r.cfg.sim.staleness.alpha();
+        let carries = r.cfg.sim.staleness.carries();
+        let empty_echo = SparseVec::empty(r.params.len());
+        let mut train_loss = 0.0f64;
+        let mut n_accepted = 0usize;
+        let mut dropped_deadline = 0usize;
+        let mut dropped_offline = 0usize;
+        for (i, &cid) in participants.iter().enumerate() {
+            let fate = self.fates[i];
+            let at = arrivals.uploads.binary_search_by_key(&cid, |u| u.client).ok();
+            let (echo, bytes, precodec, loss) = match at {
+                Some(j) => (
+                    &self.echo_scratch[j],
+                    arrivals.uploads[j].bytes.len(),
+                    arrivals.uploads[j].precodec_bytes,
+                    arrivals.uploads[j].loss,
+                ),
+                None => (&empty_echo, 0, 0, 0.0),
+            };
+            if let Some(l) = r.ledger.as_deref_mut() {
+                l.on_upload(cid, fate, echo, bytes, precodec);
+            }
+            match fate {
+                ClientFate::Accepted => {
+                    r.meter.record_uplink(cid, bytes, precodec);
+                    r.history.record(cid, true);
+                    train_loss += loss;
+                    n_accepted += 1;
+                }
+                ClientFate::Straggler => {
+                    r.history.record(cid, false);
+                    dropped_deadline += 1;
+                    if carries {
+                        r.meter.record_carried_uplink(cid, bytes, precodec);
+                        r.stale_queue.push(cid, round, bytes, echo);
+                    } else {
+                        r.meter.record_wasted_uplink(cid, bytes, precodec);
+                    }
+                }
+                ClientFate::Offline => {
+                    r.history.record(cid, false);
+                    dropped_offline += 1;
+                }
+            }
+            let fb = fate_byte(fate);
+            self.wire_fates[cid] = fb;
+            self.last_fate[cid] = (round, fb);
+        }
+
+        // accepted echoes in participant order: overlap diagnostic + merge
+        let mut accepted_echoes: Vec<&SparseVec> = Vec::with_capacity(n);
+        self.accepted_scratch.clear();
+        for (i, &cid) in participants.iter().enumerate() {
+            if self.fates[i] == ClientFate::Accepted {
+                if let Ok(j) = arrivals.uploads.binary_search_by_key(&cid, |u| u.client) {
+                    accepted_echoes.push(&self.echo_scratch[j]);
+                    self.accepted_scratch.push(cid);
+                }
+            }
+        }
+        let overlap = if r.cfg.exact_mask_overlap {
+            crate::sparse::merge::mean_pairwise_jaccard(&accepted_echoes)
+        } else {
+            crate::sparse::merge::mean_jaccard_estimate(&accepted_echoes, &mut self.overlap_scratch)
+        };
+        // idempotent per-(client, round) receive — the transports already
+        // deduplicate frames, this is the server-side backstop. Sequential
+        // adds in participant order are bit-identical to `receive_all`.
+        for (&cid, &echo) in self.accepted_scratch.iter().zip(accepted_echoes.iter()) {
+            r.server.receive_upload(cid, echo);
+        }
+        let stale = r.stale_queue.ready();
+        let carried_in = stale.len();
+        let carried_bytes: usize = stale.iter().map(|e| e.bytes).sum();
+        if carried_in > 0 {
+            let stale_refs: Vec<&SparseVec> = stale.iter().map(|e| &e.grad).collect();
+            r.server.receive_all_scaled(&stale_refs, alpha, pool);
+        }
+
+        // late frames: admissible only as retransmits of carried stragglers
+        // (see module docs — anything else would double-count mass). The
+        // queue's (client, round) idempotence rejects true duplicates.
+        if carries {
+            for up in &arrivals.late {
+                if self.last_fate.get(up.client).copied() != Some((up.round, FATE_STRAGGLER)) {
+                    continue;
+                }
+                let mut g = SparseVec::empty(0);
+                if wire::decode_into(&up.bytes, &mut g).is_ok() {
+                    r.stale_queue.push(up.client, up.round, up.bytes.len(), &g);
+                }
+            }
+        }
+
+        train_loss /= n_accepted.max(1) as f64;
+
+        // aggregate + broadcast through the persistent wire buffers
+        r.server.finish_round_into(n_accepted + carried_in, &mut self.payload_scratch, pool);
+        if let Some(l) = r.ledger.as_deref_mut() {
+            let aggregate = r.server.round_aggregate(&self.payload_scratch);
+            l.on_aggregate(aggregate, n_accepted + carried_in);
+        }
+        r.stale_queue.recycle_ready();
+        wire::encode_with(&self.payload_scratch, &mut self.bcast_buf, r.cfg.codec.downlink);
+        let bcast_precodec = wire::encoded_bytes(&self.payload_scratch);
+        r.meter.record_broadcast(self.bcast_buf.len(), bcast_precodec, n);
+        wire::decode_into(&self.bcast_buf, &mut r.last_payload).expect("broadcast must decode");
+
+        // the server's own parameter mirror (clients apply the identical
+        // update when the broadcast frame reaches them next round)
+        let lr = r.cfg.lr.at(round);
+        r.last_payload.add_into(&mut r.params, -lr);
+
+        let sim_s = uplink_phase
+            + r.scheduler.broadcast_time(self.bcast_buf.len(), &self.accepted_scratch);
+        let sim_clock = r.scheduler.advance(sim_s);
+
+        // transport counters: per-round deltas of the backend's totals
+        let stats = transport.stats();
+        let d = stats.delta(&self.prev_stats);
+        self.prev_stats = stats;
+
+        let traffic_gini = r.meter.uplink_gini(r.clients.len(), &mut self.gini_scratch);
+        let rec = RoundRecord {
+            round,
+            train_loss,
+            test_loss: 0.0,
+            test_accuracy: 0.0,
+            uplink_bytes: r.meter.round_uplink,
+            downlink_bytes: r.meter.round_downlink,
+            aggregate_nnz: r.last_payload.nnz(),
+            mask_overlap: overlap,
+            sim_seconds: sim_s,
+            wall_seconds: wall.elapsed().as_secs_f64(),
+            selected: n,
+            dropped_deadline,
+            dropped_offline,
+            sim_clock,
+            wasted_uplink_bytes: r.meter.round_wasted_uplink,
+            carried_in,
+            carried_bytes,
+            traffic_gini,
+            precodec_bytes: r.meter.round_precodec,
+            codec_ratio: r.meter.round_codec_ratio(),
+            retries: d.retries,
+            timeouts: d.timeouts,
+            stale_frames: d.stale_frames,
+            dup_frames: d.dup_frames,
+        };
+        r.recorder.push(rec.clone());
+        Ok(rec)
+    }
+
+    /// Drive the configured number of rounds, then release the fleet with
+    /// their final fates.
+    pub fn run(&mut self, transport: &mut dyn Transport) -> anyhow::Result<RunSummary> {
+        for round in 0..self.run.cfg.rounds {
+            self.step_round(transport, round)?;
+        }
+        transport.shutdown(&self.wire_fates)?;
+        Ok(self.run.summary())
+    }
+}
+
+/// The canonical service-mode `FlConfig`: deterministic regardless of
+/// wall-clock (no sim deadline, no dropout), DGC+GMF at rate 0.25, a fixed
+/// 3/5 cohort — shared by `fedgmf serve`, `fedgmf client` and the
+/// digest-identity tests so every party derives the identical run from
+/// `(clients, rounds, seed, fault)` alone.
+pub fn service_config(
+    clients: usize,
+    rounds: usize,
+    seed: u64,
+    fault: Option<FaultPlan>,
+) -> FlConfig {
+    let mut cfg = FlConfig::new(CompressorKind::DgcWgmf, 0.25, rounds);
+    cfg.lr = LrSchedule::constant(0.3);
+    cfg.warmup.warmup_rounds = 2;
+    cfg.sampler = Sampler::Count((clients * 3 / 5).max(1));
+    cfg.eval_every = 0;
+    cfg.seed = seed;
+    cfg.workers = 1;
+    cfg.fault = fault;
+    cfg
+}
+
+/// Server-side state for a service run: the shared fixture's engine seeds
+/// the parameter mirror; the fixture's shards ride along untrained (clients
+/// live behind the transport).
+pub fn build_service_run(
+    clients: usize,
+    rounds: usize,
+    seed: u64,
+    fault: Option<FaultPlan>,
+) -> FlRun {
+    let fx = verify_fixture(clients, seed);
+    let cfg = service_config(clients, rounds, seed, fault);
+    FlRun::new(&fx.engine, fx.shards, Vec::new(), fx.network, cfg)
+}
+
+/// One client's half of the same run: shard `id` of the shared fixture plus
+/// its own engine instance (identically seeded, hence identical initial
+/// parameters).
+pub fn build_service_client(
+    clients: usize,
+    id: usize,
+    rounds: usize,
+    seed: u64,
+    fault: Option<FaultPlan>,
+) -> ServiceClient {
+    assert!(id < clients, "client id {id} out of range for {clients} clients");
+    let mut fx = verify_fixture(clients, seed);
+    let cfg = service_config(clients, rounds, seed, fault);
+    let shard = fx.shards.remove(id);
+    ServiceClient::new(id, cfg, shard, Box::new(fx.engine))
+}
+
+/// The full fleet as in-process handlers (for `InProcTransport` and tests).
+pub fn build_service_handlers(
+    clients: usize,
+    rounds: usize,
+    seed: u64,
+    fault: Option<FaultPlan>,
+) -> Vec<Box<dyn ClientHandler>> {
+    (0..clients)
+        .map(|id| {
+            Box::new(build_service_client(clients, id, rounds, seed, fault))
+                as Box<dyn ClientHandler>
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::digest::trajectory_digest;
+    use crate::transport::inproc::InProcTransport;
+    use crate::transport::TransportConfig;
+
+    fn param_bits(params: &[f32]) -> Vec<u32> {
+        params.iter().map(|p| p.to_bits()).collect()
+    }
+
+    fn sim_digest(clients: usize, rounds: usize, seed: u64, fault: Option<FaultPlan>) -> u64 {
+        let fx = verify_fixture(clients, seed);
+        let mut engine = fx.engine;
+        let cfg = service_config(clients, rounds, seed, fault);
+        let mut run = FlRun::new(&engine, fx.shards, Vec::new(), fx.network, cfg);
+        run.run(&mut engine).unwrap();
+        trajectory_digest(&param_bits(&run.params), &run.recorder.rounds)
+    }
+
+    fn service_digest(clients: usize, rounds: usize, seed: u64, fault: Option<FaultPlan>) -> u64 {
+        let mut cfg = TransportConfig::default();
+        cfg.fault = fault;
+        let handlers = build_service_handlers(clients, rounds, seed, fault);
+        let mut transport = InProcTransport::new(handlers, cfg);
+        let mut service = ServiceRun::new(build_service_run(clients, rounds, seed, fault), 1000);
+        service.run(&mut transport).unwrap();
+        trajectory_digest(&param_bits(&service.run.params), &service.run.recorder.rounds)
+    }
+
+    #[test]
+    fn service_run_matches_simulator_digest() {
+        assert_eq!(
+            sim_digest(6, 4, 42, None),
+            service_digest(6, 4, 42, None),
+            "fault-free service run must be digest-identical to the simulator"
+        );
+    }
+
+    #[test]
+    fn service_run_matches_simulator_digest_under_drop_plan() {
+        let plan = Some(FaultPlan::new(FaultKind::Drop, 0.35, 7));
+        assert_eq!(
+            sim_digest(6, 5, 42, plan),
+            service_digest(6, 5, 42, plan),
+            "drop-faulted service run must be digest-identical to the simulator"
+        );
+    }
+
+    #[test]
+    fn service_run_books_transport_counters_outside_the_digest() {
+        let plan = Some(FaultPlan::new(FaultKind::Duplicate, 0.5, 3));
+        let d_sim = sim_digest(6, 4, 42, plan);
+        let d_svc = service_digest(6, 4, 42, plan);
+        assert_eq!(d_sim, d_svc, "duplicated frames are absorbed before the digest");
+
+        let mut cfg = TransportConfig::default();
+        cfg.fault = plan;
+        let handlers = build_service_handlers(6, 4, 42, plan);
+        let mut transport = InProcTransport::new(handlers, cfg);
+        let mut service = ServiceRun::new(build_service_run(6, 4, 42, plan), 1000);
+        service.run(&mut transport).unwrap();
+        let dups: usize = service.run.recorder.rounds.iter().map(|r| r.dup_frames).sum();
+        assert!(dups > 0, "duplicate plan at rate 0.5 must book dup frames");
+    }
+}

@@ -27,4 +27,5 @@ pub mod runtime;
 pub mod sim;
 pub mod sparse;
 pub mod testkit;
+pub mod transport;
 pub mod util;

@@ -5,6 +5,8 @@
 //! fedgmf experiment --id table3 [--scale quick|default|paper] [--engine native]
 //! fedgmf experiment --list
 //! fedgmf verify --scale quick [--bless]     # scenario-matrix conformance
+//! fedgmf serve --clients 4 --rounds 6       # coordinator over TCP/UDS
+//! fedgmf client --id 0 --clients 4 ...      # one fleet member
 //! fedgmf data --task cifar --emd 1.35       # inspect partition statistics
 //! fedgmf artifacts-check                    # verify AOT artifacts load
 //! ```
@@ -41,6 +43,8 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
         "train" => cmd_train(rest),
         "experiment" | "exp" => cmd_experiment(rest),
         "verify" => cmd_verify(rest),
+        "serve" => cmd_serve(rest),
+        "client" => cmd_client(rest),
         "data" => cmd_data(rest),
         "artifacts-check" => cmd_artifacts_check(rest),
         "help" | "--help" | "-h" => {
@@ -74,6 +78,16 @@ USAGE:
                # docs/testing.md): technique x codec x staleness x selection x
                # preset x workers, with invariant ledgers and golden digests;
                # --bless regenerates the golden registry
+  fedgmf serve [--listen ADDR] --clients N --rounds R [--seed S]
+               [--fault kind:rate[@seed]] [--deadline-ms MS] [--out-dir DIR]
+               [--selfcheck]
+               # fault-tolerant service mode: drive the round loop over
+               # TCP (host:port) or a Unix socket (unix:/path); --selfcheck
+               # replays the run in-process and compares trajectory digests
+  fedgmf client --id I [--connect ADDR] --clients N --rounds R [--seed S]
+               [--fault kind:rate[@seed]]
+               # one fleet member; all parties must agree on
+               # clients/rounds/seed/fault (the run derives from them alone)
   fedgmf data --task cifar|shakespeare [--emd X] [--clients N]
   fedgmf artifacts-check [--artifacts DIR]
 "
@@ -93,7 +107,7 @@ impl Flags {
             let k = &args[i];
             if let Some(name) = k.strip_prefix("--") {
                 // value-less boolean flags
-                if name == "list" || name == "bless" {
+                if name == "list" || name == "bless" || name == "selfcheck" {
                     vals.push((name.to_string(), "true".into()));
                     i += 1;
                     continue;
@@ -268,6 +282,121 @@ fn cmd_verify(args: &[String]) -> anyhow::Result<()> {
             report.digest_mismatches.len()
         ));
     }
+    Ok(())
+}
+
+/// Shared `(clients, rounds, seed, fault)` parsing for the service pair —
+/// every party must derive the identical run from these four values.
+fn service_args(
+    f: &Flags,
+) -> anyhow::Result<(usize, usize, u64, Option<fedgmf::transport::fault::FaultPlan>)> {
+    use fedgmf::transport::fault::FaultPlan;
+    let clients: usize =
+        f.get("clients").ok_or_else(|| anyhow::anyhow!("--clients required"))?.parse()?;
+    let rounds: usize =
+        f.get("rounds").ok_or_else(|| anyhow::anyhow!("--rounds required"))?.parse()?;
+    let seed: u64 = f.get("seed").unwrap_or("42").parse()?;
+    let fault = f
+        .get("fault")
+        .map(|s| FaultPlan::parse(s, seed).map_err(|e| anyhow::anyhow!(e)))
+        .transpose()?;
+    Ok((clients, rounds, seed, fault))
+}
+
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    use fedgmf::coordinator::service::{build_service_run, ServiceRun};
+    use fedgmf::testkit::digest;
+    use fedgmf::transport::socket::SocketTransport;
+    use fedgmf::transport::TransportConfig;
+
+    let f = Flags::parse(args)?;
+    let (clients, rounds, seed, fault) = service_args(&f)?;
+    let mut tcfg = TransportConfig::default();
+    if let Some(addr) = f.get("listen") {
+        tcfg.addr = addr.to_string();
+    }
+    if let Some(ms) = f.get("deadline-ms") {
+        tcfg.round_deadline_ms = ms.parse()?;
+    }
+    tcfg.fault = fault;
+    let deadline_ms = tcfg.round_deadline_ms;
+
+    let run = build_service_run(clients, rounds, seed, fault);
+    let dim = run.params.len();
+    let mut transport = SocketTransport::bind(tcfg, clients, dim, rounds)?;
+    println!(
+        "serve: {} | {clients} clients x {rounds} rounds | seed {seed}{}",
+        transport.local_addr(),
+        fault.map(|p| format!(" | fault {}", p.describe())).unwrap_or_default()
+    );
+    let mut service = ServiceRun::new(run, deadline_ms);
+    let summary = service.run(&mut transport)?;
+    let bits: Vec<u32> = service.run.params.iter().map(|p| p.to_bits()).collect();
+    let d = digest::trajectory_digest(&bits, &service.run.recorder.rounds);
+    println!(
+        "done: final loss {:.6} | traffic {:.6} GB | digest {}",
+        summary.final_loss,
+        summary.total_traffic_gb,
+        digest::hex(d)
+    );
+    let totals = service.run.recorder.rounds.iter().fold((0, 0, 0, 0), |a, r| {
+        (a.0 + r.retries, a.1 + r.timeouts, a.2 + r.stale_frames, a.3 + r.dup_frames)
+    });
+    println!(
+        "transport: {} retries | {} timeouts | {} stale frames | {} dup frames",
+        totals.0, totals.1, totals.2, totals.3
+    );
+    if let Some(dir) = f.get("out-dir") {
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        service.run.recorder.write_csv(&dir.join("service.csv"))?;
+        std::fs::write(
+            dir.join("summary.json"),
+            service.run.recorder.summary_json().to_pretty(),
+        )?;
+    }
+    if f.has("selfcheck") {
+        // replay the identical run through the in-process simulator: the
+        // wire must be invisible to the trajectory
+        let fx = fedgmf::experiments::workload::verify_fixture(clients, seed);
+        let mut engine = fx.engine;
+        let cfg = fedgmf::coordinator::service::service_config(clients, rounds, seed, fault);
+        let mut sim = fedgmf::coordinator::FlRun::new(&engine, fx.shards, Vec::new(), fx.network, cfg);
+        sim.run(&mut engine)?;
+        let sim_bits: Vec<u32> = sim.params.iter().map(|p| p.to_bits()).collect();
+        let d_sim = digest::trajectory_digest(&sim_bits, &sim.recorder.rounds);
+        if d_sim == d {
+            println!("selfcheck: simulator digest {} matches", digest::hex(d_sim));
+        } else {
+            return Err(anyhow::anyhow!(
+                "selfcheck FAILED: service digest {} != simulator digest {}",
+                digest::hex(d),
+                digest::hex(d_sim)
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_client(args: &[String]) -> anyhow::Result<()> {
+    use fedgmf::coordinator::service::build_service_client;
+    use fedgmf::transport::socket::run_client;
+    use fedgmf::transport::TransportConfig;
+
+    let f = Flags::parse(args)?;
+    let (clients, rounds, seed, fault) = service_args(&f)?;
+    let id: usize = f.get("id").ok_or_else(|| anyhow::anyhow!("--id required"))?.parse()?;
+    if id >= clients {
+        return Err(anyhow::anyhow!("--id {id} out of range for --clients {clients}"));
+    }
+    let mut tcfg = TransportConfig::default();
+    if let Some(addr) = f.get("connect") {
+        tcfg.addr = addr.to_string();
+    }
+    tcfg.fault = fault;
+    let mut handler = build_service_client(clients, id, rounds, seed, fault);
+    run_client(&tcfg, &mut handler)?;
+    println!("client {id}: run complete");
     Ok(())
 }
 

@@ -57,6 +57,16 @@ pub struct RoundRecord {
     /// codec's byte reduction factor for the round (1 under the default
     /// codec; 1 when nothing crossed the wire)
     pub codec_ratio: f64,
+    /// transport-level reconnect/resend attempts this round (truncate and
+    /// disconnect faults; wall-clock state, never part of the digest)
+    pub retries: usize,
+    /// expected uploads still missing when the round's wall-clock deadline
+    /// closed it (service mode's graceful degradation)
+    pub timeouts: usize,
+    /// frames that arrived after their round had already closed
+    pub stale_frames: usize,
+    /// duplicate (client, round) frames rejected by the receive path
+    pub dup_frames: usize,
 }
 
 impl RoundRecord {
@@ -204,17 +214,38 @@ impl Recorder {
         self.rounds.iter().map(|r| r.test_accuracy).fold(0.0, f64::max)
     }
 
+    /// Transport retry attempts over the run (0 for pure-simulator runs).
+    pub fn total_retries(&self) -> usize {
+        self.rounds.iter().map(|r| r.retries).sum()
+    }
+
+    /// Wall-deadline round closures that left expected uploads missing.
+    pub fn total_timeouts(&self) -> usize {
+        self.rounds.iter().map(|r| r.timeouts).sum()
+    }
+
+    /// Frames that arrived after their round closed.
+    pub fn total_stale_frames(&self) -> usize {
+        self.rounds.iter().map(|r| r.stale_frames).sum()
+    }
+
+    /// Duplicate (client, round) frames rejected.
+    pub fn total_dup_frames(&self) -> usize {
+        self.rounds.iter().map(|r| r.dup_frames).sum()
+    }
+
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "round,train_loss,test_loss,test_accuracy,uplink_bytes,downlink_bytes,\
              aggregate_nnz,mask_overlap,sim_seconds,wall_seconds,selected,dropped_deadline,\
              dropped_offline,sim_clock,wasted_uplink_bytes,carried_in,carried_bytes,\
-             traffic_gini,precodec_bytes,codec_ratio\n",
+             traffic_gini,precodec_bytes,codec_ratio,retries,timeouts,stale_frames,\
+             dup_frames\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
                 "{},{:.6},{:.6},{:.6},{},{},{},{:.6},{:.6},{:.6},{},{},{},{:.6},{},{},{},\
-                 {:.6},{},{:.6}\n",
+                 {:.6},{},{:.6},{},{},{},{}\n",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -234,7 +265,11 @@ impl Recorder {
                 r.carried_bytes,
                 r.traffic_gini,
                 r.precodec_bytes,
-                r.codec_ratio
+                r.codec_ratio,
+                r.retries,
+                r.timeouts,
+                r.stale_frames,
+                r.dup_frames
             ));
         }
         out
@@ -259,6 +294,10 @@ impl Recorder {
             ),
             ("total_precodec_bytes", Json::num(self.total_precodec_bytes() as f64)),
             ("overall_codec_ratio", Json::num(self.overall_codec_ratio())),
+            ("total_retries", Json::num(self.total_retries() as f64)),
+            ("total_timeouts", Json::num(self.total_timeouts() as f64)),
+            ("total_stale_frames", Json::num(self.total_stale_frames() as f64)),
+            ("total_dup_frames", Json::num(self.total_dup_frames() as f64)),
         ])
     }
 
@@ -359,8 +398,24 @@ mod tests {
         let csv = r.to_csv();
         assert!(csv.lines().next().unwrap().ends_with(
             "sim_clock,wasted_uplink_bytes,carried_in,carried_bytes,traffic_gini,\
-             precodec_bytes,codec_ratio"
+             precodec_bytes,codec_ratio,retries,timeouts,stale_frames,dup_frames"
         ));
+    }
+
+    #[test]
+    fn transport_counter_totals() {
+        let mut r = Recorder::new();
+        r.push(RoundRecord { retries: 2, stale_frames: 1, ..Default::default() });
+        r.push(RoundRecord { retries: 1, timeouts: 3, dup_frames: 4, ..Default::default() });
+        assert_eq!(r.total_retries(), 3);
+        assert_eq!(r.total_timeouts(), 3);
+        assert_eq!(r.total_stale_frames(), 1);
+        assert_eq!(r.total_dup_frames(), 4);
+        let j = r.summary_json();
+        assert_eq!(j.get("total_retries").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("total_dup_frames").unwrap().as_usize(), Some(4));
+        let row = r.to_csv().lines().nth(1).unwrap().to_string();
+        assert!(row.ends_with("2,0,1,0"), "row {row}");
     }
 
     #[test]

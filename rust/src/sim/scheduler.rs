@@ -248,6 +248,29 @@ pub enum ClientFate {
     Offline,
 }
 
+/// The uplink-phase duration implied by a round's fates and finish times:
+/// the slowest accepted upload — unless a deadline is set and anyone missed
+/// it, in which case the server waits out the full deadline before closing
+/// the round. Shared by [`Scheduler::plan_round`] and the service-mode
+/// round loop, which recomputes fates from real arrivals but must close the
+/// simulated clock identically.
+pub fn uplink_close(cfg: &SimConfig, fates: &[ClientFate], finishes: &[f64]) -> f64 {
+    debug_assert_eq!(fates.len(), finishes.len());
+    let mut any_missed = false;
+    let mut t_up: f64 = 0.0;
+    for (&fate, &finish) in fates.iter().zip(finishes) {
+        if fate == ClientFate::Accepted {
+            t_up = f64::max(t_up, finish);
+        } else {
+            any_missed = true;
+        }
+    }
+    if cfg.deadline_s > 0.0 && any_missed {
+        t_up = cfg.deadline_s;
+    }
+    t_up
+}
+
 /// Per-client profiles + the run's simulated clock. Scheduling *policy*
 /// (deadline, dropout, over-selection) stays in [`SimConfig`], which the
 /// round loop passes per call — so a test (or a live reconfiguration) can
@@ -370,8 +393,6 @@ impl Scheduler {
         fates.clear();
         finishes.clear();
         let deadline = cfg.deadline_s;
-        let mut any_missed = false;
-        let mut t_up: f64 = 0.0;
         for (&cid, &b) in participants.iter().zip(bytes) {
             let offline = cfg.dropout > 0.0 && rng.f64() < cfg.dropout;
             let finish = self.compute_time(cfg, cid, local_steps) + self.uplink_time(cid, b);
@@ -382,18 +403,10 @@ impl Scheduler {
             } else {
                 ClientFate::Accepted
             };
-            if fate == ClientFate::Accepted {
-                t_up = f64::max(t_up, finish);
-            } else {
-                any_missed = true;
-            }
             fates.push(fate);
             finishes.push(finish);
         }
-        if deadline > 0.0 && any_missed {
-            t_up = deadline;
-        }
-        t_up
+        uplink_close(cfg, fates, finishes)
     }
 }
 

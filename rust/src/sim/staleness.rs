@@ -51,7 +51,23 @@ impl StaleQueue {
     /// Buffer a late upload for the next round. The gradient is copied into
     /// a pooled buffer — no steady-state allocation once capacities are
     /// warm.
-    pub fn push(&mut self, client: usize, round: usize, bytes: usize, grad: &SparseVec) {
+    ///
+    /// Idempotent per `(client, round)`: a second push for a pair already
+    /// buffered (either phase) is rejected and returns `false`. Without
+    /// this, a client present in both the current cohort and a transport's
+    /// late-frame path could be queued twice for one upload — and since the
+    /// coordinator pairs exactly one client-side residual restore with each
+    /// successful push, the duplicate would inject gradient mass that was
+    /// never transmitted.
+    pub fn push(&mut self, client: usize, round: usize, bytes: usize, grad: &SparseVec) -> bool {
+        if self
+            .ready
+            .iter()
+            .chain(self.incoming.iter())
+            .any(|e| e.client == client && e.round == round)
+        {
+            return false;
+        }
         let mut buf = self.pool.pop().unwrap_or_else(|| SparseVec::empty(0));
         buf.dim = grad.dim;
         buf.indices.clear();
@@ -59,6 +75,7 @@ impl StaleQueue {
         buf.values.clear();
         buf.values.extend_from_slice(&grad.values);
         self.incoming.push(StaleEntry { client, round, bytes, grad: buf });
+        true
     }
 
     /// Rotate the phases: what arrived late last round becomes available
@@ -148,6 +165,29 @@ mod tests {
         assert_eq!(q.ready()[0].grad.indices.as_ptr(), ptr, "pool must recycle buffers");
         assert_eq!(q.ready()[0].grad.indices, vec![3]);
         assert_eq!(q.ready()[0].grad.values, vec![4.0]);
+        q.recycle_ready();
+    }
+
+    #[test]
+    fn push_is_idempotent_per_client_round() {
+        // regression: one upload must yield at most one queued entry, no
+        // matter how many paths (round loop + late transport frames) try
+        // to buffer it — in either phase of the queue
+        let mut q = StaleQueue::new();
+        q.begin_round();
+        assert!(q.push(3, 0, 120, &sv(8, vec![(1, 2.0)])));
+        assert!(!q.push(3, 0, 120, &sv(8, vec![(1, 2.0)])), "dup in incoming");
+        assert_eq!(q.pending(), 1);
+        q.recycle_ready();
+        q.begin_round(); // the entry is now in `ready`
+        assert!(!q.push(3, 0, 120, &sv(8, vec![(1, 2.0)])), "dup in ready");
+        assert_eq!(q.pending(), 1);
+        // a different round from the same client is a distinct upload
+        assert!(q.push(3, 1, 120, &sv(8, vec![(1, 2.0)])));
+        assert_eq!(q.pending(), 2);
+        let mass: f64 =
+            q.pending_entries().flat_map(|e| e.grad.values.iter()).map(|&v| v as f64).sum();
+        assert_eq!(mass, 4.0, "exactly two entries' worth of mass buffered");
         q.recycle_ready();
     }
 

@@ -8,7 +8,7 @@
 //! worker count. This module makes the full scenario space a first-class
 //! artifact: [`scenario::Scenario::all`] enumerates the cross-product of
 //! every behavioural axis (technique × codec × staleness × selection ×
-//! capability preset), [`run_scenario`] executes each point on a tiny
+//! capability preset × chaos plan), [`run_scenario`] executes each point on a tiny
 //! deterministic fixture at every worker count with the invariant ledgers
 //! installed, and the resulting trajectory digests are compared against a
 //! committed golden registry (`rust/tests/golden/verify_matrix.json`,
@@ -117,11 +117,14 @@ impl VerifyReport {
                 })
                 .collect(),
         );
+        let chaos_axis =
+            Json::Arr(scenario::AXIS_CHAOS.iter().map(|c| Json::str(c.name())).collect());
         Json::obj(vec![
             ("schema", Json::num(1.0)),
             ("scale", Json::str(self.scale)),
             ("runs", Json::num(self.runs as f64)),
             ("scenarios", Json::num(self.scenarios.len() as f64)),
+            ("chaos_axis", chaos_axis),
             ("invariant_failures", Json::num(self.invariant_failures() as f64)),
             (
                 "codec_selfcheck",

@@ -2,8 +2,9 @@
 //!
 //! One [`Scenario`] is a point in the cross-product of every behavioural
 //! axis the system has grown: compressor technique × wire codec ×
-//! staleness policy × selection policy × scheduler capability preset.
-//! Worker count is a sixth axis handled by the runner (every scenario is
+//! staleness policy × selection policy × scheduler capability preset ×
+//! chaos fault plan.
+//! Worker count is a further axis handled by the runner (every scenario is
 //! executed at each [`WORKERS`] entry and the trajectory digests must be
 //! equal — the cross-worker invariant), so it never appears in a
 //! scenario's registry key.
@@ -21,6 +22,7 @@ use crate::coordinator::round::{FlConfig, LrSchedule};
 use crate::coordinator::sampler::Sampler;
 use crate::sim::scheduler::{ProfilePreset, SelectionPolicy, SimConfig, StalenessPolicy};
 use crate::sparse::codec::{CodecParams, IndexCoding, ValueCoding, WireCodec};
+use crate::transport::fault::{FaultKind, FaultPlan};
 
 /// Wire-codec axis values.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -130,6 +132,50 @@ impl PresetAxis {
     }
 }
 
+/// Chaos-plan axis values: the deterministic fault plans of
+/// [`crate::transport::fault`], replayed by the simulator (`FlConfig::fault`)
+/// exactly as the service transports inject them on the wire. Every value
+/// must keep the mass and traffic ledgers clean — faults may change *which*
+/// uploads land, never create or destroy gradient mass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosAxis {
+    /// no plan — bit-identical to the pre-fault loop
+    None,
+    Drop,
+    Delay,
+    Duplicate,
+    Reorder,
+    Truncate,
+    Disconnect,
+}
+
+impl ChaosAxis {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChaosAxis::None => "none",
+            ChaosAxis::Drop => "drop",
+            ChaosAxis::Delay => "delay",
+            ChaosAxis::Duplicate => "dup",
+            ChaosAxis::Reorder => "reorder",
+            ChaosAxis::Truncate => "truncate",
+            ChaosAxis::Disconnect => "disconnect",
+        }
+    }
+
+    pub fn plan(&self) -> Option<FaultPlan> {
+        let kind = match self {
+            ChaosAxis::None => return None,
+            ChaosAxis::Drop => FaultKind::Drop,
+            ChaosAxis::Delay => FaultKind::Delay,
+            ChaosAxis::Duplicate => FaultKind::Duplicate,
+            ChaosAxis::Reorder => FaultKind::Reorder,
+            ChaosAxis::Truncate => FaultKind::Truncate,
+            ChaosAxis::Disconnect => FaultKind::Disconnect,
+        };
+        Some(FaultPlan::new(kind, FIXTURE_FAULT_RATE, FIXTURE_SEED))
+    }
+}
+
 // ------------------------------------------------------------- axis values
 
 pub const AXIS_TECHNIQUES: &[CompressorKind] = &CompressorKind::ALL;
@@ -140,6 +186,15 @@ pub const AXIS_STALENESS: &[StalenessAxis] =
 pub const AXIS_SELECTION: &[SelectionAxis] =
     &[SelectionAxis::Uniform, SelectionAxis::Feasibility];
 pub const AXIS_PRESETS: &[PresetAxis] = &[PresetAxis::Uniform, PresetAxis::LongTail];
+pub const AXIS_CHAOS: &[ChaosAxis] = &[
+    ChaosAxis::None,
+    ChaosAxis::Drop,
+    ChaosAxis::Delay,
+    ChaosAxis::Duplicate,
+    ChaosAxis::Reorder,
+    ChaosAxis::Truncate,
+    ChaosAxis::Disconnect,
+];
 
 /// Worker-count runs per scenario: sequential reference and one-per-core.
 /// Digests must be equal across all entries (the determinism contract).
@@ -153,6 +208,8 @@ pub const FIXTURE_ALPHA: f64 = 0.5;
 pub const FIXTURE_BETA: f64 = 0.5;
 /// Long-tail sigma for the `longtail` axis value.
 pub const FIXTURE_SIGMA: f64 = 0.8;
+/// Per-(client, round) fault rate for the non-`none` chaos axis values.
+pub const FIXTURE_FAULT_RATE: f64 = 0.25;
 
 /// Fixture shape: the slowest link tier misses the deadline under every
 /// codec axis (see `experiments::workload::verify_fixture`), so the carry
@@ -177,6 +234,7 @@ pub struct Scenario {
     pub staleness: StalenessAxis,
     pub selection: SelectionAxis,
     pub preset: PresetAxis,
+    pub chaos: ChaosAxis,
 }
 
 impl Scenario {
@@ -189,7 +247,16 @@ impl Scenario {
                 for &staleness in AXIS_STALENESS {
                     for &selection in AXIS_SELECTION {
                         for &preset in AXIS_PRESETS {
-                            out.push(Scenario { technique, codec, staleness, selection, preset });
+                            for &chaos in AXIS_CHAOS {
+                                out.push(Scenario {
+                                    technique,
+                                    codec,
+                                    staleness,
+                                    selection,
+                                    preset,
+                                    chaos,
+                                });
+                            }
                         }
                     }
                 }
@@ -201,12 +268,13 @@ impl Scenario {
     /// Registry key — the stable identity of this scenario.
     pub fn key(&self) -> String {
         format!(
-            "{}/{}/{}/{}/{}",
+            "{}/{}/{}/{}/{}/{}",
             self.technique.name(),
             self.codec.name(),
             self.staleness.name(),
             self.selection.name(),
-            self.preset.name()
+            self.preset.name(),
+            self.chaos.name()
         )
     }
 
@@ -234,6 +302,7 @@ impl Scenario {
         cfg.workers = workers;
         cfg.sim = self.sim_config();
         cfg.codec = self.codec.wire_codec();
+        cfg.fault = self.chaos.plan();
         cfg
     }
 }
@@ -250,7 +319,8 @@ mod tests {
             * AXIS_CODECS.len()
             * AXIS_STALENESS.len()
             * AXIS_SELECTION.len()
-            * AXIS_PRESETS.len();
+            * AXIS_PRESETS.len()
+            * AXIS_CHAOS.len();
         assert_eq!(all.len(), want);
         assert!(all.len() * WORKERS.len() >= 200, "the matrix must stay >= 200 runs");
         let keys: BTreeSet<String> = all.iter().map(|s| s.key()).collect();
@@ -270,13 +340,41 @@ mod tests {
 
     #[test]
     fn keys_are_stable_strings() {
-        let s = Scenario {
+        let mut s = Scenario {
             technique: CompressorKind::DgcWgmf,
             codec: CodecAxis::VarintQ8,
             staleness: StalenessAxis::CarryDiscounted,
             selection: SelectionAxis::Feasibility,
             preset: PresetAxis::LongTail,
+            chaos: ChaosAxis::None,
         };
-        assert_eq!(s.key(), "DGCwGMF/varint_q8/carry_discounted/feasibility/longtail");
+        assert_eq!(s.key(), "DGCwGMF/varint_q8/carry_discounted/feasibility/longtail/none");
+        s.chaos = ChaosAxis::Disconnect;
+        assert_eq!(s.key(), "DGCwGMF/varint_q8/carry_discounted/feasibility/longtail/disconnect");
+    }
+
+    #[test]
+    fn chaos_axis_wires_the_fault_plan_into_fl_config() {
+        for &chaos in AXIS_CHAOS {
+            let s = Scenario {
+                technique: CompressorKind::DgcWgmf,
+                codec: CodecAxis::VarintQ8,
+                staleness: StalenessAxis::CarryDiscounted,
+                selection: SelectionAxis::Feasibility,
+                preset: PresetAxis::LongTail,
+                chaos,
+            };
+            let cfg = s.fl_config(1, 4);
+            assert_eq!(cfg.fault, chaos.plan());
+            match chaos {
+                ChaosAxis::None => assert!(cfg.fault.is_none()),
+                _ => {
+                    let plan = cfg.fault.expect("non-none chaos carries a plan");
+                    assert_eq!(plan.rate, FIXTURE_FAULT_RATE);
+                    assert_eq!(plan.seed, FIXTURE_SEED);
+                    assert_eq!(plan.describe(), format!("{}:0.25@{}", chaos.name(), FIXTURE_SEED));
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,182 @@
+//! Deterministic, seed-driven chaos injection for both transport backends.
+//!
+//! A [`FaultPlan`] is a pure function of `(seed, client, round)`: every
+//! decision comes from one stateless SplitMix64 hash, so the in-process
+//! backend, the socket backend, and every worker count see the *same*
+//! faults for the same plan — the property the cross-backend digest test
+//! and the cross-worker verify invariant both lean on. No generator state
+//! is threaded anywhere; a backend asks `plan.hits(client, round)` at the
+//! moment it needs the answer.
+//!
+//! The plan grammar is `kind:rate[@seed]`, e.g. `drop:0.25` or
+//! `disconnect:0.4@7`. When `@seed` is omitted the run seed is used, so a
+//! scenario string stays portable across fixtures.
+
+use crate::util::rng::splitmix64;
+
+/// Extra simulated seconds a `delay`-faulted upload takes to finish. Chosen
+/// larger than the verify fixture's deadline slack so delayed uploads
+/// genuinely flip to stragglers when a deadline is armed.
+pub const DELAY_S: f64 = 0.05;
+
+/// What the plan does to a hit upload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// upload never sent; the client restores its residual (offline)
+    Drop,
+    /// upload finishes [`DELAY_S`] later in simulated time
+    Delay,
+    /// the same frame arrives twice; the server must dedupe
+    Duplicate,
+    /// arrival order is scrambled; sorting by client id must normalise it
+    Reorder,
+    /// the frame is cut mid-body; the connection dies and the client resends
+    Truncate,
+    /// the connection drops before the frame; the client reconnects and resends
+    Disconnect,
+}
+
+impl FaultKind {
+    pub const ALL: [FaultKind; 6] = [
+        FaultKind::Drop,
+        FaultKind::Delay,
+        FaultKind::Duplicate,
+        FaultKind::Reorder,
+        FaultKind::Truncate,
+        FaultKind::Disconnect,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Drop => "drop",
+            FaultKind::Delay => "delay",
+            FaultKind::Duplicate => "dup",
+            FaultKind::Reorder => "reorder",
+            FaultKind::Truncate => "truncate",
+            FaultKind::Disconnect => "disconnect",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        FaultKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// A seeded chaos scenario: `kind` applied at `rate` to each
+/// (client, round) independently.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub kind: FaultKind,
+    /// per-(client, round) hit probability in [0, 1]
+    pub rate: f64,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    pub fn new(kind: FaultKind, rate: f64, seed: u64) -> Self {
+        FaultPlan { kind, rate, seed }
+    }
+
+    /// Parse `kind:rate[@seed]`. `default_seed` fills in when `@seed` is
+    /// absent.
+    pub fn parse(s: &str, default_seed: u64) -> Result<FaultPlan, String> {
+        let (kind_s, rest) =
+            s.split_once(':').ok_or_else(|| format!("fault plan `{s}`: expected kind:rate"))?;
+        let kind = FaultKind::parse(kind_s)
+            .ok_or_else(|| format!("fault plan `{s}`: unknown kind `{kind_s}`"))?;
+        let (rate_s, seed) = match rest.split_once('@') {
+            Some((r, sd)) => {
+                let seed = sd
+                    .parse::<u64>()
+                    .map_err(|_| format!("fault plan `{s}`: bad seed `{sd}`"))?;
+                (r, seed)
+            }
+            None => (rest, default_seed),
+        };
+        let rate = rate_s
+            .parse::<f64>()
+            .map_err(|_| format!("fault plan `{s}`: bad rate `{rate_s}`"))?;
+        if !(0.0..=1.0).contains(&rate) {
+            return Err(format!("fault plan `{s}`: rate must be in [0, 1]"));
+        }
+        Ok(FaultPlan { kind, rate, seed })
+    }
+
+    /// The canonical string form (`kind:rate@seed`), re-parseable.
+    pub fn describe(&self) -> String {
+        format!("{}:{}@{}", self.kind.name(), self.rate, self.seed)
+    }
+
+    /// Stateless per-(client, round) decision. Identical on every backend,
+    /// process and thread — no generator state exists to drift.
+    pub fn hits(&self, client: usize, round: usize) -> bool {
+        if self.rate <= 0.0 {
+            return false;
+        }
+        if self.rate >= 1.0 {
+            return true;
+        }
+        let mut h = self
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((client as u64) << 32)
+            .wrapping_add(round as u64);
+        let u = (splitmix64(&mut h) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < self.rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hits_is_pure_and_seed_sensitive() {
+        let a = FaultPlan::new(FaultKind::Drop, 0.5, 42);
+        let b = FaultPlan::new(FaultKind::Drop, 0.5, 42);
+        let c = FaultPlan::new(FaultKind::Drop, 0.5, 43);
+        let pat = |p: &FaultPlan| {
+            (0..20).flat_map(|c| (0..20).map(move |r| (c, r))).map(|(c, r)| p.hits(c, r)).collect::<Vec<_>>()
+        };
+        assert_eq!(pat(&a), pat(&b), "same plan must be bit-identical");
+        assert_ne!(pat(&a), pat(&c), "seed must matter");
+    }
+
+    #[test]
+    fn rate_extremes() {
+        let never = FaultPlan::new(FaultKind::Drop, 0.0, 1);
+        let always = FaultPlan::new(FaultKind::Drop, 1.0, 1);
+        for c in 0..10 {
+            for r in 0..10 {
+                assert!(!never.hits(c, r));
+                assert!(always.hits(c, r));
+            }
+        }
+    }
+
+    #[test]
+    fn rate_roughly_respected() {
+        let p = FaultPlan::new(FaultKind::Delay, 0.25, 9);
+        let n = 40_000;
+        let hits = (0..200)
+            .flat_map(|c| (0..200).map(move |r| (c, r)))
+            .filter(|&(c, r)| p.hits(c, r))
+            .count();
+        let frac = hits as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "hit rate {frac} too far from 0.25");
+    }
+
+    #[test]
+    fn parse_grammar() {
+        let p = FaultPlan::parse("drop:0.25", 42).unwrap();
+        assert_eq!(p, FaultPlan::new(FaultKind::Drop, 0.25, 42));
+        let q = FaultPlan::parse("disconnect:0.4@7", 42).unwrap();
+        assert_eq!(q, FaultPlan::new(FaultKind::Disconnect, 0.4, 7));
+        assert_eq!(FaultPlan::parse(&q.describe(), 0).unwrap(), q);
+        assert!(FaultPlan::parse("drop", 0).is_err());
+        assert!(FaultPlan::parse("jitter:0.5", 0).is_err());
+        assert!(FaultPlan::parse("drop:1.5", 0).is_err());
+        assert!(FaultPlan::parse("drop:x", 0).is_err());
+        assert!(FaultPlan::parse("drop:0.5@zz", 0).is_err());
+    }
+}

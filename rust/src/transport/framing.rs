@@ -1,0 +1,316 @@
+//! Length-prefixed framing for the fedgmf service-mode wire protocol.
+//!
+//! Every frame on a service connection is `len: u32 LE | kind: u8 | body`,
+//! where `len` counts the kind byte plus the body. The body of a model or
+//! gradient frame is the self-describing sparse wire format
+//! ([`crate::sparse::wire`], v1 and v2 both legal), so the transport layer
+//! never interprets payload bytes — it only moves frames. Reads go through
+//! `read_exact`, which loops over short reads, so a frame survives arbitrary
+//! fragmentation (the proptests drive it one byte at a time); a stream that
+//! ends mid-frame surfaces `UnexpectedEof`, never a partial message.
+
+use std::io::{self, Read, Write};
+
+/// Upper bound on a single frame's `len` field. Anything larger is treated
+/// as a corrupt or adversarial stream and rejected before allocation.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Frame kind bytes.
+pub const KIND_HELLO: u8 = 1;
+pub const KIND_WELCOME: u8 = 2;
+pub const KIND_ROUND: u8 = 3;
+pub const KIND_UPLOAD: u8 = 4;
+pub const KIND_DONE: u8 = 6;
+
+/// Fate byte carried back to a client on its next `ROUND` (or `DONE`)
+/// frame: the scheduler's verdict on that client's previous upload.
+pub const FATE_NONE: u8 = 0xFF;
+pub const FATE_ACCEPTED: u8 = 0;
+pub const FATE_STRAGGLER: u8 = 1;
+pub const FATE_OFFLINE: u8 = 2;
+
+/// One service-protocol message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// client -> server, first frame on every (re)connect
+    Hello { client: u32 },
+    /// server -> client, response to `Hello`
+    Welcome { dim: u32, rounds: u32 },
+    /// server -> client, opens a round: last round's broadcast payload
+    /// (empty on round 0), whether this client is in the cohort, and the
+    /// fate of the client's previous upload (`FATE_NONE` if it had none)
+    Round { round: u32, participate: bool, fate: u8, payload: Vec<u8> },
+    /// client -> server, the round's compressed gradient
+    Upload { round: u32, client: u32, loss: f64, precodec: u64, payload: Vec<u8> },
+    /// server -> client, run over; carries the final round's fate
+    Done { fate: u8 },
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+impl Msg {
+    pub fn kind(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => KIND_HELLO,
+            Msg::Welcome { .. } => KIND_WELCOME,
+            Msg::Round { .. } => KIND_ROUND,
+            Msg::Upload { .. } => KIND_UPLOAD,
+            Msg::Done { .. } => KIND_DONE,
+        }
+    }
+
+    /// Append the complete frame (`len | kind | body`) to `out`.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        let start = out.len();
+        out.extend_from_slice(&[0, 0, 0, 0]); // len backpatched below
+        out.push(self.kind());
+        match self {
+            Msg::Hello { client } => out.extend_from_slice(&client.to_le_bytes()),
+            Msg::Welcome { dim, rounds } => {
+                out.extend_from_slice(&dim.to_le_bytes());
+                out.extend_from_slice(&rounds.to_le_bytes());
+            }
+            Msg::Round { round, participate, fate, payload } => {
+                out.extend_from_slice(&round.to_le_bytes());
+                out.push(u8::from(*participate));
+                out.push(*fate);
+                out.extend_from_slice(payload);
+            }
+            Msg::Upload { round, client, loss, precodec, payload } => {
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(&client.to_le_bytes());
+                out.extend_from_slice(&loss.to_le_bytes());
+                out.extend_from_slice(&precodec.to_le_bytes());
+                out.extend_from_slice(payload);
+            }
+            Msg::Done { fate } => out.push(*fate),
+        }
+        let len = (out.len() - start - 4) as u32;
+        out[start..start + 4].copy_from_slice(&len.to_le_bytes());
+    }
+
+    /// Parse a frame body (`kind` already split off the front).
+    pub fn decode(kind: u8, body: &[u8]) -> io::Result<Msg> {
+        fn u32_at(b: &[u8], at: usize) -> io::Result<u32> {
+            let raw = b.get(at..at + 4).ok_or_else(|| bad("frame body truncated"))?;
+            Ok(u32::from_le_bytes(raw.try_into().unwrap()))
+        }
+        fn u64_at(b: &[u8], at: usize) -> io::Result<u64> {
+            let raw = b.get(at..at + 8).ok_or_else(|| bad("frame body truncated"))?;
+            Ok(u64::from_le_bytes(raw.try_into().unwrap()))
+        }
+        match kind {
+            KIND_HELLO => {
+                if body.len() != 4 {
+                    return Err(bad("HELLO body must be 4 bytes"));
+                }
+                Ok(Msg::Hello { client: u32_at(body, 0)? })
+            }
+            KIND_WELCOME => {
+                if body.len() != 8 {
+                    return Err(bad("WELCOME body must be 8 bytes"));
+                }
+                Ok(Msg::Welcome { dim: u32_at(body, 0)?, rounds: u32_at(body, 4)? })
+            }
+            KIND_ROUND => {
+                if body.len() < 6 {
+                    return Err(bad("ROUND body too short"));
+                }
+                let participate = match body[4] {
+                    0 => false,
+                    1 => true,
+                    b => return Err(bad(format!("bad participate byte {b}"))),
+                };
+                Ok(Msg::Round {
+                    round: u32_at(body, 0)?,
+                    participate,
+                    fate: body[5],
+                    payload: body[6..].to_vec(),
+                })
+            }
+            KIND_UPLOAD => {
+                if body.len() < 24 {
+                    return Err(bad("UPLOAD body too short"));
+                }
+                Ok(Msg::Upload {
+                    round: u32_at(body, 0)?,
+                    client: u32_at(body, 4)?,
+                    loss: f64::from_le_bytes(body[8..16].try_into().unwrap()),
+                    precodec: u64_at(body, 16)?,
+                    payload: body[24..].to_vec(),
+                })
+            }
+            KIND_DONE => {
+                if body.len() != 1 {
+                    return Err(bad("DONE body must be 1 byte"));
+                }
+                Ok(Msg::Done { fate: body[0] })
+            }
+            b => Err(bad(format!("unknown frame kind {b}"))),
+        }
+    }
+}
+
+/// Write one message as a single frame.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg, scratch: &mut Vec<u8>) -> io::Result<()> {
+    scratch.clear();
+    msg.encode(scratch);
+    w.write_all(scratch)
+}
+
+/// Read exactly one frame. Loops over short reads (fragmentation-safe);
+/// a stream ending anywhere inside the frame yields `UnexpectedEof`, a
+/// length field over [`MAX_FRAME_BYTES`] or an unparseable body yields
+/// `InvalidData`. No allocation happens before the length passes the bound
+/// check.
+pub fn read_msg<R: Read>(r: &mut R) -> io::Result<Msg> {
+    let mut len_raw = [0u8; 4];
+    r.read_exact(&mut len_raw)?;
+    let len = u32::from_le_bytes(len_raw) as usize;
+    if len == 0 {
+        return Err(bad("empty frame"));
+    }
+    if len > MAX_FRAME_BYTES {
+        return Err(bad(format!("frame length {len} exceeds cap {MAX_FRAME_BYTES}")));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Msg::decode(buf[0], &buf[1..])
+}
+
+/// Reassembly buffer for reading frames off a stream with read timeouts.
+///
+/// `read_exact` loses already-consumed bytes when a timeout fires
+/// mid-frame, desynchronising the stream. Long-lived connections instead
+/// feed raw reads into this buffer and pop complete frames; a timeout
+/// between reads leaves partial frames intact.
+#[derive(Debug, Default)]
+pub struct FrameBuffer {
+    buf: Vec<u8>,
+}
+
+impl FrameBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Discard buffered bytes (call when the underlying stream is replaced).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Feed freshly-read bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame, if one is fully buffered.
+    pub fn next_msg(&mut self) -> io::Result<Option<Msg>> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(self.buf[..4].try_into().unwrap()) as usize;
+        if len == 0 {
+            return Err(bad("empty frame"));
+        }
+        if len > MAX_FRAME_BYTES {
+            return Err(bad(format!("frame length {len} exceeds cap {MAX_FRAME_BYTES}")));
+        }
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        let msg = Msg::decode(self.buf[4], &self.buf[5..4 + len])?;
+        self.buf.drain(..4 + len);
+        Ok(Some(msg))
+    }
+}
+
+/// Read until one complete frame is available via `fb`. Timeouts
+/// (`WouldBlock`/`TimedOut`) propagate to the caller with all buffered
+/// bytes retained, so the next call resumes mid-frame cleanly.
+pub fn read_msg_buffered<R: Read>(r: &mut R, fb: &mut FrameBuffer) -> io::Result<Msg> {
+    loop {
+        if let Some(m) = fb.next_msg()? {
+            return Ok(m);
+        }
+        let mut tmp = [0u8; 8192];
+        match r.read(&mut tmp)? {
+            0 => return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "stream closed")),
+            n => fb.extend(&tmp[..n]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_msgs() -> Vec<Msg> {
+        vec![
+            Msg::Hello { client: 7 },
+            Msg::Welcome { dim: 16, rounds: 6 },
+            Msg::Round { round: 3, participate: true, fate: FATE_STRAGGLER, payload: vec![9; 33] },
+            Msg::Round { round: 0, participate: false, fate: FATE_NONE, payload: Vec::new() },
+            Msg::Upload { round: 2, client: 4, loss: 0.625, precodec: 144, payload: vec![1, 2, 3] },
+            Msg::Done { fate: FATE_ACCEPTED },
+        ]
+    }
+
+    #[test]
+    fn roundtrip_all_kinds() {
+        let mut buf = Vec::new();
+        let msgs = sample_msgs();
+        for m in &msgs {
+            write_msg(&mut buf, m, &mut Vec::new()).unwrap();
+        }
+        let mut r = &buf[..];
+        for m in &msgs {
+            assert_eq!(&read_msg(&mut r).unwrap(), m);
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.push(KIND_HELLO);
+        let err = read_msg(&mut &buf[..]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn zero_length_rejected() {
+        let buf = 0u32.to_le_bytes();
+        assert_eq!(read_msg(&mut &buf[..]).unwrap_err().kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let mut buf = Vec::new();
+        Msg::Hello { client: 1 }.encode(&mut buf);
+        buf[4] = 200; // kind byte
+        assert_eq!(read_msg(&mut &buf[..]).unwrap_err().kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn frame_buffer_survives_byte_at_a_time_feeding() {
+        let mut wire = Vec::new();
+        let msgs = sample_msgs();
+        for m in &msgs {
+            m.encode(&mut wire);
+        }
+        let mut fb = FrameBuffer::new();
+        let mut got = Vec::new();
+        for &b in &wire {
+            fb.extend(&[b]);
+            while let Some(m) = fb.next_msg().unwrap() {
+                got.push(m);
+            }
+        }
+        assert_eq!(got, msgs);
+        assert!(fb.next_msg().unwrap().is_none(), "buffer must be drained");
+    }
+}

@@ -1,0 +1,103 @@
+//! In-process transport backend: the original simulator, now one backend
+//! behind the [`Transport`] trait.
+//!
+//! Clients are owned [`ClientHandler`]s invoked synchronously during
+//! `broadcast`; `collect` then replays the fault plan's frame-level
+//! mischief (duplicates, reordering, retried truncations) on the buffered
+//! uploads before handing the round to the coordinator. Because drop
+//! decisions live in the client handler and delay decisions live in the
+//! coordinator's scheduler math, the frame-level faults here are exactly
+//! the ones that must be *invisible* after dedup + sort — which is what
+//! the cross-backend digest test pins.
+
+use crate::transport::fault::FaultKind;
+use crate::transport::{ClientHandler, RoundArrivals, Transport, TransportConfig, TransportStats, Upload};
+
+pub struct InProcTransport {
+    clients: Vec<Box<dyn ClientHandler>>,
+    cfg: TransportConfig,
+    pending: Vec<Upload>,
+    stats: TransportStats,
+}
+
+impl InProcTransport {
+    /// `clients` must be sorted by [`ClientHandler::id`] and cover every
+    /// client id the coordinator will put in a cohort.
+    pub fn new(clients: Vec<Box<dyn ClientHandler>>, cfg: TransportConfig) -> Self {
+        debug_assert!(clients.windows(2).all(|w| w[0].id() < w[1].id()));
+        InProcTransport { clients, cfg, pending: Vec::new(), stats: TransportStats::default() }
+    }
+}
+
+impl Transport for InProcTransport {
+    fn broadcast(
+        &mut self,
+        round: usize,
+        payload: &[u8],
+        cohort: &[usize],
+        fates: &[u8],
+    ) -> anyhow::Result<()> {
+        self.pending.clear();
+        for c in self.clients.iter_mut() {
+            let id = c.id();
+            let participate = cohort.binary_search(&id).is_ok();
+            let fate = fates.get(id).copied().unwrap_or(crate::transport::framing::FATE_NONE);
+            if let Some(up) = c.handle_round(round, payload, participate, fate)? {
+                if let Some(plan) = self.cfg.fault {
+                    if plan.hits(id, round) {
+                        match plan.kind {
+                            // frame sent twice; collect() dedupes the copy
+                            FaultKind::Duplicate => self.pending.push(up.clone()),
+                            // first attempt dies mid-frame / mid-connection;
+                            // the retry below delivers the same frame once
+                            FaultKind::Truncate | FaultKind::Disconnect => {
+                                self.stats.retries += 1;
+                            }
+                            // Drop is handled inside the client (it never
+                            // returns an upload); Delay is scheduler math
+                            FaultKind::Drop | FaultKind::Delay | FaultKind::Reorder => {}
+                        }
+                    }
+                }
+                self.pending.push(up);
+            }
+        }
+        if matches!(self.cfg.fault, Some(p) if p.kind == FaultKind::Reorder) {
+            // scramble arrival order; the sort in collect() must normalise it
+            self.pending.reverse();
+        }
+        Ok(())
+    }
+
+    fn collect(
+        &mut self,
+        _round: usize,
+        _expected: &[usize],
+        _wall_deadline_ms: u64,
+    ) -> anyhow::Result<RoundArrivals> {
+        let mut out = RoundArrivals::default();
+        let mut seen: Vec<usize> = Vec::new();
+        for up in self.pending.drain(..) {
+            if seen.contains(&up.client) {
+                self.stats.dup_frames += 1;
+                continue;
+            }
+            seen.push(up.client);
+            out.uploads.push(up);
+        }
+        out.uploads.sort_by_key(|u| u.client);
+        Ok(out)
+    }
+
+    fn shutdown(&mut self, fates: &[u8]) -> anyhow::Result<()> {
+        for c in self.clients.iter_mut() {
+            let fate = fates.get(c.id()).copied().unwrap_or(crate::transport::framing::FATE_NONE);
+            c.handle_done(fate)?;
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+}

@@ -1,0 +1,200 @@
+//! Transport abstraction for service mode: the round loop speaks this
+//! trait exclusively and never knows whether its clients live in the same
+//! process or behind loopback sockets.
+//!
+//! The contract is deliberately narrow — broadcast the round's model
+//! payload down, collect the round's uploads back up, close at a
+//! wall-clock deadline — because everything *semantic* (fates, staleness,
+//! simulated time) stays in the coordinator, computed from arrival byte
+//! counts by the same [`crate::sim::scheduler::Scheduler`] formulas the
+//! in-process simulator uses. That is what makes the two backends
+//! digest-identical: the transport moves bytes, the coordinator does math,
+//! and the math never sees which transport ran.
+//!
+//! Chaos is layered in through [`fault::FaultPlan`], a stateless
+//! per-(client, round) decision shared by both backends (and by the
+//! coordinator, which must know e.g. which clients a `drop` plan silenced
+//! so it can mark them offline instead of waiting out the wall deadline).
+
+pub mod fault;
+pub mod framing;
+pub mod inproc;
+pub mod socket;
+
+use crate::transport::fault::FaultPlan;
+
+/// One client upload as the transport delivers it: still encoded, plus the
+/// sideband scalars the coordinator needs for bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Upload {
+    pub client: usize,
+    /// round the client produced it in (may trail the current round — see
+    /// [`RoundArrivals::late`])
+    pub round: usize,
+    /// the client's local training loss for the round
+    pub loss: f64,
+    /// pre-codec payload size, for codec-ratio accounting
+    pub precodec_bytes: usize,
+    /// the encoded gradient, exactly as the wire carried it
+    pub bytes: Vec<u8>,
+}
+
+/// What one `collect` call produced.
+#[derive(Debug, Default)]
+pub struct RoundArrivals {
+    /// current-round uploads, deduplicated, sorted by client id
+    pub uploads: Vec<Upload>,
+    /// genuinely-late frames from earlier rounds (socket stragglers in wall
+    /// time); the coordinator routes these into the stale queue when the
+    /// staleness policy carries
+    pub late: Vec<Upload>,
+}
+
+/// Monotonic counters a backend accumulates over its lifetime. The
+/// coordinator records per-round deltas; none of these enter the
+/// trajectory digest (wall-clock retries are not simulation state).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// client reconnect/resend attempts observed (truncate/disconnect faults)
+    pub retries: usize,
+    /// expected uploads still missing when a round hit its wall deadline
+    pub timeouts: usize,
+    /// frames that arrived after their round had already closed
+    pub stale_frames: usize,
+    /// duplicate (client, round) frames rejected
+    pub dup_frames: usize,
+}
+
+impl TransportStats {
+    /// Counter-wise `self - earlier` (saturating, for per-round deltas).
+    pub fn delta(&self, earlier: &TransportStats) -> TransportStats {
+        TransportStats {
+            retries: self.retries.saturating_sub(earlier.retries),
+            timeouts: self.timeouts.saturating_sub(earlier.timeouts),
+            stale_frames: self.stale_frames.saturating_sub(earlier.stale_frames),
+            dup_frames: self.dup_frames.saturating_sub(earlier.dup_frames),
+        }
+    }
+}
+
+/// Server-side view of a client fleet.
+pub trait Transport {
+    /// Open `round`: deliver last round's broadcast payload to *every*
+    /// client (cohort members get `participate = true`) along with each
+    /// client's previous-upload fate byte.
+    fn broadcast(
+        &mut self,
+        round: usize,
+        payload: &[u8],
+        cohort: &[usize],
+        fates: &[u8],
+    ) -> anyhow::Result<()>;
+
+    /// Block until every expected upload arrived or `wall_deadline_ms`
+    /// elapsed, then close the round with whoever made it. `expected` is
+    /// the cohort minus clients the fault plan silenced (the caller knows
+    /// the plan too and marks those offline itself).
+    fn collect(
+        &mut self,
+        round: usize,
+        expected: &[usize],
+        wall_deadline_ms: u64,
+    ) -> anyhow::Result<RoundArrivals>;
+
+    /// End the run: tell every client its final fate and release resources.
+    fn shutdown(&mut self, fates: &[u8]) -> anyhow::Result<()>;
+
+    fn stats(&self) -> TransportStats;
+}
+
+/// Client-side round handler, implemented by
+/// [`crate::coordinator::service::ServiceClient`]. The in-process backend
+/// calls it directly; the socket client loop calls it between frames.
+pub trait ClientHandler: Send {
+    fn id(&self) -> usize;
+    /// Handle one `ROUND` frame: apply the previous fate, mirror the model
+    /// update, train if selected. Returns the upload to send, or `None`
+    /// when not participating (or when a `drop` plan silenced this round).
+    fn handle_round(
+        &mut self,
+        round: usize,
+        payload: &[u8],
+        participate: bool,
+        fate: u8,
+    ) -> anyhow::Result<Option<Upload>>;
+    /// Handle the final `DONE` frame (applies the last round's fate).
+    fn handle_done(&mut self, fate: u8) -> anyhow::Result<()>;
+}
+
+/// `[transport]` config block: socket addresses, timeouts, backoff and the
+/// optional chaos plan. Defaults are loopback-friendly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransportConfig {
+    /// listen/connect address: `host:port` TCP, or `unix:/path` for a
+    /// Unix-domain socket
+    pub addr: String,
+    /// per-connection read timeout (server reader threads poll at this)
+    pub read_timeout_ms: u64,
+    /// per-connection write timeout
+    pub write_timeout_ms: u64,
+    /// wall-clock deadline for closing a round with whoever arrived
+    pub round_deadline_ms: u64,
+    /// client-side reconnect/resend attempts per round before giving up
+    pub max_retries: u32,
+    /// exponential backoff base between reconnect attempts...
+    pub backoff_base_ms: u64,
+    /// ...bounded by this cap
+    pub backoff_max_ms: u64,
+    /// chaos plan applied by both backends (`kind:rate[@seed]`)
+    pub fault: Option<FaultPlan>,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            addr: "127.0.0.1:7070".to_string(),
+            read_timeout_ms: 2_000,
+            write_timeout_ms: 2_000,
+            round_deadline_ms: 30_000,
+            max_retries: 6,
+            backoff_base_ms: 25,
+            backoff_max_ms: 1_000,
+            fault: None,
+        }
+    }
+}
+
+impl TransportConfig {
+    /// Backoff delay before reconnect attempt `attempt` (0-based):
+    /// `base * 2^attempt`, capped.
+    pub fn backoff_ms(&self, attempt: u32) -> u64 {
+        let shifted = self.backoff_base_ms.saturating_mul(1u64 << attempt.min(20));
+        shifted.min(self.backoff_max_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_bounded_exponential() {
+        let cfg = TransportConfig { backoff_base_ms: 25, backoff_max_ms: 200, ..Default::default() };
+        assert_eq!(cfg.backoff_ms(0), 25);
+        assert_eq!(cfg.backoff_ms(1), 50);
+        assert_eq!(cfg.backoff_ms(2), 100);
+        assert_eq!(cfg.backoff_ms(3), 200);
+        assert_eq!(cfg.backoff_ms(10), 200, "cap must hold");
+        assert_eq!(cfg.backoff_ms(63), 200, "shift must not overflow");
+    }
+
+    #[test]
+    fn stats_delta_is_counterwise() {
+        let a = TransportStats { retries: 5, timeouts: 1, stale_frames: 2, dup_frames: 3 };
+        let b = TransportStats { retries: 2, timeouts: 1, stale_frames: 0, dup_frames: 1 };
+        assert_eq!(
+            a.delta(&b),
+            TransportStats { retries: 3, timeouts: 0, stale_frames: 2, dup_frames: 2 }
+        );
+    }
+}

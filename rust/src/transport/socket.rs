@@ -1,0 +1,635 @@
+//! Socket transport backend: `fedgmf serve` / `fedgmf client` over TCP or
+//! Unix-domain sockets.
+//!
+//! Layout: one acceptor thread turns connections into per-connection
+//! reader threads after the `HELLO`/`WELCOME` handshake; every reader
+//! funnels frames into a single mpsc channel, so the server's round loop
+//! stays single-threaded and processes events in arrival order. Writers
+//! are cloned stream handles owned by the round loop.
+//!
+//! Robustness contract:
+//! - per-connection read/write timeouts (`[transport]` config), with a
+//!   reassembly buffer so a timeout mid-frame never desynchronises the
+//!   stream;
+//! - the client reconnects with bounded exponential backoff and resends
+//!   its upload — at-least-once delivery, which the server turns into
+//!   exactly-once via (client, round) dedup;
+//! - a round closes at its wall deadline with whoever arrived; expected
+//!   uploads still missing count as `timeouts` and the coordinator marks
+//!   them offline (graceful degradation);
+//! - frames for already-closed rounds count as `stale_frames` and are
+//!   handed back as [`RoundArrivals::late`] for the stale queue.
+//!
+//! Chaos: the client applies its fault plan on the send path (drop is
+//! handled in the handler; delay sleeps; duplicate double-sends; truncate
+//! cuts the frame mid-body and drops the connection; disconnect drops it
+//! just before sending). Reorder needs no socket-side action — arrival
+//! order across independent connections is already unordered, and the
+//! coordinator sorts by client id.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context};
+
+use crate::transport::fault::FaultKind;
+use crate::transport::framing::{self, FrameBuffer, Msg, FATE_NONE};
+use crate::transport::{
+    ClientHandler, RoundArrivals, Transport, TransportConfig, TransportStats, Upload,
+};
+
+/// Real milliseconds a `delay`-faulted client sleeps before sending. Small
+/// on purpose: wall-clock delay exercises the server's wait loop, while
+/// the *simulated* delay that can flip fates is [`super::fault::DELAY_S`]
+/// applied in the coordinator.
+const DELAY_SLEEP_MS: u64 = 20;
+
+/// Acceptor poll interval while waiting for connections.
+const ACCEPT_POLL_MS: u64 = 5;
+
+// ---------------------------------------------------------------- streams
+
+/// A connected stream of either address family.
+pub enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    /// Connect to `addr` (`host:port`, or `unix:/path`).
+    pub fn connect(addr: &str) -> io::Result<Conn> {
+        match addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            Some(path) => Ok(Conn::Unix(UnixStream::connect(path)?)),
+            #[cfg(not(unix))]
+            Some(_) => Err(io::Error::new(io::ErrorKind::Unsupported, "unix sockets unavailable")),
+            None => Ok(Conn::Tcp(TcpStream::connect(addr)?)),
+        }
+    }
+
+    fn try_clone(&self) -> io::Result<Conn> {
+        match self {
+            Conn::Tcp(s) => Ok(Conn::Tcp(s.try_clone()?)),
+            #[cfg(unix)]
+            Conn::Unix(s) => Ok(Conn::Unix(s.try_clone()?)),
+        }
+    }
+
+    fn set_timeouts(&self, read_ms: u64, write_ms: u64) -> io::Result<()> {
+        let r = Some(Duration::from_millis(read_ms.max(1)));
+        let w = Some(Duration::from_millis(write_ms.max(1)));
+        match self {
+            Conn::Tcp(s) => {
+                s.set_nonblocking(false)?;
+                s.set_read_timeout(r)?;
+                s.set_write_timeout(w)
+            }
+            #[cfg(unix)]
+            Conn::Unix(s) => {
+                s.set_nonblocking(false)?;
+                s.set_read_timeout(r)?;
+                s.set_write_timeout(w)
+            }
+        }
+    }
+
+    fn shutdown(&self) {
+        match self {
+            Conn::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            #[cfg(unix)]
+            Conn::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener, String),
+}
+
+impl Listener {
+    fn bind(addr: &str) -> io::Result<Listener> {
+        match addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            Some(path) => {
+                let _ = std::fs::remove_file(path);
+                Ok(Listener::Unix(UnixListener::bind(path)?, path.to_string()))
+            }
+            #[cfg(not(unix))]
+            Some(_) => Err(io::Error::new(io::ErrorKind::Unsupported, "unix sockets unavailable")),
+            None => Ok(Listener::Tcp(TcpListener::bind(addr)?)),
+        }
+    }
+
+    fn set_nonblocking(&self) -> io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(true),
+            #[cfg(unix)]
+            Listener::Unix(l, _) => l.set_nonblocking(true),
+        }
+    }
+
+    fn accept(&self) -> io::Result<Conn> {
+        match self {
+            Listener::Tcp(l) => Ok(Conn::Tcp(l.accept()?.0)),
+            #[cfg(unix)]
+            Listener::Unix(l, _) => Ok(Conn::Unix(l.accept()?.0)),
+        }
+    }
+
+    /// The connectable address (resolves `:0` TCP ports).
+    fn local_addr(&self) -> String {
+        match self {
+            Listener::Tcp(l) => l.local_addr().map(|a| a.to_string()).unwrap_or_default(),
+            #[cfg(unix)]
+            Listener::Unix(_, path) => format!("unix:{path}"),
+        }
+    }
+}
+
+// ----------------------------------------------------------------- server
+
+enum Event {
+    Joined { client: usize, writer: Conn },
+    Up(Upload),
+    Gone,
+}
+
+pub struct SocketTransport {
+    n_clients: usize,
+    cfg: TransportConfig,
+    events: Receiver<Event>,
+    writers: HashMap<usize, Conn>,
+    /// clients that have joined at least once (a re-join is a retry)
+    ever_joined: HashSet<usize>,
+    /// (client, round) pairs already delivered to the coordinator
+    delivered: HashSet<(usize, usize)>,
+    /// current round's replay state for mid-round re-joins
+    cur: Option<(usize, Vec<u8>, Vec<usize>, Vec<u8>)>,
+    /// current-round uploads drained from the channel but not yet collected
+    pending: Vec<Upload>,
+    late: Vec<Upload>,
+    stats: TransportStats,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    local_addr: String,
+    scratch: Vec<u8>,
+}
+
+impl SocketTransport {
+    /// Bind and start accepting. `dim`/`rounds` are echoed to clients in
+    /// `WELCOME` so a misconfigured client fails fast instead of training
+    /// on the wrong shapes.
+    pub fn bind(
+        cfg: TransportConfig,
+        n_clients: usize,
+        dim: usize,
+        rounds: usize,
+    ) -> anyhow::Result<SocketTransport> {
+        let listener = Listener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+        listener.set_nonblocking().context("listener nonblocking")?;
+        let local_addr = listener.local_addr();
+        let (tx, rx) = mpsc::channel();
+        let stop = Arc::new(AtomicBool::new(false));
+        let acceptor = {
+            let stop = Arc::clone(&stop);
+            let cfg = cfg.clone();
+            std::thread::spawn(move || accept_loop(listener, cfg, dim, rounds, tx, stop))
+        };
+        Ok(SocketTransport {
+            n_clients,
+            cfg,
+            events: rx,
+            writers: HashMap::new(),
+            ever_joined: HashSet::new(),
+            delivered: HashSet::new(),
+            cur: None,
+            pending: Vec::new(),
+            late: Vec::new(),
+            stats: TransportStats::default(),
+            stop,
+            acceptor: Some(acceptor),
+            local_addr,
+            scratch: Vec::new(),
+        })
+    }
+
+    /// The connectable address (use after binding `127.0.0.1:0`).
+    pub fn local_addr(&self) -> &str {
+        &self.local_addr
+    }
+
+    fn round_msg_for(&self, client: usize) -> Option<Msg> {
+        let (round, payload, cohort, fates) = self.cur.as_ref()?;
+        Some(Msg::Round {
+            round: *round as u32,
+            participate: cohort.binary_search(&client).is_ok(),
+            fate: fates.get(client).copied().unwrap_or(FATE_NONE),
+            payload: payload.clone(),
+        })
+    }
+
+    fn send_to(&mut self, client: usize, msg: &Msg) -> bool {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let ok = match self.writers.get_mut(&client) {
+            Some(w) => framing::write_msg(w, msg, &mut scratch).is_ok(),
+            None => false,
+        };
+        self.scratch = scratch;
+        ok
+    }
+
+    fn apply_event(&mut self, ev: Event) {
+        match ev {
+            Event::Joined { client, writer } => {
+                if !self.ever_joined.insert(client) {
+                    // reconnect after a fault or network hiccup
+                    self.stats.retries += 1;
+                }
+                self.writers.insert(client, writer);
+                // replay the current round so a client that missed its
+                // ROUND frame mid-broadcast catches up (clients ignore
+                // rounds they already handled)
+                if let Some(msg) = self.round_msg_for(client) {
+                    self.send_to(client, &msg);
+                }
+            }
+            Event::Up(up) => {
+                let cur_round = self.cur.as_ref().map(|c| c.0).unwrap_or(0);
+                if self.delivered.contains(&(up.client, up.round)) {
+                    self.stats.dup_frames += 1;
+                } else if up.round < cur_round {
+                    self.stats.stale_frames += 1;
+                    self.delivered.insert((up.client, up.round));
+                    self.late.push(up);
+                } else {
+                    self.delivered.insert((up.client, up.round));
+                    self.pending.push(up);
+                }
+            }
+            Event::Gone => {}
+        }
+    }
+
+    fn drain_events(&mut self) {
+        while let Ok(ev) = self.events.try_recv() {
+            self.apply_event(ev);
+        }
+    }
+
+    /// Wait until `pred(self)` holds or the deadline passes, applying
+    /// events as they arrive. Returns whether the predicate held.
+    fn wait_until(&mut self, deadline: Instant, pred: impl Fn(&SocketTransport) -> bool) -> bool {
+        loop {
+            self.drain_events();
+            if pred(self) {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let step = (deadline - now).min(Duration::from_millis(20));
+            match self.events.recv_timeout(step) {
+                Ok(ev) => self.apply_event(ev),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => return pred(self),
+            }
+        }
+    }
+}
+
+fn accept_loop(
+    listener: Listener,
+    cfg: TransportConfig,
+    dim: usize,
+    rounds: usize,
+    tx: Sender<Event>,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        let mut conn = match listener.accept() {
+            Ok(c) => c,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(ACCEPT_POLL_MS));
+                continue;
+            }
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(ACCEPT_POLL_MS));
+                continue;
+            }
+        };
+        if conn.set_timeouts(cfg.read_timeout_ms, cfg.write_timeout_ms).is_err() {
+            continue;
+        }
+        // handshake: HELLO up, WELCOME down. The buffer may already hold
+        // bytes past HELLO (an eager resend) — it travels to the reader.
+        let mut fb = FrameBuffer::new();
+        let client = match framing::read_msg_buffered(&mut conn, &mut fb) {
+            Ok(Msg::Hello { client }) => client as usize,
+            _ => continue,
+        };
+        let welcome = Msg::Welcome { dim: dim as u32, rounds: rounds as u32 };
+        if framing::write_msg(&mut conn, &welcome, &mut Vec::new()).is_err() {
+            continue;
+        }
+        let writer = match conn.try_clone() {
+            Ok(w) => w,
+            Err(_) => continue,
+        };
+        if tx.send(Event::Joined { client, writer }).is_err() {
+            return;
+        }
+        let tx = tx.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || reader_loop(conn, fb, tx, stop));
+    }
+}
+
+fn reader_loop(mut conn: Conn, mut fb: FrameBuffer, tx: Sender<Event>, stop: Arc<AtomicBool>) {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match framing::read_msg_buffered(&mut conn, &mut fb) {
+            Ok(Msg::Upload { round, client, loss, precodec, payload }) => {
+                let up = Upload {
+                    client: client as usize,
+                    round: round as usize,
+                    loss,
+                    precodec_bytes: precodec as usize,
+                    bytes: payload,
+                };
+                if tx.send(Event::Up(up)).is_err() {
+                    return;
+                }
+            }
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {}
+            Err(_) => {
+                // disconnect or mid-frame truncation: the partial frame is
+                // discarded whole; the client will reconnect and resend
+                let _ = tx.send(Event::Gone);
+                return;
+            }
+        }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn broadcast(
+        &mut self,
+        round: usize,
+        payload: &[u8],
+        cohort: &[usize],
+        fates: &[u8],
+    ) -> anyhow::Result<()> {
+        self.cur = Some((round, payload.to_vec(), cohort.to_vec(), fates.to_vec()));
+        // join barrier: every client must have connected at least once
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.round_deadline_ms);
+        let n = self.n_clients;
+        if !self.wait_until(deadline, |t| t.ever_joined.len() >= n) {
+            bail!(
+                "only {}/{} clients joined within {} ms",
+                self.ever_joined.len(),
+                self.n_clients,
+                self.cfg.round_deadline_ms
+            );
+        }
+        for client in 0..self.n_clients {
+            let msg = self.round_msg_for(client).expect("cur round set above");
+            if !self.send_to(client, &msg) {
+                // writer is stale (client mid-reconnect): the Joined replay
+                // in apply_event delivers this round when it returns
+                self.writers.remove(&client);
+            }
+        }
+        Ok(())
+    }
+
+    fn collect(
+        &mut self,
+        round: usize,
+        expected: &[usize],
+        wall_deadline_ms: u64,
+    ) -> anyhow::Result<RoundArrivals> {
+        let deadline = Instant::now() + Duration::from_millis(wall_deadline_ms);
+        let want: HashSet<usize> = expected.iter().copied().collect();
+        let have = |t: &SocketTransport| {
+            let got: HashSet<usize> =
+                t.pending.iter().filter(|u| u.round == round).map(|u| u.client).collect();
+            want.iter().all(|c| got.contains(c))
+        };
+        if !self.wait_until(deadline, have) {
+            let got: HashSet<usize> =
+                self.pending.iter().filter(|u| u.round == round).map(|u| u.client).collect();
+            self.stats.timeouts += want.iter().filter(|c| !got.contains(c)).count();
+        }
+        let mut out = RoundArrivals { uploads: Vec::new(), late: std::mem::take(&mut self.late) };
+        for up in self.pending.drain(..) {
+            debug_assert_eq!(up.round, round, "pending must only hold the open round");
+            out.uploads.push(up);
+        }
+        out.uploads.sort_by_key(|u| u.client);
+        Ok(out)
+    }
+
+    fn shutdown(&mut self, fates: &[u8]) -> anyhow::Result<()> {
+        self.drain_events();
+        let ids: Vec<usize> = self.writers.keys().copied().collect();
+        for client in ids {
+            let fate = fates.get(client).copied().unwrap_or(FATE_NONE);
+            self.send_to(client, &Msg::Done { fate });
+        }
+        self.stop.store(true, Ordering::Relaxed);
+        for w in self.writers.values() {
+            w.shutdown();
+        }
+        self.writers.clear();
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ----------------------------------------------------------------- client
+
+struct ClientConn {
+    conn: Conn,
+    fb: FrameBuffer,
+}
+
+fn connect_handshake(cfg: &TransportConfig, id: usize) -> anyhow::Result<ClientConn> {
+    let mut attempt = 0u32;
+    loop {
+        let tried = Conn::connect(&cfg.addr).and_then(|mut conn| {
+            conn.set_timeouts(cfg.read_timeout_ms, cfg.write_timeout_ms)?;
+            framing::write_msg(&mut conn, &Msg::Hello { client: id as u32 }, &mut Vec::new())?;
+            let mut fb = FrameBuffer::new();
+            match framing::read_msg_buffered(&mut conn, &mut fb)? {
+                Msg::Welcome { .. } => Ok(ClientConn { conn, fb }),
+                m => Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("expected WELCOME, got kind {}", m.kind()),
+                )),
+            }
+        });
+        match tried {
+            Ok(cc) => return Ok(cc),
+            Err(e) => {
+                if attempt >= cfg.max_retries {
+                    return Err(anyhow::Error::from(e)
+                        .context(format!("client {id}: connect to {} failed", cfg.addr)));
+                }
+                std::thread::sleep(Duration::from_millis(cfg.backoff_ms(attempt)));
+                attempt += 1;
+            }
+        }
+    }
+}
+
+/// Send one upload frame, applying the fault plan's send-path mischief.
+/// Reconnects (with backoff) and resends after a truncate/disconnect
+/// fault, so delivery is at-least-once.
+fn send_upload(cc: &mut ClientConn, cfg: &TransportConfig, up: &Upload) -> anyhow::Result<()> {
+    let msg = Msg::Upload {
+        round: up.round as u32,
+        client: up.client as u32,
+        loss: up.loss,
+        precodec: up.precodec_bytes as u64,
+        payload: up.bytes.clone(),
+    };
+    let mut frame = Vec::new();
+    msg.encode(&mut frame);
+    let fault = cfg.fault.filter(|p| p.hits(up.client, up.round)).map(|p| p.kind);
+    match fault {
+        Some(FaultKind::Delay) => {
+            std::thread::sleep(Duration::from_millis(DELAY_SLEEP_MS));
+            cc.conn.write_all(&frame)?;
+        }
+        Some(FaultKind::Duplicate) => {
+            cc.conn.write_all(&frame)?;
+            cc.conn.write_all(&frame)?;
+        }
+        Some(FaultKind::Truncate) => {
+            // first attempt dies mid-frame; the server must discard the
+            // partial frame whole
+            let cut = frame.len() / 2;
+            let _ = cc.conn.write_all(&frame[..cut]);
+            let _ = cc.conn.flush();
+            cc.conn.shutdown();
+            *cc = connect_handshake(cfg, up.client)?;
+            cc.conn.write_all(&frame)?;
+        }
+        Some(FaultKind::Disconnect) => {
+            cc.conn.shutdown();
+            *cc = connect_handshake(cfg, up.client)?;
+            cc.conn.write_all(&frame)?;
+        }
+        // Drop never reaches here (the handler returns no upload);
+        // Reorder is inherent to independent connections
+        _ => cc.conn.write_all(&frame)?,
+    }
+    cc.conn.flush()?;
+    Ok(())
+}
+
+/// The `fedgmf client` main loop: handshake, then handle `ROUND` frames
+/// until `DONE`. Survives server-side silence up to
+/// `max_retries * read_timeout_ms` and reconnects on connection loss.
+pub fn run_client(cfg: &TransportConfig, handler: &mut dyn ClientHandler) -> anyhow::Result<()> {
+    let id = handler.id();
+    let mut cc = connect_handshake(cfg, id)?;
+    let mut next_round = 0usize;
+    let mut quiet = 0u32;
+    loop {
+        match framing::read_msg_buffered(&mut cc.conn, &mut cc.fb) {
+            Ok(Msg::Round { round, participate, fate, payload }) => {
+                quiet = 0;
+                let r = round as usize;
+                if r < next_round {
+                    continue; // replay after a reconnect; already handled
+                }
+                next_round = r + 1;
+                if let Some(up) = handler.handle_round(r, &payload, participate, fate)? {
+                    send_upload(&mut cc, cfg, &up)?;
+                }
+            }
+            Ok(Msg::Done { fate }) => {
+                handler.handle_done(fate)?;
+                return Ok(());
+            }
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                quiet += 1;
+                if quiet > cfg.max_retries {
+                    bail!("client {id}: server went quiet for {quiet} reads");
+                }
+            }
+            Err(_) => {
+                // connection lost between rounds: reconnect and wait for
+                // the server's round replay
+                quiet += 1;
+                if quiet > cfg.max_retries {
+                    bail!("client {id}: connection lost and retries exhausted");
+                }
+                cc = connect_handshake(cfg, id)?;
+            }
+        }
+    }
+}

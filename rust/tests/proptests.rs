@@ -9,10 +9,12 @@ use fedgmf::compress::{
     primitives, CompressConfig, Compressor, CompressorKind, SparsityWarmup, TauSchedule,
 };
 use fedgmf::data::partition::{emd_of_partition, partition_by_emd};
+use fedgmf::sparse::codec;
 use fedgmf::sparse::merge::Aggregator;
 use fedgmf::sparse::topk;
 use fedgmf::sparse::vector::SparseVec;
 use fedgmf::sparse::wire;
+use fedgmf::transport::framing;
 use fedgmf::util::json::Json;
 use fedgmf::util::rng::Rng;
 
@@ -530,6 +532,319 @@ fn prop_q8_roundtrip_error_bounded_and_zeros_exact() {
             let violations = check_q8_roundtrip(&sv, &back);
             assert!(violations.is_empty(), "seed {seed} {p:?}: {violations:?}");
         }
+    }
+}
+
+// ------------------------------------------- adversarial v2 wire buffers
+
+/// Hand-rolled v2 sparse-container header (magic | kind 2 | container |
+/// index | value | dim | nnz) for adversarial buffer construction.
+fn v2_sparse_header(dim: u32, nnz: u32, index: u8, value: u8) -> Vec<u8> {
+    let mut b = Vec::with_capacity(16);
+    b.extend_from_slice(&wire::MAGIC.to_le_bytes());
+    b.push(codec::KIND_V2);
+    b.push(codec::CONTAINER_SPARSE);
+    b.push(index);
+    b.push(value);
+    b.extend_from_slice(&dim.to_le_bytes());
+    b.extend_from_slice(&nnz.to_le_bytes());
+    b
+}
+
+#[test]
+fn prop_wire_v2_varint_gap_overflow_is_error_not_panic() {
+    let mut out = SparseVec::empty(0);
+
+    // gaps that accumulate past dim → IndexOutOfBounds, never a bad vector
+    let mut past_dim = v2_sparse_header(100, 2, 1, 0);
+    past_dim.push(70); // first index 70
+    past_dim.extend_from_slice(&[0xC8, 0x01]); // gap 200 → index 270 ≥ dim
+    past_dim.extend_from_slice(&[0u8; 8]); // two f32 value slots
+    assert!(matches!(
+        wire::decode_into(&past_dim, &mut out),
+        Err(wire::WireError::IndexOutOfBounds { .. })
+    ));
+
+    // a varint whose 5th byte carries bits above u32 → BadVarint
+    let mut wide = v2_sparse_header(100, 2, 1, 0);
+    wide.extend_from_slice(&[0xFF, 0xFF, 0xFF, 0xFF, 0x1F]);
+    wide.extend_from_slice(&[0u8; 16]); // enough bytes to pass the pre-check
+    assert!(matches!(wire::decode_into(&wide, &mut out), Err(wire::WireError::BadVarint(_))));
+
+    // unbounded continuation bytes → BadVarint (shift guard), not a hang
+    let mut endless = v2_sparse_header(100, 2, 1, 0);
+    endless.extend_from_slice(&[0x80; 10]);
+    endless.extend_from_slice(&[0u8; 16]);
+    assert!(matches!(wire::decode_into(&endless, &mut out), Err(wire::WireError::BadVarint(_))));
+
+    // a zero gap after the first index → Unsorted (duplicate index)
+    let mut dup = v2_sparse_header(100, 2, 1, 0);
+    dup.push(5);
+    dup.push(0);
+    dup.extend_from_slice(&[0u8; 8]);
+    assert!(matches!(wire::decode_into(&dup, &mut out), Err(wire::WireError::Unsorted)));
+
+    // randomized: corrupt one gap byte of a valid varint buffer — decode
+    // must return Ok or Err, never panic, and the buffer stays reusable
+    let mut buf = Vec::new();
+    for seed in seeds().take(25) {
+        let mut rng = Rng::new(seed);
+        let sv = rand_sparse(&mut rng, 300);
+        let p = codec::CodecParams { index: codec::IndexCoding::Varint, value: codec::ValueCoding::F32 };
+        wire::encode_with(&sv, &mut buf, p);
+        if buf.len() <= 17 {
+            continue; // header-only (empty vector) — nothing to corrupt
+        }
+        let at = 16 + rng.below(buf.len() - 16);
+        let mut bad = buf.clone();
+        bad[at] = bad[at].wrapping_add(1 + rng.below(255) as u8);
+        let _ = wire::decode_into(&bad, &mut out);
+        wire::decode_into(&buf, &mut out).unwrap();
+        assert_eq!(out, sv, "seed {seed}: pristine buffer must still decode");
+    }
+}
+
+#[test]
+fn prop_wire_v2_nnz_lies_rejected_without_overallocation() {
+    // a header claiming u32::MAX q8 entries against a tiny buffer must be
+    // rejected by the availability pre-check BEFORE any reserve — the
+    // output vector's capacity proves no allocation happened
+    for (index, value) in [(0u8, 2u8), (1, 2), (0, 0), (1, 1)] {
+        let mut lie = v2_sparse_header(1000, u32::MAX, index, value);
+        lie.extend_from_slice(&[0u8; 32]);
+        let mut fresh = SparseVec::empty(0);
+        assert!(matches!(
+            wire::decode_into(&lie, &mut fresh),
+            Err(wire::WireError::Truncated(_))
+        ));
+        assert_eq!(fresh.indices.capacity(), 0, "oversized nnz must not allocate");
+        assert_eq!(fresh.values.capacity(), 0, "oversized nnz must not allocate");
+    }
+
+    // q8 block-length lies: claim more entries than the value stream holds
+    // (the nnz field implies scale-prefixed block lengths) → Truncated
+    let mut out = SparseVec::empty(0);
+    let mut buf = Vec::new();
+    for seed in seeds().take(25) {
+        let mut rng = Rng::new(seed);
+        let dim = 600 + rng.below(2000);
+        let nnz = 1 + rng.below(dim / 20 + 1); // sparse container territory
+        let mut ids: Vec<u32> = (0..dim as u32).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(nnz);
+        ids.sort_unstable();
+        let values: Vec<f32> = ids.iter().map(|_| rng.normal()).collect();
+        let sv = SparseVec::from_sorted(dim, ids, values);
+        let p = codec::CodecParams { index: codec::IndexCoding::Raw, value: codec::ValueCoding::Q8 };
+        wire::encode_with(&sv, &mut buf, p);
+        assert_eq!(buf[5], codec::CONTAINER_SPARSE, "seed {seed}");
+        let mut bloated = buf.clone();
+        let claim = (nnz as u32).saturating_add(1 + rng.below(1000) as u32);
+        bloated[12..16].copy_from_slice(&claim.to_le_bytes());
+        assert!(
+            wire::decode_into(&bloated, &mut out).is_err(),
+            "seed {seed}: inflated nnz {claim} over {nnz} real entries must fail"
+        );
+        // and every strict prefix of the honest buffer is rejected too
+        for cut in (0..buf.len()).step_by(1 + buf.len() / 40) {
+            assert!(
+                wire::decode_into(&buf[..cut], &mut out).is_err(),
+                "seed {seed}: q8 prefix of {cut} bytes must be rejected"
+            );
+        }
+        wire::decode_into(&buf, &mut out).unwrap();
+        assert_eq!(out.indices, sv.indices, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_wire_v2_bitmap_dim_mismatch_rejected() {
+    let mut out = SparseVec::empty(0);
+
+    // hand-rolled: dim 10 needs 2 bitmap bytes; a presence bit at
+    // position ≥ dim contradicts the header → BadBitmap
+    let mut bad = Vec::new();
+    bad.extend_from_slice(&wire::MAGIC.to_le_bytes());
+    bad.push(codec::KIND_V2);
+    bad.push(codec::CONTAINER_BITMAP);
+    bad.push(0); // index coding (unused by bitmap)
+    bad.push(0); // f32 values
+    bad.extend_from_slice(&10u32.to_le_bytes());
+    bad.push(0b0000_1000); // bit 3 — legal
+    bad.push(0b0001_0000); // bit 12 — beyond dim 10
+    assert!(matches!(wire::decode_into(&bad, &mut out), Err(wire::WireError::BadBitmap)));
+
+    // randomized: take honestly-encoded bitmap buffers at non-multiple-of-8
+    // dims and set the top bit of the last bitmap byte
+    let mut buf = Vec::new();
+    for seed in seeds().take(25) {
+        let mut rng = Rng::new(seed);
+        let dim = 8 * (64 + rng.below(64)) + 1 + rng.below(7); // dim % 8 != 0
+        let nnz = dim * 3 / 10; // mid density → bitmap container
+        let mut ids: Vec<u32> = (0..dim as u32).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(nnz);
+        ids.sort_unstable();
+        let values: Vec<f32> = ids.iter().map(|_| rng.normal()).collect();
+        let sv = SparseVec::from_sorted(dim, ids, values);
+        let p = codec::CodecParams { index: codec::IndexCoding::Varint, value: codec::ValueCoding::F16 };
+        wire::encode_with(&sv, &mut buf, p);
+        if buf[5] != codec::CONTAINER_BITMAP {
+            continue; // density heuristics picked another container
+        }
+        let last_bm = codec::V2_HEADER_BYTES + dim.div_ceil(8) - 1;
+        let mut lifted = buf.clone();
+        lifted[last_bm] |= 0x80; // bit 7 of the last byte is ≥ dim here
+        assert!(
+            matches!(wire::decode_into(&lifted, &mut out), Err(wire::WireError::BadBitmap)),
+            "seed {seed} dim {dim}"
+        );
+        // truncating the value stream behind an honest bitmap → Truncated
+        let cut = buf.len() - 1;
+        assert!(
+            matches!(wire::decode_into(&buf[..cut], &mut out), Err(wire::WireError::Truncated(_))),
+            "seed {seed}"
+        );
+        wire::decode_into(&buf, &mut out).unwrap();
+        assert_eq!(out.indices, sv.indices, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_wire_v2_mutation_fuzz_never_panics() {
+    // arbitrary single-byte corruption anywhere in a valid v2 buffer must
+    // produce Ok or Err — never a panic — and leave the reused output
+    // vector decodable next call
+    let mut out = SparseVec::empty(0);
+    let mut buf = Vec::new();
+    let combos = [
+        (codec::IndexCoding::Varint, codec::ValueCoding::F32),
+        (codec::IndexCoding::Varint, codec::ValueCoding::F16),
+        (codec::IndexCoding::Raw, codec::ValueCoding::Q8),
+        (codec::IndexCoding::Varint, codec::ValueCoding::Q8),
+    ];
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let sv = rand_sparse(&mut rng, 500);
+        let (index, value) = combos[rng.below(combos.len())];
+        wire::encode_with(&sv, &mut buf, codec::CodecParams { index, value });
+        let mut bad = buf.clone();
+        for _ in 0..1 + rng.below(3) {
+            let at = rng.below(bad.len());
+            bad[at] ^= 1 << rng.below(8);
+        }
+        let _ = wire::decode_into(&bad, &mut out);
+        wire::decode_into(&buf, &mut out).unwrap();
+        assert_eq!(out.dim, sv.dim, "seed {seed}");
+        assert_eq!(out.indices, sv.indices, "seed {seed}");
+    }
+}
+
+// ------------------------------------------------------- service framing
+
+/// A reader that yields at most one byte per `read` call — worst-case
+/// stream fragmentation for the framing layer.
+struct OneByteReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl std::io::Read for OneByteReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if buf.is_empty() || self.pos >= self.data.len() {
+            return Ok(0);
+        }
+        buf[0] = self.data[self.pos];
+        self.pos += 1;
+        Ok(1)
+    }
+}
+
+fn rand_msg(rng: &mut Rng) -> framing::Msg {
+    let payload: Vec<u8> = (0..rng.below(200)).map(|_| rng.below(256) as u8).collect();
+    let fates =
+        [framing::FATE_NONE, framing::FATE_ACCEPTED, framing::FATE_STRAGGLER, framing::FATE_OFFLINE];
+    match rng.below(5) {
+        0 => framing::Msg::Hello { client: rng.below(1 << 20) as u32 },
+        1 => framing::Msg::Welcome { dim: rng.below(1 << 20) as u32, rounds: rng.below(500) as u32 },
+        2 => framing::Msg::Round {
+            round: rng.below(500) as u32,
+            participate: rng.below(2) == 0,
+            fate: fates[rng.below(4)],
+            payload,
+        },
+        3 => framing::Msg::Upload {
+            round: rng.below(500) as u32,
+            client: rng.below(1 << 20) as u32,
+            loss: rng.normal() as f64,
+            precodec: rng.below(1 << 30) as u64,
+            payload,
+        },
+        _ => framing::Msg::Done { fate: fates[rng.below(4)] },
+    }
+}
+
+#[test]
+fn prop_framing_roundtrip_over_fragmenting_reader() {
+    // a stream of random frames must reassemble exactly through both read
+    // paths when the transport delivers one byte at a time
+    for seed in seeds().take(30) {
+        let mut rng = Rng::new(seed);
+        let msgs: Vec<framing::Msg> = (0..1 + rng.below(8)).map(|_| rand_msg(&mut rng)).collect();
+        let mut wire_bytes = Vec::new();
+        for m in &msgs {
+            m.encode(&mut wire_bytes);
+        }
+
+        // read_msg over the fragmenting reader (read_exact loops)
+        let mut r = OneByteReader { data: &wire_bytes, pos: 0 };
+        for m in &msgs {
+            assert_eq!(&framing::read_msg(&mut r).unwrap(), m, "seed {seed}");
+        }
+
+        // read_msg_buffered + FrameBuffer (the timeout-safe path)
+        let mut r = OneByteReader { data: &wire_bytes, pos: 0 };
+        let mut fb = framing::FrameBuffer::new();
+        for m in &msgs {
+            assert_eq!(&framing::read_msg_buffered(&mut r, &mut fb).unwrap(), m, "seed {seed}");
+        }
+        assert!(fb.next_msg().unwrap().is_none(), "seed {seed}: buffer must drain");
+    }
+}
+
+#[test]
+fn prop_framing_truncation_at_every_boundary_rejected() {
+    // a stream that ends at ANY byte inside a frame must surface
+    // UnexpectedEof from both read paths — never a partial message, never
+    // a panic; the FrameBuffer path additionally must keep reporting
+    // "incomplete" (Ok(None)) rather than fabricating a frame
+    for seed in seeds().take(12) {
+        let mut rng = Rng::new(seed);
+        let msg = rand_msg(&mut rng);
+        let mut wire_bytes = Vec::new();
+        msg.encode(&mut wire_bytes);
+        for cut in 0..wire_bytes.len() {
+            let err = framing::read_msg(&mut &wire_bytes[..cut]).unwrap_err();
+            assert_eq!(
+                err.kind(),
+                std::io::ErrorKind::UnexpectedEof,
+                "seed {seed} cut {cut}"
+            );
+            let mut r = OneByteReader { data: &wire_bytes[..cut], pos: 0 };
+            let mut fb = framing::FrameBuffer::new();
+            let err = framing::read_msg_buffered(&mut r, &mut fb).unwrap_err();
+            assert_eq!(
+                err.kind(),
+                std::io::ErrorKind::UnexpectedEof,
+                "seed {seed} cut {cut}"
+            );
+            assert!(
+                fb.next_msg().unwrap().is_none(),
+                "seed {seed} cut {cut}: a partial frame must never parse"
+            );
+        }
+        // the full frame still parses after all the rejected prefixes
+        assert_eq!(framing::read_msg(&mut &wire_bytes[..]).unwrap(), msg, "seed {seed}");
     }
 }
 

@@ -1,0 +1,152 @@
+//! End-to-end transport conformance for service mode.
+//!
+//! The acceptance bar of the service-mode work: a loopback multi-process
+//! topology (here: multi-thread over real sockets — the same wire path as
+//! `fedgmf serve` / `fedgmf client`) must reproduce the in-process
+//! simulator's trajectory digest **bit-identically**, with and without a
+//! chaos plan, and every fault kind must leave the mass and traffic
+//! ledgers clean. Retransmits and duplicates may only move counters that
+//! the digest deliberately excludes (retries / timeouts / stale_frames /
+//! dup_frames).
+
+use fedgmf::coordinator::round::FlRun;
+use fedgmf::coordinator::service::{
+    build_service_client, build_service_handlers, build_service_run, service_config, ServiceRun,
+};
+use fedgmf::experiments::workload::{verify_fixture, VerifyFixture};
+use fedgmf::testkit::digest::trajectory_digest;
+use fedgmf::testkit::invariants::{check_traffic, MassLedger};
+use fedgmf::transport::fault::{FaultKind, FaultPlan};
+use fedgmf::transport::inproc::InProcTransport;
+use fedgmf::transport::socket::{run_client, SocketTransport};
+use fedgmf::transport::TransportConfig;
+
+const CLIENTS: usize = 5;
+const ROUNDS: usize = 4;
+const SEED: u64 = 42;
+const ROUND_DEADLINE_MS: u64 = 30_000;
+
+/// Reference trajectory: the plain in-process simulator with the same
+/// fault plan replayed through `FlConfig::fault`.
+fn sim_digest(fault: Option<FaultPlan>) -> u64 {
+    let VerifyFixture { shards, network, mut engine } = verify_fixture(CLIENTS, SEED);
+    let cfg = service_config(CLIENTS, ROUNDS, SEED, fault);
+    let mut run = FlRun::new(&engine, shards, Vec::new(), network, cfg);
+    let summary = run.run(&mut engine).unwrap();
+    let bits: Vec<u32> = run.params.iter().map(|p| p.to_bits()).collect();
+    trajectory_digest(&bits, &summary.recorder.rounds)
+}
+
+/// Drive a `ServiceRun` over an already-bound socket transport with one
+/// client thread per handler; returns (digest, run) for counter checks.
+fn socket_service_run(fault: Option<FaultPlan>, addr: &str) -> (u64, ServiceRun) {
+    let run = build_service_run(CLIENTS, ROUNDS, SEED, fault);
+    let dim = run.params.len();
+    let mut tcfg = TransportConfig::default();
+    tcfg.addr = addr.to_string();
+    tcfg.fault = fault;
+    let mut transport = SocketTransport::bind(tcfg.clone(), CLIENTS, dim, ROUNDS).unwrap();
+    let connect = transport.local_addr().to_string();
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|id| {
+            let mut ccfg = tcfg.clone();
+            ccfg.addr = connect.clone();
+            std::thread::spawn(move || {
+                let mut handler = build_service_client(CLIENTS, id, ROUNDS, SEED, fault);
+                run_client(&ccfg, &mut handler).unwrap();
+            })
+        })
+        .collect();
+    let mut service = ServiceRun::new(run, ROUND_DEADLINE_MS);
+    let summary = service.run(&mut transport).unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let bits: Vec<u32> = service.run.params.iter().map(|p| p.to_bits()).collect();
+    (trajectory_digest(&bits, &summary.recorder.rounds), service)
+}
+
+fn socket_digest(fault: Option<FaultPlan>) -> u64 {
+    socket_service_run(fault, "127.0.0.1:0").0
+}
+
+#[test]
+fn socket_loopback_matches_simulator_digest_without_faults() {
+    assert_eq!(
+        socket_digest(None),
+        sim_digest(None),
+        "clean loopback run must be bit-identical to the simulator"
+    );
+}
+
+#[test]
+fn socket_loopback_matches_simulator_digest_under_drop_plan() {
+    let plan = Some(FaultPlan::new(FaultKind::Drop, 0.35, 7));
+    assert_eq!(
+        socket_digest(plan),
+        sim_digest(plan),
+        "drop-chaos loopback run must be bit-identical to the simulator"
+    );
+}
+
+#[test]
+fn socket_retransmit_faults_preserve_digest_and_book_retries() {
+    // truncate-mid-frame and disconnect-mid-upload both force the client
+    // through reconnect + resend: the trajectory must not move (retransmit
+    // bytes are not metered, the payload is identical), but the transport
+    // retry counters must record the churn
+    for kind in [FaultKind::Truncate, FaultKind::Disconnect] {
+        let plan = Some(FaultPlan::new(kind, 0.5, 11));
+        let (digest, service) = socket_service_run(plan, "127.0.0.1:0");
+        assert_eq!(
+            digest,
+            sim_digest(plan),
+            "{kind:?}: retransmitted uploads must land bit-identically"
+        );
+        let retries: usize = service.run.recorder.rounds.iter().map(|r| r.retries).sum();
+        assert!(retries > 0, "{kind:?}: reconnects must surface in the retry counter");
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_domain_loopback_matches_simulator_digest() {
+    let path = std::env::temp_dir().join(format!("fedgmf-uds-{}.sock", std::process::id()));
+    let addr = format!("unix:{}", path.display());
+    let plan = Some(FaultPlan::new(FaultKind::Duplicate, 0.4, 3));
+    assert_eq!(socket_service_run(plan, &addr).0, sim_digest(plan));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn every_fault_kind_completes_with_clean_ledgers() {
+    // the full chaos sweep runs over the in-process transport (the socket
+    // paths above cover the wire-specific kinds); the mass ledger and the
+    // traffic ledger must stay clean under every plan
+    for kind in FaultKind::ALL {
+        let plan = Some(FaultPlan::new(kind, 0.3, 11));
+        let cfg = service_config(CLIENTS, ROUNDS, SEED, plan);
+        let staleness = cfg.sim.staleness;
+        let v1 = cfg.codec.is_v1();
+        let mut run = build_service_run(CLIENTS, ROUNDS, SEED, plan);
+        let dim = run.params.len();
+        run.ledger = Some(Box::new(MassLedger::new(dim, staleness)));
+        let mut tcfg = TransportConfig::default();
+        tcfg.fault = plan;
+        let handlers = build_service_handlers(CLIENTS, ROUNDS, SEED, plan);
+        let mut transport = InProcTransport::new(handlers, tcfg);
+        let mut service = ServiceRun::new(run, ROUND_DEADLINE_MS);
+        let summary = service.run(&mut transport).unwrap();
+        let ledger = service
+            .run
+            .ledger
+            .take()
+            .expect("ledger installed above")
+            .into_any()
+            .downcast::<MassLedger>()
+            .expect("mass ledger type");
+        let mut violations = ledger.check(&service.run.stale_queue);
+        violations.extend(check_traffic(&service.run.meter, &summary.recorder, CLIENTS, v1));
+        assert!(violations.is_empty(), "{kind:?}: {violations:?}");
+    }
+}

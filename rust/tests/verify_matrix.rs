@@ -1,6 +1,7 @@
 //! In-process run of the `fedgmf verify` scenario-matrix conformance
-//! harness: the full technique × codec × staleness × selection × preset
-//! cross-product at both worker counts, with the invariant ledgers armed.
+//! harness: the full technique × codec × staleness × selection × preset ×
+//! chaos cross-product at both worker counts, with the invariant ledgers
+//! armed.
 //!
 //! This makes `cargo test` itself a matrix gate: mass conservation,
 //! traffic-ledger consistency and cross-worker digest equality must hold
@@ -59,6 +60,16 @@ fn quick_matrix_passes_invariants_and_golden_gate() {
         report.scenarios.len(),
         "report must carry the full would-be registry"
     );
+    // the chaos axis is a first-class report dimension: listed explicitly
+    // and present in every scenario key's trailing segment
+    let chaos = j.get("chaos_axis").unwrap().as_arr().unwrap();
+    assert_eq!(chaos.len(), 7, "chaos axis must enumerate all fault kinds plus none");
+    let names: Vec<&str> = chaos.iter().filter_map(|v| v.as_str()).collect();
+    assert_eq!(names, ["none", "drop", "delay", "dup", "reorder", "truncate", "disconnect"]);
+    for s in &report.scenarios {
+        let tail = s.key.rsplit('/').next().unwrap();
+        assert!(names.contains(&tail), "{}: key must end in a chaos axis value", s.key);
+    }
     let _ = std::fs::remove_file(&report_path);
 }
 
