@@ -13,6 +13,8 @@
 //!   wire/encode+decode            — serialisation (v1, incl. dense path)
 //!   codec/<mode>                  — codec v2 encode/decode per mode, with
 //!                                   bytes-per-upload + reduction ratio
+//!   ingest/<mode>                 — server fold per upload: materialized
+//!                                   decode+add vs the streamed pull-decoder
 //!   momentum/accumulate           — client M update
 //!   round/e2e                     — full FlRun::step_round, 20 clients ×
 //!                                   P≈1M, sequential vs parallel workers
@@ -302,6 +304,78 @@ fn main() {
         rows
     };
 
+    // ---- streamed-ingest throughput: fold one upload into the server
+    // aggregate, materialized (decode_into + add) vs streamed (Runs
+    // pull-decoder + fold_stream), with the resident ingest scratch each
+    // path holds per upload — the streamed path's is a pointer-sized view
+    // regardless of model dimension.
+    println!("== ingest throughput (server fold per upload) ==");
+    let ingest_rows = {
+        use fedgmf::sparse::stream::Runs;
+        let dims: &[usize] = if quick { &[77_850] } else { &[77_850, 1_000_000] };
+        let modes: &[(&str, CodecParams)] = &[
+            ("raw-f32(v1)", CodecParams::V1),
+            ("varint-f16", CodecParams { index: IndexCoding::Varint, value: ValueCoding::F16 }),
+        ];
+        let mut rows: Vec<Json> = Vec::new();
+        for &p in dims {
+            let k = p / 10;
+            let raw = randvec(p, 55);
+            let abs: Vec<f32> = raw.iter().map(|x| x.abs()).collect();
+            let ids = topk::select_topk(&abs, k);
+            let vals: Vec<f32> = ids.iter().map(|&i| raw[i as usize]).collect();
+            let sv = SparseVec::from_sorted(p, ids, vals);
+            for &(name, params) in modes {
+                let mut buf = Vec::new();
+                wire::encode_with(&sv, &mut buf, params);
+                let wire_bytes = buf.len();
+                let mut agg = Aggregator::new(p);
+                let mut echo = SparseVec::empty(p);
+                let mut m_stats = Vec::new();
+                bench(&mut m_stats, &format!("ingest/materialized {name} P={p}"), it(20), || {
+                    wire::decode_into(&buf, &mut echo).unwrap();
+                    agg.add(&echo);
+                    std::hint::black_box(&agg);
+                });
+                let mut s_stats = Vec::new();
+                bench(&mut s_stats, &format!("ingest/streamed     {name} P={p}"), it(20), || {
+                    let runs = Runs::validate(&buf).unwrap();
+                    agg.fold_stream(&runs, 1.0);
+                    std::hint::black_box(&agg);
+                });
+                let m = m_stats[0].1;
+                let s = s_stats[0].1;
+                let mbps = |ms: f64| wire_bytes as f64 / 1e6 / (ms / 1e3).max(1e-12);
+                let mat_scratch =
+                    (echo.indices.capacity() + echo.values.capacity()) * 4;
+                let stream_scratch = std::mem::size_of::<Runs<'static>>();
+                println!(
+                    "ingest/{name:<14} P={p:>8} {wire_bytes:>8} B  materialized \
+                     {:>8.1} MB/s ({mat_scratch} B scratch)  streamed {:>8.1} MB/s \
+                     ({stream_scratch} B scratch)",
+                    mbps(m.median_ms),
+                    mbps(s.median_ms)
+                );
+                rows.push(Json::obj(vec![
+                    ("name", Json::str(name)),
+                    ("dim", Json::num(p as f64)),
+                    ("nnz", Json::num(sv.nnz() as f64)),
+                    ("wire_bytes", Json::num(wire_bytes as f64)),
+                    ("materialized_ms", Json::num(m.median_ms)),
+                    ("streamed_ms", Json::num(s.median_ms)),
+                    ("materialized_mbps", Json::num(mbps(m.median_ms))),
+                    ("streamed_mbps", Json::num(mbps(s.median_ms))),
+                    ("materialized_scratch_bytes", Json::num(mat_scratch as f64)),
+                    ("streamed_scratch_bytes", Json::num(stream_scratch as f64)),
+                ]));
+                results.push((format!("ingest/materialized {name} P={p}"), m));
+                results.push((format!("ingest/streamed {name} P={p}"), s));
+            }
+        }
+        println!();
+        rows
+    };
+
     // ---- round-level end-to-end: 20 clients × P≈1M, sequential vs parallel
     // (quick mode shrinks the model and client count to keep CI fast)
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -333,6 +407,7 @@ fn main() {
         ("quick", Json::Bool(quick)),
         ("host_cores", Json::num(cores as f64)),
         ("codec", Json::Arr(codec_rows)),
+        ("ingest_throughput", Json::Arr(ingest_rows)),
         (
             "round_e2e",
             Json::obj(vec![

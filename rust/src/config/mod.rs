@@ -124,6 +124,10 @@ pub struct RunConfig {
     /// record the exact O(clients²·nnz) mask-overlap diagnostic instead of
     /// the O(nnz) estimate (analysis runs; TOML `run.exact_mask_overlap`)
     pub exact_mask_overlap: bool,
+    /// fold uploads into the server aggregate straight from their wire
+    /// bytes via the codec-v2 pull-decoder (TOML `run.streamed_ingest`);
+    /// bit-identical to the default materialized ingest
+    pub streamed_ingest: bool,
     /// time-domain scheduler knobs (TOML `[sim]` — see `docs/config.md`);
     /// the default is inert and preserves schedulerless output bit-exactly
     pub sim: SimConfig,
@@ -182,6 +186,7 @@ impl Default for RunConfig {
             client_fraction: 1.0,
             workers: 0,
             exact_mask_overlap: false,
+            streamed_ingest: false,
             sim: SimConfig::default(),
             codec: WireCodec::default(),
             transport: TransportConfig::default(),
@@ -272,6 +277,7 @@ impl RunConfig {
             seed: self.seed,
             workers: self.workers,
             exact_mask_overlap: self.exact_mask_overlap,
+            streamed_ingest: self.streamed_ingest,
             sim: self.sim,
             codec: self.codec,
             fault: self.transport.fault,
@@ -332,6 +338,10 @@ impl RunConfig {
         if let Some(v) = get(doc, "run", "exact_mask_overlap") {
             cfg.exact_mask_overlap =
                 v.as_bool().ok_or_else(|| anyhow!("run.exact_mask_overlap: bool"))?;
+        }
+        if let Some(v) = get(doc, "run", "streamed_ingest") {
+            cfg.streamed_ingest =
+                v.as_bool().ok_or_else(|| anyhow!("run.streamed_ingest: bool"))?;
         }
         read!("data", "clients", clients, as_usize, usize);
         read!("data", "samples_per_client", samples_per_client, as_usize, usize);
@@ -856,5 +866,16 @@ fault = "drop:0.25"
         assert!(cfg.exact_mask_overlap);
         assert!(cfg.fl_config().exact_mask_overlap);
         assert!(RunConfig::from_toml_str("[run]\nexact_mask_overlap = 3\n", &[]).is_err());
+    }
+
+    #[test]
+    fn streamed_ingest_knob_from_toml() {
+        assert!(!RunConfig::default().streamed_ingest, "materialized ingest is the default");
+        let cfg = RunConfig::from_toml_str("[run]\nstreamed_ingest = true\n", &[]).unwrap();
+        assert!(cfg.streamed_ingest);
+        assert!(cfg.fl_config().streamed_ingest);
+        let ov = RunConfig::from_toml_str("", &["run.streamed_ingest=true".to_string()]).unwrap();
+        assert!(ov.streamed_ingest);
+        assert!(RunConfig::from_toml_str("[run]\nstreamed_ingest = 3\n", &[]).is_err());
     }
 }

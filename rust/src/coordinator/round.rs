@@ -77,6 +77,7 @@ use crate::sim::staleness::StaleQueue;
 use crate::transport::fault::{FaultKind, FaultPlan, DELAY_S};
 use crate::sparse::codec::WireCodec;
 use crate::sparse::merge::{mean_jaccard_estimate, mean_pairwise_jaccard};
+use crate::sparse::stream::Runs;
 use crate::sparse::vector::SparseVec;
 use crate::sparse::wire;
 use crate::util::rng::Rng;
@@ -150,6 +151,13 @@ pub struct FlConfig {
     /// instead of the O(total-nnz) count-based estimate (analysis runs only
     /// — the exact statistic dominates round cost at large cohorts)
     pub exact_mask_overlap: bool,
+    /// fold accepted uploads into the server aggregate straight from their
+    /// wire bytes (the codec-v2 pull-decoder) instead of batching decoded
+    /// [`SparseVec`]s — server-side ingest scratch becomes independent of
+    /// the model dimension. Bit-identical to the materialized path (the
+    /// decoder emits the exact pairs `decode_into` would, in the same
+    /// order); `false` (the default) keeps the batch merge.
+    pub streamed_ingest: bool,
     /// time-domain scheduler knobs (TOML `[sim]`); the default is inert and
     /// keeps the run bit-identical to the schedulerless round loop
     pub sim: SimConfig,
@@ -185,6 +193,7 @@ impl FlConfig {
             seed: 42,
             workers: 0,
             exact_mask_overlap: false,
+            streamed_ingest: false,
             sim: SimConfig::default(),
             codec: WireCodec::default(),
             fault: None,
@@ -632,7 +641,22 @@ impl FlRun {
             // fresh uploads first, then last round's carried-over stale
             // uploads at the staleness discount — a fixed order per
             // coordinate, so worker counts never change the f32 sums
-            self.server.receive_all(&echoes, pool);
+            if self.cfg.streamed_ingest {
+                // fold straight from the wire bytes, in the same participant
+                // order the batch merge would use — the pull-decoder emits
+                // the exact pairs `decode_into` produces, so the aggregate
+                // is bit-identical to the materialized path
+                for (c, &fate) in parts.iter().zip(&self.fate_scratch) {
+                    if fate == ClientFate::Accepted {
+                        let runs = Runs::validate(&c.wire_buf).map_err(|e| {
+                            anyhow::anyhow!("upload from client {}: {e:?}", c.id)
+                        })?;
+                        self.server.receive_stream(&runs);
+                    }
+                }
+            } else {
+                self.server.receive_all(&echoes, pool);
+            }
             let stale = self.stale_queue.ready();
             carried_in = stale.len();
             carried_bytes = stale.iter().map(|e| e.bytes).sum();
@@ -671,7 +695,7 @@ impl FlRun {
         let bcast_precodec = wire::encoded_bytes(&self.payload_scratch);
         self.meter.record_broadcast(self.bcast_buf.len(), bcast_precodec, n);
         wire::decode_into(&self.bcast_buf, &mut self.last_payload)
-            .expect("broadcast must decode");
+            .map_err(|e| anyhow::anyhow!("broadcast decode: {e:?}"))?;
 
         // 6. synchronized model update (Alg. 1 line 15)
         let lr = self.cfg.lr.at(round);
@@ -1146,6 +1170,38 @@ mod tests {
         assert_eq!(rec.dropped_deadline, 0);
         assert!(rec.aggregate_nnz > 0, "held-back echo mass re-enters the aggregate");
         assert_ne!(run.params, init, "training resumes");
+    }
+
+    #[test]
+    fn streamed_ingest_matches_materialized_bit_for_bit() {
+        use crate::sparse::codec::{CodecParams, IndexCoding, ValueCoding, WireCodec};
+        let codecs = [
+            WireCodec::default(),
+            WireCodec {
+                uplink: CodecParams { index: IndexCoding::Varint, value: ValueCoding::F16 },
+                downlink: CodecParams { index: IndexCoding::Raw, value: ValueCoding::F32 },
+            },
+        ];
+        for codec in codecs {
+            let run_with = |streamed: bool| -> (Vec<u32>, Vec<u64>) {
+                let mut engine = NativeEngine::new(8, 12, 4, 1);
+                let (shards, test) = blob_shards(4, 80, 8, 4, 10);
+                let net = Network::uniform(4, Default::default());
+                let mut cfg = quick_cfg(CompressorKind::DgcWgmf);
+                cfg.rounds = 8;
+                cfg.codec = codec.clone();
+                cfg.streamed_ingest = streamed;
+                let mut run = FlRun::new(&engine, shards, test, net, cfg);
+                let summary = run.run(&mut engine).unwrap();
+                let losses =
+                    summary.recorder.rounds.iter().map(|r| r.train_loss.to_bits()).collect();
+                (run.params.iter().map(|v| v.to_bits()).collect(), losses)
+            };
+            let (pm, lm) = run_with(false);
+            let (ps, ls) = run_with(true);
+            assert_eq!(pm, ps, "streamed ingest must reproduce the materialized trajectory");
+            assert_eq!(lm, ls, "per-round losses must match bit-for-bit");
+        }
     }
 
     #[test]

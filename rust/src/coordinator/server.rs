@@ -9,6 +9,7 @@
 //! overhead row of Table 3.
 
 use crate::sparse::merge::Aggregator;
+use crate::sparse::stream::Runs;
 use crate::sparse::vector::SparseVec;
 
 /// What the server sends back to clients each round.
@@ -82,6 +83,31 @@ impl FlServer {
             Err(at) => {
                 self.round_seen.insert(at, client);
                 self.agg.add(g);
+                true
+            }
+        }
+    }
+
+    /// Receive one client gradient straight from a validated wire buffer,
+    /// without materializing a [`SparseVec`]. Bit-identical to decoding the
+    /// buffer and calling [`FlServer::receive`]: the pull-decoder emits the
+    /// exact (index, value) pairs `decode_into` would produce, in the same
+    /// order, and the fold applies the same `acc += 1.0 * v` expression the
+    /// batch merge uses. Returns the number of runs folded.
+    pub fn receive_stream(&mut self, runs: &Runs<'_>) -> usize {
+        self.agg.fold_stream(runs, 1.0)
+    }
+
+    /// Idempotent streamed receive: [`FlServer::receive_upload`] over a
+    /// validated wire buffer instead of a decoded gradient. Duplicated
+    /// transport frames are rejected by the same per-round guard. Returns
+    /// whether the upload was folded.
+    pub fn receive_upload_streamed(&mut self, client: usize, runs: &Runs<'_>) -> bool {
+        match self.round_seen.binary_search(&client) {
+            Ok(_) => false,
+            Err(at) => {
+                self.round_seen.insert(at, client);
+                self.agg.fold_stream(runs, 1.0);
                 true
             }
         }
@@ -270,6 +296,46 @@ mod tests {
         // a new round admits the same client again
         s.begin_round();
         assert!(s.receive_upload(0, &g));
+    }
+
+    #[test]
+    fn streamed_receive_is_bit_identical_to_decoded_receive() {
+        use crate::sparse::wire;
+        let dim = 64;
+        let grads = [
+            SparseVec::new(dim, vec![(1, 0.125), (7, -3.5), (40, 1e-30)]),
+            SparseVec::new(dim, vec![(0, 2.0), (7, 0.7), (63, -0.1)]),
+        ];
+        let mut a = FlServer::new(dim, BroadcastPolicy::Aggregate);
+        let mut b = FlServer::new(dim, BroadcastPolicy::Aggregate);
+        for g in &grads {
+            a.receive(g);
+            let buf = wire::encode(g);
+            let runs = Runs::validate(&buf).expect("encoded buffer validates");
+            assert_eq!(b.receive_stream(&runs), g.nnz());
+        }
+        let (pa, _) = a.finish_round(grads.len());
+        let (pb, _) = b.finish_round(grads.len());
+        assert_eq!(pa.indices, pb.indices);
+        assert_eq!(
+            pa.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            pb.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn streamed_upload_guard_rejects_duplicates() {
+        use crate::sparse::wire;
+        let dim = 8;
+        let mut s = FlServer::new(dim, BroadcastPolicy::Aggregate);
+        let g = SparseVec::new(dim, vec![(2, 4.0)]);
+        let buf = wire::encode(&g);
+        let runs = Runs::validate(&buf).unwrap();
+        s.begin_round();
+        assert!(s.receive_upload_streamed(0, &runs));
+        assert!(!s.receive_upload_streamed(0, &runs), "duplicate frame rejected");
+        let (p, _) = s.finish_round(1);
+        assert_eq!(p.values, vec![4.0], "folded exactly once");
     }
 
     #[test]

@@ -57,6 +57,7 @@ use crate::experiments::workload::verify_fixture;
 use crate::metrics::recorder::RoundRecord;
 use crate::runtime::TrainEngine;
 use crate::sim::scheduler::{uplink_close, ClientFate, SelectionPolicy};
+use crate::sparse::stream::Runs;
 use crate::sparse::vector::SparseVec;
 use crate::sparse::wire;
 use crate::transport::fault::{FaultKind, FaultPlan, DELAY_S};
@@ -231,7 +232,12 @@ pub struct ServiceRun {
     overlap_scratch: Vec<u32>,
     gini_scratch: Vec<f64>,
     /// decoded current-round arrivals, index-aligned with `uploads`
+    /// (materialized ingest only; streamed ingest leaves this untouched)
     echo_scratch: Vec<SparseVec>,
+    /// single reused decode target for the streamed path's on-demand
+    /// materializations (ledger hooks, carried stragglers) — the only
+    /// dimension-sized ingest scratch that path ever holds
+    carry_scratch: SparseVec,
     payload_scratch: SparseVec,
     /// broadcast wire bytes of the previous round (what `broadcast` ships)
     bcast_buf: Vec<u8>,
@@ -251,6 +257,7 @@ impl ServiceRun {
             overlap_scratch: Vec::new(),
             gini_scratch: Vec::new(),
             echo_scratch: Vec::new(),
+            carry_scratch: SparseVec::empty(run.params.len()),
             payload_scratch: SparseVec::empty(run.params.len()),
             bcast_buf: Vec::new(),
             accepted_scratch: Vec::new(),
@@ -352,14 +359,26 @@ impl ServiceRun {
         }
         let uplink_phase = uplink_close(&r.cfg.sim, &self.fates, &self.finishes);
 
-        // decode every current-round arrival once, index-aligned
-        if self.echo_scratch.len() < arrivals.uploads.len() {
-            let dim = r.params.len();
-            self.echo_scratch.resize_with(arrivals.uploads.len(), || SparseVec::empty(dim));
-        }
-        for (up, echo) in arrivals.uploads.iter().zip(self.echo_scratch.iter_mut()) {
-            wire::decode_into(&up.bytes, echo)
-                .map_err(|e| anyhow::anyhow!("upload from client {}: {e:?}", up.client))?;
+        // decode every current-round arrival once, index-aligned — unless
+        // streamed ingest is on, which only *validates* each buffer here
+        // (same errors, in the same arrival-walk order) and folds accepted
+        // uploads straight from the bytes below. Exact mask overlap needs
+        // every echo at once, so it keeps the materialized path.
+        let materialize = !r.cfg.streamed_ingest || r.cfg.exact_mask_overlap;
+        if materialize {
+            if self.echo_scratch.len() < arrivals.uploads.len() {
+                let dim = r.params.len();
+                self.echo_scratch.resize_with(arrivals.uploads.len(), || SparseVec::empty(dim));
+            }
+            for (up, echo) in arrivals.uploads.iter().zip(self.echo_scratch.iter_mut()) {
+                wire::decode_into(&up.bytes, echo)
+                    .map_err(|e| anyhow::anyhow!("upload from client {}: {e:?}", up.client))?;
+            }
+        } else {
+            for up in &arrivals.uploads {
+                Runs::validate(&up.bytes)
+                    .map_err(|e| anyhow::anyhow!("upload from client {}: {e:?}", up.client))?;
+            }
         }
 
         // deterministic reductions, in participant order — never arrival
@@ -375,14 +394,33 @@ impl ServiceRun {
         for (i, &cid) in participants.iter().enumerate() {
             let fate = self.fates[i];
             let at = arrivals.uploads.binary_search_by_key(&cid, |u| u.client).ok();
-            let (echo, bytes, precodec, loss) = match at {
+            let (bytes, precodec, loss) = match at {
                 Some(j) => (
-                    &self.echo_scratch[j],
                     arrivals.uploads[j].bytes.len(),
                     arrivals.uploads[j].precodec_bytes,
                     arrivals.uploads[j].loss,
                 ),
-                None => (&empty_echo, 0, 0, 0.0),
+                None => (0, 0, 0.0),
+            };
+            // only the ledger hook and a carried straggler consume the
+            // decoded gradient; the streamed path materializes it on demand
+            // into one reused scratch instead of holding every arrival
+            let echo: &SparseVec = match at {
+                Some(j) if materialize => &self.echo_scratch[j],
+                Some(j)
+                    if r.ledger.is_some()
+                        || (carries && fate == ClientFate::Straggler) =>
+                {
+                    wire::decode_into(&arrivals.uploads[j].bytes, &mut self.carry_scratch)
+                        .map_err(|e| {
+                            anyhow::anyhow!(
+                                "upload from client {}: {e:?}",
+                                arrivals.uploads[j].client
+                            )
+                        })?;
+                    &self.carry_scratch
+                }
+                _ => &empty_echo,
             };
             if let Some(l) = r.ledger.as_deref_mut() {
                 l.on_upload(cid, fate, echo, bytes, precodec);
@@ -414,27 +452,57 @@ impl ServiceRun {
             self.last_fate[cid] = (round, fb);
         }
 
-        // accepted echoes in participant order: overlap diagnostic + merge
-        let mut accepted_echoes: Vec<&SparseVec> = Vec::with_capacity(n);
+        // accepted uploads in participant order: overlap diagnostic + merge
         self.accepted_scratch.clear();
-        for (i, &cid) in participants.iter().enumerate() {
-            if self.fates[i] == ClientFate::Accepted {
-                if let Ok(j) = arrivals.uploads.binary_search_by_key(&cid, |u| u.client) {
-                    accepted_echoes.push(&self.echo_scratch[j]);
-                    self.accepted_scratch.push(cid);
+        let overlap;
+        if materialize {
+            let mut accepted_echoes: Vec<&SparseVec> = Vec::with_capacity(n);
+            for (i, &cid) in participants.iter().enumerate() {
+                if self.fates[i] == ClientFate::Accepted {
+                    if let Ok(j) = arrivals.uploads.binary_search_by_key(&cid, |u| u.client) {
+                        accepted_echoes.push(&self.echo_scratch[j]);
+                        self.accepted_scratch.push(cid);
+                    }
                 }
             }
-        }
-        let overlap = if r.cfg.exact_mask_overlap {
-            crate::sparse::merge::mean_pairwise_jaccard(&accepted_echoes)
+            overlap = if r.cfg.exact_mask_overlap {
+                crate::sparse::merge::mean_pairwise_jaccard(&accepted_echoes)
+            } else {
+                crate::sparse::merge::mean_jaccard_estimate(
+                    &accepted_echoes,
+                    &mut self.overlap_scratch,
+                )
+            };
+            // idempotent per-(client, round) receive — the transports already
+            // deduplicate frames, this is the server-side backstop. Sequential
+            // adds in participant order are bit-identical to `receive_all`.
+            for (&cid, &echo) in self.accepted_scratch.iter().zip(accepted_echoes.iter()) {
+                r.server.receive_upload(cid, echo);
+            }
         } else {
-            crate::sparse::merge::mean_jaccard_estimate(&accepted_echoes, &mut self.overlap_scratch)
-        };
-        // idempotent per-(client, round) receive — the transports already
-        // deduplicate frames, this is the server-side backstop. Sequential
-        // adds in participant order are bit-identical to `receive_all`.
-        for (&cid, &echo) in self.accepted_scratch.iter().zip(accepted_echoes.iter()) {
-            r.server.receive_upload(cid, echo);
+            // streamed ingest: fold every accepted upload straight from its
+            // (already validated) wire bytes, collecting its mask indices
+            // for the overlap estimate along the way. Fold order is the
+            // participant order, value expressions are the decoder's own —
+            // the aggregate is bit-identical to the materialized merge.
+            let scratch = &mut self.overlap_scratch;
+            scratch.clear();
+            for (i, &cid) in participants.iter().enumerate() {
+                if self.fates[i] != ClientFate::Accepted {
+                    continue;
+                }
+                let Ok(j) = arrivals.uploads.binary_search_by_key(&cid, |u| u.client) else {
+                    continue;
+                };
+                let runs = Runs::validate(&arrivals.uploads[j].bytes).map_err(|e| {
+                    anyhow::anyhow!("upload from client {}: {e:?}", arrivals.uploads[j].client)
+                })?;
+                runs.for_each(|idx, _| scratch.push(idx));
+                r.server.receive_upload_streamed(cid, &runs);
+                self.accepted_scratch.push(cid);
+            }
+            overlap =
+                crate::sparse::merge::jaccard_estimate_finish(self.accepted_scratch.len(), scratch);
         }
         let stale = r.stale_queue.ready();
         let carried_in = stale.len();
@@ -471,7 +539,10 @@ impl ServiceRun {
         wire::encode_with(&self.payload_scratch, &mut self.bcast_buf, r.cfg.codec.downlink);
         let bcast_precodec = wire::encoded_bytes(&self.payload_scratch);
         r.meter.record_broadcast(self.bcast_buf.len(), bcast_precodec, n);
-        wire::decode_into(&self.bcast_buf, &mut r.last_payload).expect("broadcast must decode");
+        // a malformed broadcast is a transport-grade failure, not a panic:
+        // surface it through the round result like every other decode site
+        wire::decode_into(&self.bcast_buf, &mut r.last_payload)
+            .map_err(|e| anyhow::anyhow!("broadcast decode: {e:?}"))?;
 
         // the server's own parameter mirror (clients apply the identical
         // update when the broadcast frame reaches them next round)
@@ -617,14 +688,26 @@ mod tests {
         trajectory_digest(&param_bits(&run.params), &run.recorder.rounds)
     }
 
-    fn service_digest(clients: usize, rounds: usize, seed: u64, fault: Option<FaultPlan>) -> u64 {
+    fn service_digest_with(
+        clients: usize,
+        rounds: usize,
+        seed: u64,
+        fault: Option<FaultPlan>,
+        streamed: bool,
+    ) -> u64 {
         let mut cfg = TransportConfig::default();
         cfg.fault = fault;
         let handlers = build_service_handlers(clients, rounds, seed, fault);
         let mut transport = InProcTransport::new(handlers, cfg);
-        let mut service = ServiceRun::new(build_service_run(clients, rounds, seed, fault), 1000);
+        let mut run = build_service_run(clients, rounds, seed, fault);
+        run.cfg.streamed_ingest = streamed;
+        let mut service = ServiceRun::new(run, 1000);
         service.run(&mut transport).unwrap();
         trajectory_digest(&param_bits(&service.run.params), &service.run.recorder.rounds)
+    }
+
+    fn service_digest(clients: usize, rounds: usize, seed: u64, fault: Option<FaultPlan>) -> u64 {
+        service_digest_with(clients, rounds, seed, fault, false)
     }
 
     #[test]
@@ -643,6 +726,21 @@ mod tests {
             sim_digest(6, 5, 42, plan),
             service_digest(6, 5, 42, plan),
             "drop-faulted service run must be digest-identical to the simulator"
+        );
+    }
+
+    #[test]
+    fn streamed_service_ingest_matches_materialized_digest() {
+        assert_eq!(
+            service_digest_with(6, 4, 42, None, false),
+            service_digest_with(6, 4, 42, None, true),
+            "streamed ingest must not move the service digest"
+        );
+        let plan = Some(FaultPlan::new(FaultKind::Duplicate, 0.5, 3));
+        assert_eq!(
+            service_digest_with(6, 4, 42, plan, false),
+            service_digest_with(6, 4, 42, plan, true),
+            "streamed ingest must absorb duplicated frames identically"
         );
     }
 

@@ -85,7 +85,7 @@ impl IndexCoding {
         }
     }
 
-    fn from_byte(b: u8) -> Result<IndexCoding, WireError> {
+    pub(crate) fn from_byte(b: u8) -> Result<IndexCoding, WireError> {
         match b {
             0 => Ok(IndexCoding::Raw),
             1 => Ok(IndexCoding::Varint),
@@ -133,7 +133,7 @@ impl ValueCoding {
         }
     }
 
-    fn from_byte(b: u8) -> Result<ValueCoding, WireError> {
+    pub(crate) fn from_byte(b: u8) -> Result<ValueCoding, WireError> {
         match b {
             0 => Ok(ValueCoding::F32),
             1 => Ok(ValueCoding::F16),
@@ -270,7 +270,7 @@ fn push_varint(out: &mut Vec<u8>, mut x: u32) {
 }
 
 #[inline]
-fn read_varint(buf: &[u8], pos: &mut usize) -> Result<u32, WireError> {
+pub(crate) fn read_varint(buf: &[u8], pos: &mut usize) -> Result<u32, WireError> {
     let mut x: u32 = 0;
     let mut shift = 0u32;
     loop {

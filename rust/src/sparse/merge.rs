@@ -5,6 +5,7 @@
 //! downlink overhead measures (GMF's whole point is shrinking this union by
 //! correlating client masks through the shared global momentum).
 
+use super::stream::Runs;
 use super::vector::SparseVec;
 
 /// Below this many total incoming nonzeros the sharded merge is not worth
@@ -57,6 +58,35 @@ impl Aggregator {
             }
             self.acc[iu] += scale * v;
         }
+    }
+
+    /// Fold a validated pull-decoder's (index, value) runs straight into
+    /// the accumulator — the streamed-ingest equivalent of decoding the
+    /// buffer and calling [`Aggregator::add_scaled`], without the
+    /// intermediate `SparseVec`. Bit-identical to that pair: the runs
+    /// arrive in the decoder's emit order and the per-coordinate update is
+    /// the same `acc += scale · v` expression.
+    ///
+    /// Partial-fold atomicity: [`Runs::validate`] has already vetted the
+    /// entire buffer, so this emit pass cannot fail — a truncated or
+    /// corrupt buffer is rejected *before* the first accumulator mutation
+    /// (see docs/wire.md). Returns the number of runs folded.
+    pub fn fold_stream(&mut self, runs: &Runs<'_>, scale: f32) -> usize {
+        assert_eq!(runs.dim(), self.acc.len(), "dimension mismatch");
+        let acc = &mut self.acc;
+        let dirty = &mut self.dirty;
+        let touched = &mut self.touched;
+        let mut n = 0usize;
+        runs.for_each(|i, v| {
+            let iu = i as usize;
+            if !dirty[iu] {
+                dirty[iu] = true;
+                touched.push(i);
+            }
+            acc[iu] += scale * v;
+            n += 1;
+        });
+        n
     }
 
     /// Merge a whole round of client contributions, sharding the coordinate
@@ -250,13 +280,27 @@ pub fn mean_jaccard_estimate(vs: &[&SparseVec], scratch: &mut Vec<u32>) -> f64 {
         return 1.0;
     }
     let total: usize = vs.iter().map(|v| v.nnz()).sum();
-    if total == 0 {
-        return 1.0;
-    }
     scratch.clear();
     scratch.reserve(total);
     for v in vs {
         scratch.extend_from_slice(&v.indices);
+    }
+    jaccard_estimate_finish(n, scratch)
+}
+
+/// Finishing half of [`mean_jaccard_estimate`] over an already-collected
+/// index multiset: `scratch` holds the concatenated support indices of all
+/// `n` masks (any order; sorted in place here). Exposed so the streamed
+/// ingest path can collect indices *while folding* uploads and still
+/// compute the identical statistic — same sort, same f64 expressions, so
+/// the result is bit-identical to the materialized path.
+pub fn jaccard_estimate_finish(n: usize, scratch: &mut Vec<u32>) -> f64 {
+    if n < 2 {
+        return 1.0;
+    }
+    let total = scratch.len();
+    if total == 0 {
+        return 1.0;
     }
     scratch.sort_unstable();
     let mut inter_pairs = 0u64;
@@ -355,6 +399,55 @@ mod tests {
         let bits_a: Vec<u32> = oa.values.iter().map(|v| v.to_bits()).collect();
         let bits_b: Vec<u32> = ob.values.iter().map(|v| v.to_bits()).collect();
         assert_eq!(bits_a, bits_b);
+    }
+
+    #[test]
+    fn fold_stream_is_bit_identical_to_decode_then_add() {
+        use crate::sparse::codec::{CodecParams, IndexCoding, ValueCoding};
+        use crate::sparse::{stream, wire};
+        let dim = 2048;
+        let grads: Vec<SparseVec> = (0..5).map(|c| rand_sparse(dim, 150, 700 + c)).collect();
+        let params = [
+            CodecParams { index: IndexCoding::Raw, value: ValueCoding::F32 },
+            CodecParams { index: IndexCoding::Varint, value: ValueCoding::F16 },
+            CodecParams { index: IndexCoding::Varint, value: ValueCoding::Q8 },
+        ];
+        for p in params {
+            let mut via_decode = Aggregator::new(dim);
+            let mut via_stream = Aggregator::new(dim);
+            let mut buf = Vec::new();
+            let mut echo = SparseVec::empty(0);
+            for g in &grads {
+                wire::encode_with(g, &mut buf, p);
+                wire::decode_into(&buf, &mut echo).unwrap();
+                via_decode.add(&echo);
+                let runs = stream::Runs::validate(&buf).unwrap();
+                let folded = via_stream.fold_stream(&runs, 1.0);
+                assert_eq!(folded, echo.nnz(), "{p:?}");
+            }
+            let a = via_decode.finish_mean(grads.len());
+            let b = via_stream.finish_mean(grads.len());
+            assert_eq!(a.indices, b.indices, "{p:?}");
+            let bits_a: Vec<u32> = a.values.iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> = b.values.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "{p:?}: values must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn jaccard_finish_matches_estimate_on_collected_indices() {
+        let a = SparseVec::new(40, vec![(1, 1.0), (2, 1.0), (9, 1.0)]);
+        let b = SparseVec::new(40, vec![(2, 1.0), (3, 1.0)]);
+        let mut scratch = Vec::new();
+        let want = mean_jaccard_estimate(&[&a, &b], &mut scratch);
+        let mut collected: Vec<u32> = Vec::new();
+        collected.extend_from_slice(&a.indices);
+        collected.extend_from_slice(&b.indices);
+        let got = jaccard_estimate_finish(2, &mut collected);
+        assert_eq!(want.to_bits(), got.to_bits(), "finish must be bit-identical");
+        let mut empty: Vec<u32> = Vec::new();
+        assert_eq!(jaccard_estimate_finish(2, &mut empty), 1.0);
+        assert_eq!(jaccard_estimate_finish(1, &mut empty), 1.0);
     }
 
     #[test]

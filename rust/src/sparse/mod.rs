@@ -2,6 +2,7 @@
 //! wire formats (v1 + codec v2) with exact byte accounting.
 pub mod codec;
 pub mod merge;
+pub mod stream;
 pub mod topk;
 pub mod vector;
 pub mod wire;

@@ -1,0 +1,503 @@
+//! Streaming pull-decoder over wire buffers — (index, value) runs without
+//! an intermediate `SparseVec`.
+//!
+//! The server-side ingest path historically decoded every upload into a
+//! per-client `SparseVec` (O(nnz) per client, O(rate · dim) at the
+//! steady-state top-k shape) before folding it into the [`Aggregator`].
+//! [`Runs`] removes that materialization: it validates a complete wire
+//! buffer (v1 *and* v2, every container and coding) up front, then emits
+//! the (index, value) pairs directly to a fold callback. Ingest memory per
+//! upload is a fixed few dozen bytes of cursor state, independent of model
+//! dimension.
+//!
+//! ## Contract
+//!
+//! * **Validation is exhaustive and up-front.** [`Runs::validate`] performs
+//!   exactly the checks `wire::decode_into` performs, in the same order,
+//!   returning the same [`WireError`] for any malformed buffer (the
+//!   proptests in `tests/proptests.rs` assert decode/validate verdict
+//!   agreement on adversarially corrupted buffers). Only a fully vetted
+//!   buffer yields a `Runs` value.
+//! * **Partial-fold atomicity.** Because every structural check (lengths,
+//!   index bounds, sortedness, varint shape, bitmap tail bits) happens
+//!   before the first run is emitted, a truncated or corrupt buffer can
+//!   never leave a consumer half-folded: `Aggregator::fold_stream` over a
+//!   `Runs` cannot fail, and a buffer that would fail mid-stream never
+//!   becomes a `Runs` at all.
+//! * **Bit-identical emit order.** [`Runs::for_each`] emits exactly the
+//!   (index, value) pairs `decode_into` would have produced, in the same
+//!   order, computed by the same expressions — so folding runs is
+//!   bit-identical to decoding and folding the vector (sparse/bitmap
+//!   containers keep explicit zero-valued entries; dense containers drop
+//!   exact zeros, like the decoders).
+//!
+//! ## Chunked `Reader` source
+//!
+//! Wire buffers arrive from the transport as length-prefixed frames;
+//! [`read_payload`] drains an `io::Read` (however fragmented — the
+//! proptests deliver one byte per read call) into a reusable scratch
+//! buffer in fixed-size chunks, after which [`Runs::validate`] takes over.
+//! The fold itself never allocates a decoded vector.
+//!
+//! [`Aggregator`]: super::merge::Aggregator
+
+use super::codec::{
+    self, IndexCoding, ValueCoding, CONTAINER_BITMAP, CONTAINER_DENSE, CONTAINER_SPARSE, KIND_V2,
+    Q8_BLOCK, V2_HEADER_BYTES,
+};
+use super::wire::{WireError, HEADER_BYTES, MAGIC};
+
+/// Internal layout descriptor recorded by validation: where each stream
+/// lives and how it is coded, so the emit pass is a straight walk.
+#[derive(Clone, Copy)]
+enum Layout {
+    /// v1 kind 0: raw u32 indices at 13, f32 values at `13 + 4·nnz`.
+    V1Sparse { nnz: usize },
+    /// v1 kind 1: `dim` f32 values at 9; zeros dropped on emit.
+    V1Dense,
+    /// v2 sparse container: index stream at 16, value stream at `val_off`.
+    V2Sparse { nnz: usize, index: IndexCoding, value: ValueCoding, val_off: usize },
+    /// v2 bitmap container: `ceil(dim/8)` presence bytes at 12, then values.
+    V2Bitmap { value: ValueCoding },
+    /// v2 dense container: `dim` coded values at 12; zeros dropped on emit.
+    V2Dense { value: ValueCoding },
+}
+
+/// A fully validated wire buffer, ready to emit its (index, value) runs.
+/// Construction is only through [`Runs::validate`]; see the module docs for
+/// the contract.
+#[derive(Clone, Copy)]
+pub struct Runs<'a> {
+    buf: &'a [u8],
+    dim: u32,
+    layout: Layout,
+}
+
+impl<'a> Runs<'a> {
+    /// Validate a complete wire buffer (either version, any container or
+    /// coding) without allocating or emitting anything. Returns the same
+    /// [`WireError`] `wire::decode_into` would return for the same buffer.
+    pub fn validate(buf: &'a [u8]) -> Result<Runs<'a>, WireError> {
+        if buf.len() < HEADER_BYTES {
+            return Err(WireError::Truncated(buf.len()));
+        }
+        let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+        if magic != MAGIC {
+            return Err(WireError::BadMagic(magic));
+        }
+        let kind = buf[4];
+        if kind == KIND_V2 {
+            return Self::validate_v2(buf);
+        }
+        let dim = u32::from_le_bytes(buf[5..9].try_into().unwrap());
+        match kind {
+            1 => {
+                let body_len = 4 * dim as usize;
+                if buf.get(HEADER_BYTES..HEADER_BYTES + body_len).is_none() {
+                    return Err(WireError::Truncated(buf.len()));
+                }
+                Ok(Runs { buf, dim, layout: Layout::V1Dense })
+            }
+            0 => {
+                let Some(nnz_bytes) = buf.get(HEADER_BYTES..HEADER_BYTES + 4) else {
+                    return Err(WireError::Truncated(buf.len()));
+                };
+                let nnz = u32::from_le_bytes(nnz_bytes.try_into().unwrap()) as usize;
+                let idx_off = HEADER_BYTES + 4;
+                let val_off = idx_off + 4 * nnz;
+                if buf.len() < val_off + 4 * nnz {
+                    return Err(WireError::Truncated(buf.len()));
+                }
+                let mut last: i64 = -1;
+                for c in buf[idx_off..val_off].chunks_exact(4) {
+                    let i = u32::from_le_bytes(c.try_into().unwrap());
+                    if i >= dim {
+                        return Err(WireError::IndexOutOfBounds { idx: i, dim });
+                    }
+                    if (i as i64) <= last {
+                        return Err(WireError::Unsorted);
+                    }
+                    last = i as i64;
+                }
+                Ok(Runs { buf, dim, layout: Layout::V1Sparse { nnz } })
+            }
+            k => Err(WireError::BadKind(k)),
+        }
+    }
+
+    fn validate_v2(buf: &'a [u8]) -> Result<Runs<'a>, WireError> {
+        if buf.len() < V2_HEADER_BYTES {
+            return Err(WireError::Truncated(buf.len()));
+        }
+        let container = buf[5];
+        let index = IndexCoding::from_byte(buf[6])?;
+        let value = ValueCoding::from_byte(buf[7])?;
+        let dim = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+        let mut pos = V2_HEADER_BYTES;
+        match container {
+            CONTAINER_SPARSE => {
+                let Some(nnz_bytes) = buf.get(pos..pos + 4) else {
+                    return Err(WireError::Truncated(buf.len()));
+                };
+                let nnz = u32::from_le_bytes(nnz_bytes.try_into().unwrap()) as usize;
+                pos += 4;
+                let idx_min = match index {
+                    IndexCoding::Raw => 4 * nnz,
+                    IndexCoding::Varint => nnz,
+                };
+                let vb = codec::value_stream_bytes(value, nnz);
+                if buf.len() < pos + idx_min + vb {
+                    return Err(WireError::Truncated(buf.len()));
+                }
+                match index {
+                    IndexCoding::Raw => {
+                        let end = pos + 4 * nnz;
+                        let mut last: i64 = -1;
+                        for c in buf[pos..end].chunks_exact(4) {
+                            let i = u32::from_le_bytes(c.try_into().unwrap());
+                            if i >= dim {
+                                return Err(WireError::IndexOutOfBounds { idx: i, dim });
+                            }
+                            if (i as i64) <= last {
+                                return Err(WireError::Unsorted);
+                            }
+                            last = i as i64;
+                        }
+                        pos = end;
+                    }
+                    IndexCoding::Varint => {
+                        let mut acc = 0u64;
+                        for slot in 0..nnz {
+                            let gap = codec::read_varint(buf, &mut pos)? as u64;
+                            if slot == 0 {
+                                acc = gap;
+                            } else {
+                                if gap == 0 {
+                                    return Err(WireError::Unsorted);
+                                }
+                                acc += gap;
+                            }
+                            if acc >= dim as u64 {
+                                let idx = acc.min(u32::MAX as u64) as u32;
+                                return Err(WireError::IndexOutOfBounds { idx, dim });
+                            }
+                        }
+                        if buf.len() < pos + vb {
+                            return Err(WireError::Truncated(buf.len()));
+                        }
+                    }
+                }
+                let layout = Layout::V2Sparse { nnz, index, value, val_off: pos };
+                Ok(Runs { buf, dim, layout })
+            }
+            CONTAINER_BITMAP => {
+                let bm_len = (dim as usize).div_ceil(8);
+                let Some(bm) = buf.get(pos..pos + bm_len) else {
+                    return Err(WireError::Truncated(buf.len()));
+                };
+                if dim % 8 != 0 {
+                    let mask = 0xFFu8 << (dim % 8); // bits at positions ≥ dim
+                    if bm[bm_len - 1] & mask != 0 {
+                        return Err(WireError::BadBitmap);
+                    }
+                }
+                let nnz: usize = bm.iter().map(|b| b.count_ones() as usize).sum();
+                let vb = codec::value_stream_bytes(value, nnz);
+                if buf.len() < pos + bm_len + vb {
+                    return Err(WireError::Truncated(buf.len()));
+                }
+                Ok(Runs { buf, dim, layout: Layout::V2Bitmap { value } })
+            }
+            CONTAINER_DENSE => {
+                let need = codec::value_stream_bytes(value, dim as usize);
+                if buf.get(pos..pos + need).is_none() {
+                    return Err(WireError::Truncated(buf.len()));
+                }
+                Ok(Runs { buf, dim, layout: Layout::V2Dense { value } })
+            }
+            c => Err(WireError::BadContainer(c)),
+        }
+    }
+
+    /// Model dimension declared by the buffer's header.
+    pub fn dim(&self) -> usize {
+        self.dim as usize
+    }
+
+    /// Emit every (index, value) run in ascending-coordinate order —
+    /// exactly the pairs `wire::decode_into` would have produced, computed
+    /// by the same expressions. Infallible: validation already vetted the
+    /// whole buffer.
+    pub fn for_each(&self, mut f: impl FnMut(u32, f32)) {
+        match self.layout {
+            Layout::V1Sparse { nnz } => {
+                let idx_off = HEADER_BYTES + 4;
+                let val_off = idx_off + 4 * nnz;
+                let idx = buf_u32s(&self.buf[idx_off..val_off]);
+                let val = &self.buf[val_off..val_off + 4 * nnz];
+                for (i, c) in idx.zip(val.chunks_exact(4)) {
+                    f(i, f32::from_le_bytes(c.try_into().unwrap()));
+                }
+            }
+            Layout::V1Dense => {
+                let body = &self.buf[HEADER_BYTES..HEADER_BYTES + 4 * self.dim as usize];
+                for (i, c) in body.chunks_exact(4).enumerate() {
+                    let v = f32::from_le_bytes(c.try_into().unwrap());
+                    if v != 0.0 {
+                        f(i as u32, v);
+                    }
+                }
+            }
+            Layout::V2Sparse { nnz, index, value, val_off } => {
+                let mut vals = ValueCursor::new(&self.buf[val_off..], value);
+                match index {
+                    IndexCoding::Raw => {
+                        let idx_off = V2_HEADER_BYTES + 4;
+                        for i in buf_u32s(&self.buf[idx_off..idx_off + 4 * nnz]) {
+                            f(i, vals.next());
+                        }
+                    }
+                    IndexCoding::Varint => {
+                        let mut pos = V2_HEADER_BYTES + 4;
+                        let mut acc = 0u64;
+                        for slot in 0..nnz {
+                            // the index stream was fully validated; a
+                            // malformed varint here is unreachable
+                            let gap = codec::read_varint(self.buf, &mut pos)
+                                .expect("validated varint stream") as u64;
+                            if slot == 0 {
+                                acc = gap;
+                            } else {
+                                acc += gap;
+                            }
+                            f(acc as u32, vals.next());
+                        }
+                    }
+                }
+            }
+            Layout::V2Bitmap { value } => {
+                let bm_len = (self.dim as usize).div_ceil(8);
+                let bm = &self.buf[V2_HEADER_BYTES..V2_HEADER_BYTES + bm_len];
+                let mut vals = ValueCursor::new(&self.buf[V2_HEADER_BYTES + bm_len..], value);
+                for (byte_i, &b) in bm.iter().enumerate() {
+                    let mut bits = b;
+                    while bits != 0 {
+                        let bit = bits.trailing_zeros() as usize;
+                        f((byte_i * 8 + bit) as u32, vals.next());
+                        bits &= bits - 1;
+                    }
+                }
+            }
+            Layout::V2Dense { value } => {
+                let n = self.dim as usize;
+                let body = &self.buf[V2_HEADER_BYTES..];
+                match value {
+                    ValueCoding::F32 => {
+                        for (i, c) in body.chunks_exact(4).take(n).enumerate() {
+                            let v = f32::from_le_bytes(c.try_into().unwrap());
+                            if v != 0.0 {
+                                f(i as u32, v);
+                            }
+                        }
+                    }
+                    ValueCoding::F16 => {
+                        for (i, c) in body.chunks_exact(2).take(n).enumerate() {
+                            let v =
+                                codec::f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap()));
+                            if v != 0.0 {
+                                f(i as u32, v);
+                            }
+                        }
+                    }
+                    ValueCoding::Q8 => {
+                        // mirror the decoder exactly: the keep test is on
+                        // the quantised byte and the block scale, not the
+                        // product (an adversarial NaN scale must behave
+                        // identically on both paths)
+                        let mut off = 0usize;
+                        let mut idx = 0usize;
+                        while idx < n {
+                            let take = (n - idx).min(Q8_BLOCK);
+                            let scale =
+                                f32::from_le_bytes(body[off..off + 4].try_into().unwrap());
+                            off += 4;
+                            for (j, &b) in body[off..off + take].iter().enumerate() {
+                                let q = b as i8;
+                                if q != 0 && scale != 0.0 {
+                                    f((idx + j) as u32, q as f32 * scale);
+                                }
+                            }
+                            off += take;
+                            idx += take;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Little-endian u32 iterator over a validated 4-byte-aligned slice.
+fn buf_u32s(body: &[u8]) -> impl Iterator<Item = u32> + '_ {
+    body.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+}
+
+/// Sequential reader over a validated value stream — one `next()` per
+/// emitted run, computing exactly the decoder's value expressions
+/// (`f32::from_le_bytes`, `f16_bits_to_f32`, `(b as i8) as f32 * scale`).
+struct ValueCursor<'a> {
+    body: &'a [u8],
+    pos: usize,
+    coding: ValueCoding,
+    /// q8: values left in the current block before the next scale prefix
+    block_left: usize,
+    scale: f32,
+}
+
+impl<'a> ValueCursor<'a> {
+    fn new(body: &'a [u8], coding: ValueCoding) -> ValueCursor<'a> {
+        ValueCursor { body, pos: 0, coding, block_left: 0, scale: 0.0 }
+    }
+
+    #[inline]
+    fn next(&mut self) -> f32 {
+        match self.coding {
+            ValueCoding::F32 => {
+                let v = f32::from_le_bytes(self.body[self.pos..self.pos + 4].try_into().unwrap());
+                self.pos += 4;
+                v
+            }
+            ValueCoding::F16 => {
+                let h = u16::from_le_bytes(self.body[self.pos..self.pos + 2].try_into().unwrap());
+                self.pos += 2;
+                codec::f16_bits_to_f32(h)
+            }
+            ValueCoding::Q8 => {
+                if self.block_left == 0 {
+                    self.scale = f32::from_le_bytes(
+                        self.body[self.pos..self.pos + 4].try_into().unwrap(),
+                    );
+                    self.pos += 4;
+                    self.block_left = Q8_BLOCK;
+                }
+                let b = self.body[self.pos];
+                self.pos += 1;
+                self.block_left -= 1;
+                (b as i8) as f32 * self.scale
+            }
+        }
+    }
+}
+
+/// Chunked `Reader` source: drain `r` to end-of-stream into `scratch`
+/// (cleared, capacity kept across calls) reading fixed-size chunks, so an
+/// upload payload delivered incrementally — one frame, one fragment, or one
+/// byte at a time — lands in a single reusable buffer ready for
+/// [`Runs::validate`]. Returns the payload length.
+pub fn read_payload<R: std::io::Read>(r: &mut R, scratch: &mut Vec<u8>) -> std::io::Result<usize> {
+    scratch.clear();
+    let mut chunk = [0u8; 4096];
+    loop {
+        match r.read(&mut chunk) {
+            Ok(0) => return Ok(scratch.len()),
+            Ok(n) => scratch.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::codec::CodecParams;
+    use crate::sparse::vector::SparseVec;
+    use crate::sparse::wire;
+    use crate::util::rng::Rng;
+
+    fn collect(runs: &Runs<'_>) -> SparseVec {
+        let mut out = SparseVec::empty(runs.dim());
+        runs.for_each(|i, v| {
+            out.indices.push(i);
+            out.values.push(v);
+        });
+        out
+    }
+
+    fn rand_support(rng: &mut Rng, dim: usize, nnz: usize) -> SparseVec {
+        let mut ids: Vec<u32> = (0..dim as u32).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(nnz);
+        ids.sort_unstable();
+        let values: Vec<f32> = ids.iter().map(|_| rng.normal()).collect();
+        SparseVec::from_sorted(dim, ids, values)
+    }
+
+    #[test]
+    fn runs_match_decode_across_every_mode_and_density() {
+        let mut rng = Rng::new(23);
+        let mut buf = Vec::new();
+        let mut back = SparseVec::empty(0);
+        for &dim in &[1usize, 8, 100, 1000, 4096] {
+            for &frac in &[0.0f64, 0.05, 0.3, 0.8, 1.0] {
+                let nnz = ((dim as f64 * frac) as usize).min(dim);
+                let sv = rand_support(&mut rng, dim, nnz);
+                for index in [IndexCoding::Raw, IndexCoding::Varint] {
+                    for value in [ValueCoding::F32, ValueCoding::F16, ValueCoding::Q8] {
+                        let p = CodecParams { index, value };
+                        wire::encode_with(&sv, &mut buf, p);
+                        wire::decode_into(&buf, &mut back).unwrap();
+                        let runs = Runs::validate(&buf).unwrap();
+                        let got = collect(&runs);
+                        assert_eq!(got.dim, back.dim, "{p:?} dim {dim} frac {frac}");
+                        assert_eq!(got.indices, back.indices, "{p:?} dim {dim} frac {frac}");
+                        let a: Vec<u32> = got.values.iter().map(|v| v.to_bits()).collect();
+                        let b: Vec<u32> = back.values.iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(a, b, "{p:?} dim {dim} frac {frac}: values must be bit-equal");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_every_strict_prefix() {
+        let mut rng = Rng::new(29);
+        let sv = rand_support(&mut rng, 200, 40);
+        for (index, value) in [
+            (IndexCoding::Raw, ValueCoding::F32),
+            (IndexCoding::Varint, ValueCoding::F16),
+            (IndexCoding::Varint, ValueCoding::Q8),
+        ] {
+            let mut buf = Vec::new();
+            wire::encode_with(&sv, &mut buf, CodecParams { index, value });
+            for cut in 0..buf.len() {
+                assert!(Runs::validate(&buf[..cut]).is_err(), "{index:?} {value:?} cut {cut}");
+            }
+            assert!(Runs::validate(&buf).is_ok());
+        }
+    }
+
+    #[test]
+    fn reader_source_survives_one_byte_fragmentation() {
+        let sv = SparseVec::new(64, vec![(3, 1.5), (40, -2.0), (63, 0.25)]);
+        let buf = wire::encode(&sv);
+        struct OneByte<'a>(&'a [u8], usize);
+        impl std::io::Read for OneByte<'_> {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                if out.is_empty() || self.1 >= self.0.len() {
+                    return Ok(0);
+                }
+                out[0] = self.0[self.1];
+                self.1 += 1;
+                Ok(1)
+            }
+        }
+        let mut scratch = Vec::new();
+        let n = read_payload(&mut OneByte(&buf, 0), &mut scratch).unwrap();
+        assert_eq!(n, buf.len());
+        assert_eq!(scratch, buf);
+        let runs = Runs::validate(&scratch).unwrap();
+        assert_eq!(collect(&runs), sv);
+    }
+}

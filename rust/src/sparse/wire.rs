@@ -26,7 +26,7 @@ use super::codec::{self, CodecParams};
 use super::vector::SparseVec;
 
 pub const MAGIC: u32 = 0x4647_4D46;
-const HEADER_BYTES: usize = 4 + 1 + 4;
+pub(crate) const HEADER_BYTES: usize = 4 + 1 + 4;
 
 #[derive(Debug, thiserror::Error)]
 pub enum WireError {

@@ -67,8 +67,12 @@ pub struct ScenarioResult {
 #[derive(Clone, Debug)]
 pub struct VerifyReport {
     pub scale: &'static str,
-    /// total runs executed (scenarios × worker counts)
+    /// total runs executed (scenarios × worker counts, plus one
+    /// streamed-ingest run per scenario)
     pub runs: usize,
+    /// streamed-ingest runs folded into the cross-worker digest gate (one
+    /// per scenario — proves streamed ≡ materialized across the matrix)
+    pub streamed_runs: usize,
     pub scenarios: Vec<ScenarioResult>,
     /// one-off codec self-check violations (q8 round-trip contract)
     pub codec_selfcheck: Vec<String>,
@@ -123,6 +127,7 @@ impl VerifyReport {
             ("schema", Json::num(1.0)),
             ("scale", Json::str(self.scale)),
             ("runs", Json::num(self.runs as f64)),
+            ("streamed_runs", Json::num(self.streamed_runs as f64)),
             ("scenarios", Json::num(self.scenarios.len() as f64)),
             ("chaos_axis", chaos_axis),
             ("invariant_failures", Json::num(self.invariant_failures() as f64)),
@@ -148,10 +153,11 @@ impl VerifyReport {
     /// Human summary for the CLI.
     pub fn render(&self) -> String {
         let mut out = format!(
-            "verify[{}]: {} scenarios x {} worker counts = {} runs\n",
+            "verify[{}]: {} scenarios x {} worker counts (+{} streamed-ingest) = {} runs\n",
             self.scale,
             self.scenarios.len(),
             scenario::WORKERS.len(),
+            self.streamed_runs,
             self.runs
         );
         let inv = self.invariant_failures();
@@ -255,9 +261,24 @@ pub fn default_golden_path() -> PathBuf {
 /// mass-conservation ledger installed; returns the trajectory digest and
 /// every invariant violation observed.
 pub fn run_scenario(s: &Scenario, workers: usize, rounds: usize) -> Result<(u64, Vec<String>)> {
+    run_scenario_with(s, workers, rounds, false)
+}
+
+/// [`run_scenario`] with the server-side ingest path selectable: `streamed`
+/// folds accepted uploads straight from their wire bytes through the
+/// codec-v2 pull-decoder. A streamed run must reproduce the materialized
+/// run's trajectory digest bit-for-bit — `run_verify` pits one streamed run
+/// against the worker matrix per scenario to prove exactly that.
+pub fn run_scenario_with(
+    s: &Scenario,
+    workers: usize,
+    rounds: usize,
+    streamed: bool,
+) -> Result<(u64, Vec<String>)> {
     let VerifyFixture { shards, network, mut engine } =
         verify_fixture(scenario::FIXTURE_CLIENTS, scenario::FIXTURE_SEED);
-    let cfg = s.fl_config(workers, rounds);
+    let mut cfg = s.fl_config(workers, rounds);
+    cfg.streamed_ingest = streamed;
     let staleness = cfg.sim.staleness;
     let dim = engine.param_count();
     let mut run = FlRun::new(&engine, shards, Vec::new(), network, cfg);
@@ -324,6 +345,15 @@ pub fn run_verify(opts: &VerifyOptions) -> Result<VerifyReport> {
             worker_digests.push((wname, d));
             violations.extend(v.into_iter().map(|m| format!("[{wname}] {m}")));
         }
+        // one streamed-ingest run per scenario rides the same cross-worker
+        // digest gate: streamed and materialized ingest must agree
+        // bit-for-bit on every point of the matrix
+        {
+            let (d, v) = run_scenario_with(&s, 1, rounds, true)?;
+            runs += 1;
+            worker_digests.push(("w1+streamed", d));
+            violations.extend(v.into_iter().map(|m| format!("[w1+streamed] {m}")));
+        }
         let reference = worker_digests[0].1;
         for &(wname, d) in &worker_digests[1..] {
             if d != reference {
@@ -384,6 +414,7 @@ pub fn run_verify(opts: &VerifyOptions) -> Result<VerifyReport> {
     let report = VerifyReport {
         scale: scale_key,
         runs,
+        streamed_runs: Scenario::all().len(),
         scenarios: results,
         codec_selfcheck,
         registry_blessed,

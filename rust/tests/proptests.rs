@@ -11,6 +11,7 @@ use fedgmf::compress::{
 use fedgmf::data::partition::{emd_of_partition, partition_by_emd};
 use fedgmf::sparse::codec;
 use fedgmf::sparse::merge::Aggregator;
+use fedgmf::sparse::stream;
 use fedgmf::sparse::topk;
 use fedgmf::sparse::vector::SparseVec;
 use fedgmf::sparse::wire;
@@ -845,6 +846,149 @@ fn prop_framing_truncation_at_every_boundary_rejected() {
         }
         // the full frame still parses after all the rejected prefixes
         assert_eq!(framing::read_msg(&mut &wire_bytes[..]).unwrap(), msg, "seed {seed}");
+    }
+}
+
+// ----------------------------------------------- streamed ingest (Runs)
+
+/// Every index × value coding the v2 codec can emit, plus the Raw/F32 pair
+/// that doubles as the v1-identical shape.
+fn all_codings() -> [(codec::IndexCoding, codec::ValueCoding); 6] {
+    use codec::{IndexCoding::*, ValueCoding::*};
+    [(Raw, F32), (Raw, F16), (Raw, Q8), (Varint, F32), (Varint, F16), (Varint, Q8)]
+}
+
+#[test]
+fn prop_fold_stream_is_bit_identical_to_decode_then_add() {
+    // the tentpole contract: folding a validated wire buffer straight into
+    // the aggregator must match decode-then-add bit for bit, for any valid
+    // vector under every index/value coding (the encoder picks the
+    // container, so sparse, bitmap and dense layouts are all exercised as
+    // density varies)
+    let combos = all_codings();
+    let mut buf = Vec::new();
+    let mut echo = SparseVec::empty(0);
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let sv = rand_sparse(&mut rng, 500);
+        let (index, value) = combos[rng.below(combos.len())];
+        wire::encode_with(&sv, &mut buf, codec::CodecParams { index, value });
+
+        wire::decode_into(&buf, &mut echo).unwrap();
+        let mut decoded = Aggregator::new(sv.dim);
+        decoded.add(&echo);
+
+        let runs = stream::Runs::validate(&buf).unwrap();
+        let mut streamed = Aggregator::new(sv.dim);
+        let folded = streamed.fold_stream(&runs, 1.0);
+        assert_eq!(folded, echo.nnz(), "seed {seed}: fold must emit every decoded run");
+
+        let (a, b) = (decoded.finish_mean(1), streamed.finish_mean(1));
+        assert_eq!(a.indices, b.indices, "seed {seed} {index:?}/{value:?}");
+        let bits = |v: &SparseVec| v.values.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&a), bits(&b), "seed {seed}: folded values must be bit-identical");
+    }
+}
+
+#[test]
+fn prop_runs_validate_verdict_agrees_with_decode_on_corrupt_buffers() {
+    // pull-decoder validation must accept exactly the buffers decode_into
+    // accepts: flip a few random bits in a valid buffer and demand the two
+    // paths reach the same verdict — and when the mutant survives, that the
+    // fold still emits exactly the decoded run count
+    let combos = all_codings();
+    let mut buf = Vec::new();
+    let mut out = SparseVec::empty(0);
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let sv = rand_sparse(&mut rng, 400);
+        let (index, value) = combos[rng.below(combos.len())];
+        wire::encode_with(&sv, &mut buf, codec::CodecParams { index, value });
+        let mut bad = buf.clone();
+        for _ in 0..1 + rng.below(3) {
+            let at = rng.below(bad.len());
+            bad[at] ^= 1 << rng.below(8);
+        }
+        let decode_ok = wire::decode_into(&bad, &mut out).is_ok();
+        match stream::Runs::validate(&bad) {
+            Ok(runs) => {
+                assert!(decode_ok, "seed {seed}: validate accepted a buffer decode rejects");
+                let mut agg = Aggregator::new(runs.dim());
+                let folded = agg.fold_stream(&runs, 1.0);
+                assert_eq!(folded, out.nnz(), "seed {seed}: accepted mutant must fold fully");
+            }
+            Err(_) => {
+                assert!(!decode_ok, "seed {seed}: validate rejected a buffer decode accepts");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fold_stream_truncation_rejected_without_partial_fold() {
+    // partial-fold atomicity: a buffer cut at ANY byte boundary must fail
+    // validation, so no run is ever emitted from it — the aggregator that
+    // sat through every rejected prefix then folds the intact buffer to the
+    // exact decode-then-add result, proving nothing leaked in
+    let combos = all_codings();
+    let mut echo = SparseVec::empty(0);
+    for seed in seeds().take(12) {
+        let mut rng = Rng::new(seed);
+        let sv = rand_sparse(&mut rng, 120);
+        let (index, value) = combos[rng.below(combos.len())];
+        let mut buf = Vec::new();
+        wire::encode_with(&sv, &mut buf, codec::CodecParams { index, value });
+
+        let mut agg = Aggregator::new(sv.dim);
+        for cut in 0..buf.len() {
+            assert!(
+                stream::Runs::validate(&buf[..cut]).is_err(),
+                "seed {seed} {index:?}/{value:?} cut {cut}: strict prefix must be rejected"
+            );
+        }
+        let runs = stream::Runs::validate(&buf).unwrap();
+        agg.fold_stream(&runs, 1.0);
+
+        wire::decode_into(&buf, &mut echo).unwrap();
+        let mut fresh = Aggregator::new(sv.dim);
+        fresh.add(&echo);
+        let (a, b) = (agg.finish_mean(1), fresh.finish_mean(1));
+        assert_eq!(a.indices, b.indices, "seed {seed}");
+        assert_eq!(
+            a.values.iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+            b.values.iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+            "seed {seed}: prefix rejections must leave no trace in the accumulator"
+        );
+    }
+}
+
+#[test]
+fn prop_read_payload_one_byte_fragmentation_then_fold_matches_direct() {
+    // chunked Reader source: a payload delivered one byte per read() call
+    // must reassemble byte-exactly, validate, and fold to the same result
+    // as the buffer handed over whole
+    let combos = all_codings();
+    let mut buf = Vec::new();
+    let mut scratch = Vec::new();
+    let mut echo = SparseVec::empty(0);
+    for seed in seeds().take(20) {
+        let mut rng = Rng::new(seed);
+        let sv = rand_sparse(&mut rng, 200);
+        let (index, value) = combos[rng.below(combos.len())];
+        wire::encode_with(&sv, &mut buf, codec::CodecParams { index, value });
+
+        let mut r = OneByteReader { data: &buf, pos: 0 };
+        let n = stream::read_payload(&mut r, &mut scratch).unwrap();
+        assert_eq!(n, buf.len(), "seed {seed}");
+        assert_eq!(scratch, buf, "seed {seed}: chunked reassembly must be byte-exact");
+
+        let runs = stream::Runs::validate(&scratch).unwrap();
+        let mut streamed = Aggregator::new(sv.dim);
+        streamed.fold_stream(&runs, 1.0);
+        wire::decode_into(&buf, &mut echo).unwrap();
+        let mut direct = Aggregator::new(sv.dim);
+        direct.add(&echo);
+        assert_eq!(streamed.finish_mean(1), direct.finish_mean(1), "seed {seed}");
     }
 }
 

@@ -36,7 +36,10 @@ fn quick_matrix_passes_invariants_and_golden_gate() {
     // the acceptance bar: the matrix is the full cross-product and at
     // least 200 scenario runs deep
     assert_eq!(report.scenarios.len(), Scenario::all().len());
-    assert_eq!(report.runs, Scenario::all().len() * WORKERS.len());
+    // every scenario runs at each worker count plus one streamed-ingest
+    // run, all folded into the same cross-run digest gate
+    assert_eq!(report.runs, Scenario::all().len() * (WORKERS.len() + 1));
+    assert_eq!(report.streamed_runs, Scenario::all().len());
     assert!(report.runs >= 200, "matrix shrank below the 200-run floor: {}", report.runs);
     // every invariant ledger must be clean in every scenario
     for s in &report.scenarios {
@@ -54,6 +57,7 @@ fn quick_matrix_passes_invariants_and_golden_gate() {
     let j = fedgmf::util::json::Json::parse(&std::fs::read_to_string(&report_path).unwrap())
         .unwrap();
     assert_eq!(j.get("runs").unwrap().as_usize(), Some(report.runs));
+    assert_eq!(j.get("streamed_runs").unwrap().as_usize(), Some(report.streamed_runs));
     assert_eq!(j.get("invariant_failures").unwrap().as_usize(), Some(0));
     assert_eq!(
         j.get("digests").unwrap().as_obj().unwrap().len(),
@@ -71,6 +75,30 @@ fn quick_matrix_passes_invariants_and_golden_gate() {
         assert!(names.contains(&tail), "{}: key must end in a chaos axis value", s.key);
     }
     let _ = std::fs::remove_file(&report_path);
+}
+
+#[test]
+fn streamed_ingest_matches_materialized_digest_under_chaos_with_mass_ledger() {
+    // satellite check for the streamed-ingest path where it is hardest:
+    // chaos-axis scenarios with the MassLedger armed. run_scenario_with
+    // installs the ledger either way, so a clean violation list here means
+    // the conservation audit held with uploads folded straight from wire
+    // bytes — and the digest must equal the materialized run's bit-for-bit.
+    use fedgmf::testkit::run_scenario_with;
+    let mut covered = 0;
+    for s in Scenario::all() {
+        let tail = s.key().rsplit('/').next().unwrap().to_string();
+        if !matches!(tail.as_str(), "dup" | "drop" | "truncate") || covered >= 3 {
+            continue;
+        }
+        covered += 1;
+        let (dm, vm) = run_scenario_with(&s, 1, 2, false).unwrap();
+        let (ds, vs) = run_scenario_with(&s, 1, 2, true).unwrap();
+        assert!(vm.is_empty(), "{} materialized: {:?}", s.key(), vm);
+        assert!(vs.is_empty(), "{} streamed: {:?}", s.key(), vs);
+        assert_eq!(dm, ds, "{}: streamed digest diverged", s.key());
+    }
+    assert_eq!(covered, 3, "chaos-axis scenarios must be enumerable");
 }
 
 #[test]
