@@ -16,6 +16,8 @@
 //!   ingest/<mode>                 — server fold per upload: materialized
 //!                                   decode+add vs the streamed pull-decoder
 //!   momentum/accumulate           — client M update
+//!   fleet/<n>                     — VirtualStore resident bytes/client at
+//!                                   10k/100k/1M clients with a 1k cohort
 //!   round/e2e                     — full FlRun::step_round, 20 clients ×
 //!                                   P≈1M, sequential vs parallel workers
 //!
@@ -173,17 +175,18 @@ fn main() {
             .collect();
         let refs: Vec<&SparseVec> = grads.iter().collect();
         let mut agg = Aggregator::new(p);
+        let mut out_sv = SparseVec::empty(p);
         bench(&mut results, &format!("aggregate/20c     {label}"), it(15), || {
             for g in &grads {
-                agg.add(g);
+                agg.add(&[g], 1.0, 1);
             }
-            std::hint::black_box(agg.finish_mean(20));
+            agg.finish_into(20, &mut out_sv, 1);
+            std::hint::black_box(&out_sv);
         });
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        let mut out_sv = SparseVec::empty(p);
         bench(&mut results, &format!("aggregate/20c-sharded {label}"), it(15), || {
-            agg.add_all(&refs, cores);
-            agg.finish_mean_into(20, &mut out_sv);
+            agg.add(&refs, 1.0, cores);
+            agg.finish_into(20, &mut out_sv, cores);
             std::hint::black_box(&out_sv);
         });
 
@@ -334,7 +337,7 @@ fn main() {
                 let mut m_stats = Vec::new();
                 bench(&mut m_stats, &format!("ingest/materialized {name} P={p}"), it(20), || {
                     wire::decode_into(&buf, &mut echo).unwrap();
-                    agg.add(&echo);
+                    agg.add(&[&echo], 1.0, 1);
                     std::hint::black_box(&agg);
                 });
                 let mut s_stats = Vec::new();
@@ -376,6 +379,113 @@ fn main() {
         rows
     };
 
+    // ---- fleet memory: the virtualized-store acceptance bar. Build
+    // longtail fleets at 10k/100k/1M clients, checkout + compress + checkin
+    // one 1k cohort, and report resident client-state bytes per client
+    // against the dense-equivalent footprint. Shards are zero-sized stubs:
+    // `resident_state_bytes` deliberately excludes data payloads, so the
+    // numbers isolate the per-client state planes.
+    println!("== fleet memory (VirtualStore, 1k cohort, dim 4096) ==");
+    let fleet_rows = {
+        use fedgmf::coordinator::store::{ClientStore, DenseStore, VirtualStore};
+        use fedgmf::data::dataset::Batch;
+        struct StubShard;
+        impl Dataset for StubShard {
+            fn len(&self) -> usize {
+                0
+            }
+            fn label_histogram(&self) -> Vec<usize> {
+                Vec::new()
+            }
+            fn sample_batch(&self, _batch: usize, _rng: &mut Rng) -> Batch {
+                unreachable!("fleet-memory bench never trains")
+            }
+            fn eval_batches(&self, _batch: usize) -> Vec<Batch> {
+                Vec::new()
+            }
+        }
+        let dim = 4096usize;
+        let k = dim / 10;
+        let cohort_n = 1000usize;
+        let ccfg = CompressConfig::default();
+        let root = Rng::new(77);
+        let codec = CodecParams::default();
+        let stub_shards = |n: usize| -> Vec<Box<dyn Dataset + Send>> {
+            (0..n).map(|_| Box::new(StubShard) as Box<dyn Dataset + Send>).collect()
+        };
+        // dense-equivalent bytes per client, measured on a small fleet of
+        // the same scheme and dim (a dense 1M-client fleet would not fit —
+        // that is the point)
+        let mut probe =
+            DenseStore::new(stub_shards(8), &root, dim, CompressorKind::DgcWgmf, &ccfg, codec);
+        let dense_per_client = probe.resident_state_bytes() / probe.fleet_len();
+        let fleets: &[usize] = &[10_000, 100_000, 1_000_000];
+        let grad = randvec(dim, 88);
+        let mut rows: Vec<Json> = Vec::new();
+        let mut measured: Vec<(usize, usize)> = Vec::new();
+        for &fleet in fleets {
+            let t0 = Instant::now();
+            let mut store = VirtualStore::new(
+                stub_shards(fleet),
+                &root,
+                dim,
+                CompressorKind::DgcWgmf,
+                &ccfg,
+                codec,
+            );
+            // an evenly-strided sorted cohort — a longtail spread, not the
+            // first 1k ids
+            let stride = fleet / cohort_n;
+            let cohort: Vec<usize> = (0..cohort_n).map(|i| i * stride).collect();
+            store.checkout(&cohort);
+            for c in store.cohort_mut() {
+                // one real compression step so eviction gathers live
+                // residual planes, not all-zero ones
+                c.compressor.compress_into(&grad, k, 0, &mut c.upload);
+            }
+            store.checkin();
+            let resident = store.resident_state_bytes();
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            let per_client = resident as f64 / fleet as f64;
+            let ratio = dense_per_client as f64 / per_client;
+            println!(
+                "fleet/{fleet:>9} clients  resident {:>8.1} MB  {per_client:>8.1} B/client  \
+                 dense-equiv {dense_per_client} B/client ({ratio:>6.1}x)  [{ms:.0} ms]",
+                resident as f64 / 1e6
+            );
+            rows.push(Json::obj(vec![
+                ("fleet", Json::num(fleet as f64)),
+                ("cohort", Json::num(cohort_n as f64)),
+                ("dim", Json::num(dim as f64)),
+                ("resident_bytes", Json::num(resident as f64)),
+                ("bytes_per_client", Json::num(per_client)),
+                ("dense_equiv_bytes_per_client", Json::num(dense_per_client as f64)),
+                ("virtualization_ratio", Json::num(ratio)),
+                ("build_round_ms", Json::num(ms)),
+            ]));
+            measured.push((fleet, resident));
+        }
+        // the acceptance bar, asserted here so `cargo bench` itself fails
+        // if virtualization regresses (the CI gate re-checks the JSON):
+        // growing the fleet past the cohort must cost only the at-rest
+        // record, and the 1M-client fleet must sit far below dense
+        let (f_hi, r_hi) = measured[measured.len() - 1];
+        let (f_lo, r_lo) = measured[measured.len() - 2];
+        let marginal = (r_hi - r_lo) as f64 / (f_hi - f_lo) as f64;
+        assert!(
+            marginal <= 512.0,
+            "per-client marginal cost {marginal:.0} B exceeds the at-rest record bound"
+        );
+        let per_client_hi = r_hi as f64 / f_hi as f64;
+        assert!(
+            per_client_hi * 20.0 <= dense_per_client as f64,
+            "1M-client fleet must stay far below dense: {per_client_hi:.0} B/client \
+             vs dense-equiv {dense_per_client} B/client"
+        );
+        println!();
+        rows
+    };
+
     // ---- round-level end-to-end: 20 clients × P≈1M, sequential vs parallel
     // (quick mode shrinks the model and client count to keep CI fast)
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -408,6 +518,7 @@ fn main() {
         ("host_cores", Json::num(cores as f64)),
         ("codec", Json::Arr(codec_rows)),
         ("ingest_throughput", Json::Arr(ingest_rows)),
+        ("fleet_memory", Json::Arr(fleet_rows)),
         (
             "round_e2e",
             Json::obj(vec![

@@ -12,7 +12,7 @@
 //! rate, demonstrating where the wire dense-fallback crossover sits.
 
 use fedgmf::compress::{CompressConfig, Compressor, CompressorKind, TauSchedule};
-use fedgmf::coordinator::server::{BroadcastPolicy, FlServer};
+use fedgmf::coordinator::server::{BroadcastPolicy, FlServer, IngestOpts, UploadSource};
 use fedgmf::coordinator::traffic::{TrafficMeter, TrafficPolicy};
 use fedgmf::sparse::codec::{CodecParams, IndexCoding, ValueCoding};
 use fedgmf::sparse::wire;
@@ -54,7 +54,10 @@ fn round_cost_with(
             let out = comp.compress(&grads[c], k, round);
             wire::encode_with(&out.gradient, &mut buf, codec);
             meter.record_uplink(c, buf.len(), wire::encoded_bytes(&out.gradient));
-            server.receive(&wire::decode(&buf).unwrap());
+            server.ingest(
+                UploadSource::Sparse(&wire::decode(&buf).unwrap()),
+                IngestOpts::new(),
+            );
         }
         let (pl, _ghat) = server.finish_round(clients);
         wire::encode_with(&pl, &mut buf, codec);

@@ -78,6 +78,10 @@ impl Compressor for Dgc {
     fn residual_norm(&self) -> f32 {
         l2_norm(&self.v)
     }
+
+    fn state_planes_mut(&mut self) -> Vec<(&'static str, &mut [f32])> {
+        vec![("u", &mut self.u[..]), ("v", &mut self.v[..])]
+    }
 }
 
 #[cfg(test)]

@@ -99,6 +99,10 @@ impl Compressor for DgcGmf {
     fn residual_norm(&self) -> f32 {
         l2_norm(&self.v)
     }
+
+    fn state_planes_mut(&mut self) -> Vec<(&'static str, &mut [f32])> {
+        vec![("u", &mut self.u[..]), ("v", &mut self.v[..]), ("m", &mut self.m[..])]
+    }
 }
 
 #[cfg(test)]
@@ -195,10 +199,10 @@ mod tests {
                 last_overlap = mean_pairwise_jaccard(&refs);
                 // aggregate
                 let mut agg = crate::sparse::merge::Aggregator::new(dim);
-                for g in &grads {
-                    agg.add(g);
-                }
-                ghat = agg.finish_mean(clients);
+                agg.add(&refs, 1.0, 1);
+                let mut mean = SparseVec::empty(0);
+                agg.finish_into(clients, &mut mean, 1);
+                ghat = mean;
             }
             last_overlap
         };

@@ -100,6 +100,12 @@ impl Compressor for Gmc {
     fn residual_norm(&self) -> f32 {
         l2_norm(&self.v)
     }
+
+    fn state_planes_mut(&mut self) -> Vec<(&'static str, &mut [f32])> {
+        // `u_dummy` stays all-zero by construction (extract only ever clears
+        // it), so only V and the replaced-per-broadcast M persist
+        vec![("v", &mut self.v[..]), ("m", &mut self.m[..])]
+    }
 }
 
 #[cfg(test)]

@@ -158,6 +158,15 @@ pub trait Compressor: Send {
 
     /// Residual (V) L2 norm — over-fitting diagnostic used by Fig. 4 analysis.
     fn residual_norm(&self) -> f32;
+
+    /// The scheme's persistent dense state planes, labelled with the paper's
+    /// names ("u", "v", "m"). These are exactly the buffers that carry
+    /// information across rounds — everything a state store must gather to
+    /// sparse form when a client leaves the round cohort and scatter back on
+    /// its next materialization. Scratch buffers (scores, sort scratch,
+    /// gradient copies) are deliberately excluded: they are overwritten
+    /// before every read, so pooled reuse across clients is safe.
+    fn state_planes_mut(&mut self) -> Vec<(&'static str, &mut [f32])>;
 }
 
 #[cfg(test)]

@@ -21,8 +21,10 @@
 pub mod toml;
 
 use crate::compress::{CompressConfig, CompressorKind, SparsityWarmup, TauSchedule};
+use crate::coordinator::hierarchy::HierarchyConfig;
 use crate::coordinator::round::{FlConfig, LrSchedule};
 use crate::coordinator::sampler::Sampler;
+use crate::coordinator::store::StoreMode;
 use crate::coordinator::traffic::TrafficPolicy;
 use crate::sim::scheduler::{ProfilePreset, SelectionPolicy, SimConfig, StalenessPolicy};
 use crate::sparse::codec::{IndexCoding, ValueCoding, WireCodec};
@@ -139,6 +141,14 @@ pub struct RunConfig {
     /// simulator through [`FlConfig::fault`], everything else only matters
     /// to `fedgmf serve` / `fedgmf client`
     pub transport: TransportConfig,
+    /// fleet-state residency (TOML `run.store` — see `docs/hierarchy.md`):
+    /// `auto` virtualizes whenever a sampler leaves clients idle, `dense`
+    /// forces one resident buffer set per client, `virtual` forces
+    /// sparse-at-rest records with pooled cohort scratch
+    pub store: StoreMode,
+    /// fleet topology (TOML `[hierarchy]` — see `docs/hierarchy.md`); the
+    /// default is the paper's flat hub-and-spoke and is bit-inert
+    pub hierarchy: HierarchyConfig,
 }
 
 /// Read one `[codec]` key through the coding's parser (shared by the
@@ -190,6 +200,8 @@ impl Default for RunConfig {
             sim: SimConfig::default(),
             codec: WireCodec::default(),
             transport: TransportConfig::default(),
+            store: StoreMode::Auto,
+            hierarchy: HierarchyConfig::default(),
         }
     }
 }
@@ -281,6 +293,8 @@ impl RunConfig {
             sim: self.sim,
             codec: self.codec,
             fault: self.transport.fault,
+            store: self.store,
+            hierarchy: self.hierarchy.clone(),
         }
     }
 
@@ -342,6 +356,10 @@ impl RunConfig {
         if let Some(v) = get(doc, "run", "streamed_ingest") {
             cfg.streamed_ingest =
                 v.as_bool().ok_or_else(|| anyhow!("run.streamed_ingest: bool"))?;
+        }
+        if let Some(v) = get(doc, "run", "store") {
+            let s = v.as_str().ok_or_else(|| anyhow!("run.store: string"))?;
+            cfg.store = StoreMode::parse(s).ok_or_else(|| anyhow!("unknown run.store `{s}`"))?;
         }
         read!("data", "clients", clients, as_usize, usize);
         read!("data", "samples_per_client", samples_per_client, as_usize, usize);
@@ -468,6 +486,23 @@ impl RunConfig {
                 cfg.codec.downlink.value = val;
             }
         }
+        // [hierarchy] — fleet topology (see docs/hierarchy.md). The default
+        // (tiers = 1) is the paper's flat hub-and-spoke.
+        {
+            if let Some(v) = get(doc, "hierarchy", "tiers") {
+                cfg.hierarchy.tiers =
+                    v.as_usize().ok_or_else(|| anyhow!("hierarchy.tiers: wrong type"))?;
+            }
+            if let Some(v) = get(doc, "hierarchy", "cohorts_per_edge") {
+                cfg.hierarchy.cohorts_per_edge = v
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("hierarchy.cohorts_per_edge: wrong type"))?;
+            }
+            if let Some(v) = get(doc, "hierarchy", "edge_uplink_bps") {
+                cfg.hierarchy.edge_uplink_bps =
+                    v.as_f64().ok_or_else(|| anyhow!("hierarchy.edge_uplink_bps: wrong type"))?;
+            }
+        }
         // [transport] — service-mode sockets + chaos (see docs/transport.md).
         // `fault` defaults its seed to the run seed so every party that
         // agrees on run.seed agrees on the chaos plan.
@@ -519,6 +554,7 @@ impl RunConfig {
             return Err(anyhow!("cifar EMD max is 1.8 (10 classes), got {}", self.emd));
         }
         self.sim.validate().map_err(|e| anyhow!(e))?;
+        self.hierarchy.validate()?;
         Ok(())
     }
 
@@ -550,6 +586,15 @@ impl RunConfig {
                 " | codec: up={} down={}",
                 self.codec.uplink.describe(),
                 self.codec.downlink.describe()
+            ));
+        }
+        if self.store != StoreMode::Auto {
+            s.push_str(&format!(" | store: {}", self.store.name()));
+        }
+        if self.hierarchy.enabled() {
+            s.push_str(&format!(
+                " | hierarchy: {} tiers, {} cohorts/edge",
+                self.hierarchy.tiers, self.hierarchy.cohorts_per_edge
             ));
         }
         s
@@ -866,6 +911,50 @@ fault = "drop:0.25"
         assert!(cfg.exact_mask_overlap);
         assert!(cfg.fl_config().exact_mask_overlap);
         assert!(RunConfig::from_toml_str("[run]\nexact_mask_overlap = 3\n", &[]).is_err());
+    }
+
+    #[test]
+    fn store_and_hierarchy_from_toml() {
+        // defaults: auto residency, flat topology, both inert
+        let plain = RunConfig::from_toml_str("", &[]).unwrap();
+        assert_eq!(plain.store, StoreMode::Auto);
+        assert!(!plain.hierarchy.enabled());
+        assert!(!plain.describe().contains("store"));
+        assert!(!plain.describe().contains("hierarchy"));
+        let cfg = RunConfig::from_toml_str(
+            r#"
+[run]
+store = "virtual"
+[hierarchy]
+tiers = 2
+cohorts_per_edge = 8
+edge_uplink_bps = 5e7
+"#,
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.store, StoreMode::Virtual);
+        assert_eq!(cfg.hierarchy.tiers, 2);
+        assert_eq!(cfg.hierarchy.cohorts_per_edge, 8);
+        assert!((cfg.hierarchy.edge_uplink_bps - 5e7).abs() < 1e-3);
+        assert!(cfg.hierarchy.enabled());
+        let fc = cfg.fl_config();
+        assert_eq!(fc.store, StoreMode::Virtual);
+        assert_eq!(fc.hierarchy.tiers, 2);
+        assert!(cfg.describe().contains("store: virtual"));
+        assert!(cfg.describe().contains("hierarchy: 2 tiers, 8 cohorts/edge"));
+        // --set override path
+        let ov = RunConfig::from_toml_str(
+            "",
+            &["run.store=\"dense\"".to_string(), "hierarchy.tiers=2".to_string()],
+        )
+        .unwrap();
+        assert_eq!(ov.store, StoreMode::Dense);
+        assert_eq!(ov.hierarchy.tiers, 2);
+        // bad values rejected
+        assert!(RunConfig::from_toml_str("[run]\nstore = \"nope\"\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[hierarchy]\ntiers = 5\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[hierarchy]\ncohorts_per_edge = 0\n", &[]).is_err());
     }
 
     #[test]

@@ -1,0 +1,242 @@
+//! Two-tier edge aggregation: the topology escape hatch from the paper's
+//! hub-and-spoke bottleneck.
+//!
+//! RingFed-style pre-aggregation (PAPERS.md): the round's accepted cohort is
+//! partitioned into contiguous groups, each served by an **edge aggregator**
+//! that merges its members' uploads with the existing [`Aggregator`]
+//! machinery and forwards ONE merged frame to the hub over the backhaul.
+//!
+//! ## Bit-identity contract (`tiers = 1` ≡ `tiers = 2`, byte for byte)
+//!
+//! The hub's numerics never change: it still folds the individual member
+//! uploads in accepted-participant order, exactly as the flat fleet does —
+//! edges are *contiguous slices of that same order*, so re-associating the
+//! fold at the edge boundary would be the only way to change the result,
+//! and we deliberately don't. The edge merge is computed for what the wire
+//! actually carries (tier-1 backhaul bytes, support union), not for what
+//! the hub adds up. Consequence: trajectory digests are identical across
+//! tier counts, and the `tiers` axis in `fedgmf verify` cross-checks that
+//! every run.
+//!
+//! ## What tier 2 buys
+//!
+//! The hub's ingress drops from `cohort` frames to `edges` frames, and the
+//! backhaul frame's support is the *union* of member supports — overlapping
+//! coordinates are carried once instead of once per member. GMF's raised
+//! mask overlap (the paper's whole point) therefore compounds here: the
+//! more the member masks agree, the smaller the union and the cheaper the
+//! backhaul. `edge_uplink_bytes / Σ member_bytes` in the round records
+//! measures exactly that.
+
+use std::ops::Range;
+
+use crate::sparse::codec::CodecParams;
+use crate::sparse::merge::Aggregator;
+use crate::sparse::vector::SparseVec;
+use crate::sparse::wire;
+
+/// `[hierarchy]` config: fleet topology between clients and the hub.
+#[derive(Clone, Debug)]
+pub struct HierarchyConfig {
+    /// Aggregation tiers. `1` = the paper's flat hub-and-spoke (default);
+    /// `2` = edge aggregators pre-merge cohort uploads before the hub.
+    pub tiers: usize,
+    /// How many cohort members each edge aggregator serves (tier 2 only).
+    /// The accepted cohort is split into contiguous groups of this size in
+    /// participant order; the last edge takes the remainder.
+    pub cohorts_per_edge: usize,
+    /// Edge → hub backhaul bandwidth (bits/s), for the non-digested
+    /// backhaul-time diagnostic.
+    pub edge_uplink_bps: f64,
+}
+
+impl Default for HierarchyConfig {
+    fn default() -> Self {
+        HierarchyConfig { tiers: 1, cohorts_per_edge: 32, edge_uplink_bps: 1e8 }
+    }
+}
+
+impl HierarchyConfig {
+    /// Whether an edge tier sits between clients and the hub.
+    pub fn enabled(&self) -> bool {
+        self.tiers >= 2
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !(1..=2).contains(&self.tiers) {
+            anyhow::bail!("hierarchy.tiers must be 1 (flat) or 2 (edge tier), got {}", self.tiers);
+        }
+        if self.cohorts_per_edge == 0 {
+            anyhow::bail!("hierarchy.cohorts_per_edge must be >= 1");
+        }
+        if !(self.edge_uplink_bps > 0.0) {
+            anyhow::bail!("hierarchy.edge_uplink_bps must be > 0");
+        }
+        Ok(())
+    }
+}
+
+/// Partition `accepted` cohort members (already in participant order) into
+/// contiguous per-edge ranges of at most `per_edge` members. Contiguity is
+/// the bit-identity guarantee: concatenating the ranges reproduces the flat
+/// fold order exactly.
+pub fn plan_edges(accepted: usize, per_edge: usize) -> Vec<Range<usize>> {
+    assert!(per_edge >= 1, "per_edge must be >= 1");
+    let mut edges = Vec::with_capacity(accepted.div_ceil(per_edge));
+    let mut lo = 0;
+    while lo < accepted {
+        let hi = (lo + per_edge).min(accepted);
+        edges.push(lo..hi);
+        lo = hi;
+    }
+    edges
+}
+
+/// One round's tier-1 (edge → hub) traffic, summed over all edges.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EdgeRoundStats {
+    /// Edge aggregators active this round (0 when the cohort is empty).
+    pub edges: usize,
+    /// Backhaul bytes actually on the wire (merged frames, uplink codec).
+    pub uplink_bytes: usize,
+    /// The same frames costed at the v1 baseline codec (compression-ratio
+    /// denominator, mirroring the per-client `precodec_bytes`).
+    pub precodec_bytes: usize,
+}
+
+/// Reusable edge-merge scratch: one [`Aggregator`] + frame + wire buffer,
+/// shared by every edge in a round (edges run sequentially in the
+/// simulator; only their *traffic* is modelled as parallel hardware).
+pub struct EdgeMerger {
+    agg: Aggregator,
+    frame: SparseVec,
+    wire_buf: Vec<u8>,
+}
+
+impl EdgeMerger {
+    pub fn new(dim: usize) -> Self {
+        EdgeMerger { agg: Aggregator::new(dim), frame: SparseVec::empty(dim), wire_buf: Vec::new() }
+    }
+
+    /// Merge one edge's member uploads (a contiguous slice of the accepted
+    /// cohort, in participant order) into a single backhaul frame and
+    /// return its wire cost under `codec`. The merged frame is the SUM of
+    /// member uploads over their support union — the hub re-folds the
+    /// members itself for numerics, so this frame only prices the wire.
+    pub fn merge(&mut self, members: &[&SparseVec], codec: CodecParams) -> EdgeRoundStats {
+        if members.is_empty() {
+            return EdgeRoundStats::default();
+        }
+        self.agg.add(members, 1.0, 1);
+        // count = 1: emit the raw sum, not the mean — the backhaul carries
+        // un-normalised mass and the hub normalises once, globally
+        self.agg.finish_into(1, &mut self.frame, 1);
+        wire::encode_with(&self.frame, &mut self.wire_buf, codec);
+        EdgeRoundStats {
+            edges: 1,
+            uplink_bytes: self.wire_buf.len(),
+            precodec_bytes: wire::encoded_bytes(&self.frame),
+        }
+    }
+
+    /// The last merged frame (support union of the edge's members).
+    pub fn frame(&self) -> &SparseVec {
+        &self.frame
+    }
+}
+
+impl EdgeRoundStats {
+    /// Accumulate another edge's stats into this round total.
+    pub fn absorb(&mut self, other: EdgeRoundStats) {
+        self.edges += other.edges;
+        self.uplink_bytes += other.uplink_bytes;
+        self.precodec_bytes += other.precodec_bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_flat_and_valid() {
+        let h = HierarchyConfig::default();
+        assert!(!h.enabled());
+        h.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(HierarchyConfig { tiers: 0, ..Default::default() }.validate().is_err());
+        assert!(HierarchyConfig { tiers: 3, ..Default::default() }.validate().is_err());
+        assert!(
+            HierarchyConfig { cohorts_per_edge: 0, ..Default::default() }.validate().is_err()
+        );
+        assert!(
+            HierarchyConfig { edge_uplink_bps: 0.0, ..Default::default() }.validate().is_err()
+        );
+        HierarchyConfig { tiers: 2, ..Default::default() }.validate().unwrap();
+    }
+
+    #[test]
+    fn edges_partition_the_cohort_contiguously() {
+        let edges = plan_edges(10, 4);
+        assert_eq!(edges, vec![0..4, 4..8, 8..10]);
+        // concatenation reproduces the flat participant order exactly
+        let flat: Vec<usize> = edges.iter().flat_map(|r| r.clone()).collect();
+        assert_eq!(flat, (0..10).collect::<Vec<_>>());
+        assert!(plan_edges(0, 4).is_empty());
+        assert_eq!(plan_edges(3, 8), vec![0..3]);
+    }
+
+    #[test]
+    fn merged_frame_is_support_union_sum() {
+        let dim = 8;
+        let a = SparseVec::new(dim, vec![(1, 2.0), (3, 1.0)]);
+        let b = SparseVec::new(dim, vec![(3, 1.0), (6, -4.0)]);
+        let mut m = EdgeMerger::new(dim);
+        let stats = m.merge(&[&a, &b], CodecParams::default());
+        assert_eq!(m.frame().indices, vec![1, 3, 6]);
+        assert_eq!(m.frame().values, vec![2.0, 2.0, -4.0], "sum, not mean");
+        assert_eq!(stats.edges, 1);
+        assert!(stats.uplink_bytes > 0);
+    }
+
+    #[test]
+    fn union_support_makes_backhaul_cheaper_than_member_frames() {
+        // perfectly overlapping masks: two member frames cost ~2x the
+        // single merged frame — the GMF-compounding effect in miniature
+        let dim = 64;
+        let a = SparseVec::new(dim, (0..16).map(|i| (i, 1.0)).collect());
+        let b = SparseVec::new(dim, (0..16).map(|i| (i, 2.0)).collect());
+        let member_bytes = wire::encode(&a).len() + wire::encode(&b).len();
+        let mut m = EdgeMerger::new(dim);
+        let stats = m.merge(&[&a, &b], CodecParams::default());
+        assert!(
+            stats.uplink_bytes < member_bytes,
+            "backhaul {} must undercut member total {member_bytes}",
+            stats.uplink_bytes
+        );
+    }
+
+    #[test]
+    fn merger_resets_between_edges() {
+        let dim = 8;
+        let mut m = EdgeMerger::new(dim);
+        let _ = m.merge(&[&SparseVec::new(dim, vec![(0, 5.0)])], CodecParams::default());
+        let _ = m.merge(&[&SparseVec::new(dim, vec![(7, 1.0)])], CodecParams::default());
+        assert_eq!(m.frame().indices, vec![7], "previous edge's mass must not leak");
+        assert_eq!(m.frame().values, vec![1.0]);
+    }
+
+    #[test]
+    fn round_stats_absorb_sums_fields() {
+        let mut total = EdgeRoundStats::default();
+        total.absorb(EdgeRoundStats { edges: 1, uplink_bytes: 100, precodec_bytes: 120 });
+        total.absorb(EdgeRoundStats { edges: 1, uplink_bytes: 50, precodec_bytes: 60 });
+        assert_eq!(
+            total,
+            EdgeRoundStats { edges: 2, uplink_bytes: 150, precodec_bytes: 180 }
+        );
+    }
+}

@@ -1,8 +1,13 @@
 //! The FL coordinator: hub-and-spoke round protocol (paper Fig. 1 + Alg. 1).
 //!
 //! * [`client::FlClient`] — local trainer + compressor state.
+//! * [`store::ClientStore`] — fleet state at rest: dense per-client
+//!   buffers, or sparse records materialized into pooled scratch for the
+//!   sampled cohort only (million-client fleets in bounded memory).
 //! * [`server::FlServer`] — sparse aggregation + broadcast policy (plain
 //!   aggregate vs server-side global momentum, the DGCwGM half).
+//! * [`hierarchy`] — optional two-tier topology: edge aggregators pre-merge
+//!   cohort uploads before the hub (backhaul traffic accounting).
 //! * [`traffic::TrafficMeter`] — byte-exact accounting of both overhead
 //!   terms of §2.1 (client uploads, server broadcast).
 //! * [`round::FlRun`] — the synchronous round loop tying it all together.
@@ -11,11 +16,25 @@
 //!   [`crate::transport::Transport`] (in-process or socket fleet).
 
 pub mod client;
+pub mod hierarchy;
 pub mod round;
 pub mod sampler;
 pub mod server;
 pub mod service;
+pub mod store;
 pub mod traffic;
 
 pub use round::{FlConfig, FlRun, RunSummary};
 pub use server::BroadcastPolicy;
+pub use store::{ClientStore, StoreMode};
+
+use crate::sparse::vector::SparseVec;
+use crate::sparse::wire;
+
+/// Decode a broadcast frame into `out`, mapping wire errors into the one
+/// shared diagnostic both round loops (simulator and service) report. A
+/// corrupt broadcast is a protocol bug, never a recoverable condition, so
+/// the two call sites must fail identically.
+pub(crate) fn decode_broadcast(buf: &[u8], out: &mut SparseVec) -> anyhow::Result<()> {
+    wire::decode_into(buf, out).map_err(|e| anyhow::anyhow!("broadcast decode failed: {e:?}"))
+}

@@ -63,8 +63,10 @@
 //! per-round `precodec_bytes` and `codec_ratio` columns.
 
 use super::client::FlClient;
+use super::hierarchy::{plan_edges, EdgeMerger, EdgeRoundStats, HierarchyConfig};
 use super::sampler::{feasibility_weights, Sampler, SelectionHistory};
-use super::server::{BroadcastPolicy, FlServer};
+use super::server::{BroadcastPolicy, FlServer, IngestOpts, UploadSource};
+use super::store::{ClientStore, DenseStore, StoreMode, VirtualStore};
 use super::traffic::{TrafficMeter, TrafficPolicy};
 use crate::compress::{self, CompressConfig, CompressorKind, SparsityWarmup};
 use crate::data::dataset::{Batch, Dataset};
@@ -82,10 +84,6 @@ use crate::sparse::vector::SparseVec;
 use crate::sparse::wire;
 use crate::util::rng::Rng;
 use std::time::Instant;
-
-/// Below this much total broadcast-observation work (dense momentum coords ×
-/// clients) the per-round thread spawns cost more than they parallelise.
-const PARALLEL_OBSERVE_MIN_WORK: usize = 1 << 15;
 
 /// Resolve a configured worker count: 0 = one per available core.
 pub(crate) fn resolve_pool(workers: usize) -> usize {
@@ -172,6 +170,18 @@ pub struct FlConfig {
     /// a faulted service run stays digest-comparable with the in-process
     /// run. `None` (the default) is bit-identical to the pre-fault loop.
     pub fault: Option<FaultPlan>,
+    /// how per-client state is kept (TOML top-level `store`): `Auto` (the
+    /// default) picks `Dense` for full-participation samplers and
+    /// `Virtual` — sparse at rest, only the cohort materialized — for
+    /// sampled fleets. Either choice is bit-identical (see
+    /// `coordinator::store`); the knob only trades memory for
+    /// checkout/checkin work.
+    pub store: StoreMode,
+    /// fleet topology between clients and the hub (TOML `[hierarchy]`):
+    /// `tiers = 2` inserts edge aggregators that pre-merge cohort uploads.
+    /// Trajectory digests are bit-identical across tier counts — the edge
+    /// tier only changes what the wire carries (see `coordinator::hierarchy`).
+    pub hierarchy: HierarchyConfig,
 }
 
 impl FlConfig {
@@ -197,6 +207,8 @@ impl FlConfig {
             sim: SimConfig::default(),
             codec: WireCodec::default(),
             fault: None,
+            store: StoreMode::Auto,
+            hierarchy: HierarchyConfig::default(),
         }
     }
 }
@@ -234,7 +246,9 @@ pub struct RunSummary {
 pub struct FlRun {
     pub cfg: FlConfig,
     pub params: Vec<f32>,
-    pub clients: Vec<FlClient>,
+    /// per-client state keeper: permanently dense, or sparse at rest with a
+    /// pooled cohort (see [`StoreMode`] / `coordinator::store`)
+    pub store: Box<dyn ClientStore>,
     pub server: FlServer,
     pub meter: TrafficMeter,
     /// per-client capability profiles (built from the constructor's network
@@ -272,6 +286,8 @@ pub struct FlRun {
     pub last_payload: SparseVec,
     /// worker engine pool, spawned once and reused every round
     worker_engines: Vec<Box<dyn TrainEngine>>,
+    /// edge-merge scratch for the two-tier topology (None when flat)
+    edge_merger: Option<EdgeMerger>,
     /// optional round-event observer (conformance invariant ledgers — see
     /// `metrics::ledger`); `None` (the default) costs one branch per hook
     /// site and nothing else
@@ -291,28 +307,51 @@ impl FlRun {
         let dim = engine.param_count();
         let root = Rng::new(cfg.seed);
         let uplink_codec = cfg.codec.uplink;
-        let clients: Vec<FlClient> = shards
-            .into_iter()
-            .enumerate()
-            .map(|(id, shard)| {
-                let comp = compress::build(cfg.kind, &cfg.compress, dim);
-                FlClient::new(id, comp, shard, &root, dim, uplink_codec)
-            })
-            .collect();
+        let fleet = shards.len();
+        // Auto: full participation re-materializes everyone every round, so
+        // permanent density is strictly cheaper; sampled fleets virtualize
+        let mode = match cfg.store {
+            StoreMode::Auto => {
+                if matches!(cfg.sampler, Sampler::Full) {
+                    StoreMode::Dense
+                } else {
+                    StoreMode::Virtual
+                }
+            }
+            m => m,
+        };
+        let store: Box<dyn ClientStore> = match mode {
+            StoreMode::Virtual => Box::new(VirtualStore::new(
+                shards,
+                &root,
+                dim,
+                cfg.kind,
+                &cfg.compress,
+                uplink_codec,
+            )),
+            _ => Box::new(DenseStore::new(
+                shards,
+                &root,
+                dim,
+                cfg.kind,
+                &cfg.compress,
+                uplink_codec,
+            )),
+        };
         let policy = if cfg.kind.server_momentum() {
             BroadcastPolicy::ServerMomentum { beta: cfg.compress.beta }
         } else {
             BroadcastPolicy::Aggregate
         };
         let scheduler = Scheduler::new(&network, cfg.sim.preset, cfg.seed);
-        let history = SelectionHistory::new(clients.len());
+        let history = SelectionHistory::new(fleet);
         FlRun {
             params: engine.initial_params(),
             server: FlServer::new(dim, policy),
             meter: TrafficMeter::new(cfg.traffic),
             scheduler,
             recorder: Recorder::new(),
-            clients,
+            store,
             test_batches,
             last_payload: SparseVec::empty(dim),
             payload_scratch: SparseVec::empty(dim),
@@ -328,6 +367,7 @@ impl FlRun {
             weight_scratch: Vec::new(),
             gini_scratch: Vec::new(),
             worker_engines: Vec::new(),
+            edge_merger: None,
             ledger: None,
             cfg,
         }
@@ -356,9 +396,10 @@ impl FlRun {
         // of the base sample; `overselect = 1` is exactly `sample`); the
         // feasibility policy swaps the uniform shuffle for a weighted draw
         // fed by delivery history + per-client uplink spend
+        let fleet = self.store.fleet_len();
         let participants = match self.cfg.sim.selection {
             SelectionPolicy::Uniform => self.cfg.sampler.sample_overselected(
-                self.clients.len(),
+                fleet,
                 round,
                 &root,
                 self.cfg.sim.overselect,
@@ -367,12 +408,12 @@ impl FlRun {
                 feasibility_weights(
                     &self.history,
                     &self.meter.per_client_uplink,
-                    self.clients.len(),
+                    fleet,
                     beta,
                     &mut self.weight_scratch,
                 );
                 self.cfg.sampler.sample_weighted(
-                    self.clients.len(),
+                    fleet,
                     round,
                     &root,
                     self.cfg.sim.overselect,
@@ -386,30 +427,12 @@ impl FlRun {
 
         // 1. broadcast of the previous round reaches everyone (Alg.1 l.14+8)
         //    — per-client momentum fold-in, skipped wholesale for schemes
-        //    whose observe is a no-op (plain DGC), and fanned out over the
-        //    pool when the O(P)-per-client fold beats the spawn overhead
-        let observes =
-            self.clients.first().is_some_and(|c| c.compressor.observes_broadcast());
-        if round > 0 && observes {
-            let payload = &self.last_payload;
-            let clients = &mut self.clients;
-            let observe_work = dim * clients.len();
-            if pool > 1 && clients.len() > 1 && observe_work >= PARALLEL_OBSERVE_MIN_WORK {
-                let chunk = clients.len().div_ceil(pool);
-                std::thread::scope(|s| {
-                    for ch in clients.chunks_mut(chunk) {
-                        s.spawn(move || {
-                            for c in ch {
-                                c.observe_broadcast(payload);
-                            }
-                        });
-                    }
-                });
-            } else {
-                for c in clients.iter_mut() {
-                    c.observe_broadcast(payload);
-                }
-            }
+        //    whose observe is a no-op (plain DGC). The dense store fans it
+        //    out over the pool eagerly; the virtual store logs the payload
+        //    and replays it lazily at the client's next checkout — both
+        //    produce bit-identical planes (see `coordinator::store`).
+        if round > 0 && self.store.observes_broadcast() {
+            self.store.observe_broadcast(&self.last_payload, pool);
         }
 
         // 2. local training + compression + wire round-trip, fanned out over
@@ -426,25 +449,10 @@ impl FlRun {
         // have absorbed (retried resends, deduplicated frames)
         let mut chaos_retries = 0usize;
         let mut chaos_dups = 0usize;
+        let mut edge_stats = EdgeRoundStats::default();
+        self.store.checkout(&participants);
         {
-            let mut parts: Vec<&mut FlClient> = Vec::with_capacity(n);
-            let mut client_iter = self.clients.iter_mut().enumerate();
-            for &cid in &participants {
-                for (i, c) in client_iter.by_ref() {
-                    if i == cid {
-                        parts.push(c);
-                        break;
-                    }
-                }
-            }
-            // the single-pass match above requires ascending participant ids
-            // (every Sampler variant sorts); a miss here would silently skip
-            // clients and misalign the reductions below
-            assert_eq!(
-                parts.len(),
-                participants.len(),
-                "sampler must return sorted unique in-range client ids"
-            );
+            let mut parts: Vec<&mut FlClient> = self.store.cohort_mut();
             let (batch_size, local_steps) = (self.cfg.batch_size, self.cfg.local_steps);
             let params = &self.params;
             let losses = &mut self.loss_scratch[..];
@@ -638,6 +646,20 @@ impl FlRun {
             } else {
                 mean_jaccard_estimate(&echoes, &mut self.overlap_scratch)
             };
+            // two-tier topology: edges pre-merge contiguous slices of the
+            // accepted cohort and forward one frame each over the backhaul.
+            // This prices the tier-1 wire only — the hub below still folds
+            // the individual member uploads in the SAME participant order
+            // the flat fleet uses, so the aggregate (and the whole
+            // trajectory) is bit-identical across tier counts.
+            if self.cfg.hierarchy.enabled() && !echoes.is_empty() {
+                let merger = self.edge_merger.get_or_insert_with(|| EdgeMerger::new(dim));
+                for range in plan_edges(echoes.len(), self.cfg.hierarchy.cohorts_per_edge) {
+                    edge_stats.absorb(merger.merge(&echoes[range], self.cfg.codec.uplink));
+                }
+                self.meter
+                    .record_edge_uplink(edge_stats.uplink_bytes, edge_stats.precodec_bytes);
+            }
             // fresh uploads first, then last round's carried-over stale
             // uploads at the staleness discount — a fixed order per
             // coordinate, so worker counts never change the f32 sums
@@ -651,20 +673,27 @@ impl FlRun {
                         let runs = Runs::validate(&c.wire_buf).map_err(|e| {
                             anyhow::anyhow!("upload from client {}: {e:?}", c.id)
                         })?;
-                        self.server.receive_stream(&runs);
+                        self.server.ingest(UploadSource::Wire(&runs), IngestOpts::new());
                     }
                 }
             } else {
-                self.server.receive_all(&echoes, pool);
+                self.server
+                    .ingest(UploadSource::Batch(&echoes), IngestOpts::new().sharded(pool));
             }
             let stale = self.stale_queue.ready();
             carried_in = stale.len();
             carried_bytes = stale.iter().map(|e| e.bytes).sum();
             if carried_in > 0 {
                 let stale_refs: Vec<&SparseVec> = stale.iter().map(|e| &e.grad).collect();
-                self.server.receive_all_scaled(&stale_refs, alpha, pool);
+                self.server.ingest(
+                    UploadSource::Batch(&stale_refs),
+                    IngestOpts::new().scaled(alpha).sharded(pool),
+                );
             }
         }
+        // the cohort's planes fold back to rest (virtual stores gather +
+        // evict; dense stores just clear the checkout bookkeeping)
+        self.store.checkin();
         let mut train_loss = 0.0;
         let mut n_accepted = 0usize;
         let mut dropped_deadline = 0usize;
@@ -694,8 +723,13 @@ impl FlRun {
         wire::encode_with(&self.payload_scratch, &mut self.bcast_buf, self.cfg.codec.downlink);
         let bcast_precodec = wire::encoded_bytes(&self.payload_scratch);
         self.meter.record_broadcast(self.bcast_buf.len(), bcast_precodec, n);
-        wire::decode_into(&self.bcast_buf, &mut self.last_payload)
-            .map_err(|e| anyhow::anyhow!("broadcast decode: {e:?}"))?;
+        // tier-1 downlink: the hub ships the broadcast once per edge; the
+        // edges fan it out to their members (whose tier-0 bytes the meter
+        // already booked above)
+        if edge_stats.edges > 0 {
+            self.meter.record_edge_broadcast(self.bcast_buf.len(), edge_stats.edges);
+        }
+        super::decode_broadcast(&self.bcast_buf, &mut self.last_payload)?;
 
         // 6. synchronized model update (Alg. 1 line 15)
         let lr = self.cfg.lr.at(round);
@@ -726,7 +760,15 @@ impl FlRun {
             (0.0, 0.0)
         };
 
-        let traffic_gini = self.meter.uplink_gini(self.clients.len(), &mut self.gini_scratch);
+        let traffic_gini = self.meter.uplink_gini(fleet, &mut self.gini_scratch);
+        // backhaul clock: how long the slowest edge spends forwarding its
+        // merged frame. A diagnostic only — NOT added to sim_seconds, which
+        // is digested and must stay identical across tier counts.
+        let edge_backhaul_s = crate::sim::scheduler::backhaul_time(
+            edge_stats.uplink_bytes,
+            edge_stats.edges,
+            self.cfg.hierarchy.edge_uplink_bps,
+        );
         let rec = RoundRecord {
             round,
             train_loss,
@@ -752,6 +794,14 @@ impl FlRun {
             timeouts: 0,
             stale_frames: 0,
             dup_frames: chaos_dups,
+            edge_count: edge_stats.edges,
+            edge_uplink_bytes: edge_stats.uplink_bytes,
+            edge_downlink_bytes: if edge_stats.edges > 0 {
+                self.bcast_buf.len() * edge_stats.edges
+            } else {
+                0
+            },
+            edge_backhaul_s,
         };
         self.recorder.push(rec.clone());
         Ok(rec)
@@ -898,8 +948,11 @@ mod tests {
         for round in 0..3 {
             run.step_round(&mut engine, round).unwrap();
         }
+        // quick_cfg keeps Sampler::Full, so Auto resolves to the dense store
         let snapshot: Vec<(*const u32, *const f32, *const u8, *const u32)> = run
-            .clients
+            .store
+            .dense_clients()
+            .expect("full participation uses the dense store")
             .iter()
             .map(|c| {
                 (
@@ -913,7 +966,7 @@ mod tests {
         for round in 3..12 {
             run.step_round(&mut engine, round).unwrap();
         }
-        for (c, snap) in run.clients.iter().zip(&snapshot) {
+        for (c, snap) in run.store.dense_clients().unwrap().iter().zip(&snapshot) {
             assert_eq!(c.upload.indices.as_ptr(), snap.0, "upload indices reallocated");
             assert_eq!(c.upload.values.as_ptr(), snap.1, "upload values reallocated");
             assert_eq!(c.wire_buf.as_ptr(), snap.2, "wire buffer reallocated");
@@ -957,8 +1010,11 @@ mod tests {
         }
         assert_eq!(run.params, init, "no accepted upload → model frozen");
         assert_eq!(run.meter.total_wasted_uplink, run.meter.total_uplink);
-        for c in &run.clients {
-            assert!(c.compressor.residual_norm() > 0.0, "dropped mass retained client-side");
+        for id in 0..4 {
+            assert!(
+                run.store.residual_norm(id) > 0.0,
+                "dropped mass retained client-side"
+            );
         }
         // relax the deadline mid-run: the held-back mass must re-enter
         run.cfg.sim.deadline_s = 1e9;
@@ -1102,7 +1158,9 @@ mod tests {
             run.step_round(&mut engine, round).unwrap();
         }
         let snapshot: Vec<(*const u32, *const f32, *const u8, *const u32)> = run
-            .clients
+            .store
+            .dense_clients()
+            .expect("full participation uses the dense store")
             .iter()
             .map(|c| {
                 (
@@ -1125,7 +1183,7 @@ mod tests {
             );
             assert!(rec.precodec_bytes > rec.uplink_bytes + rec.downlink_bytes);
         }
-        for (c, snap) in run.clients.iter().zip(&snapshot) {
+        for (c, snap) in run.store.dense_clients().unwrap().iter().zip(&snapshot) {
             assert_eq!(c.upload.indices.as_ptr(), snap.0, "upload indices reallocated");
             assert_eq!(c.upload.values.as_ptr(), snap.1, "upload values reallocated");
             assert_eq!(c.wire_buf.as_ptr(), snap.2, "wire buffer reallocated");
@@ -1201,6 +1259,89 @@ mod tests {
             let (ps, ls) = run_with(true);
             assert_eq!(pm, ps, "streamed ingest must reproduce the materialized trajectory");
             assert_eq!(lm, ls, "per-round losses must match bit-for-bit");
+        }
+    }
+
+    #[test]
+    fn virtual_store_matches_dense_trajectory_bit_for_bit() {
+        // the tentpole contract: virtualized state must not move a single
+        // bit of the trajectory, including broadcast replay (DGCwGMF
+        // accumulates observed payloads, GMC replaces its momentum)
+        for kind in [CompressorKind::DgcWgmf, CompressorKind::Gmc] {
+            let run_with = |mode: StoreMode| -> (Vec<u32>, Vec<u64>) {
+                let mut engine = NativeEngine::new(8, 12, 4, 1);
+                let (shards, test) = blob_shards(5, 80, 8, 4, 10);
+                let net = Network::uniform(5, Default::default());
+                let mut cfg = quick_cfg(kind);
+                cfg.rounds = 8;
+                cfg.sampler = Sampler::Count(2); // rotating cohorts: replay gaps
+                cfg.store = mode;
+                let mut run = FlRun::new(&engine, shards, test, net, cfg);
+                let summary = run.run(&mut engine).unwrap();
+                let losses =
+                    summary.recorder.rounds.iter().map(|r| r.train_loss.to_bits()).collect();
+                (run.params.iter().map(|v| v.to_bits()).collect(), losses)
+            };
+            let (pd, ld) = run_with(StoreMode::Dense);
+            let (pv, lv) = run_with(StoreMode::Virtual);
+            assert_eq!(pd, pv, "{}: virtual store must reproduce the dense params", kind.name());
+            assert_eq!(ld, lv, "{}: per-round losses must match bit-for-bit", kind.name());
+        }
+    }
+
+    #[test]
+    fn auto_store_picks_density_by_sampler() {
+        let build = |sampler: Sampler| {
+            let engine = NativeEngine::new(8, 12, 4, 1);
+            let (shards, test) = blob_shards(4, 40, 8, 4, 10);
+            let net = Network::uniform(4, Default::default());
+            let mut cfg = quick_cfg(CompressorKind::Dgc);
+            cfg.sampler = sampler;
+            FlRun::new(&engine, shards, test, net, cfg)
+        };
+        assert!(build(Sampler::Full).store.dense_clients().is_some());
+        assert!(build(Sampler::Count(2)).store.dense_clients().is_none());
+    }
+
+    #[test]
+    fn two_tier_run_is_bit_identical_to_flat_and_meters_backhaul() {
+        let run_with = |tiers: usize| {
+            let mut engine = NativeEngine::new(8, 12, 4, 1);
+            let (shards, test) = blob_shards(6, 80, 8, 4, 10);
+            let net = Network::uniform(6, Default::default());
+            let mut cfg = quick_cfg(CompressorKind::DgcWgmf);
+            cfg.rounds = 6;
+            cfg.sampler = Sampler::Count(4);
+            cfg.hierarchy.tiers = tiers;
+            cfg.hierarchy.cohorts_per_edge = 3; // 4 accepted → 2 edges
+            let mut run = FlRun::new(&engine, shards, test, net, cfg);
+            let summary = run.run(&mut engine).unwrap();
+            (run.params.iter().map(|v| v.to_bits()).collect::<Vec<u32>>(), summary)
+        };
+        let (p1, flat) = run_with(1);
+        let (p2, tiered) = run_with(2);
+        assert_eq!(p1, p2, "edge aggregation must not move the trajectory");
+        for (a, b) in flat.recorder.rounds.iter().zip(&tiered.recorder.rounds) {
+            // every digested column agrees; only the edge diagnostics differ
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "round {}", a.round);
+            assert_eq!(a.uplink_bytes, b.uplink_bytes);
+            assert_eq!(a.downlink_bytes, b.downlink_bytes);
+            assert_eq!(a.aggregate_nnz, b.aggregate_nnz);
+            assert_eq!(a.sim_seconds.to_bits(), b.sim_seconds.to_bits());
+            assert_eq!(a.edge_count, 0, "flat run has no edges");
+            assert_eq!(a.edge_uplink_bytes, 0);
+            assert_eq!(a.edge_downlink_bytes, 0);
+            assert_eq!(b.edge_count, 2, "round {}: 4 accepted / 3 per edge", b.round);
+            assert!(b.edge_uplink_bytes > 0, "backhaul bytes metered");
+            assert!(
+                b.edge_uplink_bytes <= a.uplink_bytes,
+                "round {}: union-support backhaul {} must not exceed member total {}",
+                b.round,
+                b.edge_uplink_bytes,
+                a.uplink_bytes
+            );
+            assert_eq!(b.edge_downlink_bytes % b.edge_count, 0, "one broadcast per edge");
+            assert!(b.edge_backhaul_s > 0.0);
         }
     }
 

@@ -21,6 +21,75 @@ pub enum BroadcastPolicy {
     ServerMomentum { beta: f32 },
 }
 
+/// Where an upload's values come from — the one axis the consolidated
+/// [`FlServer::ingest`] entry point dispatches on. All three forms feed the
+/// identical per-coordinate `acc += scale · v` fold, so choosing a source is
+/// a transport decision, never a numerics decision.
+pub enum UploadSource<'a> {
+    /// A single already-decoded client gradient.
+    Sparse(&'a SparseVec),
+    /// A single client gradient read straight from a validated wire buffer
+    /// (no intermediate `SparseVec`; see docs/wire.md for the pull decoder).
+    Wire(&'a Runs<'a>),
+    /// A whole pre-deduplicated batch folded in slice order (the simulator's
+    /// cohort path; may shard the coordinate space over workers).
+    Batch(&'a [&'a SparseVec]),
+}
+
+/// Policy knobs for [`FlServer::ingest`]. Start from [`IngestOpts::new`]
+/// (scale 1.0, no dedup guard, sequential) and layer on what the call site
+/// needs.
+#[derive(Clone, Copy, Debug)]
+pub struct IngestOpts {
+    /// `Some(id)`: idempotent receive — reject if `id` already contributed
+    /// since the last [`FlServer::begin_round`].
+    pub client: Option<usize>,
+    /// Staleness discount applied to every value (`acc += scale · v`).
+    pub scale: f32,
+    /// Worker-thread cap for batch merges (ignored for single uploads).
+    pub workers: usize,
+}
+
+impl Default for IngestOpts {
+    fn default() -> Self {
+        IngestOpts { client: None, scale: 1.0, workers: 1 }
+    }
+}
+
+impl IngestOpts {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Guard against duplicated transport frames from `client` this round.
+    pub fn from_client(mut self, client: usize) -> Self {
+        self.client = Some(client);
+        self
+    }
+
+    /// Discount every value by `scale` (the carried-upload staleness path).
+    pub fn scaled(mut self, scale: f32) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    /// Allow batch merges to shard the coordinate space over `workers`.
+    pub fn sharded(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+}
+
+/// What [`FlServer::ingest`] did with an upload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ingested {
+    /// Whether the upload entered the aggregate (false only when the
+    /// per-client dedup guard rejected a duplicated frame).
+    pub applied: bool,
+    /// Nonzeros folded into the accumulator.
+    pub nnz: usize,
+}
+
 pub struct FlServer {
     dim: usize,
     agg: Aggregator,
@@ -66,69 +135,88 @@ impl FlServer {
         self.dim
     }
 
+    /// Receive client uploads through the one consolidated entry point.
+    ///
+    /// Every ingest is the same per-coordinate `acc += scale · v` fold; the
+    /// [`UploadSource`] only chooses how the values arrive (decoded vector,
+    /// validated wire buffer, or a whole batch) and [`IngestOpts`] chooses
+    /// the policy knobs:
+    ///
+    /// * `scale` — staleness discount applied to every value (default 1.0;
+    ///   IEEE-754 guarantees `1.0 · v == v`, so the default is bit-identical
+    ///   to an unscaled fold).
+    /// * `from_client(id)` — idempotent receive: the upload is rejected if
+    ///   `id` already contributed since the last [`FlServer::begin_round`]
+    ///   (a duplicated transport frame must never enter the mean twice).
+    ///   Only meaningful for single-upload sources; batch sources are
+    ///   trusted pre-deduplicated cohorts.
+    /// * `sharded(workers)` — batch merges may shard the coordinate space
+    ///   over up to `workers` threads, bit-identical to the sequential fold
+    ///   in `grads` order at any worker count.
+    ///
+    /// Streamed ingest is bit-identical to decoding the buffer first: the
+    /// pull-decoder emits the exact (index, value) pairs `decode_into`
+    /// would produce, in the same order. Returns what happened: whether the
+    /// upload entered the aggregate and how many nonzeros were folded.
+    pub fn ingest(&mut self, source: UploadSource<'_>, opts: IngestOpts) -> Ingested {
+        if let Some(client) = opts.client {
+            debug_assert!(
+                !matches!(source, UploadSource::Batch(_)),
+                "per-client dedup applies to single uploads, not batches"
+            );
+            match self.round_seen.binary_search(&client) {
+                Ok(_) => return Ingested { applied: false, nnz: 0 },
+                Err(at) => self.round_seen.insert(at, client),
+            }
+        }
+        let nnz = match source {
+            UploadSource::Sparse(g) => {
+                self.agg.add(&[g], opts.scale, 1);
+                g.nnz()
+            }
+            UploadSource::Wire(runs) => self.agg.fold_stream(runs, opts.scale),
+            UploadSource::Batch(grads) => {
+                self.agg.add(grads, opts.scale, opts.workers);
+                grads.iter().map(|g| g.nnz()).sum()
+            }
+        };
+        Ingested { applied: true, nnz }
+    }
+
     /// Receive one (already-decoded) client gradient.
+    #[deprecated(note = "use `FlServer::ingest(UploadSource::Sparse(g), IngestOpts::new())`")]
     pub fn receive(&mut self, g: &SparseVec) {
-        self.agg.add(g);
+        self.ingest(UploadSource::Sparse(g), IngestOpts::new());
     }
 
-    /// Idempotent per-client receive: folds `g` into the aggregate unless
-    /// `client` already contributed since the last [`FlServer::begin_round`]
-    /// — a duplicated transport frame must never enter the mean twice.
-    /// Returns whether the gradient was applied. Bit-identical to
-    /// [`FlServer::receive`] calls in the same order when no duplicates
-    /// occur.
+    /// Idempotent per-client receive; returns whether the gradient applied.
+    #[deprecated(note = "use `FlServer::ingest` with `IngestOpts::new().from_client(client)`")]
     pub fn receive_upload(&mut self, client: usize, g: &SparseVec) -> bool {
-        match self.round_seen.binary_search(&client) {
-            Ok(_) => false,
-            Err(at) => {
-                self.round_seen.insert(at, client);
-                self.agg.add(g);
-                true
-            }
-        }
+        self.ingest(UploadSource::Sparse(g), IngestOpts::new().from_client(client)).applied
     }
 
-    /// Receive one client gradient straight from a validated wire buffer,
-    /// without materializing a [`SparseVec`]. Bit-identical to decoding the
-    /// buffer and calling [`FlServer::receive`]: the pull-decoder emits the
-    /// exact (index, value) pairs `decode_into` would produce, in the same
-    /// order, and the fold applies the same `acc += 1.0 * v` expression the
-    /// batch merge uses. Returns the number of runs folded.
+    /// Streamed receive from a validated wire buffer; returns runs folded.
+    #[deprecated(note = "use `FlServer::ingest(UploadSource::Wire(runs), IngestOpts::new())`")]
     pub fn receive_stream(&mut self, runs: &Runs<'_>) -> usize {
-        self.agg.fold_stream(runs, 1.0)
+        self.ingest(UploadSource::Wire(runs), IngestOpts::new()).nnz
     }
 
-    /// Idempotent streamed receive: [`FlServer::receive_upload`] over a
-    /// validated wire buffer instead of a decoded gradient. Duplicated
-    /// transport frames are rejected by the same per-round guard. Returns
-    /// whether the upload was folded.
+    /// Idempotent streamed receive; returns whether the upload was folded.
+    #[deprecated(note = "use `FlServer::ingest` with `IngestOpts::new().from_client(client)`")]
     pub fn receive_upload_streamed(&mut self, client: usize, runs: &Runs<'_>) -> bool {
-        match self.round_seen.binary_search(&client) {
-            Ok(_) => false,
-            Err(at) => {
-                self.round_seen.insert(at, client);
-                self.agg.fold_stream(runs, 1.0);
-                true
-            }
-        }
+        self.ingest(UploadSource::Wire(runs), IngestOpts::new().from_client(client)).applied
     }
 
-    /// Receive a whole round of decoded client gradients at once. The merge
-    /// may shard the coordinate space over up to `workers` threads and is
-    /// bit-identical to sequential [`FlServer::receive`] calls in `grads`
-    /// order.
+    /// Batch receive of a whole round of decoded gradients.
+    #[deprecated(note = "use `FlServer::ingest(UploadSource::Batch(grads), ...)`")]
     pub fn receive_all(&mut self, grads: &[&SparseVec], workers: usize) {
-        self.agg.add_all(grads, workers);
+        self.ingest(UploadSource::Batch(grads), IngestOpts::new().sharded(workers));
     }
 
-    /// Receive a batch of *carried-over* stale gradients (last round's
-    /// deadline-missers), each scaled by the staleness discount `scale`
-    /// before entering the aggregate. Same sharding and determinism
-    /// contract as [`FlServer::receive_all`]; call it after the round's
-    /// fresh gradients so the per-coordinate addition order is
-    /// fresh-then-stale at every worker count.
+    /// Batch receive of carried-over stale gradients, discounted by `scale`.
+    #[deprecated(note = "use `FlServer::ingest` with `IngestOpts::new().scaled(scale)`")]
     pub fn receive_all_scaled(&mut self, grads: &[&SparseVec], scale: f32, workers: usize) {
-        self.agg.add_all_scaled(grads, scale, workers);
+        self.ingest(UploadSource::Batch(grads), IngestOpts::new().scaled(scale).sharded(workers));
     }
 
     /// Allocation-free `finish_round`: writes the broadcast payload into a
@@ -146,10 +234,10 @@ impl FlServer {
         match self.policy {
             BroadcastPolicy::Aggregate => {
                 // payload is Ĝ_t itself
-                self.agg.finish_mean_into_with(participants, payload, workers);
+                self.agg.finish_into(participants, payload, workers);
             }
             BroadcastPolicy::ServerMomentum { beta } => {
-                self.agg.finish_mean_into_with(participants, &mut self.ghat_scratch, workers);
+                self.agg.finish_into(participants, &mut self.ghat_scratch, workers);
                 for m in self.momentum.iter_mut() {
                     *m *= beta;
                 }
@@ -206,11 +294,16 @@ impl FlServer {
 mod tests {
     use super::*;
 
+    /// Shorthand: fold one decoded gradient with default options.
+    fn recv(s: &mut FlServer, g: &SparseVec) {
+        s.ingest(UploadSource::Sparse(g), IngestOpts::new());
+    }
+
     #[test]
     fn aggregate_policy_broadcasts_mean() {
         let mut s = FlServer::new(6, BroadcastPolicy::Aggregate);
-        s.receive(&SparseVec::new(6, vec![(1, 2.0)]));
-        s.receive(&SparseVec::new(6, vec![(1, 4.0), (3, 2.0)]));
+        recv(&mut s, &SparseVec::new(6, vec![(1, 2.0)]));
+        recv(&mut s, &SparseVec::new(6, vec![(1, 4.0), (3, 2.0)]));
         let (payload, ghat) = s.finish_round(2);
         assert_eq!(payload, ghat);
         assert_eq!(ghat.indices, vec![1, 3]);
@@ -218,10 +311,12 @@ mod tests {
     }
 
     #[test]
-    fn scaled_receive_discounts_stale_gradients() {
+    fn scaled_ingest_discounts_stale_gradients() {
         let mut s = FlServer::new(6, BroadcastPolicy::Aggregate);
-        s.receive(&SparseVec::new(6, vec![(1, 2.0)]));
-        s.receive_all_scaled(&[&SparseVec::new(6, vec![(1, 2.0), (4, 4.0)])], 0.5, 1);
+        recv(&mut s, &SparseVec::new(6, vec![(1, 2.0)]));
+        let stale = SparseVec::new(6, vec![(1, 2.0), (4, 4.0)]);
+        let got = s.ingest(UploadSource::Batch(&[&stale]), IngestOpts::new().scaled(0.5));
+        assert_eq!(got, Ingested { applied: true, nnz: 2 });
         let (payload, _) = s.finish_round(2);
         assert_eq!(payload.indices, vec![1, 4]);
         assert_eq!(payload.values, vec![1.5, 1.0]); // (2 + 1)/2, (0 + 2)/2
@@ -232,13 +327,13 @@ mod tests {
         let mut s = FlServer::new(100, BroadcastPolicy::ServerMomentum { beta: 0.9 });
         // round 1: coords 0..10
         for i in 0..10u32 {
-            s.receive(&SparseVec::new(100, vec![(i, 1.0)]));
+            recv(&mut s, &SparseVec::new(100, vec![(i, 1.0)]));
         }
         let (p1, _) = s.finish_round(10);
         assert_eq!(p1.nnz(), 10);
         // round 2: different coords 50..60 — payload keeps the old support
         for i in 50..60u32 {
-            s.receive(&SparseVec::new(100, vec![(i, 1.0)]));
+            recv(&mut s, &SparseVec::new(100, vec![(i, 1.0)]));
         }
         let (p2, g2) = s.finish_round(10);
         assert_eq!(g2.nnz(), 10, "aggregate itself is sparse");
@@ -248,7 +343,7 @@ mod tests {
     #[test]
     fn server_momentum_decays_values() {
         let mut s = FlServer::new(10, BroadcastPolicy::ServerMomentum { beta: 0.5 });
-        s.receive(&SparseVec::new(10, vec![(2, 8.0)]));
+        recv(&mut s, &SparseVec::new(10, vec![(2, 8.0)]));
         let (p1, _) = s.finish_round(1);
         assert_eq!(p1.values, vec![8.0]);
         let (p2, _) = s.finish_round(1); // no contributions: pure decay
@@ -259,14 +354,14 @@ mod tests {
     fn round_aggregate_is_ghat_under_both_policies() {
         // Aggregate policy: the payload IS Ĝ_t
         let mut s = FlServer::new(6, BroadcastPolicy::Aggregate);
-        s.receive(&SparseVec::new(6, vec![(1, 2.0)]));
+        recv(&mut s, &SparseVec::new(6, vec![(1, 2.0)]));
         let (payload, ghat) = s.finish_round(1);
         assert_eq!(s.round_aggregate(&payload), &ghat);
         // ServerMomentum: the payload is M_t, the aggregate is Ĝ_t
         let mut m = FlServer::new(6, BroadcastPolicy::ServerMomentum { beta: 0.5 });
-        m.receive(&SparseVec::new(6, vec![(2, 4.0)]));
+        recv(&mut m, &SparseVec::new(6, vec![(2, 4.0)]));
         let (_, _) = m.finish_round(1);
-        m.receive(&SparseVec::new(6, vec![(3, 2.0)]));
+        recv(&mut m, &SparseVec::new(6, vec![(3, 2.0)]));
         let (p2, g2) = m.finish_round(1);
         assert_eq!(p2.nnz(), 2, "momentum payload keeps old support");
         assert_eq!(m.round_aggregate(&p2), &g2, "aggregate is the fresh Ĝ_t");
@@ -286,8 +381,16 @@ mod tests {
         s.begin_round();
         // the client uploaded once; the wire delivered the frame twice
         ledger.on_upload(0, ClientFate::Accepted, &g, 24, 24);
-        assert!(s.receive_upload(0, &g), "first frame enters the aggregate");
-        assert!(!s.receive_upload(0, &g), "duplicated frame must be rejected");
+        let from0 = IngestOpts::new().from_client(0);
+        assert!(
+            s.ingest(UploadSource::Sparse(&g), from0).applied,
+            "first frame enters the aggregate"
+        );
+        assert_eq!(
+            s.ingest(UploadSource::Sparse(&g), from0),
+            Ingested { applied: false, nnz: 0 },
+            "duplicated frame must be rejected"
+        );
         let (payload, ghat) = s.finish_round(1);
         ledger.on_aggregate(&ghat, 1);
         assert_eq!(payload.values, vec![2.0, -3.0], "mean over ONE contributor");
@@ -295,11 +398,11 @@ mod tests {
         assert!(violations.is_empty(), "{violations:?}");
         // a new round admits the same client again
         s.begin_round();
-        assert!(s.receive_upload(0, &g));
+        assert!(s.ingest(UploadSource::Sparse(&g), from0).applied);
     }
 
     #[test]
-    fn streamed_receive_is_bit_identical_to_decoded_receive() {
+    fn streamed_ingest_is_bit_identical_to_decoded_ingest() {
         use crate::sparse::wire;
         let dim = 64;
         let grads = [
@@ -309,10 +412,10 @@ mod tests {
         let mut a = FlServer::new(dim, BroadcastPolicy::Aggregate);
         let mut b = FlServer::new(dim, BroadcastPolicy::Aggregate);
         for g in &grads {
-            a.receive(g);
+            recv(&mut a, g);
             let buf = wire::encode(g);
             let runs = Runs::validate(&buf).expect("encoded buffer validates");
-            assert_eq!(b.receive_stream(&runs), g.nnz());
+            assert_eq!(b.ingest(UploadSource::Wire(&runs), IngestOpts::new()).nnz, g.nnz());
         }
         let (pa, _) = a.finish_round(grads.len());
         let (pb, _) = b.finish_round(grads.len());
@@ -332,8 +435,12 @@ mod tests {
         let buf = wire::encode(&g);
         let runs = Runs::validate(&buf).unwrap();
         s.begin_round();
-        assert!(s.receive_upload_streamed(0, &runs));
-        assert!(!s.receive_upload_streamed(0, &runs), "duplicate frame rejected");
+        let from0 = IngestOpts::new().from_client(0);
+        assert!(s.ingest(UploadSource::Wire(&runs), from0).applied);
+        assert!(
+            !s.ingest(UploadSource::Wire(&runs), from0).applied,
+            "duplicate frame rejected"
+        );
         let (p, _) = s.finish_round(1);
         assert_eq!(p.values, vec![4.0], "folded exactly once");
     }
@@ -341,9 +448,49 @@ mod tests {
     #[test]
     fn aggregate_resets_each_round() {
         let mut s = FlServer::new(4, BroadcastPolicy::Aggregate);
-        s.receive(&SparseVec::new(4, vec![(0, 4.0)]));
+        recv(&mut s, &SparseVec::new(4, vec![(0, 4.0)]));
         let _ = s.finish_round(1);
         let (p, _) = s.finish_round(1);
         assert_eq!(p.nnz(), 0);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_receive_forwarders_match_ingest() {
+        // the pre-consolidation API must stay callable and bit-identical
+        use crate::sparse::wire;
+        let dim = 16;
+        let g1 = SparseVec::new(dim, vec![(1, 2.0), (9, -0.5)]);
+        let g2 = SparseVec::new(dim, vec![(3, 4.0)]);
+        let buf = wire::encode(&g2);
+        let runs = Runs::validate(&buf).unwrap();
+
+        let mut old = FlServer::new(dim, BroadcastPolicy::Aggregate);
+        old.begin_round();
+        old.receive(&g1);
+        assert!(old.receive_upload(7, &g1));
+        assert!(!old.receive_upload(7, &g1));
+        assert_eq!(old.receive_stream(&runs), 1);
+        assert!(old.receive_upload_streamed(8, &runs));
+        old.receive_all(&[&g2], 1);
+        old.receive_all_scaled(&[&g1], 0.5, 1);
+        let (po, _) = old.finish_round(6);
+
+        let mut new = FlServer::new(dim, BroadcastPolicy::Aggregate);
+        new.begin_round();
+        new.ingest(UploadSource::Sparse(&g1), IngestOpts::new());
+        assert!(new.ingest(UploadSource::Sparse(&g1), IngestOpts::new().from_client(7)).applied);
+        assert!(!new.ingest(UploadSource::Sparse(&g1), IngestOpts::new().from_client(7)).applied);
+        assert_eq!(new.ingest(UploadSource::Wire(&runs), IngestOpts::new()).nnz, 1);
+        assert!(new.ingest(UploadSource::Wire(&runs), IngestOpts::new().from_client(8)).applied);
+        new.ingest(UploadSource::Batch(&[&g2]), IngestOpts::new().sharded(1));
+        new.ingest(UploadSource::Batch(&[&g1]), IngestOpts::new().scaled(0.5));
+        let (pn, _) = new.finish_round(6);
+
+        assert_eq!(po.indices, pn.indices);
+        assert_eq!(
+            po.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            pn.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 }

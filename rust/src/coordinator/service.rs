@@ -51,6 +51,7 @@
 use super::client::FlClient;
 use super::round::{resolve_pool, FlConfig, FlRun, LrSchedule, RunSummary};
 use super::sampler::{feasibility_weights, Sampler};
+use super::server::{IngestOpts, UploadSource};
 use crate::compress::{self, CompressorKind};
 use crate::data::dataset::Dataset;
 use crate::experiments::workload::verify_fixture;
@@ -247,7 +248,7 @@ pub struct ServiceRun {
 
 impl ServiceRun {
     pub fn new(run: FlRun, round_deadline_ms: u64) -> Self {
-        let n = run.clients.len();
+        let n = run.store.fleet_len();
         ServiceRun {
             wire_fates: vec![FATE_NONE; n],
             last_fate: vec![(usize::MAX, FATE_NONE); n],
@@ -285,7 +286,7 @@ impl ServiceRun {
         let root = crate::util::rng::Rng::new(r.cfg.seed);
         let participants = match r.cfg.sim.selection {
             SelectionPolicy::Uniform => r.cfg.sampler.sample_overselected(
-                r.clients.len(),
+                r.store.fleet_len(),
                 round,
                 &root,
                 r.cfg.sim.overselect,
@@ -294,12 +295,12 @@ impl ServiceRun {
                 feasibility_weights(
                     &r.history,
                     &r.meter.per_client_uplink,
-                    r.clients.len(),
+                    r.store.fleet_len(),
                     beta,
                     &mut self.weight_scratch,
                 );
                 r.cfg.sampler.sample_weighted(
-                    r.clients.len(),
+                    r.store.fleet_len(),
                     round,
                     &root,
                     r.cfg.sim.overselect,
@@ -473,11 +474,11 @@ impl ServiceRun {
                     &mut self.overlap_scratch,
                 )
             };
-            // idempotent per-(client, round) receive — the transports already
+            // idempotent per-(client, round) ingest — the transports already
             // deduplicate frames, this is the server-side backstop. Sequential
-            // adds in participant order are bit-identical to `receive_all`.
+            // adds in participant order are bit-identical to the batch path.
             for (&cid, &echo) in self.accepted_scratch.iter().zip(accepted_echoes.iter()) {
-                r.server.receive_upload(cid, echo);
+                r.server.ingest(UploadSource::Sparse(echo), IngestOpts::new().from_client(cid));
             }
         } else {
             // streamed ingest: fold every accepted upload straight from its
@@ -498,7 +499,7 @@ impl ServiceRun {
                     anyhow::anyhow!("upload from client {}: {e:?}", arrivals.uploads[j].client)
                 })?;
                 runs.for_each(|idx, _| scratch.push(idx));
-                r.server.receive_upload_streamed(cid, &runs);
+                r.server.ingest(UploadSource::Wire(&runs), IngestOpts::new().from_client(cid));
                 self.accepted_scratch.push(cid);
             }
             overlap =
@@ -509,7 +510,10 @@ impl ServiceRun {
         let carried_bytes: usize = stale.iter().map(|e| e.bytes).sum();
         if carried_in > 0 {
             let stale_refs: Vec<&SparseVec> = stale.iter().map(|e| &e.grad).collect();
-            r.server.receive_all_scaled(&stale_refs, alpha, pool);
+            r.server.ingest(
+                UploadSource::Batch(&stale_refs),
+                IngestOpts::new().scaled(alpha).sharded(pool),
+            );
         }
 
         // late frames: admissible only as retransmits of carried stragglers
@@ -541,8 +545,7 @@ impl ServiceRun {
         r.meter.record_broadcast(self.bcast_buf.len(), bcast_precodec, n);
         // a malformed broadcast is a transport-grade failure, not a panic:
         // surface it through the round result like every other decode site
-        wire::decode_into(&self.bcast_buf, &mut r.last_payload)
-            .map_err(|e| anyhow::anyhow!("broadcast decode: {e:?}"))?;
+        super::decode_broadcast(&self.bcast_buf, &mut r.last_payload)?;
 
         // the server's own parameter mirror (clients apply the identical
         // update when the broadcast frame reaches them next round)
@@ -558,7 +561,7 @@ impl ServiceRun {
         let d = stats.delta(&self.prev_stats);
         self.prev_stats = stats;
 
-        let traffic_gini = r.meter.uplink_gini(r.clients.len(), &mut self.gini_scratch);
+        let traffic_gini = r.meter.uplink_gini(r.store.fleet_len(), &mut self.gini_scratch);
         let rec = RoundRecord {
             round,
             train_loss,
@@ -584,6 +587,12 @@ impl ServiceRun {
             timeouts: d.timeouts,
             stale_frames: d.stale_frames,
             dup_frames: d.dup_frames,
+            // the edge tier is a simulator topology model; service fleets
+            // talk to the hub directly, so the tier-1 columns stay zero
+            edge_count: 0,
+            edge_uplink_bytes: 0,
+            edge_downlink_bytes: 0,
+            edge_backhaul_s: 0.0,
         };
         r.recorder.push(rec.clone());
         Ok(rec)

@@ -1,0 +1,646 @@
+//! Virtualized per-client state: the [`ClientStore`] trait and its two
+//! implementations.
+//!
+//! The flat fleet keeps every client's dense compressor planes (U/V/M) and
+//! round scratch resident for the whole run — O(fleet × dim) memory, which
+//! caps simulated fleets at a few thousand clients. But between the rounds
+//! a client is sampled into, its state is *cold*: the planes only change on
+//! `compress` (sampled rounds) and `observe_broadcast` (every round, for
+//! momentum-observing schemes), and the planes are sparse in practice —
+//! top-k extraction clears what it ships and error feedback refills slowly.
+//!
+//! [`VirtualStore`] exploits both facts:
+//!
+//! * **At rest** each client is a [`ClientRecord`]: its RNG checkpoint, its
+//!   shard, and its state planes gathered to sparse [`SparseVec`]s — memory
+//!   O(nnz), not O(dim).
+//! * **Broadcasts are logged, not fanned out.** Instead of folding every
+//!   broadcast into every client's momentum eagerly, the store appends the
+//!   payload to a replay log. When a client is next materialized, the store
+//!   replays exactly the broadcasts it missed, in order, through the
+//!   compressor's own `observe_broadcast` — the per-coordinate operation
+//!   sequence is identical to the eager fan-out, so the resulting planes
+//!   are bit-identical (asserted by `tests/proptests.rs`).
+//! * **Only the cohort is dense.** `checkout` scatters the sampled clients'
+//!   sparse planes into pooled dense slots (reused round over round);
+//!   `checkin` gathers them back and evicts. Resident memory is
+//!   O(cohort × dim + fleet at-rest nnz + log nnz) — a 1M-client fleet with
+//!   a 1k cohort fits where the dense fleet needed ~dim × 1M floats.
+//!
+//! Gather keeps every value whose f32 *bits* are nonzero (so a stored
+//! `-0.0` survives the round-trip) and scatter writes into a zeroed plane,
+//! which makes gather→scatter the exact identity on the dense planes:
+//! virtualization never moves a single bit of the trajectory.
+//!
+//! [`DenseStore`] is the old behaviour behind the same trait — every client
+//! permanently materialized — and remains the right choice for full-
+//! participation runs, where checkout/checkin would churn every client
+//! every round.
+
+use super::client::FlClient;
+use crate::compress::{self, CompressConfig, CompressorKind};
+use crate::data::dataset::{Batch, Dataset};
+use crate::sparse::codec::CodecParams;
+use crate::sparse::vector::SparseVec;
+use crate::util::rng::Rng;
+
+/// Below this much total broadcast-observation work (dense momentum coords ×
+/// clients) the per-round thread spawns cost more than they parallelise.
+const PARALLEL_OBSERVE_MIN_WORK: usize = 1 << 15;
+
+/// How `FlRun` keeps per-client state (TOML top-level `store` key).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum StoreMode {
+    /// `Dense` for full-participation samplers, `Virtual` otherwise.
+    #[default]
+    Auto,
+    /// Every client permanently materialized (the pre-store behaviour).
+    Dense,
+    /// Sparse-at-rest records + pooled dense cohort slots.
+    Virtual,
+}
+
+impl StoreMode {
+    pub fn parse(s: &str) -> Option<StoreMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(StoreMode::Auto),
+            "dense" => Some(StoreMode::Dense),
+            "virtual" => Some(StoreMode::Virtual),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StoreMode::Auto => "auto",
+            StoreMode::Dense => "dense",
+            StoreMode::Virtual => "virtual",
+        }
+    }
+}
+
+/// Per-client state keeper for the round loop. Both implementations are
+/// bit-identical in effect: the trajectory of a run must not depend on
+/// which store backs it (pinned by the store proptests and the verify
+/// matrix, which runs the fixture through `VirtualStore`).
+pub trait ClientStore: Send {
+    /// Total number of clients in the fleet (resident or not).
+    fn fleet_len(&self) -> usize;
+
+    /// Whether this fleet's scheme observes broadcasts at all (plain DGC
+    /// does not, letting the round loop skip the call entirely).
+    fn observes_broadcast(&self) -> bool;
+
+    /// Deliver a round broadcast fleet-wide. Dense stores fold it into
+    /// every client eagerly (fanned out over `workers` threads when the
+    /// work amortizes the spawns); virtual stores append it to the replay
+    /// log and fold it lazily at the next checkout.
+    fn observe_broadcast(&mut self, payload: &SparseVec, workers: usize);
+
+    /// Materialize the round cohort. `cohort` must be sorted, unique and
+    /// in range (every `Sampler` variant guarantees this). Panics if a
+    /// cohort is already checked out.
+    fn checkout(&mut self, cohort: &[usize]);
+
+    /// The materialized cohort, in `cohort` order. Valid between
+    /// `checkout` and `checkin`.
+    fn cohort_mut(&mut self) -> Vec<&mut FlClient>;
+
+    /// Fold the cohort's state back to rest and evict it from the slots.
+    fn checkin(&mut self);
+
+    /// Bytes of client state this store currently keeps resident: at-rest
+    /// records, the broadcast replay log, and the dense slot pool (planes +
+    /// round scratch). Deliberately excludes shard payloads — data residency
+    /// is the dataset layer's problem, not the state store's.
+    fn resident_state_bytes(&mut self) -> usize;
+
+    /// Residual (V-plane) L2 norm of one client at rest — diagnostics.
+    fn residual_norm(&mut self, id: usize) -> f32;
+
+    /// The permanently-dense fleet, when this store keeps one
+    /// (`DenseStore`); `None` for virtualized stores. Test access only.
+    fn dense_clients(&self) -> Option<&[FlClient]>;
+}
+
+/// Zero-sized placeholder shard a pooled slot holds while unbound.
+struct NullShard;
+
+impl Dataset for NullShard {
+    fn len(&self) -> usize {
+        0
+    }
+    fn label_histogram(&self) -> Vec<usize> {
+        Vec::new()
+    }
+    fn sample_batch(&self, _batch: usize, _rng: &mut Rng) -> Batch {
+        unreachable!("pooled slot trained without a bound shard")
+    }
+    fn eval_batches(&self, _batch: usize) -> Vec<Batch> {
+        Vec::new()
+    }
+}
+
+/// Dense planes + round scratch one materialized client costs (excluding
+/// the shard, see [`ClientStore::resident_state_bytes`]).
+fn slot_bytes(c: &mut FlClient) -> usize {
+    let planes: usize = c.compressor.state_planes_mut().iter().map(|(_, p)| p.len() * 4).sum();
+    let sv = |v: &SparseVec| (v.indices.capacity() + v.values.capacity()) * 4;
+    planes + sv(&c.upload) + sv(&c.echo) + c.wire_buf.capacity() + c.upload.dim * 4
+}
+
+/// The pre-store behaviour: every client permanently materialized.
+pub struct DenseStore {
+    clients: Vec<FlClient>,
+    cohort: Vec<usize>,
+    observes: bool,
+    dim: usize,
+}
+
+impl DenseStore {
+    pub fn new(
+        shards: Vec<Box<dyn Dataset + Send>>,
+        root: &Rng,
+        dim: usize,
+        kind: CompressorKind,
+        cfg: &CompressConfig,
+        codec: CodecParams,
+    ) -> Self {
+        let clients: Vec<FlClient> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| {
+                let comp = compress::build(kind, cfg, dim);
+                FlClient::new(id, comp, shard, root, dim, codec)
+            })
+            .collect();
+        let observes = clients.first().is_some_and(|c| c.compressor.observes_broadcast());
+        DenseStore { clients, cohort: Vec::new(), observes, dim }
+    }
+}
+
+impl ClientStore for DenseStore {
+    fn fleet_len(&self) -> usize {
+        self.clients.len()
+    }
+
+    fn observes_broadcast(&self) -> bool {
+        self.observes
+    }
+
+    fn observe_broadcast(&mut self, payload: &SparseVec, workers: usize) {
+        let clients = &mut self.clients;
+        let observe_work = self.dim * clients.len();
+        if workers > 1 && clients.len() > 1 && observe_work >= PARALLEL_OBSERVE_MIN_WORK {
+            let chunk = clients.len().div_ceil(workers);
+            std::thread::scope(|s| {
+                for ch in clients.chunks_mut(chunk) {
+                    s.spawn(move || {
+                        for c in ch {
+                            c.observe_broadcast(payload);
+                        }
+                    });
+                }
+            });
+        } else {
+            for c in clients.iter_mut() {
+                c.observe_broadcast(payload);
+            }
+        }
+    }
+
+    fn checkout(&mut self, cohort: &[usize]) {
+        assert!(self.cohort.is_empty(), "cohort already checked out");
+        self.cohort.extend_from_slice(cohort);
+    }
+
+    fn cohort_mut(&mut self) -> Vec<&mut FlClient> {
+        let mut parts: Vec<&mut FlClient> = Vec::with_capacity(self.cohort.len());
+        let mut client_iter = self.clients.iter_mut().enumerate();
+        for &cid in &self.cohort {
+            for (i, c) in client_iter.by_ref() {
+                if i == cid {
+                    parts.push(c);
+                    break;
+                }
+            }
+        }
+        // the single-pass match above requires ascending participant ids
+        // (every Sampler variant sorts); a miss here would silently skip
+        // clients and misalign the round's reductions
+        assert_eq!(
+            parts.len(),
+            self.cohort.len(),
+            "sampler must return sorted unique in-range client ids"
+        );
+        parts
+    }
+
+    fn checkin(&mut self) {
+        self.cohort.clear();
+    }
+
+    fn resident_state_bytes(&mut self) -> usize {
+        self.clients.iter_mut().map(slot_bytes).sum()
+    }
+
+    fn residual_norm(&mut self, id: usize) -> f32 {
+        self.clients[id].compressor.residual_norm()
+    }
+
+    fn dense_clients(&self) -> Option<&[FlClient]> {
+        Some(&self.clients)
+    }
+}
+
+/// One client at rest: everything that carries information across rounds,
+/// in sparse/compact form.
+struct ClientRecord {
+    /// RNG checkpoint — advanced only while materialized (training draws)
+    rng: Rng,
+    /// the client's shard, lent to a slot while materialized
+    shard: Option<Box<dyn Dataset + Send>>,
+    /// state planes gathered to sparse, aligned with the scheme's
+    /// `state_planes_mut` order; empty until first eviction
+    planes: Vec<SparseVec>,
+    /// broadcasts already folded into the planes (replay-log cursor)
+    observed: usize,
+}
+
+/// Sparse-at-rest fleet with a pooled dense cohort.
+pub struct VirtualStore {
+    records: Vec<ClientRecord>,
+    /// pooled dense slots, grown to the largest cohort seen
+    slots: Vec<FlClient>,
+    /// record ids currently materialized, aligned with the slot prefix
+    out: Vec<usize>,
+    /// broadcast replay log (empty for schemes that never observe)
+    log: Vec<SparseVec>,
+    root: Rng,
+    kind: CompressorKind,
+    compress: CompressConfig,
+    codec: CodecParams,
+    dim: usize,
+    observes: bool,
+}
+
+impl VirtualStore {
+    pub fn new(
+        shards: Vec<Box<dyn Dataset + Send>>,
+        root: &Rng,
+        dim: usize,
+        kind: CompressorKind,
+        cfg: &CompressConfig,
+        codec: CodecParams,
+    ) -> Self {
+        let records: Vec<ClientRecord> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| ClientRecord {
+                // the exact stream `FlClient::new` derives, so a virtual
+                // client trains on the same draws as its dense twin
+                rng: root.derive(0xC11E ^ id as u64),
+                shard: Some(shard),
+                planes: Vec::new(),
+                observed: 0,
+            })
+            .collect();
+        let observes = compress::build(kind, cfg, 0).observes_broadcast();
+        VirtualStore {
+            records,
+            slots: Vec::new(),
+            out: Vec::new(),
+            log: Vec::new(),
+            root: root.clone(),
+            kind,
+            compress: cfg.clone(),
+            codec,
+            dim,
+            observes,
+        }
+    }
+
+    /// Materialize one record into one slot: rebind identity, scatter the
+    /// sparse planes into zeroed dense ones, replay missed broadcasts.
+    fn materialize(record: &mut ClientRecord, slot: &mut FlClient, id: usize, log: &[SparseVec]) {
+        slot.id = id;
+        slot.rng = record.rng.clone();
+        let shard = record.shard.take().expect("client materialized twice");
+        let _null = std::mem::replace(&mut slot.shard, shard);
+        for (i, (_, dense)) in slot.compressor.state_planes_mut().into_iter().enumerate() {
+            dense.fill(0.0);
+            if let Some(sparse) = record.planes.get(i) {
+                for (&ix, &v) in sparse.indices.iter().zip(&sparse.values) {
+                    dense[ix as usize] = v;
+                }
+            }
+        }
+        // replay the broadcasts this client slept through, in order — the
+        // same per-coordinate operation sequence the eager fan-out runs
+        for payload in &log[record.observed..] {
+            slot.compressor.observe_broadcast(payload);
+        }
+        record.observed = log.len();
+    }
+
+    /// Evict one slot back into its record: gather planes (keeping every
+    /// value whose bits are nonzero, so `-0.0` survives), zero the slot's
+    /// planes for the next tenant, checkpoint the RNG, return the shard.
+    fn evict(record: &mut ClientRecord, slot: &mut FlClient, dim: usize) {
+        record.rng = slot.rng.clone();
+        record.shard = Some(std::mem::replace(&mut slot.shard, Box::new(NullShard)));
+        let planes = slot.compressor.state_planes_mut();
+        if record.planes.len() < planes.len() {
+            record.planes.resize_with(planes.len(), || SparseVec::empty(dim));
+        }
+        for ((_, dense), sparse) in planes.into_iter().zip(record.planes.iter_mut()) {
+            sparse.indices.clear();
+            sparse.values.clear();
+            for (ix, v) in dense.iter_mut().enumerate() {
+                if v.to_bits() != 0 {
+                    sparse.indices.push(ix as u32);
+                    sparse.values.push(*v);
+                }
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+impl ClientStore for VirtualStore {
+    fn fleet_len(&self) -> usize {
+        self.records.len()
+    }
+
+    fn observes_broadcast(&self) -> bool {
+        self.observes
+    }
+
+    fn observe_broadcast(&mut self, payload: &SparseVec, _workers: usize) {
+        if self.observes {
+            self.log.push(payload.clone());
+        }
+    }
+
+    fn checkout(&mut self, cohort: &[usize]) {
+        assert!(self.out.is_empty(), "cohort already checked out");
+        assert!(
+            cohort.windows(2).all(|w| w[0] < w[1])
+                && cohort.last().map_or(true, |&c| c < self.records.len()),
+            "sampler must return sorted unique in-range client ids"
+        );
+        while self.slots.len() < cohort.len() {
+            let comp = compress::build(self.kind, &self.compress, self.dim);
+            self.slots.push(FlClient::new(
+                usize::MAX,
+                comp,
+                Box::new(NullShard),
+                &self.root,
+                self.dim,
+                self.codec,
+            ));
+        }
+        for (slot, &id) in self.slots.iter_mut().zip(cohort) {
+            Self::materialize(&mut self.records[id], slot, id, &self.log);
+        }
+        self.out.extend_from_slice(cohort);
+    }
+
+    fn cohort_mut(&mut self) -> Vec<&mut FlClient> {
+        self.slots[..self.out.len()].iter_mut().collect()
+    }
+
+    fn checkin(&mut self) {
+        for (slot, &id) in self.slots.iter_mut().zip(&self.out) {
+            Self::evict(&mut self.records[id], slot, self.dim);
+        }
+        self.out.clear();
+    }
+
+    fn resident_state_bytes(&mut self) -> usize {
+        let sv = |v: &SparseVec| (v.indices.capacity() + v.values.capacity()) * 4;
+        let records: usize = self
+            .records
+            .iter()
+            .map(|r| {
+                std::mem::size_of::<ClientRecord>() + r.planes.iter().map(sv).sum::<usize>()
+            })
+            .sum();
+        let log: usize = self.log.iter().map(sv).sum();
+        let slots: usize = self.slots.iter_mut().map(slot_bytes).sum();
+        records + log + slots
+    }
+
+    fn residual_norm(&mut self, id: usize) -> f32 {
+        if let Some(pos) = self.out.iter().position(|&c| c == id) {
+            return self.slots[pos].compressor.residual_norm();
+        }
+        // at rest, V is one of the gathered planes; its index depends on the
+        // scheme, so look it up by name through a slot-shaped probe
+        let names: Vec<&'static str> = if let Some(slot) = self.slots.first_mut() {
+            slot.compressor.state_planes_mut().iter().map(|(n, _)| *n).collect()
+        } else {
+            compress::build(self.kind, &self.compress, 0)
+                .state_planes_mut()
+                .iter()
+                .map(|(n, _)| *n)
+                .collect()
+        };
+        let Some(vi) = names.iter().position(|&n| n == "v") else { return 0.0 };
+        // the planes at rest may still be behind on replay, but replayed
+        // broadcasts only touch M — V is exact at rest
+        self.records[id].planes.get(vi).map(|p| p.l2_norm()).unwrap_or(0.0)
+    }
+
+    fn dense_clients(&self) -> Option<&[FlClient]> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::BlobDataset;
+
+    fn shards(n: usize, dim: usize) -> Vec<Box<dyn Dataset + Send>> {
+        (0..n)
+            .map(|c| {
+                Box::new(BlobDataset::generate_split(20, dim, 3, 0.4, 7, 8 + c as u64))
+                    as Box<dyn Dataset + Send>
+            })
+            .collect()
+    }
+
+    fn stores(n: usize, dim: usize, kind: CompressorKind) -> (DenseStore, VirtualStore) {
+        let root = Rng::new(42);
+        let cfg = CompressConfig::default();
+        let codec = CodecParams::default();
+        (
+            DenseStore::new(shards(n, dim), &root, dim, kind, &cfg, codec),
+            VirtualStore::new(shards(n, dim), &root, dim, kind, &cfg, codec),
+        )
+    }
+
+    /// Drive both stores through the same observe/mutate schedule and
+    /// assert the dense planes agree bit-for-bit at every materialization.
+    #[test]
+    fn virtual_planes_match_dense_across_schemes() {
+        let dim = 12;
+        for kind in CompressorKind::ALL {
+            let (mut dense, mut virt) = stores(5, dim, kind);
+            let mut rng = Rng::new(99);
+            for round in 0..6 {
+                if round > 0 && dense.observes_broadcast() {
+                    let payload = SparseVec::new(
+                        dim,
+                        vec![(round as u32 % dim as u32, 0.5 - round as f32 * 0.1)],
+                    );
+                    dense.observe_broadcast(&payload, 1);
+                    virt.observe_broadcast(&payload, 1);
+                }
+                // a rotating 2-client cohort exercises replay gaps
+                let a = rng.below(4);
+                let cohort = [a, a + 1];
+                dense.checkout(&cohort);
+                virt.checkout(&cohort);
+                let mut d = dense.cohort_mut();
+                let mut v = virt.cohort_mut();
+                for (dc, vc) in d.iter_mut().zip(v.iter_mut()) {
+                    assert_eq!(dc.id, vc.id);
+                    assert_eq!(
+                        dc.rng.next_u64(),
+                        vc.rng.next_u64(),
+                        "{}: rng checkpoint diverged",
+                        kind.name()
+                    );
+                    // perturb the planes through the compressor so eviction
+                    // has real state to gather (including a negative zero)
+                    let grad: Vec<f32> = (0..dim)
+                        .map(|i| if i % 3 == 0 { 0.0 } else { (i as f32 - 4.0) * 0.25 })
+                        .collect();
+                    dc.compressor.compress_into(&grad, 3, round, &mut dc.upload);
+                    vc.compressor.compress_into(&grad, 3, round, &mut vc.upload);
+                    let dp = dc.compressor.state_planes_mut();
+                    let vp = vc.compressor.state_planes_mut();
+                    assert_eq!(dp.len(), vp.len());
+                    for ((dn, dpl), (vn, vpl)) in dp.iter().zip(vp.iter()) {
+                        assert_eq!(dn, vn);
+                        let db: Vec<u32> = dpl.iter().map(|x| x.to_bits()).collect();
+                        let vb: Vec<u32> = vpl.iter().map(|x| x.to_bits()).collect();
+                        assert_eq!(db, vb, "{}: plane {dn} diverged round {round}", kind.name());
+                    }
+                }
+                drop(d);
+                drop(v);
+                dense.checkin();
+                virt.checkin();
+            }
+        }
+    }
+
+    #[test]
+    fn gather_preserves_negative_zero() {
+        let dim = 4;
+        let root = Rng::new(1);
+        let cfg = CompressConfig::default();
+        let mut virt = VirtualStore::new(
+            shards(1, dim),
+            &root,
+            dim,
+            CompressorKind::Dgc,
+            &cfg,
+            CodecParams::default(),
+        );
+        virt.checkout(&[0]);
+        {
+            let mut cohort = virt.cohort_mut();
+            let planes = cohort[0].compressor.state_planes_mut();
+            let (_, v) = &planes[1];
+            assert!(v.iter().all(|&x| x == 0.0));
+        }
+        {
+            let mut cohort = virt.cohort_mut();
+            let mut planes = cohort[0].compressor.state_planes_mut();
+            planes[1].1[2] = -0.0;
+            planes[1].1[3] = 1.5;
+        }
+        virt.checkin();
+        virt.checkout(&[0]);
+        let mut cohort = virt.cohort_mut();
+        let planes = cohort[0].compressor.state_planes_mut();
+        let v = &planes[1].1;
+        assert_eq!(v[2].to_bits(), (-0.0f32).to_bits(), "-0.0 must survive eviction");
+        assert_eq!(v[3], 1.5);
+    }
+
+    #[test]
+    fn resident_bytes_scale_with_cohort_not_fleet() {
+        let dim = 64;
+        let root = Rng::new(5);
+        let cfg = CompressConfig::default();
+        let build = |n: usize| {
+            VirtualStore::new(
+                shards(n, dim),
+                &root,
+                dim,
+                CompressorKind::DgcWgmf,
+                &cfg,
+                CodecParams::default(),
+            )
+        };
+        let mut small = build(8);
+        let mut large = build(64);
+        small.checkout(&[0, 1]);
+        large.checkout(&[0, 1]);
+        small.checkin();
+        large.checkin();
+        let per_rec = std::mem::size_of::<ClientRecord>();
+        let (s, l) = (small.resident_state_bytes(), large.resident_state_bytes());
+        // growing the fleet 8× costs only the extra at-rest records, not
+        // 8× the dense slot pool
+        assert!(
+            l - s <= 56 * per_rec + 56 * 2 * dim * 4 / 8,
+            "fleet growth leaked dense state: {s} -> {l}"
+        );
+        let mut dense = DenseStore::new(
+            shards(64, dim),
+            &root,
+            dim,
+            CompressorKind::DgcWgmf,
+            &cfg,
+            CodecParams::default(),
+        );
+        assert!(
+            dense.resident_state_bytes() > l,
+            "a dense 64-client fleet must out-weigh the virtual one"
+        );
+    }
+
+    #[test]
+    fn residual_norm_readable_at_rest() {
+        let dim = 8;
+        let root = Rng::new(3);
+        let cfg = CompressConfig::default();
+        let mut virt = VirtualStore::new(
+            shards(2, dim),
+            &root,
+            dim,
+            CompressorKind::Dgc,
+            &cfg,
+            CodecParams::default(),
+        );
+        assert_eq!(virt.residual_norm(0), 0.0);
+        virt.checkout(&[0]);
+        {
+            let mut cohort = virt.cohort_mut();
+            let grad: Vec<f32> = (0..dim).map(|i| i as f32 * 0.3 + 0.1).collect();
+            let mut out = SparseVec::empty(dim);
+            cohort[0].compressor.compress_into(&grad, 2, 0, &mut out);
+        }
+        let norm_out = virt.residual_norm(0);
+        virt.checkin();
+        let norm_rest = virt.residual_norm(0);
+        assert!(norm_rest > 0.0, "residual must be visible at rest");
+        assert_eq!(norm_out.to_bits(), norm_rest.to_bits());
+    }
+}

@@ -55,6 +55,20 @@ pub struct TrafficMeter {
     pub total_precodec: usize,
     /// cumulative uplink bytes per client id (grown on first use)
     pub per_client_uplink: Vec<usize>,
+    /// tier-1 backhaul (edge → hub) bytes this round / overall. A separate
+    /// ledger on purpose: tier-0 totals (and the codec ratios above) are
+    /// digested, and a flat run must stay byte-identical to a two-tier run
+    /// — edge traffic never leaks into the tier-0 columns.
+    pub round_edge_uplink: usize,
+    pub total_edge_uplink: usize,
+    /// v1-equivalent bytes of the merged backhaul frames (tier-1 codec
+    /// ratio denominator, mirroring `round_precodec` for tier 0)
+    pub round_edge_precodec: usize,
+    pub total_edge_precodec: usize,
+    /// hub → edge broadcast fan-out bytes this round / overall (the hub
+    /// ships the broadcast once per edge; edges re-multicast locally)
+    pub round_edge_downlink: usize,
+    pub total_edge_downlink: usize,
 }
 
 impl TrafficMeter {
@@ -68,6 +82,9 @@ impl TrafficMeter {
         self.round_wasted_uplink = 0;
         self.round_precodec = 0;
         self.round_uplinks.clear();
+        self.round_edge_uplink = 0;
+        self.round_edge_precodec = 0;
+        self.round_edge_downlink = 0;
     }
 
     fn bump_client(&mut self, client: usize, bytes: usize) {
@@ -115,6 +132,24 @@ impl TrafficMeter {
         self.total_wasted_uplink += bytes;
         self.bump_client(client, bytes);
         self.bump_precodec(precodec_bytes);
+    }
+
+    /// One round's merged edge → hub backhaul frames (summed over edges).
+    /// `bytes` is the wire length under the uplink codec, `precodec_bytes`
+    /// the v1-equivalent cost of the same frames.
+    pub fn record_edge_uplink(&mut self, bytes: usize, precodec_bytes: usize) {
+        self.round_edge_uplink += bytes;
+        self.total_edge_uplink += bytes;
+        self.round_edge_precodec += precodec_bytes;
+        self.total_edge_precodec += precodec_bytes;
+    }
+
+    /// The hub → edge leg of the broadcast: the hub ships the frame once
+    /// per edge aggregator, which then re-multicasts to its cohort (the
+    /// tier-0 downlink ledger already prices that second leg).
+    pub fn record_edge_broadcast(&mut self, bcast_bytes: usize, edges: usize) {
+        self.round_edge_downlink += bcast_bytes * edges;
+        self.total_edge_downlink += bcast_bytes * edges;
     }
 
     pub fn record_broadcast(&mut self, bytes: usize, precodec_bytes: usize, participants: usize) {
@@ -354,6 +389,30 @@ mod tests {
             assert!(g <= max + 1e-15, "n={n}: {g} > {max}");
             assert!((g - max).abs() < 1e-9, "one payer ~= the n-client maximum");
         }
+    }
+
+    #[test]
+    fn edge_ledger_is_isolated_from_tier0_totals() {
+        let mut m = TrafficMeter::new(TrafficPolicy::default());
+        m.begin_round();
+        m.record_uplink(0, 100, 100);
+        m.record_edge_uplink(60, 90);
+        m.record_edge_broadcast(40, 3);
+        assert_eq!(m.round_edge_uplink, 60);
+        assert_eq!(m.round_edge_precodec, 90);
+        assert_eq!(m.round_edge_downlink, 120, "broadcast once per edge");
+        // digested tier-0 columns must not move
+        assert_eq!(m.round_uplink, 100);
+        assert_eq!(m.round_downlink, 0);
+        assert_eq!(m.round_precodec, 100);
+        assert_eq!(m.round_codec_ratio(), 1.0, "edge bytes stay out of the codec ratio");
+        m.begin_round();
+        assert_eq!(m.round_edge_uplink, 0, "round edge ledger resets");
+        assert_eq!(m.round_edge_downlink, 0);
+        assert_eq!(m.round_edge_precodec, 0);
+        assert_eq!(m.total_edge_uplink, 60, "run edge ledger accumulates");
+        assert_eq!(m.total_edge_precodec, 90);
+        assert_eq!(m.total_edge_downlink, 120);
     }
 
     #[test]

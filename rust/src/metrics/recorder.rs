@@ -67,6 +67,19 @@ pub struct RoundRecord {
     pub stale_frames: usize,
     /// duplicate (client, round) frames rejected by the receive path
     pub dup_frames: usize,
+    /// edge aggregators active this round (0 = flat hub-and-spoke). The
+    /// edge_* columns describe the tier-1 backhaul only and are deliberately
+    /// OUTSIDE the trajectory digest: a two-tier run is byte-identical to a
+    /// flat run everywhere the digest looks.
+    pub edge_count: usize,
+    /// merged edge → hub backhaul bytes this round (support-union frames,
+    /// uplink codec)
+    pub edge_uplink_bytes: usize,
+    /// hub → edge broadcast fan-out bytes (broadcast frame × edge_count)
+    pub edge_downlink_bytes: usize,
+    /// simulated backhaul seconds over the parallel edge links (diagnostic
+    /// only — never added to `sim_seconds`, which is digested)
+    pub edge_backhaul_s: f64,
 }
 
 impl RoundRecord {
@@ -111,6 +124,19 @@ impl RoundRecord {
         }
         if !self.train_loss.is_finite() {
             out.push(format!("round {r}: train_loss {} not finite", self.train_loss));
+        }
+        if self.edge_count == 0
+            && (self.edge_uplink_bytes != 0
+                || self.edge_downlink_bytes != 0
+                || self.edge_backhaul_s != 0.0)
+        {
+            out.push(format!(
+                "round {r}: edge traffic ({}, {}, {}) recorded with no edges",
+                self.edge_uplink_bytes, self.edge_downlink_bytes, self.edge_backhaul_s
+            ));
+        }
+        if !self.edge_backhaul_s.is_finite() || self.edge_backhaul_s < 0.0 {
+            out.push(format!("round {r}: edge_backhaul_s {} invalid", self.edge_backhaul_s));
         }
         out
     }
@@ -234,18 +260,28 @@ impl Recorder {
         self.rounds.iter().map(|r| r.dup_frames).sum()
     }
 
+    /// Whole-run tier-1 (edge → hub) backhaul bytes; 0 for flat fleets.
+    pub fn total_edge_uplink(&self) -> usize {
+        self.rounds.iter().map(|r| r.edge_uplink_bytes).sum()
+    }
+
+    /// Whole-run hub → edge broadcast fan-out bytes; 0 for flat fleets.
+    pub fn total_edge_downlink(&self) -> usize {
+        self.rounds.iter().map(|r| r.edge_downlink_bytes).sum()
+    }
+
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "round,train_loss,test_loss,test_accuracy,uplink_bytes,downlink_bytes,\
              aggregate_nnz,mask_overlap,sim_seconds,wall_seconds,selected,dropped_deadline,\
              dropped_offline,sim_clock,wasted_uplink_bytes,carried_in,carried_bytes,\
              traffic_gini,precodec_bytes,codec_ratio,retries,timeouts,stale_frames,\
-             dup_frames\n",
+             dup_frames,edge_count,edge_uplink_bytes,edge_downlink_bytes,edge_backhaul_s\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
                 "{},{:.6},{:.6},{:.6},{},{},{},{:.6},{:.6},{:.6},{},{},{},{:.6},{},{},{},\
-                 {:.6},{},{:.6},{},{},{},{}\n",
+                 {:.6},{},{:.6},{},{},{},{},{},{},{},{:.6}\n",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -269,7 +305,11 @@ impl Recorder {
                 r.retries,
                 r.timeouts,
                 r.stale_frames,
-                r.dup_frames
+                r.dup_frames,
+                r.edge_count,
+                r.edge_uplink_bytes,
+                r.edge_downlink_bytes,
+                r.edge_backhaul_s
             ));
         }
         out
@@ -298,6 +338,8 @@ impl Recorder {
             ("total_timeouts", Json::num(self.total_timeouts() as f64)),
             ("total_stale_frames", Json::num(self.total_stale_frames() as f64)),
             ("total_dup_frames", Json::num(self.total_dup_frames() as f64)),
+            ("total_edge_uplink_bytes", Json::num(self.total_edge_uplink() as f64)),
+            ("total_edge_downlink_bytes", Json::num(self.total_edge_downlink() as f64)),
         ])
     }
 
@@ -398,7 +440,8 @@ mod tests {
         let csv = r.to_csv();
         assert!(csv.lines().next().unwrap().ends_with(
             "sim_clock,wasted_uplink_bytes,carried_in,carried_bytes,traffic_gini,\
-             precodec_bytes,codec_ratio,retries,timeouts,stale_frames,dup_frames"
+             precodec_bytes,codec_ratio,retries,timeouts,stale_frames,dup_frames,\
+             edge_count,edge_uplink_bytes,edge_downlink_bytes,edge_backhaul_s"
         ));
     }
 
@@ -415,7 +458,7 @@ mod tests {
         assert_eq!(j.get("total_retries").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("total_dup_frames").unwrap().as_usize(), Some(4));
         let row = r.to_csv().lines().nth(1).unwrap().to_string();
-        assert!(row.ends_with("2,0,1,0"), "row {row}");
+        assert!(row.ends_with("2,0,1,0,0,0,0,0.000000"), "row {row}");
     }
 
     #[test]
@@ -483,6 +526,45 @@ mod tests {
             ..Default::default()
         };
         assert!(!bad_drops.consistency_violations().is_empty());
+    }
+
+    #[test]
+    fn edge_columns_total_and_validate() {
+        let mut r = Recorder::new();
+        r.push(RoundRecord {
+            edge_count: 2,
+            edge_uplink_bytes: 300,
+            edge_downlink_bytes: 200,
+            edge_backhaul_s: 0.5,
+            codec_ratio: 1.0,
+            ..Default::default()
+        });
+        r.push(RoundRecord { codec_ratio: 1.0, ..Default::default() });
+        assert_eq!(r.total_edge_uplink(), 300);
+        assert_eq!(r.total_edge_downlink(), 200);
+        let j = r.summary_json();
+        assert_eq!(j.get("total_edge_uplink_bytes").unwrap().as_usize(), Some(300));
+        assert_eq!(j.get("total_edge_downlink_bytes").unwrap().as_usize(), Some(200));
+        let row = r.to_csv().lines().nth(1).unwrap().to_string();
+        assert!(row.ends_with("2,300,200,0.500000"), "row {row}");
+        // flat rounds must keep the edge columns zero
+        assert!(r.rounds[1].consistency_violations().is_empty());
+        let phantom = RoundRecord {
+            codec_ratio: 1.0,
+            edge_uplink_bytes: 10,
+            ..Default::default()
+        };
+        assert!(
+            !phantom.consistency_violations().is_empty(),
+            "edge bytes with edge_count 0 must be flagged"
+        );
+        let bad_backhaul = RoundRecord {
+            codec_ratio: 1.0,
+            edge_count: 1,
+            edge_backhaul_s: f64::NAN,
+            ..Default::default()
+        };
+        assert!(!bad_backhaul.consistency_violations().is_empty());
     }
 
     #[test]

@@ -254,6 +254,20 @@ pub enum ClientFate {
 /// the round. Shared by [`Scheduler::plan_round`] and the service-mode
 /// round loop, which recomputes fates from real arrivals but must close the
 /// simulated clock identically.
+/// Simulated tier-1 backhaul time: `bytes` of merged edge frames shipped
+/// hub-ward over `edges` parallel links of `bps` bits/s each. The per-edge
+/// byte split is approximated as even (mean spread) — edges serve
+/// equal-sized cohort slices, so their merged frames are statistically
+/// interchangeable. Diagnostic only: it never enters `sim_seconds`, which
+/// is digested and must stay identical between flat and two-tier runs.
+pub fn backhaul_time(bytes: usize, edges: usize, bps: f64) -> f64 {
+    if edges == 0 {
+        0.0
+    } else {
+        (bytes as f64 * 8.0) / (bps * edges as f64)
+    }
+}
+
 pub fn uplink_close(cfg: &SimConfig, fates: &[ClientFate], finishes: &[f64]) -> f64 {
     debug_assert_eq!(fates.len(), finishes.len());
     let mut any_missed = false;
@@ -413,6 +427,15 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn backhaul_time_spreads_over_parallel_edges() {
+        assert_eq!(backhaul_time(0, 0, 1e8), 0.0, "no edges, no backhaul");
+        assert_eq!(backhaul_time(1000, 0, 1e8), 0.0);
+        // 1000 bytes over one 8 kbit/s link = 1 s; two parallel links halve it
+        assert!((backhaul_time(1000, 1, 8000.0) - 1.0).abs() < 1e-12);
+        assert!((backhaul_time(1000, 2, 8000.0) - 0.5).abs() < 1e-12);
+    }
 
     fn net(n: usize) -> Network {
         Network::uniform(n, LinkSpec { up_bps: 1000.0, down_bps: 2000.0, latency_s: 0.0 })

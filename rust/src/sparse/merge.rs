@@ -39,16 +39,9 @@ impl Aggregator {
         self.acc.len()
     }
 
-    /// Add one client contribution.
-    pub fn add(&mut self, g: &SparseVec) {
-        self.add_scaled(g, 1.0);
-    }
-
-    /// Add one contribution scaled by `scale` (`acc += scale · g`) — the
-    /// staleness-discount path for carried-over late uploads. `scale = 1`
-    /// is bit-identical to [`Aggregator::add`] (IEEE-754 guarantees
-    /// `1.0 · v == v`).
-    pub fn add_scaled(&mut self, g: &SparseVec, scale: f32) {
+    /// Add one contribution scaled by `scale` (`acc += scale · v`) — the
+    /// sequential unit [`Aggregator::add`] is built from.
+    fn add_one(&mut self, g: &SparseVec, scale: f32) {
         assert_eq!(g.dim, self.acc.len(), "dimension mismatch");
         for (&i, &v) in g.indices.iter().zip(&g.values) {
             let iu = i as usize;
@@ -62,7 +55,7 @@ impl Aggregator {
 
     /// Fold a validated pull-decoder's (index, value) runs straight into
     /// the accumulator — the streamed-ingest equivalent of decoding the
-    /// buffer and calling [`Aggregator::add_scaled`], without the
+    /// buffer and calling [`Aggregator::add`], without the
     /// intermediate `SparseVec`. Bit-identical to that pair: the runs
     /// arrive in the decoder's emit order and the per-coordinate update is
     /// the same `acc += scale · v` expression.
@@ -89,26 +82,20 @@ impl Aggregator {
         n
     }
 
-    /// Merge a whole round of client contributions, sharding the coordinate
-    /// space over up to `workers` threads when the volume justifies it.
+    /// Add contributions scaled by `scale` (`acc += scale · g` per
+    /// gradient, `scale = 1` bit-identical to unscaled addition — IEEE-754
+    /// guarantees `1.0 · v == v`), sharding the coordinate space over up to
+    /// `workers` threads when the volume justifies it. A `scale ≠ 1` is the
+    /// staleness-discount path for carried-over late uploads.
     ///
-    /// Bit-identical to sequential [`Aggregator::add`] calls in `grads`
-    /// order: shards partition the coordinate space, so within every
-    /// coordinate the f32 additions still happen in client order.
-    pub fn add_all(&mut self, grads: &[&SparseVec], workers: usize) {
-        self.add_all_scaled(grads, 1.0, workers);
-    }
-
-    /// [`Aggregator::add_all`] with every contribution scaled by `scale` —
-    /// how a round's carried-over stale uploads enter the aggregate with
-    /// their staleness discount. Same sharding and determinism contract:
-    /// bit-identical to sequential [`Aggregator::add_scaled`] calls in
-    /// `grads` order at any worker count.
-    pub fn add_all_scaled(&mut self, grads: &[&SparseVec], scale: f32, workers: usize) {
+    /// Bit-identical to sequential single-gradient adds in `grads` order at
+    /// any worker count: shards partition the coordinate space, so within
+    /// every coordinate the f32 additions still happen in client order.
+    pub fn add(&mut self, grads: &[&SparseVec], scale: f32, workers: usize) {
         let total_nnz: usize = grads.iter().map(|g| g.nnz()).sum();
         if workers <= 1 || total_nnz < PARALLEL_MERGE_MIN_NNZ || self.acc.is_empty() {
             for g in grads {
-                self.add_scaled(g, scale);
+                self.add_one(g, scale);
             }
             return;
         }
@@ -157,15 +144,10 @@ impl Aggregator {
         }
     }
 
-    /// Allocation-free `finish_mean`: divide by `count`, emit the
-    /// union-support aggregate into `out` (cleared, capacity kept), and
-    /// reset for the next round.
-    pub fn finish_mean_into(&mut self, count: usize, out: &mut SparseVec) {
-        self.finish_mean_into_with(count, out, 1);
-    }
-
-    /// [`Aggregator::finish_mean_into`] with the emit phase sharded over up
-    /// to `workers` threads when the touched set justifies it.
+    /// Finish the round allocation-free: divide by `count`, emit the
+    /// union-support mean into `out` (cleared, capacity kept), and reset
+    /// for the next round, with the emit phase sharded over up to
+    /// `workers` threads when the touched set justifies it.
     ///
     /// Instead of sorting the touched list, each worker scans its disjoint
     /// slice of the dirty bitmap in ascending coordinate order, emitting and
@@ -173,7 +155,7 @@ impl Aggregator {
     /// is globally sorted. Values are the same `acc[i] * scale` products in
     /// the same order, so the result is **bit-identical** to the sequential
     /// sort + scan at any worker count.
-    pub fn finish_mean_into_with(&mut self, count: usize, out: &mut SparseVec, workers: usize) {
+    pub fn finish_into(&mut self, count: usize, out: &mut SparseVec, workers: usize) {
         let scale = if count == 0 { 0.0 } else { 1.0 / count as f32 };
         out.dim = self.acc.len();
         out.indices.clear();
@@ -243,14 +225,6 @@ impl Aggregator {
         }
         self.touched.clear();
         out.debug_check();
-    }
-
-    /// Finish the round: divide by `count`, emit the union-support sparse
-    /// aggregate, and reset for the next round.
-    pub fn finish_mean(&mut self, count: usize) -> SparseVec {
-        let mut out = SparseVec::empty(self.dim());
-        self.finish_mean_into(count, &mut out);
-        out
     }
 }
 
@@ -367,12 +341,19 @@ fn jaccard(a: &[u32], b: &[u32]) -> f64 {
 mod tests {
     use super::*;
 
+    /// Allocating convenience over [`Aggregator::finish_into`].
+    fn finish(agg: &mut Aggregator, count: usize) -> SparseVec {
+        let mut out = SparseVec::empty(0);
+        agg.finish_into(count, &mut out, 1);
+        out
+    }
+
     #[test]
     fn mean_of_two() {
         let mut agg = Aggregator::new(6);
-        agg.add(&SparseVec::new(6, vec![(0, 2.0), (3, 4.0)]));
-        agg.add(&SparseVec::new(6, vec![(3, 2.0), (5, 6.0)]));
-        let out = agg.finish_mean(2);
+        agg.add(&[&SparseVec::new(6, vec![(0, 2.0), (3, 4.0)])], 1.0, 1);
+        agg.add(&[&SparseVec::new(6, vec![(3, 2.0), (5, 6.0)])], 1.0, 1);
+        let out = finish(&mut agg, 2);
         assert_eq!(out.indices, vec![0, 3, 5]);
         assert_eq!(out.values, vec![1.0, 3.0, 3.0]);
     }
@@ -380,9 +361,9 @@ mod tests {
     #[test]
     fn scaled_add_discounts_values() {
         let mut agg = Aggregator::new(6);
-        agg.add(&SparseVec::new(6, vec![(1, 4.0)]));
-        agg.add_scaled(&SparseVec::new(6, vec![(1, 4.0), (3, 8.0)]), 0.5);
-        let out = agg.finish_mean(2);
+        agg.add(&[&SparseVec::new(6, vec![(1, 4.0)])], 1.0, 1);
+        agg.add(&[&SparseVec::new(6, vec![(1, 4.0), (3, 8.0)])], 0.5, 1);
+        let out = finish(&mut agg, 2);
         assert_eq!(out.indices, vec![1, 3]);
         assert_eq!(out.values, vec![3.0, 2.0]); // (4 + 2)/2, (0 + 4)/2
     }
@@ -391,10 +372,10 @@ mod tests {
     fn scale_one_is_bit_identical_to_plain_add() {
         let g = rand_sparse(512, 200, 99);
         let mut a = Aggregator::new(512);
-        a.add(&g);
+        a.add_one(&g, 1.0);
         let mut b = Aggregator::new(512);
-        b.add_scaled(&g, 1.0);
-        let (oa, ob) = (a.finish_mean(1), b.finish_mean(1));
+        b.add(&[&g], 1.0, 1);
+        let (oa, ob) = (finish(&mut a, 1), finish(&mut b, 1));
         assert_eq!(oa.indices, ob.indices);
         let bits_a: Vec<u32> = oa.values.iter().map(|v| v.to_bits()).collect();
         let bits_b: Vec<u32> = ob.values.iter().map(|v| v.to_bits()).collect();
@@ -420,13 +401,13 @@ mod tests {
             for g in &grads {
                 wire::encode_with(g, &mut buf, p);
                 wire::decode_into(&buf, &mut echo).unwrap();
-                via_decode.add(&echo);
+                via_decode.add(&[&echo], 1.0, 1);
                 let runs = stream::Runs::validate(&buf).unwrap();
                 let folded = via_stream.fold_stream(&runs, 1.0);
                 assert_eq!(folded, echo.nnz(), "{p:?}");
             }
-            let a = via_decode.finish_mean(grads.len());
-            let b = via_stream.finish_mean(grads.len());
+            let a = finish(&mut via_decode, grads.len());
+            let b = finish(&mut via_stream, grads.len());
             assert_eq!(a.indices, b.indices, "{p:?}");
             let bits_a: Vec<u32> = a.values.iter().map(|v| v.to_bits()).collect();
             let bits_b: Vec<u32> = b.values.iter().map(|v| v.to_bits()).collect();
@@ -459,14 +440,14 @@ mod tests {
 
         let mut seq = Aggregator::new(dim);
         for g in &refs {
-            seq.add_scaled(g, 0.375); // exactly representable discount
+            seq.add_one(g, 0.375); // exactly representable discount
         }
-        let a = seq.finish_mean(8);
+        let a = finish(&mut seq, 8);
 
         for workers in [2usize, 5, 64] {
             let mut par = Aggregator::new(dim);
-            par.add_all_scaled(&refs, 0.375, workers);
-            let b = par.finish_mean(8);
+            par.add(&refs, 0.375, workers);
+            let b = finish(&mut par, 8);
             assert_eq!(a.indices, b.indices, "workers={workers}");
             let bits_a: Vec<u32> = a.values.iter().map(|v| v.to_bits()).collect();
             let bits_b: Vec<u32> = b.values.iter().map(|v| v.to_bits()).collect();
@@ -477,10 +458,10 @@ mod tests {
     #[test]
     fn aggregator_resets_between_rounds() {
         let mut agg = Aggregator::new(4);
-        agg.add(&SparseVec::new(4, vec![(1, 1.0)]));
-        let _ = agg.finish_mean(1);
-        agg.add(&SparseVec::new(4, vec![(2, 5.0)]));
-        let out = agg.finish_mean(1);
+        agg.add(&[&SparseVec::new(4, vec![(1, 1.0)])], 1.0, 1);
+        let _ = finish(&mut agg, 1);
+        agg.add(&[&SparseVec::new(4, vec![(2, 5.0)])], 1.0, 1);
+        let out = finish(&mut agg, 1);
         assert_eq!(out.indices, vec![2]);
         assert_eq!(out.values, vec![5.0]);
     }
@@ -488,9 +469,9 @@ mod tests {
     #[test]
     fn cancellation_drops_zero_entries() {
         let mut agg = Aggregator::new(4);
-        agg.add(&SparseVec::new(4, vec![(1, 1.0)]));
-        agg.add(&SparseVec::new(4, vec![(1, -1.0)]));
-        let out = agg.finish_mean(2);
+        agg.add(&[&SparseVec::new(4, vec![(1, 1.0)])], 1.0, 1);
+        agg.add(&[&SparseVec::new(4, vec![(1, -1.0)])], 1.0, 1);
+        let out = finish(&mut agg, 2);
         assert_eq!(out.nnz(), 0);
     }
 
@@ -514,7 +495,7 @@ mod tests {
     #[test]
     fn empty_mean() {
         let mut agg = Aggregator::new(8);
-        let out = agg.finish_mean(0);
+        let out = finish(&mut agg, 0);
         assert_eq!(out.nnz(), 0);
     }
 
@@ -538,14 +519,14 @@ mod tests {
 
         let mut seq = Aggregator::new(dim);
         for g in &refs {
-            seq.add(g);
+            seq.add_one(g, 1.0);
         }
-        let a = seq.finish_mean(8);
+        let a = finish(&mut seq, 8);
 
         for workers in [2usize, 3, 5, 64] {
             let mut par = Aggregator::new(dim);
-            par.add_all(&refs, workers);
-            let b = par.finish_mean(8);
+            par.add(&refs, 1.0, workers);
+            let b = finish(&mut par, 8);
             assert_eq!(a.indices, b.indices, "workers={workers}");
             let bits_a: Vec<u32> = a.values.iter().map(|v| v.to_bits()).collect();
             let bits_b: Vec<u32> = b.values.iter().map(|v| v.to_bits()).collect();
@@ -554,7 +535,7 @@ mod tests {
     }
 
     #[test]
-    fn parallel_finish_mean_is_bit_identical_to_sequential() {
+    fn parallel_finish_is_bit_identical_to_sequential() {
         // touched must clear PARALLEL_MERGE_MIN_NNZ so the sharded emit runs
         let dim = 60_000;
         let grads: Vec<SparseVec> = (0..6).map(|c| rand_sparse(dim, 9_000, 500 + c)).collect();
@@ -562,41 +543,41 @@ mod tests {
 
         let mut seq = Aggregator::new(dim);
         for g in &refs {
-            seq.add(g);
+            seq.add_one(g, 1.0);
         }
         let mut a = SparseVec::empty(0);
-        seq.finish_mean_into_with(6, &mut a, 1);
+        seq.finish_into(6, &mut a, 1);
         assert!(a.nnz() >= super::PARALLEL_MERGE_MIN_NNZ, "test must exercise the parallel gate");
 
         for workers in [2usize, 3, 7, 64] {
             let mut par = Aggregator::new(dim);
             for g in &refs {
-                par.add(g);
+                par.add_one(g, 1.0);
             }
             let mut b = SparseVec::empty(0);
-            par.finish_mean_into_with(6, &mut b, workers);
+            par.finish_into(6, &mut b, workers);
             assert_eq!(a.indices, b.indices, "workers={workers}");
             let bits_a: Vec<u32> = a.values.iter().map(|v| v.to_bits()).collect();
             let bits_b: Vec<u32> = b.values.iter().map(|v| v.to_bits()).collect();
             assert_eq!(bits_a, bits_b, "workers={workers}: values must be bit-identical");
             // aggregator must be fully reset afterwards
             let mut empty = SparseVec::empty(0);
-            par.finish_mean_into_with(1, &mut empty, workers);
+            par.finish_into(1, &mut empty, workers);
             assert_eq!(empty.nnz(), 0, "workers={workers}: dirty state must be cleared");
         }
     }
 
     #[test]
-    fn finish_mean_into_reuses_buffers() {
+    fn finish_into_reuses_buffers() {
         let mut agg = Aggregator::new(16);
         let mut out = SparseVec::empty(0);
-        agg.add(&SparseVec::new(16, vec![(1, 2.0), (9, 4.0)]));
-        agg.finish_mean_into(1, &mut out);
+        agg.add(&[&SparseVec::new(16, vec![(1, 2.0), (9, 4.0)])], 1.0, 1);
+        agg.finish_into(1, &mut out, 1);
         assert_eq!(out.indices, vec![1, 9]);
         assert_eq!(out.dim, 16);
         let ptr = out.indices.as_ptr();
-        agg.add(&SparseVec::new(16, vec![(3, 1.0)]));
-        agg.finish_mean_into(1, &mut out);
+        agg.add(&[&SparseVec::new(16, vec![(3, 1.0)])], 1.0, 1);
+        agg.finish_into(1, &mut out, 1);
         assert_eq!(out.indices, vec![3]);
         assert_eq!(out.indices.as_ptr(), ptr, "warm finish must not reallocate");
     }

@@ -134,6 +134,24 @@ mod tests {
     }
 
     #[test]
+    fn digest_blind_to_edge_tier_fields() {
+        // the t1 ≡ t2 identity: tier-1 backhaul columns are diagnostics,
+        // never digest inputs — a two-tier run must fingerprint identically
+        // to its flat twin
+        let flat = RoundRecord { round: 2, uplink_bytes: 64, ..Default::default() };
+        let mut tiered = flat.clone();
+        tiered.edge_count = 4;
+        tiered.edge_uplink_bytes = 999;
+        tiered.edge_downlink_bytes = 500;
+        tiered.edge_backhaul_s = 1.25;
+        assert_eq!(
+            trajectory_digest(&[9, 9], &[flat]),
+            trajectory_digest(&[9, 9], &[tiered]),
+            "edge columns leaked into the digest"
+        );
+    }
+
+    #[test]
     fn hex_roundtrip() {
         for d in [0u64, 1, 0xdead_beef_cafe_f00d, u64::MAX] {
             assert_eq!(from_hex(&hex(d)), Some(d));

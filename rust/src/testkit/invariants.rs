@@ -197,6 +197,8 @@ pub fn check_traffic(
             meter.total_wasted_uplink,
         ),
         ("precodec", recorder.total_precodec_bytes(), meter.total_precodec),
+        ("edge uplink", recorder.total_edge_uplink(), meter.total_edge_uplink),
+        ("edge downlink", recorder.total_edge_downlink(), meter.total_edge_downlink),
     ];
     for (name, rec, met) in sums {
         if rec != met {
@@ -355,6 +357,17 @@ mod tests {
         let mut bad = rec.clone();
         bad.rounds[0].precodec_bytes = 999;
         assert!(!check_traffic(&m, &bad, 2, true).is_empty());
+        // edge books must reconcile too: meter-side backhaul with no
+        // matching record column is a leak
+        let mut m2 = m.clone();
+        m2.record_edge_uplink(50, 50);
+        assert!(check_traffic(&m2, &rec, 2, true)
+            .iter()
+            .any(|v| v.contains("edge uplink")));
+        let mut tiered = rec.clone();
+        tiered.rounds[0].edge_count = 1;
+        tiered.rounds[0].edge_uplink_bytes = 50;
+        assert!(check_traffic(&m2, &tiered, 2, true).is_empty());
     }
 
     #[test]

@@ -73,6 +73,10 @@ pub struct VerifyReport {
     /// streamed-ingest runs folded into the cross-worker digest gate (one
     /// per scenario — proves streamed ≡ materialized across the matrix)
     pub streamed_runs: usize,
+    /// two-tier topology runs folded into the same digest gate (one per
+    /// scenario per non-flat [`scenario::TIERS`] entry — proves a two-tier
+    /// edge fleet ≡ the flat hub-and-spoke, bit for bit)
+    pub tiered_runs: usize,
     pub scenarios: Vec<ScenarioResult>,
     /// one-off codec self-check violations (q8 round-trip contract)
     pub codec_selfcheck: Vec<String>,
@@ -128,6 +132,7 @@ impl VerifyReport {
             ("scale", Json::str(self.scale)),
             ("runs", Json::num(self.runs as f64)),
             ("streamed_runs", Json::num(self.streamed_runs as f64)),
+            ("tiered_runs", Json::num(self.tiered_runs as f64)),
             ("scenarios", Json::num(self.scenarios.len() as f64)),
             ("chaos_axis", chaos_axis),
             ("invariant_failures", Json::num(self.invariant_failures() as f64)),
@@ -153,11 +158,13 @@ impl VerifyReport {
     /// Human summary for the CLI.
     pub fn render(&self) -> String {
         let mut out = format!(
-            "verify[{}]: {} scenarios x {} worker counts (+{} streamed-ingest) = {} runs\n",
+            "verify[{}]: {} scenarios x {} worker counts (+{} streamed-ingest, \
+             +{} two-tier) = {} runs\n",
             self.scale,
             self.scenarios.len(),
             scenario::WORKERS.len(),
             self.streamed_runs,
+            self.tiered_runs,
             self.runs
         );
         let inv = self.invariant_failures();
@@ -275,10 +282,27 @@ pub fn run_scenario_with(
     rounds: usize,
     streamed: bool,
 ) -> Result<(u64, Vec<String>)> {
+    run_scenario_tiered(s, workers, rounds, streamed, 1)
+}
+
+/// [`run_scenario_with`] with the fleet topology selectable: `tiers = 2`
+/// routes cohort uploads through edge aggregators (fixture fan-in
+/// [`scenario::FIXTURE_COHORTS_PER_EDGE`]). A two-tier run must reproduce
+/// the flat run's trajectory digest bit-for-bit — the tiers axis in
+/// `run_verify` pits one such run against the worker matrix per scenario.
+pub fn run_scenario_tiered(
+    s: &Scenario,
+    workers: usize,
+    rounds: usize,
+    streamed: bool,
+    tiers: usize,
+) -> Result<(u64, Vec<String>)> {
     let VerifyFixture { shards, network, mut engine } =
         verify_fixture(scenario::FIXTURE_CLIENTS, scenario::FIXTURE_SEED);
     let mut cfg = s.fl_config(workers, rounds);
     cfg.streamed_ingest = streamed;
+    cfg.hierarchy.tiers = tiers;
+    cfg.hierarchy.cohorts_per_edge = scenario::FIXTURE_COHORTS_PER_EDGE;
     let staleness = cfg.sim.staleness;
     let dim = engine.param_count();
     let mut run = FlRun::new(&engine, shards, Vec::new(), network, cfg);
@@ -295,7 +319,7 @@ pub fn run_scenario_with(
     violations.extend(invariants::check_traffic(
         &run.meter,
         &summary.recorder,
-        run.clients.len(),
+        run.store.fleet_len(),
         s.codec == CodecAxis::V1,
     ));
     let bits: Vec<u32> = run.params.iter().map(|p| p.to_bits()).collect();
@@ -353,6 +377,16 @@ pub fn run_verify(opts: &VerifyOptions) -> Result<VerifyReport> {
             runs += 1;
             worker_digests.push(("w1+streamed", d));
             violations.extend(v.into_iter().map(|m| format!("[w1+streamed] {m}")));
+        }
+        // the tiers axis: every non-flat topology entry runs once per
+        // scenario and its digest joins the same equality gate — a two-tier
+        // edge fleet must be bit-identical to the flat reference (which the
+        // golden registry pins), per the hierarchy module's contract
+        for &(tname, tiers) in scenario::TIERS.iter().filter(|&&(_, t)| t > 1) {
+            let (d, v) = run_scenario_tiered(&s, 1, rounds, false, tiers)?;
+            runs += 1;
+            worker_digests.push((tname, d));
+            violations.extend(v.into_iter().map(|m| format!("[{tname}] {m}")));
         }
         let reference = worker_digests[0].1;
         for &(wname, d) in &worker_digests[1..] {
@@ -415,6 +449,8 @@ pub fn run_verify(opts: &VerifyOptions) -> Result<VerifyReport> {
         scale: scale_key,
         runs,
         streamed_runs: Scenario::all().len(),
+        tiered_runs: Scenario::all().len()
+            * scenario::TIERS.iter().filter(|&&(_, t)| t > 1).count(),
         scenarios: results,
         codec_selfcheck,
         registry_blessed,

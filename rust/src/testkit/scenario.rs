@@ -200,6 +200,18 @@ pub const AXIS_CHAOS: &[ChaosAxis] = &[
 /// Digests must be equal across all entries (the determinism contract).
 pub const WORKERS: &[(&str, usize)] = &[("w1", 1), ("wpc", 0)];
 
+/// Topology runs per scenario: the flat reference (already covered by the
+/// worker matrix) plus a two-tier edge-aggregated run. Like the worker
+/// axis, tier count must never move the trajectory digest — edges are
+/// contiguous slices of the participant order and the hub's fold is
+/// unchanged (see `coordinator::hierarchy`) — so the runner folds the
+/// two-tier digest into the same golden-gated equality check.
+pub const TIERS: &[(&str, usize)] = &[("t1", 1), ("t2", 2)];
+
+/// Edge fan-in for the two-tier runs: 3 members per edge splits the
+/// 6-client fixture cohort into two genuine edges.
+pub const FIXTURE_COHORTS_PER_EDGE: usize = 3;
+
 // ---------------------------------------------------------------- fixture
 
 /// Staleness discount for the `carry_discounted` axis value.

@@ -37,6 +37,18 @@ fn rand_sparse(rng: &mut Rng, max_dim: usize) -> SparseVec {
     SparseVec::from_sorted(dim, ids, values)
 }
 
+/// Sequentially fold one gradient into `agg` (the consolidated `add` API).
+fn agg_add(agg: &mut Aggregator, g: &SparseVec) {
+    agg.add(&[g], 1.0, 1);
+}
+
+/// Sequentially emit the `count`-mean of `agg` into a fresh vector.
+fn agg_finish(agg: &mut Aggregator, count: usize) -> SparseVec {
+    let mut out = SparseVec::empty(0);
+    agg.finish_into(count, &mut out, 1);
+    out
+}
+
 // -------------------------------------------------------------------- wire
 
 #[test]
@@ -233,9 +245,9 @@ fn prop_aggregator_equals_dense_mean() {
             for (&i, &v) in sv.indices.iter().zip(&sv.values) {
                 dense_sum[i as usize] += v as f64;
             }
-            agg.add(&sv);
+            agg_add(&mut agg, &sv);
         }
-        let mean = agg.finish_mean(kcount);
+        let mean = agg_finish(&mut agg, kcount);
         let dense = mean.to_dense();
         for i in 0..dim {
             let want = dense_sum[i] / kcount as f64;
@@ -876,14 +888,14 @@ fn prop_fold_stream_is_bit_identical_to_decode_then_add() {
 
         wire::decode_into(&buf, &mut echo).unwrap();
         let mut decoded = Aggregator::new(sv.dim);
-        decoded.add(&echo);
+        agg_add(&mut decoded, &echo);
 
         let runs = stream::Runs::validate(&buf).unwrap();
         let mut streamed = Aggregator::new(sv.dim);
         let folded = streamed.fold_stream(&runs, 1.0);
         assert_eq!(folded, echo.nnz(), "seed {seed}: fold must emit every decoded run");
 
-        let (a, b) = (decoded.finish_mean(1), streamed.finish_mean(1));
+        let (a, b) = (agg_finish(&mut decoded, 1), agg_finish(&mut streamed, 1));
         assert_eq!(a.indices, b.indices, "seed {seed} {index:?}/{value:?}");
         let bits = |v: &SparseVec| v.values.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
         assert_eq!(bits(&a), bits(&b), "seed {seed}: folded values must be bit-identical");
@@ -951,8 +963,8 @@ fn prop_fold_stream_truncation_rejected_without_partial_fold() {
 
         wire::decode_into(&buf, &mut echo).unwrap();
         let mut fresh = Aggregator::new(sv.dim);
-        fresh.add(&echo);
-        let (a, b) = (agg.finish_mean(1), fresh.finish_mean(1));
+        agg_add(&mut fresh, &echo);
+        let (a, b) = (agg_finish(&mut agg, 1), agg_finish(&mut fresh, 1));
         assert_eq!(a.indices, b.indices, "seed {seed}");
         assert_eq!(
             a.values.iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
@@ -987,8 +999,98 @@ fn prop_read_payload_one_byte_fragmentation_then_fold_matches_direct() {
         streamed.fold_stream(&runs, 1.0);
         wire::decode_into(&buf, &mut echo).unwrap();
         let mut direct = Aggregator::new(sv.dim);
-        direct.add(&echo);
-        assert_eq!(streamed.finish_mean(1), direct.finish_mean(1), "seed {seed}");
+        agg_add(&mut direct, &echo);
+        assert_eq!(agg_finish(&mut streamed, 1), agg_finish(&mut direct, 1), "seed {seed}");
+    }
+}
+
+// ----------------------------------------------------- fleet-state residency
+
+/// Digest of one verify-fixture run at the given residency, codec and
+/// topology knobs (everything else pinned to a sampled-cohort regime that
+/// forces the virtual store through materialize → train → fold-back →
+/// evict every round).
+fn fixture_run_digest(
+    kind: CompressorKind,
+    params: codec::CodecParams,
+    store: fedgmf::coordinator::StoreMode,
+    tiers: usize,
+    cohorts_per_edge: usize,
+) -> (u64, fedgmf::coordinator::round::RunSummary) {
+    use fedgmf::coordinator::round::{FlConfig, FlRun};
+    use fedgmf::coordinator::sampler::Sampler;
+    use fedgmf::experiments::workload::verify_fixture;
+    use fedgmf::testkit::digest::trajectory_digest;
+
+    let fx = verify_fixture(8, 0xBEEF);
+    let mut engine = fx.engine;
+    let mut cfg = FlConfig::new(kind, 0.25, 5);
+    cfg.sampler = Sampler::Count(4);
+    cfg.eval_every = 0;
+    cfg.seed = 7;
+    cfg.store = store;
+    cfg.codec = codec::WireCodec { uplink: params, downlink: params };
+    cfg.hierarchy.tiers = tiers;
+    cfg.hierarchy.cohorts_per_edge = cohorts_per_edge;
+    let mut run = FlRun::new(&engine, fx.shards, Vec::new(), fx.network, cfg);
+    let summary = run.run(&mut engine).unwrap();
+    let bits: Vec<u32> = run.params.iter().map(|p| p.to_bits()).collect();
+    (trajectory_digest(&bits, &summary.recorder.rounds), summary)
+}
+
+#[test]
+fn prop_virtual_store_bit_identical_to_dense_across_techniques_and_codings() {
+    // the ClientStore contract: sparse-at-rest records materialized into
+    // pooled scratch for the sampled cohort, trained, folded back and
+    // evicted must reproduce the always-dense fleet bit for bit — for
+    // every compression technique and under every codec value coding
+    // (which changes the broadcast bytes the virtual store replays)
+    use fedgmf::coordinator::StoreMode;
+    let codings = [
+        codec::CodecParams { index: codec::IndexCoding::Raw, value: codec::ValueCoding::F32 },
+        codec::CodecParams { index: codec::IndexCoding::Varint, value: codec::ValueCoding::F16 },
+        codec::CodecParams { index: codec::IndexCoding::Varint, value: codec::ValueCoding::Q8 },
+    ];
+    for &kind in CompressorKind::ALL.iter() {
+        for &params in &codings {
+            let (dense, _) = fixture_run_digest(kind, params, StoreMode::Dense, 1, 32);
+            let (virt, _) = fixture_run_digest(kind, params, StoreMode::Virtual, 1, 32);
+            assert_eq!(
+                dense, virt,
+                "{kind:?}/{params:?}: virtual store trajectory diverged from dense"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_two_tier_digest_matches_flat_for_any_edge_fanin() {
+    // the hierarchy contract, swept over edge fan-ins from degenerate
+    // (every member its own edge) to larger-than-cohort (one edge): the
+    // trajectory digest never moves, while the tier-1 ledger fills in
+    // whenever the topology is actually two-tier
+    use fedgmf::coordinator::StoreMode;
+    let params =
+        codec::CodecParams { index: codec::IndexCoding::Varint, value: codec::ValueCoding::Q8 };
+    let kind = CompressorKind::DgcWgmf;
+    let (flat, flat_summary) = fixture_run_digest(kind, params, StoreMode::Auto, 1, 32);
+    assert!(
+        flat_summary.recorder.rounds.iter().all(|r| r.edge_count == 0),
+        "flat run must not record edges"
+    );
+    for per_edge in [1usize, 2, 3, 64] {
+        let (tiered, summary) = fixture_run_digest(kind, params, StoreMode::Auto, 2, per_edge);
+        assert_eq!(flat, tiered, "per_edge {per_edge}: two-tier digest diverged from flat");
+        let edgy = summary.recorder.rounds.iter().filter(|r| r.edge_count > 0).count();
+        assert!(edgy > 0, "per_edge {per_edge}: no round recorded edge traffic");
+        for r in &summary.recorder.rounds {
+            assert!(
+                r.consistency_violations().is_empty(),
+                "per_edge {per_edge} round {}: {:?}",
+                r.round,
+                r.consistency_violations()
+            );
+        }
     }
 }
 

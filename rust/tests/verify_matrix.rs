@@ -37,9 +37,11 @@ fn quick_matrix_passes_invariants_and_golden_gate() {
     // least 200 scenario runs deep
     assert_eq!(report.scenarios.len(), Scenario::all().len());
     // every scenario runs at each worker count plus one streamed-ingest
-    // run, all folded into the same cross-run digest gate
-    assert_eq!(report.runs, Scenario::all().len() * (WORKERS.len() + 1));
+    // run and one two-tier topology run, all folded into the same
+    // cross-run digest gate
+    assert_eq!(report.runs, Scenario::all().len() * (WORKERS.len() + 2));
     assert_eq!(report.streamed_runs, Scenario::all().len());
+    assert_eq!(report.tiered_runs, Scenario::all().len());
     assert!(report.runs >= 200, "matrix shrank below the 200-run floor: {}", report.runs);
     // every invariant ledger must be clean in every scenario
     for s in &report.scenarios {
@@ -58,6 +60,7 @@ fn quick_matrix_passes_invariants_and_golden_gate() {
         .unwrap();
     assert_eq!(j.get("runs").unwrap().as_usize(), Some(report.runs));
     assert_eq!(j.get("streamed_runs").unwrap().as_usize(), Some(report.streamed_runs));
+    assert_eq!(j.get("tiered_runs").unwrap().as_usize(), Some(report.tiered_runs));
     assert_eq!(j.get("invariant_failures").unwrap().as_usize(), Some(0));
     assert_eq!(
         j.get("digests").unwrap().as_obj().unwrap().len(),
@@ -97,6 +100,30 @@ fn streamed_ingest_matches_materialized_digest_under_chaos_with_mass_ledger() {
         assert!(vm.is_empty(), "{} materialized: {:?}", s.key(), vm);
         assert!(vs.is_empty(), "{} streamed: {:?}", s.key(), vs);
         assert_eq!(dm, ds, "{}: streamed digest diverged", s.key());
+    }
+    assert_eq!(covered, 3, "chaos-axis scenarios must be enumerable");
+}
+
+#[test]
+fn two_tier_matches_flat_digest_under_chaos_with_mass_ledger() {
+    // the tiers-axis satellite check where it is hardest: chaos-axis
+    // scenarios with the MassLedger armed. A two-tier run re-routes every
+    // accepted upload through an edge merge before the hub — the digest
+    // must still equal the flat run's bit-for-bit, and the mass and
+    // traffic ledgers (now including the per-tier columns) must stay clean.
+    use fedgmf::testkit::run_scenario_tiered;
+    let mut covered = 0;
+    for s in Scenario::all() {
+        let tail = s.key().rsplit('/').next().unwrap().to_string();
+        if !matches!(tail.as_str(), "dup" | "reorder" | "disconnect") || covered >= 3 {
+            continue;
+        }
+        covered += 1;
+        let (df, vf) = run_scenario_tiered(&s, 1, 2, false, 1).unwrap();
+        let (dt, vt) = run_scenario_tiered(&s, 1, 2, false, 2).unwrap();
+        assert!(vf.is_empty(), "{} flat: {:?}", s.key(), vf);
+        assert!(vt.is_empty(), "{} two-tier: {:?}", s.key(), vt);
+        assert_eq!(df, dt, "{}: two-tier digest diverged from flat", s.key());
     }
     assert_eq!(covered, 3, "chaos-axis scenarios must be enumerable");
 }
