@@ -13,6 +13,10 @@
 //!   wire/encode+decode            — serialisation (v1, incl. dense path)
 //!   codec/<mode>                  — codec v2 encode/decode per mode, with
 //!                                   bytes-per-upload + reduction ratio
+//!   kernel/<name>                 — dispatched hot kernels vs their scalar
+//!                                   twins on identical inputs (topk
+//!                                   threshold, varint, q8, f16, and the
+//!                                   full varint+q8 decode), with speedups
 //!   ingest/<mode>                 — server fold per upload: materialized
 //!                                   decode+add vs the streamed pull-decoder
 //!   momentum/accumulate           — client M update
@@ -30,8 +34,9 @@ use fedgmf::data::dataset::Dataset;
 use fedgmf::runtime::native::{BlobDataset, NativeEngine};
 use fedgmf::runtime::TrainEngine;
 use fedgmf::sim::network::Network;
-use fedgmf::sparse::codec::{CodecParams, IndexCoding, ValueCoding};
+use fedgmf::sparse::codec::{q8_block_scale, CodecParams, IndexCoding, ValueCoding, Q8_BLOCK};
 use fedgmf::sparse::merge::Aggregator;
+use fedgmf::sparse::simd::{self, KernelMode};
 use fedgmf::sparse::topk;
 use fedgmf::sparse::vector::SparseVec;
 use fedgmf::sparse::wire;
@@ -307,6 +312,231 @@ fn main() {
         rows
     };
 
+    // ---- kernel dispatch: each rewritten hot kernel timed under its scalar
+    // twin and the dispatched implementation on identical inputs at the
+    // table3 uplink shape (P = 77 850, rate 0.1). The two headline rows
+    // (topk/threshold, decode/varint+q8) carry the acceptance bar: with AVX2
+    // dispatched they must run >= 2x their scalar baselines, asserted here so
+    // `cargo bench` itself fails on regression (the CI gate re-checks the
+    // JSON). The full-buffer decode rows flip the global dispatch mode per
+    // call; bench main is single-threaded, so this cannot race.
+    println!("== kernel dispatch (scalar vs {}) ==", simd::describe());
+    let kernel_rows = {
+        fn pair(
+            results: &mut Vec<(String, Stats)>,
+            rows: &mut Vec<Json>,
+            name: &str,
+            iters: usize,
+            scalar: impl FnMut(),
+            dispatched: impl FnMut(),
+        ) -> f64 {
+            let mut s_stats = Vec::new();
+            bench(&mut s_stats, &format!("kernel/{name} scalar"), iters, scalar);
+            let mut d_stats = Vec::new();
+            bench(&mut d_stats, &format!("kernel/{name} dispatched"), iters, dispatched);
+            let (s, d) = (s_stats[0].1, d_stats[0].1);
+            let speedup = s.median_ms / d.median_ms.max(1e-9);
+            println!("kernel/{name:<25} speedup {speedup:>6.2}x");
+            rows.push(Json::obj(vec![
+                ("name", Json::str(name)),
+                ("scalar_ms", Json::num(s.median_ms)),
+                ("dispatched_ms", Json::num(d.median_ms)),
+                ("speedup", Json::num(speedup)),
+            ]));
+            results.push((format!("kernel/{name} scalar"), s));
+            results.push((format!("kernel/{name} dispatched"), d));
+            speedup
+        }
+        let p = 77_850usize;
+        let k = p / 10;
+        let raw = randvec(p, 60);
+        let scores: Vec<f32> = raw.iter().map(|x| x.abs()).collect();
+        let ids = topk::select_topk(&scores, k);
+        let vals: Vec<f32> = ids.iter().map(|&i| raw[i as usize]).collect();
+        let nnz = ids.len();
+        let mut rows: Vec<Json> = Vec::new();
+
+        let (mut sc1, mut sc2) = (Vec::new(), Vec::new());
+        let topk_speedup = pair(
+            &mut results,
+            &mut rows,
+            "topk/threshold",
+            it(20),
+            || {
+                std::hint::black_box(topk::threshold_exact_quickselect(&scores, k, &mut sc1));
+            },
+            || {
+                std::hint::black_box(topk::threshold_exact(&scores, k, &mut sc2));
+            },
+        );
+
+        let (mut vb1, mut vb2) = (Vec::new(), Vec::new());
+        pair(
+            &mut results,
+            &mut rows,
+            "varint/encode",
+            it(30),
+            || {
+                vb1.clear();
+                simd::varint_encode_gaps_scalar(&ids, &mut vb1);
+                std::hint::black_box(&vb1);
+            },
+            || {
+                vb2.clear();
+                simd::varint_encode_gaps(&ids, &mut vb2);
+                std::hint::black_box(&vb2);
+            },
+        );
+        let venc = {
+            let mut b = Vec::new();
+            simd::varint_encode_gaps(&ids, &mut b);
+            b
+        };
+        let (mut g1, mut g2) = (vec![0u32; nnz], vec![0u32; nnz]);
+        pair(
+            &mut results,
+            &mut rows,
+            "varint/decode",
+            it(30),
+            || {
+                let mut pos = 0;
+                std::hint::black_box(simd::varint_decode_gaps_scalar(&venc, &mut pos, &mut g1));
+            },
+            || {
+                let mut pos = 0;
+                std::hint::black_box(simd::varint_decode_gaps(&venc, &mut pos, &mut g2));
+            },
+        );
+
+        let (mut q1, mut q2) = (Vec::new(), Vec::new());
+        pair(
+            &mut results,
+            &mut rows,
+            "q8/quantize",
+            it(30),
+            || {
+                q1.clear();
+                for block in vals.chunks(Q8_BLOCK) {
+                    simd::q8_quantize_scalar(block, simd::maxabs_scalar(block), &mut q1);
+                }
+                std::hint::black_box(&q1);
+            },
+            || {
+                q2.clear();
+                for block in vals.chunks(Q8_BLOCK) {
+                    simd::q8_quantize(block, simd::maxabs(block), &mut q2);
+                }
+                std::hint::black_box(&q2);
+            },
+        );
+        // q2 holds the concatenated quantized blocks (no scale prefixes), so
+        // byte offsets line up with value offsets block for block
+        let qblocks: Vec<(f32, usize, usize)> = vals
+            .chunks(Q8_BLOCK)
+            .scan(0usize, |off, block| {
+                let o = *off;
+                *off += block.len();
+                Some((q8_block_scale(block), o, block.len()))
+            })
+            .collect();
+        let (mut d1, mut d2) = (vec![0.0f32; nnz], vec![0.0f32; nnz]);
+        pair(
+            &mut results,
+            &mut rows,
+            "q8/dequantize",
+            it(30),
+            || {
+                for &(s, o, n) in &qblocks {
+                    simd::q8_dequantize_scalar(&q2[o..o + n], s, &mut d1[o..o + n]);
+                }
+                std::hint::black_box(&d1);
+            },
+            || {
+                for &(s, o, n) in &qblocks {
+                    simd::q8_dequantize(&q2[o..o + n], s, &mut d2[o..o + n]);
+                }
+                std::hint::black_box(&d2);
+            },
+        );
+
+        let (mut h1, mut h2) = (Vec::new(), Vec::new());
+        pair(
+            &mut results,
+            &mut rows,
+            "f16/encode",
+            it(30),
+            || {
+                h1.clear();
+                simd::f16_encode_scalar(&vals, &mut h1);
+                std::hint::black_box(&h1);
+            },
+            || {
+                h2.clear();
+                simd::f16_encode(&vals, &mut h2);
+                std::hint::black_box(&h2);
+            },
+        );
+        let (mut fd1, mut fd2) = (vec![0.0f32; nnz], vec![0.0f32; nnz]);
+        pair(
+            &mut results,
+            &mut rows,
+            "f16/decode",
+            it(30),
+            || {
+                simd::f16_decode_scalar(&h2, &mut fd1);
+                std::hint::black_box(&fd1);
+            },
+            || {
+                simd::f16_decode(&h2, &mut fd2);
+                std::hint::black_box(&fd2);
+            },
+        );
+
+        let sv = SparseVec::from_sorted(p, ids.clone(), vals.clone());
+        let q8wire = {
+            let mut b = Vec::new();
+            wire::encode_with(
+                &sv,
+                &mut b,
+                CodecParams { index: IndexCoding::Varint, value: ValueCoding::Q8 },
+            );
+            b
+        };
+        let (mut w1, mut w2) = (SparseVec::empty(0), SparseVec::empty(0));
+        let decode_speedup = pair(
+            &mut results,
+            &mut rows,
+            "decode/varint+q8",
+            it(20),
+            || {
+                simd::set_mode(KernelMode::Scalar);
+                wire::decode_into(&q8wire, &mut w1).unwrap();
+                std::hint::black_box(&w1);
+            },
+            || {
+                simd::set_mode(KernelMode::Auto);
+                wire::decode_into(&q8wire, &mut w2).unwrap();
+                std::hint::black_box(&w2);
+            },
+        );
+        simd::set_mode(KernelMode::Auto);
+
+        // the acceptance bar is only meaningful when AVX2 actually
+        // dispatched (a FEDGMF_KERNELS=scalar leg measures ~1x, honestly)
+        if simd::active().avx2 {
+            assert!(
+                topk_speedup >= 2.0,
+                "topk/threshold bucketed speedup {topk_speedup:.2}x below the 2x bar"
+            );
+            assert!(
+                decode_speedup >= 2.0,
+                "decode/varint+q8 speedup {decode_speedup:.2}x below the 2x bar"
+            );
+        }
+        println!();
+        rows
+    };
+
     // ---- streamed-ingest throughput: fold one upload into the server
     // aggregate, materialized (decode_into + add) vs streamed (Runs
     // pull-decoder + fold_stream), with the resident ingest scratch each
@@ -512,11 +742,13 @@ fn main() {
         })
         .collect();
     let doc = Json::obj(vec![
-        ("schema", Json::num(2.0)),
+        ("schema", Json::num(3.0)),
         ("generated", Json::Bool(true)),
         ("quick", Json::Bool(quick)),
         ("host_cores", Json::num(cores as f64)),
+        ("kernel_dispatch", Json::str(simd::describe())),
         ("codec", Json::Arr(codec_rows)),
+        ("kernels", Json::Arr(kernel_rows)),
         ("ingest_throughput", Json::Arr(ingest_rows)),
         ("fleet_memory", Json::Arr(fleet_rows)),
         (

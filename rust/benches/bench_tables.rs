@@ -80,7 +80,8 @@ fn round_cost(
 }
 
 fn main() {
-    println!("== fedgmf per-round system cost (coordinator+compression+wire, no model step) ==\n");
+    println!("== fedgmf per-round system cost (coordinator+compression+wire, no model step) ==");
+    println!("   kernel dispatch: {}\n", fedgmf::sparse::simd::describe());
 
     println!("-- table3 shape: 20 clients, P=77850 (resnet8), rate 0.1 --");
     for kind in CompressorKind::ALL {

@@ -62,6 +62,12 @@ pub fn abs_score(z: &mut [f32], v: &[f32]) {
 /// `out` (cleared and refilled, capacity kept) and zeroes them in `u` and
 /// `v`. Both `scratch` and `out` are reused across rounds — no allocation
 /// when warm. Returns the selection threshold.
+///
+/// The threshold kernels dispatch internally (`sparse::simd`): under the
+/// accelerated mode `threshold_exact`/`threshold_sampled` run the bucketed
+/// histogram selection, under the scalar mode the full quickselect — both
+/// return the same threshold value, so the extracted support and every
+/// value this function emits are identical either way.
 #[allow(clippy::too_many_arguments)]
 pub fn extract_and_clear_into(
     u: &mut [f32],

@@ -28,6 +28,7 @@ use crate::coordinator::store::StoreMode;
 use crate::coordinator::traffic::TrafficPolicy;
 use crate::sim::scheduler::{ProfilePreset, SelectionPolicy, SimConfig, StalenessPolicy};
 use crate::sparse::codec::{IndexCoding, ValueCoding, WireCodec};
+use crate::sparse::KernelMode;
 use crate::transport::fault::FaultPlan;
 use crate::transport::TransportConfig;
 use anyhow::{anyhow, Result};
@@ -130,6 +131,11 @@ pub struct RunConfig {
     /// bytes via the codec-v2 pull-decoder (TOML `run.streamed_ingest`);
     /// bit-identical to the default materialized ingest
     pub streamed_ingest: bool,
+    /// hot-path kernel dispatch (TOML `run.kernels`: `auto` | `scalar` |
+    /// `simd`; see docs/perf.md) — every kernel is bit-identical across
+    /// modes, so this is purely a performance / CI-matrix control. The
+    /// `FEDGMF_KERNELS` env var overrides this knob.
+    pub kernels: KernelMode,
     /// time-domain scheduler knobs (TOML `[sim]` — see `docs/config.md`);
     /// the default is inert and preserves schedulerless output bit-exactly
     pub sim: SimConfig,
@@ -197,6 +203,7 @@ impl Default for RunConfig {
             workers: 0,
             exact_mask_overlap: false,
             streamed_ingest: false,
+            kernels: KernelMode::Auto,
             sim: SimConfig::default(),
             codec: WireCodec::default(),
             transport: TransportConfig::default(),
@@ -356,6 +363,11 @@ impl RunConfig {
         if let Some(v) = get(doc, "run", "streamed_ingest") {
             cfg.streamed_ingest =
                 v.as_bool().ok_or_else(|| anyhow!("run.streamed_ingest: bool"))?;
+        }
+        if let Some(v) = get(doc, "run", "kernels") {
+            let s = v.as_str().ok_or_else(|| anyhow!("run.kernels: string"))?;
+            cfg.kernels =
+                KernelMode::parse(s).ok_or_else(|| anyhow!("unknown run.kernels `{s}`"))?;
         }
         if let Some(v) = get(doc, "run", "store") {
             let s = v.as_str().ok_or_else(|| anyhow!("run.store: string"))?;
@@ -966,5 +978,16 @@ edge_uplink_bps = 5e7
         let ov = RunConfig::from_toml_str("", &["run.streamed_ingest=true".to_string()]).unwrap();
         assert!(ov.streamed_ingest);
         assert!(RunConfig::from_toml_str("[run]\nstreamed_ingest = 3\n", &[]).is_err());
+    }
+
+    #[test]
+    fn kernels_knob_from_toml() {
+        assert_eq!(RunConfig::default().kernels, KernelMode::Auto, "auto dispatch is the default");
+        let cfg = RunConfig::from_toml_str("[run]\nkernels = \"scalar\"\n", &[]).unwrap();
+        assert_eq!(cfg.kernels, KernelMode::Scalar);
+        let ov = RunConfig::from_toml_str("", &["run.kernels=simd".to_string()]).unwrap();
+        assert_eq!(ov.kernels, KernelMode::Simd);
+        assert!(RunConfig::from_toml_str("[run]\nkernels = \"turbo\"\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[run]\nkernels = 3\n", &[]).is_err());
     }
 }

@@ -74,10 +74,12 @@ USAGE:
                [--techniques a,b] [--levels 0.1,0.5] [--out-dir DIR] [--seed N]
   fedgmf experiment --list
   fedgmf verify [--scale quick|default] [--bless] [--golden FILE] [--report FILE]
+               [--kernels auto|scalar|simd]
                # run the full scenario-matrix conformance harness (see
                # docs/testing.md): technique x codec x staleness x selection x
                # preset x workers, with invariant ledgers and golden digests;
-               # --bless regenerates the golden registry
+               # --bless regenerates the golden registry; --kernels forces the
+               # hot-path dispatch (digests are identical across modes)
   fedgmf serve [--listen ADDR] --clients N --rounds R [--seed S]
                [--fault kind:rate[@seed]] [--deadline-ms MS] [--out-dir DIR]
                [--selfcheck]
@@ -168,7 +170,10 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     std::fs::create_dir_all(&out_dir)?;
 
     let budget = f.get("budget").map(|b| b.parse::<f64>()).transpose()?;
-    println!("run: {}", cfg.describe());
+    // single-threaded startup: the global dispatch mode is set once, before
+    // any kernel runs (FEDGMF_KERNELS still overrides — see docs/perf.md)
+    fedgmf::sparse::simd::set_mode(cfg.kernels);
+    println!("run: {} | kernels {}", cfg.describe(), fedgmf::sparse::simd::describe());
     let mut ctx = None;
     let (summary, emd) =
         experiments::runner::execute_with(&cfg, &artifacts_dir(&f), &mut ctx, budget)?;
@@ -261,6 +266,11 @@ fn cmd_verify(args: &[String]) -> anyhow::Result<()> {
         None => Scale::Quick,
         Some(s) => Scale::parse(s).ok_or_else(|| anyhow::anyhow!("unknown scale `{s}`"))?,
     };
+    if let Some(k) = f.get("kernels") {
+        let mode = fedgmf::sparse::KernelMode::parse(k)
+            .ok_or_else(|| anyhow::anyhow!("unknown kernel mode `{k}`"))?;
+        fedgmf::sparse::simd::set_mode(mode);
+    }
     let opts = VerifyOptions {
         scale,
         bless: f.has("bless"),

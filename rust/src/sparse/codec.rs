@@ -35,6 +35,7 @@
 //! explicit entries whose value quantises to exactly 0 (support is
 //! preserved), while the dense container drops zeros on decode like v1.
 
+use super::simd;
 use super::vector::SparseVec;
 use super::wire::{WireError, MAGIC};
 
@@ -251,7 +252,7 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
 // ----------------------------------------------------------------- varints
 
 #[inline]
-fn varint_len(mut x: u32) -> usize {
+pub(crate) fn varint_len(mut x: u32) -> usize {
     let mut n = 1;
     while x >= 0x80 {
         x >>= 7;
@@ -261,7 +262,7 @@ fn varint_len(mut x: u32) -> usize {
 }
 
 #[inline]
-fn push_varint(out: &mut Vec<u8>, mut x: u32) {
+pub(crate) fn push_varint(out: &mut Vec<u8>, mut x: u32) {
     while x >= 0x80 {
         out.push((x as u8 & 0x7F) | 0x80);
         x >>= 7;
@@ -293,22 +294,54 @@ pub(crate) fn read_varint(buf: &[u8], pos: &mut usize) -> Result<u32, WireError>
     }
 }
 
-/// Exact bytes of the delta-varint coding of a sorted-unique index stream.
+/// Exact bytes of the delta-varint coding of a sorted-unique index stream
+/// (dispatched: SIMD gap batching when active, scalar fold otherwise).
 fn varint_index_bytes(indices: &[u32]) -> usize {
-    let mut total = 0;
-    let mut prev = 0u32;
-    let mut first = true;
-    for &i in indices {
-        let gap = if first {
-            first = false;
-            i
-        } else {
-            i - prev
-        };
-        total += varint_len(gap);
-        prev = i;
+    simd::varint_gaps_bytes(indices)
+}
+
+/// Walk a delta-varint index stream, calling `sink` for each decoded
+/// absolute index, with the exact validation the scalar decoder performs:
+/// zero gaps after the first slot are `Unsorted`, accumulated indices at or
+/// past `dim` are `IndexOutOfBounds`, malformed or truncated varints
+/// surface from the varint reader. Decoding is batched through the SIMD
+/// kernels; validation runs over each decoded prefix *before* any batch
+/// decode error surfaces, so the first error observed is identical to the
+/// sequential scalar loop's.
+pub(crate) fn walk_varint_indices(
+    buf: &[u8],
+    pos: &mut usize,
+    nnz: usize,
+    dim: u32,
+    mut sink: impl FnMut(u32),
+) -> Result<(), WireError> {
+    let mut gaps = [0u32; 64];
+    let mut done = 0usize;
+    let mut acc = 0u64;
+    while done < nnz {
+        let want = (nnz - done).min(gaps.len());
+        let (got, err) = simd::varint_decode_gaps(buf, pos, &mut gaps[..want]);
+        for (t, &gap) in gaps[..got].iter().enumerate() {
+            if done + t == 0 {
+                acc = gap as u64;
+            } else {
+                if gap == 0 {
+                    return Err(WireError::Unsorted);
+                }
+                acc += gap as u64;
+            }
+            if acc >= dim as u64 {
+                let idx = acc.min(u32::MAX as u64) as u32;
+                return Err(WireError::IndexOutOfBounds { idx, dim });
+            }
+            sink(acc as u32);
+        }
+        done += got;
+        if let Some(e) = err {
+            return Err(e);
+        }
     }
-    total
+    Ok(())
 }
 
 // ------------------------------------------------------------ value stream
@@ -347,23 +380,14 @@ fn push_values(out: &mut Vec<u8>, coding: ValueCoding, values: &[f32]) {
                 out.extend_from_slice(&v.to_le_bytes());
             }
         }
-        ValueCoding::F16 => {
-            for &v in values {
-                out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
-            }
-        }
+        ValueCoding::F16 => simd::f16_encode(values, out),
         ValueCoding::Q8 => {
             for block in values.chunks(Q8_BLOCK) {
-                let maxabs = block.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                let maxabs = simd::maxabs(block);
                 let scale = q8_scale_from_maxabs(maxabs);
                 out.extend_from_slice(&scale.to_le_bytes());
                 if scale > 0.0 {
-                    let inv = 127.0 / maxabs;
-                    for &v in block {
-                        // saturating float→int cast: NaN → 0, out-of-range
-                        // clamps — quantised code stays in [-127, 127]
-                        out.push((v * inv).round().clamp(-127.0, 127.0) as i8 as u8);
-                    }
+                    simd::q8_quantize(block, maxabs, out);
                 } else {
                     out.resize(out.len() + block.len(), 0);
                 }
@@ -391,22 +415,26 @@ fn read_values(
             }
         }
         ValueCoding::F16 => {
-            for c in body.chunks_exact(2) {
-                out.push(f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())));
-            }
+            let base = out.len();
+            out.resize(base + n, 0.0);
+            simd::f16_decode(body, &mut out[base..]);
         }
         ValueCoding::Q8 => {
+            let base = out.len();
+            out.resize(base + n, 0.0);
             let mut off = 0usize;
-            let mut left = n;
-            while left > 0 {
-                let take = left.min(Q8_BLOCK);
+            let mut done = 0usize;
+            while done < n {
+                let take = (n - done).min(Q8_BLOCK);
                 let scale = f32::from_le_bytes(body[off..off + 4].try_into().unwrap());
                 off += 4;
-                for &b in &body[off..off + take] {
-                    out.push((b as i8) as f32 * scale);
-                }
+                simd::q8_dequantize(
+                    &body[off..off + take],
+                    scale,
+                    &mut out[base + done..base + done + take],
+                );
                 off += take;
-                left -= take;
+                done += take;
             }
         }
     }
@@ -484,20 +512,7 @@ pub fn encode_v2(sv: &SparseVec, out: &mut Vec<u8>, params: CodecParams) {
                         out.extend_from_slice(&i.to_le_bytes());
                     }
                 }
-                IndexCoding::Varint => {
-                    let mut prev = 0u32;
-                    let mut first = true;
-                    for &i in &sv.indices {
-                        let gap = if first {
-                            first = false;
-                            i
-                        } else {
-                            i - prev
-                        };
-                        push_varint(out, gap);
-                        prev = i;
-                    }
-                }
+                IndexCoding::Varint => simd::varint_encode_gaps(&sv.indices, out),
             }
             push_values(out, params.value, &sv.values);
         }
@@ -620,23 +635,8 @@ pub(crate) fn decode_v2(buf: &[u8], out: &mut SparseVec) -> Result<(), WireError
                     pos = end;
                 }
                 IndexCoding::Varint => {
-                    let mut acc = 0u64;
-                    for slot in 0..nnz {
-                        let gap = read_varint(buf, &mut pos)? as u64;
-                        if slot == 0 {
-                            acc = gap;
-                        } else {
-                            if gap == 0 {
-                                return Err(WireError::Unsorted);
-                            }
-                            acc += gap;
-                        }
-                        if acc >= dim as u64 {
-                            let idx = acc.min(u32::MAX as u64) as u32;
-                            return Err(WireError::IndexOutOfBounds { idx, dim });
-                        }
-                        out.indices.push(acc as u32);
-                    }
+                    let indices = &mut out.indices;
+                    walk_varint_indices(buf, &mut pos, nnz, dim, |i| indices.push(i))?;
                     // the varint stream was wider than the 1-byte lower
                     // bound: re-check the value bytes at the real offset
                     if buf.len() < pos + vb {

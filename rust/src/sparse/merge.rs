@@ -58,7 +58,11 @@ impl Aggregator {
     /// buffer and calling [`Aggregator::add`], without the
     /// intermediate `SparseVec`. Bit-identical to that pair: the runs
     /// arrive in the decoder's emit order and the per-coordinate update is
-    /// the same `acc += scale · v` expression.
+    /// the same `acc += scale · v` expression. Consumption is through
+    /// [`Runs::for_each_block`], so sparse uploads decode whole index and
+    /// value blocks through the dispatched SIMD kernels; the blocked emit
+    /// concatenates to exactly the scalar run stream, so the fold order and
+    /// every f32 operation are unchanged.
     ///
     /// Partial-fold atomicity: [`Runs::validate`] has already vetted the
     /// entire buffer, so this emit pass cannot fail — a truncated or
@@ -70,14 +74,16 @@ impl Aggregator {
         let dirty = &mut self.dirty;
         let touched = &mut self.touched;
         let mut n = 0usize;
-        runs.for_each(|i, v| {
-            let iu = i as usize;
-            if !dirty[iu] {
-                dirty[iu] = true;
-                touched.push(i);
+        runs.for_each_block(|ids, vals| {
+            for (&i, &v) in ids.iter().zip(vals) {
+                let iu = i as usize;
+                if !dirty[iu] {
+                    dirty[iu] = true;
+                    touched.push(i);
+                }
+                acc[iu] += scale * v;
             }
-            acc[iu] += scale * v;
-            n += 1;
+            n += ids.len();
         });
         n
     }

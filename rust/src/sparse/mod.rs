@@ -2,6 +2,7 @@
 //! wire formats (v1 + codec v2) with exact byte accounting.
 pub mod codec;
 pub mod merge;
+pub mod simd;
 pub mod stream;
 pub mod topk;
 pub mod vector;
@@ -9,4 +10,5 @@ pub mod wire;
 
 pub use codec::{CodecParams, IndexCoding, ValueCoding, WireCodec};
 pub use merge::Aggregator;
+pub use simd::KernelMode;
 pub use vector::SparseVec;

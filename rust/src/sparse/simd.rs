@@ -1,0 +1,896 @@
+//! Runtime-dispatched hot-path kernels — SIMD (AVX2/F16C) with bit-identical
+//! scalar twins.
+//!
+//! Every kernel in this module exists in (at least) two forms:
+//!
+//! * a `_scalar` twin — the reference implementation, always compiled on
+//!   every architecture, and exactly the per-element expressions the codec
+//!   and decoders historically used;
+//! * an accelerated form — explicit AVX2/F16C intrinsics behind
+//!   `is_x86_feature_detected!`, or an arch-independent batched loop where
+//!   the win is batching itself (varint decode).
+//!
+//! The un-suffixed entry points dispatch at runtime. **Dispatch never
+//! changes bytes**: every accelerated kernel is proven bit-identical to its
+//! scalar twin (unit tests here, proptests in `tests/proptests.rs`, and the
+//! verify matrix runs under both dispatch modes in CI), so trajectory
+//! digests are independent of the selected mode. The non-obvious fixups
+//! that buy that identity:
+//!
+//! * **q8 rounding** — scalar uses `f32::round()` (half away from zero);
+//!   SSE rounding is nearest-even. We emulate with `trunc(t)` plus a
+//!   `|frac| >= 0.5` step: `t - trunc(t)` is exact (Sterbenz), so the
+//!   emulation is exact for all `|t| < 2^24` and clamps identically beyond.
+//!   `trunc(t + copysign(0.5, t))` would *not* work: at `t = 0.5 - 2^-25`
+//!   the add rounds up to 1.0 before the truncation.
+//! * **NaN lanes** — scalar `as i8` saturating casts map NaN to 0 and
+//!   `f32::max` ignores NaN operands; vector compares propagate instead,
+//!   so NaN lanes are zeroed through an ordered-compare mask first.
+//! * **f16 encode** — `_mm256_cvtps_ph` rounds to nearest-even like the
+//!   scalar converter, but overflows to ±Inf and quiets NaNs; exponent
+//!   all-ones lanes are rewritten to the scalar policy (saturate to
+//!   `sign|0x7BFF`, NaN source lanes to 0).
+//! * **f16 decode** — `_mm256_cvtph_ps` quiets signalling-NaN wire bytes;
+//!   exponent all-ones halves are rebuilt by the scalar bit expression so
+//!   adversarial buffers decode identically.
+//!
+//! ## Mode selection
+//!
+//! Precedence: the `FEDGMF_KERNELS` environment variable (read once per
+//! process) overrides [`set_mode`], which overrides the `Auto` default.
+//! `set_mode` is only called from the CLI entry points (`main.rs`) after
+//! config parsing — library code never mutates the global, so parallel unit
+//! tests all run under one stable mode and compare explicit variants
+//! instead. `Scalar` forces every twin; `Simd`/`Auto` both use whatever the
+//! CPU supports (the bucketed/batched algorithm layer stays on even without
+//! AVX2 — it is arch-independent). See `docs/perf.md`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use super::codec;
+use super::wire::WireError;
+
+/// Kernel dispatch mode (config knob `run.kernels`, env `FEDGMF_KERNELS`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelMode {
+    /// Use accelerated kernels where the CPU supports them (default).
+    #[default]
+    Auto,
+    /// Force the scalar twins everywhere (CI determinism legs).
+    Scalar,
+    /// Request accelerated kernels explicitly (same selection as `Auto`;
+    /// spelled out so configs can be self-documenting).
+    Simd,
+}
+
+impl KernelMode {
+    pub fn parse(s: &str) -> Option<KernelMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(KernelMode::Auto),
+            "scalar" => Some(KernelMode::Scalar),
+            "simd" | "accel" | "avx2" => Some(KernelMode::Simd),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelMode::Auto => "auto",
+            KernelMode::Scalar => "scalar",
+            KernelMode::Simd => "simd",
+        }
+    }
+}
+
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+fn env_mode() -> Option<KernelMode> {
+    static ENV: OnceLock<Option<KernelMode>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("FEDGMF_KERNELS").ok().as_deref().and_then(KernelMode::parse)
+    })
+}
+
+/// Install the process-wide dispatch mode. Called from the CLI entry points
+/// only; the `FEDGMF_KERNELS` environment variable still wins if set.
+pub fn set_mode(mode: KernelMode) {
+    let b = match mode {
+        KernelMode::Auto => 0,
+        KernelMode::Scalar => 1,
+        KernelMode::Simd => 2,
+    };
+    MODE.store(b, Ordering::Relaxed);
+}
+
+/// The effective dispatch mode (env override > [`set_mode`] > `Auto`).
+pub fn mode() -> KernelMode {
+    if let Some(m) = env_mode() {
+        return m;
+    }
+    match MODE.load(Ordering::Relaxed) {
+        1 => KernelMode::Scalar,
+        2 => KernelMode::Simd,
+        _ => KernelMode::Auto,
+    }
+}
+
+#[derive(Clone, Copy)]
+struct Features {
+    avx2: bool,
+    f16c: bool,
+}
+
+fn features() -> Features {
+    static F: OnceLock<Features> = OnceLock::new();
+    *F.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            Features {
+                avx2: is_x86_feature_detected!("avx2"),
+                f16c: is_x86_feature_detected!("avx2") && is_x86_feature_detected!("f16c"),
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            Features { avx2: false, f16c: false }
+        }
+    })
+}
+
+/// What the current mode actually enables on this CPU.
+#[derive(Clone, Copy, Debug)]
+pub struct Active {
+    /// Arch-independent accelerated algorithms (bucketed top-k, batched
+    /// varint decode). Off only under [`KernelMode::Scalar`].
+    pub accel: bool,
+    /// AVX2 integer/float kernels (detected and enabled).
+    pub avx2: bool,
+    /// F16C half-precision conversion kernels (detected and enabled).
+    pub f16c: bool,
+}
+
+/// Resolve the dispatch decision for this call site.
+pub fn active() -> Active {
+    let accel = mode() != KernelMode::Scalar;
+    let f = features();
+    Active { accel, avx2: accel && f.avx2, f16c: accel && f.f16c }
+}
+
+/// Human-readable dispatch summary (bench/report provenance): `"scalar"`,
+/// `"accel"`, `"accel+avx2"` or `"accel+avx2+f16c"`.
+pub fn describe() -> String {
+    let a = active();
+    if !a.accel {
+        return "scalar".into();
+    }
+    let mut s = String::from("accel");
+    if a.avx2 {
+        s.push_str("+avx2");
+    }
+    if a.f16c {
+        s.push_str("+f16c");
+    }
+    s
+}
+
+// -------------------------------------------------------------- f16 kernels
+
+/// Append the IEEE binary16 encoding of `values` (2 bytes each, LE).
+pub fn f16_encode(values: &[f32], out: &mut Vec<u8>) {
+    #[cfg(target_arch = "x86_64")]
+    if active().f16c {
+        // SAFETY: `f16c` is only set when AVX2+F16C were detected.
+        unsafe { f16_encode_f16c(values, out) };
+        return;
+    }
+    f16_encode_scalar(values, out);
+}
+
+/// Scalar twin of [`f16_encode`].
+pub fn f16_encode_scalar(values: &[f32], out: &mut Vec<u8>) {
+    for &v in values {
+        out.extend_from_slice(&codec::f32_to_f16_bits(v).to_le_bytes());
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,f16c")]
+unsafe fn f16_encode_f16c(values: &[f32], out: &mut Vec<u8>) {
+    use core::arch::x86_64::*;
+    let expmask = _mm_set1_epi16(0x7C00);
+    let signmask = _mm_set1_epi16(0x8000u16 as i16);
+    let satval = _mm_set1_epi16(0x7BFF);
+    let mut chunks = values.chunks_exact(8);
+    for c in chunks.by_ref() {
+        let x = _mm256_loadu_ps(c.as_ptr());
+        // NaN -> 0.0 first: the scalar converter maps NaN to half 0
+        let x = _mm256_and_ps(x, _mm256_cmp_ps(x, x, _CMP_ORD_Q));
+        let h = _mm256_cvtps_ph(x, _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC);
+        // hardware overflows to +-Inf (exponent all-ones); the scalar
+        // converter saturates those lanes to sign|0x7BFF (+-65504)
+        let isinf = _mm_cmpeq_epi16(_mm_and_si128(h, expmask), expmask);
+        let sat = _mm_or_si128(_mm_and_si128(h, signmask), satval);
+        let h = _mm_blendv_epi8(h, sat, isinf);
+        let mut bytes = [0u8; 16];
+        _mm_storeu_si128(bytes.as_mut_ptr() as *mut __m128i, h);
+        out.extend_from_slice(&bytes);
+    }
+    f16_encode_scalar(chunks.remainder(), out);
+}
+
+/// Decode `out.len()` halves from `bytes` (`bytes.len() == 2 * out.len()`).
+pub fn f16_decode(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), 2 * out.len());
+    #[cfg(target_arch = "x86_64")]
+    if active().f16c {
+        // SAFETY: `f16c` is only set when AVX2+F16C were detected.
+        unsafe { f16_decode_f16c(bytes, out) };
+        return;
+    }
+    f16_decode_scalar(bytes, out);
+}
+
+/// Scalar twin of [`f16_decode`].
+pub fn f16_decode_scalar(bytes: &[u8], out: &mut [f32]) {
+    for (o, c) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+        *o = codec::f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,f16c")]
+unsafe fn f16_decode_f16c(bytes: &[u8], out: &mut [f32]) {
+    use core::arch::x86_64::*;
+    let n = out.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let h = _mm_loadu_si128(bytes.as_ptr().add(2 * i) as *const __m128i);
+        let f = _mm256_cvtph_ps(h);
+        // exponent all-ones halves (inf/NaN wire bytes) must decode by the
+        // exact scalar expression sign|0x7F800000|(man<<13): the hardware
+        // conversion quiets signalling-NaN payloads, the scalar one doesn't
+        let w = _mm256_cvtepu16_epi32(h);
+        let exp = _mm256_and_si256(w, _mm256_set1_epi32(0x7C00));
+        let special = _mm256_cmpeq_epi32(exp, _mm256_set1_epi32(0x7C00));
+        let sign = _mm256_slli_epi32(_mm256_and_si256(w, _mm256_set1_epi32(0x8000)), 16);
+        let man = _mm256_slli_epi32(_mm256_and_si256(w, _mm256_set1_epi32(0x03FF)), 13);
+        let manual = _mm256_or_si256(sign, _mm256_or_si256(_mm256_set1_epi32(0x7F80_0000), man));
+        let bits = _mm256_blendv_epi8(_mm256_castps_si256(f), manual, special);
+        _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, bits);
+        i += 8;
+    }
+    f16_decode_scalar(&bytes[2 * i..], &mut out[i..]);
+}
+
+// --------------------------------------------------------------- q8 kernels
+
+/// Max |v| over `values` with `f32::max` NaN-ignoring semantics (the q8
+/// block scale numerator).
+pub fn maxabs(values: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if active().avx2 && values.len() >= 8 {
+        // SAFETY: `avx2` is only set when AVX2 was detected.
+        return unsafe { maxabs_avx2(values) };
+    }
+    maxabs_scalar(values)
+}
+
+/// Scalar twin of [`maxabs`].
+pub fn maxabs_scalar(values: &[f32]) -> f32 {
+    values.iter().fold(0.0f32, |a, &v| a.max(v.abs()))
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn maxabs_avx2(values: &[f32]) -> f32 {
+    use core::arch::x86_64::*;
+    let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+    let mut acc = _mm256_setzero_ps();
+    let mut chunks = values.chunks_exact(8);
+    for c in chunks.by_ref() {
+        let x = _mm256_loadu_ps(c.as_ptr());
+        // f32::max ignores NaN operands; maxps would propagate its second
+        // operand, so zero NaN lanes first (max with 0 is the identity on
+        // the non-negative accumulator)
+        let x = _mm256_and_ps(x, _mm256_cmp_ps(x, x, _CMP_ORD_Q));
+        acc = _mm256_max_ps(acc, _mm256_and_ps(x, absmask));
+    }
+    let mut lanes = [0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut m = lanes.iter().fold(0.0f32, |a, &v| a.max(v));
+    for &v in chunks.remainder() {
+        m = m.max(v.abs());
+    }
+    m
+}
+
+/// Append the q8 codes of one block: `(v * 127/maxabs).round()` clamped to
+/// [-127, 127], cast `as i8 as u8` (NaN -> 0). Caller writes the scale
+/// prefix and handles the all-zero-block (`maxabs == 0`) case.
+pub fn q8_quantize(block: &[f32], maxabs: f32, out: &mut Vec<u8>) {
+    debug_assert!(maxabs > 0.0);
+    #[cfg(target_arch = "x86_64")]
+    if active().avx2 && block.len() >= 8 {
+        // SAFETY: `avx2` is only set when AVX2 was detected.
+        unsafe { q8_quantize_avx2(block, maxabs, out) };
+        return;
+    }
+    q8_quantize_scalar(block, maxabs, out);
+}
+
+/// Scalar twin of [`q8_quantize`].
+pub fn q8_quantize_scalar(block: &[f32], maxabs: f32, out: &mut Vec<u8>) {
+    let inv = 127.0 / maxabs;
+    for &v in block {
+        // saturating float->int cast: NaN -> 0, out-of-range clamps —
+        // quantised code stays in [-127, 127]
+        out.push((v * inv).round().clamp(-127.0, 127.0) as i8 as u8);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn q8_quantize_avx2(block: &[f32], maxabs: f32, out: &mut Vec<u8>) {
+    use core::arch::x86_64::*;
+    let inv = _mm256_set1_ps(127.0 / maxabs);
+    let signmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x8000_0000u32 as i32));
+    let half = _mm256_set1_ps(0.5);
+    let one = _mm256_set1_ps(1.0);
+    let hi = _mm256_set1_ps(127.0);
+    let lo = _mm256_set1_ps(-127.0);
+    let mut chunks = block.chunks_exact(8);
+    for c in chunks.by_ref() {
+        let x = _mm256_loadu_ps(c.as_ptr());
+        // NaN -> 0 (the scalar saturating cast maps NaN to 0)
+        let x = _mm256_and_ps(x, _mm256_cmp_ps(x, x, _CMP_ORD_Q));
+        let t = _mm256_mul_ps(x, inv);
+        // round half away from zero: trunc(t) + copysign(1, t)·[|t-trunc(t)| >= 0.5]
+        // — the fraction is exact (Sterbenz), so this matches f32::round for
+        // every |t| < 2^24 and both paths clamp identically beyond
+        let r = _mm256_round_ps(t, _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC);
+        let frac = _mm256_sub_ps(t, r);
+        let fabs = _mm256_andnot_ps(signmask, frac);
+        let ge = _mm256_cmp_ps(fabs, half, _CMP_GE_OQ);
+        let step = _mm256_or_ps(_mm256_and_ps(ge, one), _mm256_and_ps(t, signmask));
+        let r = _mm256_add_ps(r, step);
+        let r = _mm256_max_ps(_mm256_min_ps(r, hi), lo);
+        let q = _mm256_cvttps_epi32(r);
+        let p16 = _mm_packs_epi32(_mm256_castsi256_si128(q), _mm256_extracti128_si256(q, 1));
+        let p8 = _mm_packs_epi16(p16, p16);
+        let mut bytes = [0u8; 16];
+        _mm_storeu_si128(bytes.as_mut_ptr() as *mut __m128i, p8);
+        out.extend_from_slice(&bytes[..8]);
+    }
+    q8_quantize_scalar(chunks.remainder(), maxabs, out);
+}
+
+/// Dequantize one q8 block: `(b as i8) as f32 * scale` per byte. `scale`
+/// comes straight off the wire (0, Inf or NaN behave like the scalar
+/// decoder by construction — same multiply, same operand order).
+pub fn q8_dequantize(bytes: &[u8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    if active().avx2 && bytes.len() >= 8 {
+        // SAFETY: `avx2` is only set when AVX2 was detected.
+        unsafe { q8_dequantize_avx2(bytes, scale, out) };
+        return;
+    }
+    q8_dequantize_scalar(bytes, scale, out);
+}
+
+/// Scalar twin of [`q8_dequantize`].
+pub fn q8_dequantize_scalar(bytes: &[u8], scale: f32, out: &mut [f32]) {
+    for (o, &b) in out.iter_mut().zip(bytes) {
+        *o = (b as i8) as f32 * scale;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn q8_dequantize_avx2(bytes: &[u8], scale: f32, out: &mut [f32]) {
+    use core::arch::x86_64::*;
+    let s = _mm256_set1_ps(scale);
+    let n = out.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let b = _mm_loadl_epi64(bytes.as_ptr().add(i) as *const __m128i);
+        let w = _mm256_cvtepi8_epi32(b);
+        let v = _mm256_mul_ps(_mm256_cvtepi32_ps(w), s);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), v);
+        i += 8;
+    }
+    q8_dequantize_scalar(&bytes[i..], scale, &mut out[i..]);
+}
+
+// ----------------------------------------------------------- varint kernels
+
+/// Append the delta-varint coding of a sorted-unique index stream (first
+/// gap = first index, later gaps = difference to the previous index).
+pub fn varint_encode_gaps(indices: &[u32], out: &mut Vec<u8>) {
+    #[cfg(target_arch = "x86_64")]
+    if active().avx2 {
+        // SAFETY: `avx2` is only set when AVX2 was detected.
+        unsafe { varint_encode_gaps_avx2(indices, out) };
+        return;
+    }
+    varint_encode_gaps_scalar(indices, out);
+}
+
+/// Scalar twin of [`varint_encode_gaps`].
+pub fn varint_encode_gaps_scalar(indices: &[u32], out: &mut Vec<u8>) {
+    let mut prev = 0u32;
+    for &i in indices {
+        codec::push_varint(out, i - prev);
+        prev = i;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn varint_encode_gaps_avx2(indices: &[u32], out: &mut Vec<u8>) {
+    use core::arch::x86_64::*;
+    let n = indices.len();
+    if n == 0 {
+        return;
+    }
+    codec::push_varint(out, indices[0]);
+    // bits above the low 7 — unsigned-safe single-byte test (gaps >= 2^31
+    // must not slip through a signed compare)
+    let big = _mm256_set1_epi32(!0x7Fi32);
+    let mut j = 1usize;
+    while j + 8 <= n {
+        let cur = _mm256_loadu_si256(indices.as_ptr().add(j) as *const __m256i);
+        let prv = _mm256_loadu_si256(indices.as_ptr().add(j - 1) as *const __m256i);
+        let g = _mm256_sub_epi32(cur, prv);
+        if _mm256_testz_si256(g, big) != 0 {
+            // eight single-byte varints at once
+            let p16 = _mm_packus_epi32(_mm256_castsi256_si128(g), _mm256_extracti128_si256(g, 1));
+            let p8 = _mm_packus_epi16(p16, p16);
+            let mut bytes = [0u8; 16];
+            _mm_storeu_si128(bytes.as_mut_ptr() as *mut __m128i, p8);
+            out.extend_from_slice(&bytes[..8]);
+        } else {
+            let mut gs = [0u32; 8];
+            _mm256_storeu_si256(gs.as_mut_ptr() as *mut __m256i, g);
+            for &gap in &gs {
+                codec::push_varint(out, gap);
+            }
+        }
+        j += 8;
+    }
+    let mut prev = indices[j - 1];
+    for &i in &indices[j..] {
+        codec::push_varint(out, i - prev);
+        prev = i;
+    }
+}
+
+/// Exact byte length [`varint_encode_gaps`] will append.
+pub fn varint_gaps_bytes(indices: &[u32]) -> usize {
+    #[cfg(target_arch = "x86_64")]
+    if active().avx2 {
+        // SAFETY: `avx2` is only set when AVX2 was detected.
+        return unsafe { varint_gaps_bytes_avx2(indices) };
+    }
+    varint_gaps_bytes_scalar(indices)
+}
+
+/// Scalar twin of [`varint_gaps_bytes`].
+pub fn varint_gaps_bytes_scalar(indices: &[u32]) -> usize {
+    let mut total = 0;
+    let mut prev = 0u32;
+    for &i in indices {
+        total += codec::varint_len(i - prev);
+        prev = i;
+    }
+    total
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn varint_gaps_bytes_avx2(indices: &[u32]) -> usize {
+    use core::arch::x86_64::*;
+    let n = indices.len();
+    if n == 0 {
+        return 0;
+    }
+    let mut total = codec::varint_len(indices[0]);
+    let big = _mm256_set1_epi32(!0x7Fi32);
+    let mut j = 1usize;
+    while j + 8 <= n {
+        let cur = _mm256_loadu_si256(indices.as_ptr().add(j) as *const __m256i);
+        let prv = _mm256_loadu_si256(indices.as_ptr().add(j - 1) as *const __m256i);
+        let g = _mm256_sub_epi32(cur, prv);
+        if _mm256_testz_si256(g, big) != 0 {
+            total += 8;
+        } else {
+            let mut gs = [0u32; 8];
+            _mm256_storeu_si256(gs.as_mut_ptr() as *mut __m256i, g);
+            for &gap in &gs {
+                total += codec::varint_len(gap);
+            }
+        }
+        j += 8;
+    }
+    let mut prev = indices[j - 1];
+    for &i in &indices[j..] {
+        total += codec::varint_len(i - prev);
+        prev = i;
+    }
+    total
+}
+
+/// Decode up to `gaps.len()` LEB128 varints starting at `*pos`, batching
+/// runs of single-byte varints eight at a time. Returns the count decoded
+/// and, if the stream stopped early, the same [`WireError`] the scalar
+/// `read_varint` loop would have produced at the same position — callers
+/// preserving error order must check the decoded prefix before surfacing
+/// the error (see `codec::walk_varint_indices`).
+pub fn varint_decode_gaps(
+    buf: &[u8],
+    pos: &mut usize,
+    gaps: &mut [u32],
+) -> (usize, Option<WireError>) {
+    if !active().accel {
+        return varint_decode_gaps_scalar(buf, pos, gaps);
+    }
+    #[cfg(target_arch = "x86_64")]
+    if active().avx2 {
+        // SAFETY: `avx2` is only set when AVX2 was detected.
+        return unsafe { varint_decode_gaps_avx2(buf, pos, gaps) };
+    }
+    varint_decode_gaps_swar(buf, pos, gaps)
+}
+
+/// Scalar twin of [`varint_decode_gaps`]: one `read_varint` per slot.
+pub fn varint_decode_gaps_scalar(
+    buf: &[u8],
+    pos: &mut usize,
+    gaps: &mut [u32],
+) -> (usize, Option<WireError>) {
+    for (t, g) in gaps.iter_mut().enumerate() {
+        match codec::read_varint(buf, pos) {
+            Ok(x) => *g = x,
+            Err(e) => return (t, Some(e)),
+        }
+    }
+    (gaps.len(), None)
+}
+
+/// High-bit test mask: a u64 window of eight bytes is eight complete
+/// single-byte varints iff no byte has its continuation bit set.
+const CONT_BITS: u64 = 0x8080_8080_8080_8080;
+
+fn varint_decode_gaps_swar(
+    buf: &[u8],
+    pos: &mut usize,
+    gaps: &mut [u32],
+) -> (usize, Option<WireError>) {
+    let n = gaps.len();
+    let mut t = 0usize;
+    while t + 8 <= n && *pos + 8 <= buf.len() {
+        let word = u64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
+        if word & CONT_BITS == 0 {
+            for (k, g) in gaps[t..t + 8].iter_mut().enumerate() {
+                *g = buf[*pos + k] as u32;
+            }
+            *pos += 8;
+            t += 8;
+        } else {
+            match codec::read_varint(buf, pos) {
+                Ok(x) => {
+                    gaps[t] = x;
+                    t += 1;
+                }
+                Err(e) => return (t, Some(e)),
+            }
+        }
+    }
+    while t < n {
+        match codec::read_varint(buf, pos) {
+            Ok(x) => {
+                gaps[t] = x;
+                t += 1;
+            }
+            Err(e) => return (t, Some(e)),
+        }
+    }
+    (n, None)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn varint_decode_gaps_avx2(
+    buf: &[u8],
+    pos: &mut usize,
+    gaps: &mut [u32],
+) -> (usize, Option<WireError>) {
+    use core::arch::x86_64::*;
+    let n = gaps.len();
+    let mut t = 0usize;
+    while t + 8 <= n && *pos + 8 <= buf.len() {
+        let word = u64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
+        if word & CONT_BITS == 0 {
+            let b = _mm_loadl_epi64(buf.as_ptr().add(*pos) as *const __m128i);
+            let w = _mm256_cvtepu8_epi32(b);
+            _mm256_storeu_si256(gaps.as_mut_ptr().add(t) as *mut __m256i, w);
+            *pos += 8;
+            t += 8;
+        } else {
+            match codec::read_varint(buf, pos) {
+                Ok(x) => {
+                    gaps[t] = x;
+                    t += 1;
+                }
+                Err(e) => return (t, Some(e)),
+            }
+        }
+    }
+    while t < n {
+        match codec::read_varint(buf, pos) {
+            Ok(x) => {
+                gaps[t] = x;
+                t += 1;
+            }
+            Err(e) => return (t, Some(e)),
+        }
+    }
+    (n, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    // Every test here compares the *dispatched* kernel against its scalar
+    // twin: under FEDGMF_KERNELS=scalar the comparison is trivially true,
+    // under auto/simd it proves the accelerated path bit-identical on this
+    // CPU. No test mutates the global mode (parallel tests share it).
+
+    fn adversarial_values() -> Vec<f32> {
+        let mut v = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            0.5,
+            -0.5,
+            f32::from_bits(0.5f32.to_bits() - 1), // just below 0.5: the
+            // trunc(t + 0.5) emulation would round this up
+            -f32::from_bits(0.5f32.to_bits() - 1),
+            65504.0,
+            65520.0,
+            -65520.0,
+            1e9,
+            -1e9,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            -f32::NAN,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            f32::from_bits(1),    // smallest subnormal
+            f32::from_bits(0x42), // subnormal
+            6.1e-5,
+            5.9e-8,
+            126.5,
+            -126.5,
+            127.49,
+            -127.49,
+        ];
+        let mut rng = Rng::new(0xA11CE);
+        for _ in 0..500 {
+            v.push(rng.normal() * 10f32.powi(rng.below(12) as i32 - 6));
+        }
+        v
+    }
+
+    #[test]
+    fn mode_parse_and_names() {
+        for m in [KernelMode::Auto, KernelMode::Scalar, KernelMode::Simd] {
+            assert_eq!(KernelMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(KernelMode::parse("accel"), Some(KernelMode::Simd));
+        assert_eq!(KernelMode::parse("bogus"), None);
+        // describe() names the scalar twin exactly when accel is off
+        assert_eq!(describe() == "scalar", !active().accel);
+    }
+
+    #[test]
+    fn f16_encode_matches_scalar() {
+        let vals = adversarial_values();
+        // sweep offsets so chunk remainders of every length get exercised
+        for off in 0..9 {
+            let v = &vals[off..];
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            f16_encode(v, &mut a);
+            f16_encode_scalar(v, &mut b);
+            assert_eq!(a, b, "offset {off}");
+        }
+    }
+
+    #[test]
+    fn f16_decode_matches_scalar_on_arbitrary_halves() {
+        // include inf/NaN half patterns — wire bytes are adversarial
+        let mut bytes = Vec::new();
+        for h in [0x0000u16, 0x8000, 0x3C00, 0x7BFF, 0x7C00, 0xFC00, 0x7C01, 0xFE00, 0x03FF] {
+            bytes.extend_from_slice(&h.to_le_bytes());
+        }
+        let mut rng = Rng::new(0xBEEF);
+        for _ in 0..1000 {
+            bytes.extend_from_slice(&(rng.next_u64() as u16).to_le_bytes());
+        }
+        for off in 0..9 {
+            let body = &bytes[2 * off..];
+            let n = body.len() / 2;
+            let mut a = vec![0f32; n];
+            let mut b = vec![0f32; n];
+            f16_decode(body, &mut a);
+            f16_decode_scalar(body, &mut b);
+            let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ab, bb, "offset {off}: decode must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn maxabs_matches_scalar() {
+        let vals = adversarial_values();
+        for off in 0..9 {
+            let v = &vals[off..];
+            assert_eq!(maxabs(v).to_bits(), maxabs_scalar(v).to_bits(), "offset {off}");
+        }
+        assert_eq!(maxabs(&[]), 0.0);
+        assert_eq!(maxabs(&[f32::NAN; 32]), 0.0, "all-NaN folds to the 0 identity");
+    }
+
+    #[test]
+    fn q8_quantize_matches_scalar() {
+        // blocks built so t = v * 127/maxabs hits exact .5 boundaries and
+        // the just-below-.5 rounding trap
+        let mut block = vec![127.0f32, -127.0];
+        for k in 0..60 {
+            block.push(k as f32 + 0.5);
+            block.push(-(k as f32) - 0.5);
+            block.push(k as f32 + 0.5 - f32::EPSILON * 32.0);
+        }
+        block.push(f32::from_bits(0.5f32.to_bits() - 1));
+        block.push(126.5);
+        block.push(127.49);
+        block.push(f32::NAN);
+        let mut rng = Rng::new(0xC0DE);
+        for _ in 0..300 {
+            block.push(rng.normal() * 40.0);
+        }
+        for off in 0..9 {
+            let b = &block[off..];
+            let m = maxabs_scalar(b);
+            let mut qa = Vec::new();
+            let mut qb = Vec::new();
+            q8_quantize(b, m, &mut qa);
+            q8_quantize_scalar(b, m, &mut qb);
+            assert_eq!(qa, qb, "offset {off} maxabs {m}");
+        }
+    }
+
+    #[test]
+    fn q8_dequantize_matches_scalar() {
+        let mut rng = Rng::new(0xD0D0);
+        let bytes: Vec<u8> = (0..800).map(|_| rng.next_u64() as u8).collect();
+        for scale in [0.017f32, 1.0, 0.0, -3.5, f32::INFINITY, f32::NAN] {
+            for off in 0..9 {
+                let b = &bytes[off..];
+                let mut a = vec![0f32; b.len()];
+                let mut c = vec![0f32; b.len()];
+                q8_dequantize(b, scale, &mut a);
+                q8_dequantize_scalar(b, scale, &mut c);
+                let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                let cb: Vec<u32> = c.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ab, cb, "scale {scale} offset {off}");
+            }
+        }
+    }
+
+    fn adversarial_indices() -> Vec<Vec<u32>> {
+        let mut rng = Rng::new(0x1D);
+        let mut sets = vec![
+            vec![],
+            vec![0],
+            vec![u32::MAX - 1],
+            (0..1000u32).collect(),
+            // gap >= 2^31: breaks signed single-byte tests
+            vec![5, 10, 11, 12, 13, 14, 15, 16, 17, (1u32 << 31) + 9],
+            vec![0x7FFF_FFFF, 0xFFFF_FFFE],
+            (0..64u32).map(|i| i * 127).collect(),
+            (0..64u32).map(|i| i * 128).collect(),
+        ];
+        for _ in 0..20 {
+            let n = 1 + rng.below(300);
+            let mut ids = Vec::with_capacity(n);
+            let mut acc = 0u64;
+            for _ in 0..n {
+                // mixed small/large gaps, crossing every varint width
+                acc += 1 + rng.next_u64() % (1u64 << (1 + rng.below(20)));
+                if acc > u32::MAX as u64 {
+                    break;
+                }
+                ids.push(acc as u32);
+            }
+            sets.push(ids);
+        }
+        sets
+    }
+
+    #[test]
+    fn varint_encode_and_size_match_scalar() {
+        for ids in adversarial_indices() {
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            varint_encode_gaps(&ids, &mut a);
+            varint_encode_gaps_scalar(&ids, &mut b);
+            assert_eq!(a, b, "n={}", ids.len());
+            assert_eq!(varint_gaps_bytes(&ids), a.len());
+            assert_eq!(varint_gaps_bytes_scalar(&ids), a.len());
+        }
+    }
+
+    #[test]
+    fn varint_decode_matches_scalar_and_roundtrips() {
+        for ids in adversarial_indices() {
+            let mut buf = Vec::new();
+            varint_encode_gaps_scalar(&ids, &mut buf);
+            let n = ids.len();
+            let mut ga = vec![0u32; n];
+            let mut gb = vec![0u32; n];
+            let (mut pa, mut pb) = (0usize, 0usize);
+            let (ca, ea) = varint_decode_gaps(&buf, &mut pa, &mut ga);
+            let (cb, eb) = varint_decode_gaps_scalar(&buf, &mut pb, &mut gb);
+            assert_eq!((ca, pa), (cb, pb), "n={n}");
+            assert!(ea.is_none() && eb.is_none());
+            assert_eq!(ga, gb, "n={n}");
+            // gaps reconstruct the original indices
+            let mut acc = 0u64;
+            let back: Vec<u32> = ga
+                .iter()
+                .enumerate()
+                .map(|(i, &g)| {
+                    acc = if i == 0 { g as u64 } else { acc + g as u64 };
+                    acc as u32
+                })
+                .collect();
+            assert_eq!(back, ids);
+        }
+    }
+
+    #[test]
+    fn varint_decode_errors_match_scalar() {
+        // truncations and malformed tails at every cut of a mixed stream
+        let ids: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7, 8, 200, 300, 70000, 70001, (1 << 30) + 5];
+        let mut buf = Vec::new();
+        varint_encode_gaps_scalar(&ids, &mut buf);
+        for cut in 0..buf.len() {
+            let short = &buf[..cut];
+            let mut ga = vec![0u32; ids.len()];
+            let mut gb = vec![0u32; ids.len()];
+            let (mut pa, mut pb) = (0usize, 0usize);
+            let (ca, ea) = varint_decode_gaps(short, &mut pa, &mut ga);
+            let (cb, eb) = varint_decode_gaps_scalar(short, &mut pb, &mut gb);
+            assert_eq!((ca, pa), (cb, pb), "cut {cut}");
+            assert_eq!(format!("{ea:?}"), format!("{eb:?}"), "cut {cut}");
+            assert_eq!(ga[..ca], gb[..cb], "cut {cut}");
+        }
+        // overlong varint mid-stream
+        let mut bad = buf.clone();
+        bad.splice(4..4, [0xFFu8, 0xFF, 0xFF, 0xFF, 0x7F]);
+        let mut ga = vec![0u32; ids.len()];
+        let mut gb = vec![0u32; ids.len()];
+        let (mut pa, mut pb) = (0usize, 0usize);
+        let (ca, ea) = varint_decode_gaps(&bad, &mut pa, &mut ga);
+        let (cb, eb) = varint_decode_gaps_scalar(&bad, &mut pb, &mut gb);
+        assert_eq!((ca, pa), (cb, pb));
+        assert_eq!(format!("{ea:?}"), format!("{eb:?}"));
+    }
+}

@@ -30,6 +30,12 @@
 //!   bit-identical to decoding and folding the vector (sparse/bitmap
 //!   containers keep explicit zero-valued entries; dense containers drop
 //!   exact zeros, like the decoders).
+//! * **Blocked emission.** [`Runs::for_each_block`] emits the same runs in
+//!   batches of up to [`EMIT_BLOCK`] coordinates, decoding whole index and
+//!   value blocks through the dispatched kernels in `sparse::simd`. The
+//!   per-element values are bit-identical to [`Runs::for_each`] in the same
+//!   order; `EMIT_BLOCK == Q8_BLOCK`, so a q8 value block never straddles a
+//!   scale prefix.
 //!
 //! ## Chunked `Reader` source
 //!
@@ -45,7 +51,13 @@ use super::codec::{
     self, IndexCoding, ValueCoding, CONTAINER_BITMAP, CONTAINER_DENSE, CONTAINER_SPARSE, KIND_V2,
     Q8_BLOCK, V2_HEADER_BYTES,
 };
+use super::simd;
 use super::wire::{WireError, HEADER_BYTES, MAGIC};
+
+/// Emission block size for [`Runs::for_each_block`] — kept equal to
+/// [`Q8_BLOCK`] so a blocked value decode never straddles a q8 scale
+/// prefix.
+pub const EMIT_BLOCK: usize = Q8_BLOCK;
 
 /// Internal layout descriptor recorded by validation: where each stream
 /// lives and how it is coded, so the emit pass is a straight walk.
@@ -166,22 +178,7 @@ impl<'a> Runs<'a> {
                         pos = end;
                     }
                     IndexCoding::Varint => {
-                        let mut acc = 0u64;
-                        for slot in 0..nnz {
-                            let gap = codec::read_varint(buf, &mut pos)? as u64;
-                            if slot == 0 {
-                                acc = gap;
-                            } else {
-                                if gap == 0 {
-                                    return Err(WireError::Unsorted);
-                                }
-                                acc += gap;
-                            }
-                            if acc >= dim as u64 {
-                                let idx = acc.min(u32::MAX as u64) as u32;
-                                return Err(WireError::IndexOutOfBounds { idx, dim });
-                            }
-                        }
+                        codec::walk_varint_indices(buf, &mut pos, nnz, dim, |_| {})?;
                         if buf.len() < pos + vb {
                             return Err(WireError::Truncated(buf.len()));
                         }
@@ -335,6 +332,123 @@ impl<'a> Runs<'a> {
             }
         }
     }
+
+    /// Emit the same runs as [`for_each`](Runs::for_each), but in blocks of
+    /// up to [`EMIT_BLOCK`] coordinates: `f(indices, values)` with both
+    /// slices the same length, concatenating to exactly the scalar emit
+    /// stream. Sparse containers decode whole index and value blocks
+    /// through the dispatched kernels (`sparse::simd`); values are
+    /// bit-identical to the scalar cursor's, element for element.
+    pub fn for_each_block(&self, mut f: impl FnMut(&[u32], &[f32])) {
+        let mut ids = [0u32; EMIT_BLOCK];
+        let mut vals = [0f32; EMIT_BLOCK];
+        match self.layout {
+            Layout::V1Sparse { nnz } => {
+                let idx_off = HEADER_BYTES + 4;
+                let val_off = idx_off + 4 * nnz;
+                let mut done = 0usize;
+                while done < nnz {
+                    let take = (nnz - done).min(EMIT_BLOCK);
+                    let ib = idx_off + 4 * done;
+                    for (slot, c) in ids.iter_mut().zip(self.buf[ib..ib + 4 * take].chunks_exact(4))
+                    {
+                        *slot = u32::from_le_bytes(c.try_into().unwrap());
+                    }
+                    let vb = val_off + 4 * done;
+                    decode_f32_block(&self.buf[vb..vb + 4 * take], &mut vals[..take]);
+                    f(&ids[..take], &vals[..take]);
+                    done += take;
+                }
+            }
+            Layout::V2Sparse { nnz, index, value, val_off } => {
+                let mut pos = V2_HEADER_BYTES + 4; // index-stream cursor
+                let mut vpos = val_off;
+                let mut done = 0usize;
+                let mut acc = 0u32;
+                while done < nnz {
+                    let take = (nnz - done).min(EMIT_BLOCK);
+                    match index {
+                        IndexCoding::Raw => {
+                            for (slot, c) in
+                                ids.iter_mut().zip(self.buf[pos..pos + 4 * take].chunks_exact(4))
+                            {
+                                *slot = u32::from_le_bytes(c.try_into().unwrap());
+                            }
+                            pos += 4 * take;
+                        }
+                        IndexCoding::Varint => {
+                            // the index stream was fully validated; a short
+                            // or malformed decode here is unreachable
+                            let (got, err) =
+                                simd::varint_decode_gaps(self.buf, &mut pos, &mut ids[..take]);
+                            debug_assert_eq!(got, take, "validated varint stream");
+                            debug_assert!(err.is_none(), "validated varint stream");
+                            // in-place gap → absolute index prefix sum
+                            for (t, slot) in ids[..take].iter_mut().enumerate() {
+                                if done + t == 0 {
+                                    acc = *slot;
+                                } else {
+                                    acc += *slot;
+                                }
+                                *slot = acc;
+                            }
+                        }
+                    }
+                    vpos = decode_value_block(self.buf, vpos, value, &mut vals[..take]);
+                    f(&ids[..take], &vals[..take]);
+                    done += take;
+                }
+            }
+            // dense and bitmap layouts gain nothing from block decode (runs
+            // are filtered / bit-scattered) — batch the scalar walk instead
+            _ => {
+                let mut n = 0usize;
+                self.for_each(|i, v| {
+                    ids[n] = i;
+                    vals[n] = v;
+                    n += 1;
+                    if n == EMIT_BLOCK {
+                        f(&ids, &vals);
+                        n = 0;
+                    }
+                });
+                if n > 0 {
+                    f(&ids[..n], &vals[..n]);
+                }
+            }
+        }
+    }
+}
+
+/// Decode one value block (`out.len() ≤ EMIT_BLOCK` values) starting at
+/// byte `pos`, returning the position just past the consumed bytes. Q8
+/// reads the block's scale prefix first — callers step in `EMIT_BLOCK`
+/// units, so the prefix is always aligned with the encoder's blocks.
+fn decode_value_block(buf: &[u8], pos: usize, coding: ValueCoding, out: &mut [f32]) -> usize {
+    let n = out.len();
+    match coding {
+        ValueCoding::F32 => {
+            decode_f32_block(&buf[pos..pos + 4 * n], out);
+            pos + 4 * n
+        }
+        ValueCoding::F16 => {
+            simd::f16_decode(&buf[pos..pos + 2 * n], out);
+            pos + 2 * n
+        }
+        ValueCoding::Q8 => {
+            let scale = f32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
+            simd::q8_dequantize(&buf[pos + 4..pos + 4 + n], scale, out);
+            pos + 4 + n
+        }
+    }
+}
+
+/// Little-endian f32 block load (exact — byte reinterpretation only, so the
+/// scalar loop is already the bit-identical fast path).
+fn decode_f32_block(bytes: &[u8], out: &mut [f32]) {
+    for (c, slot) in bytes.chunks_exact(4).zip(out.iter_mut()) {
+        *slot = f32::from_le_bytes(c.try_into().unwrap());
+    }
 }
 
 /// Little-endian u32 iterator over a validated 4-byte-aligned slice.
@@ -458,6 +572,72 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn for_each_block_concatenates_to_for_each() {
+        let mut rng = Rng::new(31);
+        let mut buf = Vec::new();
+        // densities straddling the container crossovers, plus block-edge
+        // nnz (…, EMIT_BLOCK − 1, EMIT_BLOCK, EMIT_BLOCK + 1, …)
+        for &dim in &[1usize, 8, 255, 256, 257, 1000, 4096] {
+            for &frac in &[0.0f64, 0.05, 0.3, 0.8, 1.0] {
+                let nnz = ((dim as f64 * frac) as usize).min(dim);
+                let sv = rand_support(&mut rng, dim, nnz);
+                for index in [IndexCoding::Raw, IndexCoding::Varint] {
+                    for value in [ValueCoding::F32, ValueCoding::F16, ValueCoding::Q8] {
+                        let p = CodecParams { index, value };
+                        wire::encode_with(&sv, &mut buf, p);
+                        let runs = Runs::validate(&buf).unwrap();
+                        let mut scalar_ids = Vec::new();
+                        let mut scalar_vals = Vec::new();
+                        runs.for_each(|i, v| {
+                            scalar_ids.push(i);
+                            scalar_vals.push(v.to_bits());
+                        });
+                        let mut block_ids = Vec::new();
+                        let mut block_vals = Vec::new();
+                        runs.for_each_block(|ids, vals| {
+                            assert_eq!(ids.len(), vals.len());
+                            assert!(ids.len() <= EMIT_BLOCK);
+                            block_ids.extend_from_slice(ids);
+                            block_vals.extend(vals.iter().map(|v| v.to_bits()));
+                        });
+                        assert_eq!(block_ids, scalar_ids, "{p:?} dim {dim} frac {frac}");
+                        assert_eq!(block_vals, scalar_vals, "{p:?} dim {dim} frac {frac}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_block_handles_all_zero_q8_blocks() {
+        // an all-zero q8 block ships scale = 0 and zero bytes; the blocked
+        // decode must reproduce the explicit zero entries (support kept).
+        // dim far above the bitmap crossover so the sparse container wins.
+        let dim = 64 * Q8_BLOCK;
+        let nnz = 2 * Q8_BLOCK + 7;
+        let ids: Vec<u32> = (0..nnz as u32).collect();
+        let mut values = vec![0.0f32; nnz];
+        // second block non-zero, first and third all-zero
+        for (v, slot) in values[Q8_BLOCK..2 * Q8_BLOCK].iter_mut().enumerate() {
+            *slot = (v as f32) - 100.0;
+        }
+        let sv = SparseVec::from_sorted(dim, ids, values);
+        let mut buf = Vec::new();
+        let p = CodecParams { index: IndexCoding::Varint, value: ValueCoding::Q8 };
+        wire::encode_with(&sv, &mut buf, p);
+        assert_eq!(buf[5], CONTAINER_SPARSE, "test must exercise the sparse blocked path");
+        let runs = Runs::validate(&buf).unwrap();
+        let mut got = Vec::new();
+        runs.for_each_block(|ids, vals| {
+            got.extend(ids.iter().zip(vals).map(|(&i, &v)| (i, v.to_bits())));
+        });
+        let mut want = Vec::new();
+        runs.for_each(|i, v| want.push((i, v.to_bits())));
+        assert_eq!(got, want);
+        assert_eq!(got.len(), nnz, "explicit zero entries keep the support");
     }
 
     #[test]

@@ -3,21 +3,46 @@
 //! Each client, each round, selects the k largest-score coordinates out of P
 //! (P ≈ 10^5..10^6, k = rate·P). We provide:
 //!
-//! * [`threshold_exact`] — exact k-th largest score via iterative quickselect
-//!   on a scratch buffer (no recursion, median-of-three pivots, O(P) expected).
+//! * [`threshold_exact`] — exact k-th largest score. Dispatches between two
+//!   value-identical kernels (`sparse::simd::active()`):
+//!   [`threshold_exact_bucketed`] — a 256-bucket histogram over the f32
+//!   sort-key's top byte (sign+exponent) walked from the top, quickselecting
+//!   only inside the boundary bucket, so the full-copy quickselect shrinks
+//!   to one counting pass plus a small gather — and
+//!   [`threshold_exact_quickselect`] — the scalar fallback (full copy,
+//!   iterative quickselect, median-of-three pivots, O(P) expected).
 //! * [`threshold_sampled`] — DGC's trick: estimate the threshold from a
 //!   deterministic sample, then correct by counting; falls back to exact
 //!   refinement only on the (rare) underflow. Used by the perf-tuned path.
+//!   Its two internal selections dispatch the same way.
 //! * [`select_topk`] — mask extraction at a threshold with an exact-k tie
 //!   policy (first-index-wins, matching `jax.lax.top_k` determinism closely
 //!   enough for the equivalence tests, which compare sets at distinct scores).
+//!
+//! Both threshold kernels return the same *value* for the same input (the
+//! k-th largest element of a multiset does not depend on the algorithm;
+//! ties across the ±0.0 bucket boundary compare equal under `>=`, which is
+//! all downstream selection uses), so dispatch never changes a trajectory.
+//! NaN scores are outside the contract of every function here, exactly as
+//! they were for the quickselect-only implementation.
 
+use super::simd;
 use crate::util::rng::splitmix64;
 
 /// Exact value of the k-th largest element (1-based: k=1 → max).
 /// Returns `f32::INFINITY` for k == 0 (a threshold no score can clear, so
 /// nothing is selected) and the minimum for k >= len.
 pub fn threshold_exact(scores: &[f32], k: usize, scratch: &mut Vec<f32>) -> f32 {
+    if simd::active().accel {
+        threshold_exact_bucketed(scores, k, scratch)
+    } else {
+        threshold_exact_quickselect(scores, k, scratch)
+    }
+}
+
+/// Scalar twin of [`threshold_exact`]: full copy into `scratch`, iterative
+/// quickselect.
+pub fn threshold_exact_quickselect(scores: &[f32], k: usize, scratch: &mut Vec<f32>) -> f32 {
     if k == 0 {
         return f32::INFINITY;
     }
@@ -28,6 +53,83 @@ pub fn threshold_exact(scores: &[f32], k: usize, scratch: &mut Vec<f32>) -> f32 
     scratch.extend_from_slice(scores);
     let kth_from_start = scores.len() - k; // k-th largest == (n-k)-th smallest (0-based)
     *order_stat(scratch, kth_from_start)
+}
+
+/// Bucketed/histogram k-th largest: bin every score by the top byte of its
+/// total-order sort key (sign bit + exponent, 256 buckets), walk buckets
+/// from the top until the k-th element's bucket is found, then gather only
+/// that boundary bucket into `scratch` and quickselect inside it. One
+/// branch-free counting pass over `scores` replaces the full copy, and the
+/// quickselect runs on the boundary bucket only (tiny for the exponent
+/// spread of real gradient scores; the degenerate single-exponent case
+/// degrades gracefully to the old cost).
+pub fn threshold_exact_bucketed(scores: &[f32], k: usize, scratch: &mut Vec<f32>) -> f32 {
+    if k == 0 {
+        return f32::INFINITY;
+    }
+    if k >= scores.len() {
+        return scores.iter().cloned().fold(f32::INFINITY, f32::min);
+    }
+    let mut counts = [0u32; 256];
+    for &s in scores {
+        counts[bucket(s)] += 1;
+    }
+    let (b, remaining) = boundary_bucket(&counts, k);
+    scratch.clear();
+    scratch.extend(scores.iter().copied().filter(|&s| bucket(s) == b));
+    let idx = scratch.len() - remaining;
+    *order_stat(scratch, idx)
+}
+
+/// Monotone u32 sort key: `key(a) < key(b)` iff `a < b` as floats (negative
+/// range flipped, positive range offset). ±0.0 get distinct keys (buckets
+/// 0x7F and 0x80) — harmless, since the boundary value is only ever used
+/// through `>=` comparisons where -0.0 == +0.0.
+#[inline]
+fn sort_key(s: f32) -> u32 {
+    let b = s.to_bits();
+    if b & 0x8000_0000 != 0 {
+        !b
+    } else {
+        b | 0x8000_0000
+    }
+}
+
+#[inline]
+fn bucket(s: f32) -> usize {
+    (sort_key(s) >> 24) as usize
+}
+
+/// Walk buckets top-down; returns the bucket holding the k-th largest
+/// element and how many of the k largest live in it (1-based from the
+/// bucket's top). `counts` must sum to ≥ k.
+fn boundary_bucket(counts: &[u32; 256], k: usize) -> (usize, usize) {
+    let mut remaining = k;
+    let mut b = 255usize;
+    loop {
+        let c = counts[b] as usize;
+        if c >= remaining {
+            return (b, remaining);
+        }
+        remaining -= c;
+        b -= 1;
+    }
+}
+
+/// k-th largest (1 ≤ k ≤ len) of `buf`, consuming its contents: histogram,
+/// then compact the boundary bucket to the front (`retain`) and quickselect
+/// inside it. The in-scratch selections of [`threshold_sampled`] use this
+/// under accel dispatch instead of a full quickselect.
+fn kth_largest_inplace(buf: &mut Vec<f32>, k: usize) -> f32 {
+    debug_assert!(k >= 1 && k <= buf.len());
+    let mut counts = [0u32; 256];
+    for &s in buf.iter() {
+        counts[bucket(s)] += 1;
+    }
+    let (b, remaining) = boundary_bucket(&counts, k);
+    buf.retain(|&s| bucket(s) == b);
+    let idx = buf.len() - remaining;
+    *order_stat(buf, idx)
 }
 
 /// Iterative quickselect for the idx-th smallest (0-based) element.
@@ -101,10 +203,13 @@ pub fn threshold_sampled(scores: &[f32], k: usize, seed: u64, scratch: &mut Vec<
     if k >= n {
         return scores.iter().cloned().fold(f32::INFINITY, f32::min);
     }
+    let accel = simd::active().accel;
     let sample_n = (n / 100).max(1024).min(n);
     let mut h = seed ^ 0x9E37_79B9_7F4A_7C15;
     scratch.clear();
-    scratch.reserve(n); // the survivor pass below reuses this allocation
+    // only the sample lives here until the survivor pass (~2k elements)
+    // replaces it — that pass and the rare top-up grow the buffer on demand
+    scratch.reserve(sample_n);
     for s in 0..sample_n {
         // one jittered pick per stratum [s·n/N, (s+1)·n/N): sequential
         // memory order, full-range coverage, no per-call PRNG state
@@ -116,8 +221,11 @@ pub fn threshold_sampled(scores: &[f32], k: usize, seed: u64, scratch: &mut Vec<
     // target 2k survivors (safety margin against sampling noise)
     let k_sample = ((2.0 * k as f64) * (sample_n as f64) / (n as f64)).ceil() as usize;
     let k_sample = k_sample.clamp(1, sample_n);
-    let idx = sample_n - k_sample;
-    let candidate = *order_stat(scratch, idx);
+    let candidate = if accel {
+        kth_largest_inplace(scratch, k_sample)
+    } else {
+        *order_stat(scratch, sample_n - k_sample)
+    };
 
     scratch.clear();
     scratch.extend(scores.iter().cloned().filter(|&s| s >= candidate));
@@ -132,8 +240,12 @@ pub fn threshold_sampled(scores: &[f32], k: usize, seed: u64, scratch: &mut Vec<
             return threshold_exact(scores, k, scratch);
         }
     }
-    let idx = scratch.len() - k;
-    *order_stat(scratch, idx)
+    if accel {
+        kth_largest_inplace(scratch, k)
+    } else {
+        let idx = scratch.len() - k;
+        *order_stat(scratch, idx)
+    }
 }
 
 /// Collect the indices whose score clears `threshold` into a reusable
@@ -345,5 +457,98 @@ mod tests {
         assert_eq!(threshold_exact(&desc, 100, &mut scratch), 1900.0);
         let t = threshold_exact(&saw, 100, &mut scratch);
         assert_eq!(t, 6.0);
+    }
+
+    /// Score vectors that stress the bucket boundaries: heavy ties, one
+    /// shared exponent (worst case: everything lands in one bucket),
+    /// denormals, signed values straddling the ±0.0 bucket split.
+    fn bucket_stress_vectors() -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(0xB0CC);
+        let mut vs = vec![
+            vec![1.0; 777],
+            (0..1000).map(|i| if i % 3 == 0 { 0.5 } else { 0.25 }).collect(),
+            // single binade: every score in bucket 0x7E..  (exponent tie)
+            (0..2000).map(|_| 1.0 + rng.f32()).collect(),
+            // denormals mixed with zeros and tiny normals
+            (0..500)
+                .map(|i| f32::from_bits((i % 17) as u32) * if i % 2 == 0 { 1.0 } else { -1.0 })
+                .collect(),
+            // signed, straddling ±0.0
+            (0..800).map(|i| (i as f32 - 400.0) * 0.125).collect(),
+            vec![-0.0, 0.0, -0.0, 0.0, 1.0, -1.0],
+            (0..300).map(|_| rng.normal()).collect(),
+            (0..5000).map(|_| rng.normal().abs()).collect(),
+        ];
+        // full-range magnitudes across many exponents
+        vs.push((0..3000).map(|_| rng.normal() * 10f32.powi(rng.below(20) as i32 - 10)).collect());
+        vs
+    }
+
+    #[test]
+    fn bucketed_matches_quickselect() {
+        let mut s1 = Vec::new();
+        let mut s2 = Vec::new();
+        for scores in bucket_stress_vectors() {
+            let n = scores.len();
+            for k in [1usize, 2, n / 7 + 1, n / 2, n - 1, n] {
+                if k == 0 || k > n {
+                    continue;
+                }
+                let a = threshold_exact_bucketed(&scores, k, &mut s1);
+                let b = threshold_exact_quickselect(&scores, k, &mut s2);
+                // == (not bit) equality: a ±0.0 boundary may differ in sign
+                assert_eq!(a, b, "n={n} k={k}");
+                // and the selected sets are identical
+                assert_eq!(
+                    select_at_threshold(&scores, a, k),
+                    select_at_threshold(&scores, b, k),
+                    "n={n} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kth_largest_inplace_matches_sort() {
+        let mut rng = Rng::new(0x5EED);
+        for scores in bucket_stress_vectors() {
+            let n = scores.len();
+            let mut sorted = scores.clone();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            for _ in 0..4 {
+                let k = 1 + rng.below(n);
+                let mut buf = scores.clone();
+                assert_eq!(kth_largest_inplace(&mut buf, k), sorted[k - 1], "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn bucketed_handles_edge_ks() {
+        let scores = vec![3.0f32, 1.0, 2.0];
+        let mut scratch = Vec::new();
+        assert_eq!(threshold_exact_bucketed(&scores, 0, &mut scratch), f32::INFINITY);
+        assert_eq!(threshold_exact_bucketed(&scores, 3, &mut scratch), 1.0);
+        assert_eq!(threshold_exact_bucketed(&scores, 99, &mut scratch), 1.0);
+        assert_eq!(threshold_exact_bucketed(&scores, 1, &mut scratch), 3.0);
+    }
+
+    #[test]
+    fn sampled_equals_exact_under_both_selection_kernels() {
+        // threshold_sampled dispatches internally; the contract is that its
+        // result equals threshold_exact under every mode. Compare against
+        // both explicit exact kernels to pin the value regardless of the
+        // ambient dispatch mode.
+        let mut rng = Rng::new(0xAB);
+        let n = 40_000;
+        let scores: Vec<f32> = (0..n).map(|_| rng.normal().abs()).collect();
+        let mut scratch = Vec::new();
+        for k in [1usize, 37, 4000, 39_999] {
+            let b = threshold_exact_bucketed(&scores, k, &mut scratch);
+            let q = threshold_exact_quickselect(&scores, k, &mut scratch);
+            let s = threshold_sampled(&scores, k, 9, &mut scratch);
+            assert_eq!(b, q, "k={k}");
+            assert_eq!(s, b, "k={k}");
+        }
     }
 }

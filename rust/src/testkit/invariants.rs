@@ -280,6 +280,116 @@ pub fn check_q8_roundtrip(original: &SparseVec, decoded: &SparseVec) -> Vec<Stri
     out
 }
 
+/// Kernel-dispatch self-check: every dispatched hot-path kernel
+/// (`sparse::simd`, `sparse::topk`) must be bit-identical to its
+/// always-compiled scalar twin on deterministic data covering the
+/// adversarial shapes — denormals, ±0, f16 saturation points, all-zero q8
+/// blocks, q8 round-half boundaries, multi-byte varint gaps. `fedgmf
+/// verify` runs this on the machine it executes on, so every conformance
+/// run proves the *active* dispatch (`sparse::simd::describe()`) against
+/// the scalar reference, not just whatever CI happened to detect.
+pub fn check_kernel_dispatch() -> Vec<String> {
+    use crate::sparse::{simd, topk};
+    use crate::util::rng::Rng;
+    let mode = simd::describe();
+    let mut out = Vec::new();
+    let mut rng = Rng::new(0xD15);
+    let mut vals: Vec<f32> = vec![
+        0.0,
+        -0.0,
+        0.5,
+        -0.5,
+        f32::from_bits(0.5f32.to_bits() - 1), // q8 round-half boundary trap
+        65504.0,
+        65520.0, // f16 saturation edge
+        1e9,
+        -1e9,
+        f32::MIN_POSITIVE,
+        f32::from_bits(1), // subnormal
+        126.5,
+        127.49,
+    ];
+    for _ in 0..2048 {
+        vals.push(rng.normal() * 10f32.powi(rng.below(13) as i32 - 6));
+    }
+    let bits = |xs: &[f32]| -> Vec<u32> { xs.iter().map(|v| v.to_bits()).collect() };
+
+    // f16 encode/decode
+    let (mut ea, mut eb) = (Vec::new(), Vec::new());
+    simd::f16_encode(&vals, &mut ea);
+    simd::f16_encode_scalar(&vals, &mut eb);
+    if ea != eb {
+        out.push(format!("kernels({mode}): f16 encode diverges from scalar"));
+    }
+    let (mut da, mut db) = (vec![0f32; vals.len()], vec![0f32; vals.len()]);
+    simd::f16_decode(&eb, &mut da);
+    simd::f16_decode_scalar(&eb, &mut db);
+    if bits(&da) != bits(&db) {
+        out.push(format!("kernels({mode}): f16 decode diverges from scalar"));
+    }
+
+    // q8 maxabs / quantize / dequantize, including an all-zero block
+    let zero_block = [0.0f32; 64];
+    for block in vals.chunks(Q8_BLOCK).chain(std::iter::once(&zero_block[..])) {
+        let ma = simd::maxabs(block);
+        let ms = simd::maxabs_scalar(block);
+        if ma.to_bits() != ms.to_bits() {
+            out.push(format!("kernels({mode}): maxabs {ma} != scalar {ms}"));
+        }
+        if ms > 0.0 {
+            let (mut qa, mut qb) = (Vec::new(), Vec::new());
+            simd::q8_quantize(block, ms, &mut qa);
+            simd::q8_quantize_scalar(block, ms, &mut qb);
+            if qa != qb {
+                out.push(format!("kernels({mode}): q8 quantize diverges from scalar"));
+            }
+            let scale = ms / 127.0;
+            let (mut ra, mut rb) = (vec![0f32; qb.len()], vec![0f32; qb.len()]);
+            simd::q8_dequantize(&qb, scale, &mut ra);
+            simd::q8_dequantize_scalar(&qb, scale, &mut rb);
+            if bits(&ra) != bits(&rb) {
+                out.push(format!("kernels({mode}): q8 dequantize diverges from scalar"));
+            }
+        }
+    }
+
+    // varint gap coding over mixed-width gaps
+    let mut ids: Vec<u32> = Vec::new();
+    let mut acc = 0u64;
+    while acc < u32::MAX as u64 - (1 << 22) && ids.len() < 4000 {
+        acc += 1 + rng.below(1 << (3 + rng.below(20))) as u64;
+        ids.push(acc as u32);
+    }
+    let (mut va, mut vb) = (Vec::new(), Vec::new());
+    simd::varint_encode_gaps(&ids, &mut va);
+    simd::varint_encode_gaps_scalar(&ids, &mut vb);
+    if va != vb {
+        out.push(format!("kernels({mode}): varint encode diverges from scalar"));
+    }
+    if simd::varint_gaps_bytes(&ids) != simd::varint_gaps_bytes_scalar(&ids) {
+        out.push(format!("kernels({mode}): varint size diverges from scalar"));
+    }
+    let (mut ga, mut gb) = (vec![0u32; ids.len()], vec![0u32; ids.len()]);
+    let (mut pa, mut pb) = (0usize, 0usize);
+    let ra = simd::varint_decode_gaps(&vb, &mut pa, &mut ga);
+    let rb = simd::varint_decode_gaps_scalar(&vb, &mut pb, &mut gb);
+    if ga != gb || pa != pb || ra.0 != rb.0 || format!("{:?}", ra.1) != format!("{:?}", rb.1) {
+        out.push(format!("kernels({mode}): varint decode diverges from scalar"));
+    }
+
+    // bucketed top-k threshold vs full quickselect
+    let scores: Vec<f32> = vals.iter().map(|v| v.abs()).collect();
+    let mut scratch = Vec::new();
+    for k in [1usize, 7, scores.len() / 3, scores.len()] {
+        let b = topk::threshold_exact_bucketed(&scores, k, &mut scratch);
+        let q = topk::threshold_exact_quickselect(&scores, k, &mut scratch);
+        if b != q {
+            out.push(format!("kernels({mode}): bucketed top-k k={k}: {b} != quickselect {q}"));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -80,6 +80,12 @@ pub struct VerifyReport {
     pub scenarios: Vec<ScenarioResult>,
     /// one-off codec self-check violations (q8 round-trip contract)
     pub codec_selfcheck: Vec<String>,
+    /// kernel-dispatch self-check violations (dispatched hot-path kernels
+    /// vs their scalar twins — see `invariants::check_kernel_dispatch`)
+    pub kernel_selfcheck: Vec<String>,
+    /// active kernel dispatch for this run (`sparse::simd::describe()`),
+    /// recorded so a report proves *which* path produced its digests
+    pub kernel_dispatch: String,
     /// whether the loaded registry file was blessed at all (it may still
     /// lack a section for this scale — see `digest_gate_armed`)
     pub registry_blessed: bool,
@@ -101,6 +107,7 @@ impl VerifyReport {
     pub fn invariant_failures(&self) -> usize {
         self.scenarios.iter().filter(|s| !s.violations.is_empty()).count()
             + usize::from(!self.codec_selfcheck.is_empty())
+            + usize::from(!self.kernel_selfcheck.is_empty())
     }
 
     pub fn passed(&self) -> bool {
@@ -140,6 +147,11 @@ impl VerifyReport {
                 "codec_selfcheck",
                 Json::Arr(self.codec_selfcheck.iter().map(|v| Json::str(v.as_str())).collect()),
             ),
+            (
+                "kernel_selfcheck",
+                Json::Arr(self.kernel_selfcheck.iter().map(|v| Json::str(v.as_str())).collect()),
+            ),
+            ("kernel_dispatch", Json::str(self.kernel_dispatch.clone())),
             ("registry_blessed", Json::Bool(self.registry_blessed)),
             ("digest_gate_armed", Json::Bool(self.digest_gate_armed)),
             ("bless_requested", Json::Bool(self.bless_requested)),
@@ -159,13 +171,14 @@ impl VerifyReport {
     pub fn render(&self) -> String {
         let mut out = format!(
             "verify[{}]: {} scenarios x {} worker counts (+{} streamed-ingest, \
-             +{} two-tier) = {} runs\n",
+             +{} two-tier) = {} runs | kernels {}\n",
             self.scale,
             self.scenarios.len(),
             scenario::WORKERS.len(),
             self.streamed_runs,
             self.tiered_runs,
-            self.runs
+            self.runs,
+            self.kernel_dispatch
         );
         let inv = self.invariant_failures();
         if inv == 0 {
@@ -183,6 +196,9 @@ impl VerifyReport {
             }
             for v in self.codec_selfcheck.iter().take(4) {
                 out.push_str(&format!("  codec self-check: {v}\n"));
+            }
+            for v in self.kernel_selfcheck.iter().take(4) {
+                out.push_str(&format!("  kernel self-check: {v}\n"));
             }
         }
         if self.blessed_now {
@@ -403,9 +419,11 @@ pub fn run_verify(opts: &VerifyOptions) -> Result<VerifyReport> {
         results.push(ScenarioResult { key, digest: reference, violations });
     }
     let codec_selfcheck = q8_selfcheck();
+    let kernel_selfcheck = invariants::check_kernel_dispatch();
 
-    let invariants_clean =
-        results.iter().all(|r| r.violations.is_empty()) && codec_selfcheck.is_empty();
+    let invariants_clean = results.iter().all(|r| r.violations.is_empty())
+        && codec_selfcheck.is_empty()
+        && kernel_selfcheck.is_empty();
     let mut digest_mismatches = Vec::new();
     let registry_blessed = registry.blessed;
     let digest_gate_armed = registry.blessed && registry.digests(scale_key).is_some();
@@ -453,6 +471,8 @@ pub fn run_verify(opts: &VerifyOptions) -> Result<VerifyReport> {
             * scenario::TIERS.iter().filter(|&&(_, t)| t > 1).count(),
         scenarios: results,
         codec_selfcheck,
+        kernel_selfcheck,
+        kernel_dispatch: crate::sparse::simd::describe(),
         registry_blessed,
         digest_gate_armed,
         digest_mismatches,

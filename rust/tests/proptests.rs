@@ -11,6 +11,7 @@ use fedgmf::compress::{
 use fedgmf::data::partition::{emd_of_partition, partition_by_emd};
 use fedgmf::sparse::codec;
 use fedgmf::sparse::merge::Aggregator;
+use fedgmf::sparse::simd;
 use fedgmf::sparse::stream;
 use fedgmf::sparse::topk;
 use fedgmf::sparse::vector::SparseVec;
@@ -222,6 +223,151 @@ fn prop_select_at_threshold_sorted_and_capped() {
         let sel = topk::select_topk(&scores, k);
         assert!(sel.len() <= k, "seed {seed}");
         assert!(sel.windows(2).all(|w| w[0] < w[1]), "seed {seed}");
+    }
+}
+
+// --------------------------------------------------------- kernel dispatch
+
+#[test]
+fn prop_bucketed_threshold_equals_quickselect_under_ties_and_denormals() {
+    // the two selection kernels behind `threshold_exact` must return the
+    // same k-th value on tie-heavy mixtures (a small magnitude pool reused
+    // across the vector), exact zeros, denormals and full-range normals —
+    // and the support selected at that threshold must be identical
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let n = 5 + rng.below(4000);
+        let pool: Vec<f32> = (0..1 + rng.below(6))
+            .map(|_| rng.normal() * 10f32.powi(rng.below(9) as i32 - 4))
+            .collect();
+        let scores: Vec<f32> = (0..n)
+            .map(|_| match rng.below(8) {
+                0 => 0.0,
+                1 => f32::from_bits(1 + rng.below(100) as u32), // denormal
+                2 => rng.f32(),
+                _ => pool[rng.below(pool.len())].abs(),
+            })
+            .collect();
+        let k = 1 + rng.below(n);
+        let (mut s1, mut s2) = (Vec::new(), Vec::new());
+        let q = topk::threshold_exact_quickselect(&scores, k, &mut s1);
+        let b = topk::threshold_exact_bucketed(&scores, k, &mut s2);
+        assert_eq!(q, b, "seed {seed} n {n} k {k}");
+        assert_eq!(
+            topk::select_at_threshold(&scores, q, k),
+            topk::select_at_threshold(&scores, b, k),
+            "seed {seed}: selected support diverged"
+        );
+    }
+}
+
+#[test]
+fn prop_simd_varint_kernels_byte_identical_to_scalar() {
+    // encode, size and decode must agree between the dispatched varint
+    // kernels and their scalar twins on random gap mixes covering every
+    // width class (1-byte runs through 5-byte extremes), and truncated
+    // tails must fail with the same error at the same position
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let n = rng.below(600);
+        let mut ids: Vec<u32> = Vec::with_capacity(n);
+        let mut acc = 0u64;
+        for _ in 0..n {
+            let width = 1usize << (3 + rng.below(25));
+            acc += 1 + rng.below(width) as u64;
+            if acc > u32::MAX as u64 {
+                break;
+            }
+            ids.push(acc as u32);
+        }
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        simd::varint_encode_gaps_scalar(&ids, &mut a);
+        simd::varint_encode_gaps(&ids, &mut b);
+        assert_eq!(a, b, "seed {seed}: encode bytes diverged");
+        assert_eq!(simd::varint_gaps_bytes(&ids), a.len(), "seed {seed}");
+        assert_eq!(simd::varint_gaps_bytes_scalar(&ids), a.len(), "seed {seed}");
+        let (mut g1, mut g2) = (vec![0u32; ids.len()], vec![0u32; ids.len()]);
+        let (mut p1, mut p2) = (0usize, 0usize);
+        let r1 = simd::varint_decode_gaps_scalar(&a, &mut p1, &mut g1);
+        let r2 = simd::varint_decode_gaps(&a, &mut p2, &mut g2);
+        assert_eq!(r1.0, r2.0, "seed {seed}: decoded counts diverged");
+        assert_eq!(format!("{:?}", r1.1), format!("{:?}", r2.1), "seed {seed}");
+        assert_eq!(p1, p2, "seed {seed}: cursor positions diverged");
+        assert_eq!(g1, g2, "seed {seed}: decoded gaps diverged");
+        if !a.is_empty() {
+            let cut = rng.below(a.len());
+            let (mut q1, mut q2) = (0usize, 0usize);
+            let t1 = simd::varint_decode_gaps_scalar(&a[..cut], &mut q1, &mut g1);
+            let t2 = simd::varint_decode_gaps(&a[..cut], &mut q2, &mut g2);
+            assert_eq!(t1.0, t2.0, "seed {seed} cut {cut}");
+            assert_eq!(format!("{:?}", t1.1), format!("{:?}", t2.1), "seed {seed} cut {cut}");
+            assert_eq!(q1, q2, "seed {seed} cut {cut}");
+            assert_eq!(g1[..t1.0], g2[..t2.0], "seed {seed} cut {cut}");
+        }
+    }
+}
+
+#[test]
+fn prop_simd_q8_and_f16_kernels_byte_identical_to_scalar() {
+    // value-coding kernels: every byte the dispatched q8/f16 paths emit,
+    // and every f32 bit they decode back, must match the scalar twins — on
+    // random blocks and on the adversarial edges (the round-half trap just
+    // below 0.5, f16 overflow saturation, subnormals, signed zeros, and
+    // the all-zero block whose scale is exactly 0)
+    let half_trap = f32::from_bits(0.5f32.to_bits() - 1);
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    for seed in seeds() {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.below(1000);
+        let mut vals: Vec<f32> = (0..n)
+            .map(|_| rng.normal() * 10f32.powi(rng.below(11) as i32 - 5))
+            .collect();
+        for slot in 0..vals.len() {
+            match rng.below(12) {
+                0 => vals[slot] = 0.0,
+                1 => vals[slot] = -0.0,
+                2 => vals[slot] = half_trap * vals[slot].signum(),
+                3 => vals[slot] = 65520.0 * vals[slot].signum(), // f16 overflow
+                4 => vals[slot] = f32::from_bits(1 + rng.below(50) as u32),
+                _ => {}
+            }
+        }
+        // an all-zero leading block exercises the scale = 0 edge
+        if rng.below(3) == 0 {
+            for v in vals.iter_mut().take(codec::Q8_BLOCK.min(n)) {
+                *v = 0.0;
+            }
+        }
+        let (mut h1, mut h2) = (Vec::new(), Vec::new());
+        simd::f16_encode_scalar(&vals, &mut h1);
+        simd::f16_encode(&vals, &mut h2);
+        assert_eq!(h1, h2, "seed {seed}: f16 encode bytes diverged");
+        let (mut f1, mut f2) = (vec![0.0f32; n], vec![0.0f32; n]);
+        simd::f16_decode_scalar(&h1, &mut f1);
+        simd::f16_decode(&h1, &mut f2);
+        assert_eq!(bits(&f1), bits(&f2), "seed {seed}: f16 decode bits diverged");
+        for block in vals.chunks(codec::Q8_BLOCK) {
+            let (ma, mb) = (simd::maxabs_scalar(block), simd::maxabs(block));
+            assert_eq!(ma.to_bits(), mb.to_bits(), "seed {seed}: maxabs diverged");
+            let (mut d1, mut d2) = (vec![0.0f32; block.len()], vec![0.0f32; block.len()]);
+            if ma > 0.0 {
+                let (mut q1, mut q2) = (Vec::new(), Vec::new());
+                simd::q8_quantize_scalar(block, ma, &mut q1);
+                simd::q8_quantize(block, ma, &mut q2);
+                assert_eq!(q1, q2, "seed {seed}: q8 bytes diverged");
+                let scale = codec::q8_block_scale(block);
+                simd::q8_dequantize_scalar(&q1, scale, &mut d1);
+                simd::q8_dequantize(&q1, scale, &mut d2);
+            } else {
+                // the wire format stores zero bytes and a zero scale for an
+                // all-zero block; both decoders must emit exact +0.0
+                let zeros = vec![0u8; block.len()];
+                simd::q8_dequantize_scalar(&zeros, 0.0, &mut d1);
+                simd::q8_dequantize(&zeros, 0.0, &mut d2);
+                assert!(d1.iter().all(|v| v.to_bits() == 0), "seed {seed}");
+            }
+            assert_eq!(bits(&d1), bits(&d2), "seed {seed}: q8 decode bits diverged");
+        }
     }
 }
 

@@ -48,6 +48,8 @@ fn quick_matrix_passes_invariants_and_golden_gate() {
         assert!(s.violations.is_empty(), "{}: {:?}", s.key, s.violations);
     }
     assert!(report.codec_selfcheck.is_empty(), "{:?}", report.codec_selfcheck);
+    assert!(report.kernel_selfcheck.is_empty(), "{:?}", report.kernel_selfcheck);
+    assert!(!report.kernel_dispatch.is_empty(), "report must record the active dispatch");
     // digest gate: clean when armed; self-arming notice when not
     assert!(
         report.digest_mismatches.is_empty(),
