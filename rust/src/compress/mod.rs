@@ -16,6 +16,7 @@
 pub mod gmc;
 pub mod policy;
 pub mod primitives;
+pub mod rate_control;
 pub mod schedule;
 
 pub mod dgc;
@@ -25,6 +26,9 @@ pub use dgc::Dgc;
 pub use dgc_gmf::DgcGmf;
 pub use gmc::Gmc;
 pub use policy::{Compressor, CompressorKind, CompressConfig, TechniqueRow};
+pub use rate_control::{
+    HistorySignals, LinkSignals, RateControlConfig, RateControlMode, RateDecision,
+};
 pub use schedule::{SparsityWarmup, TauSchedule};
 
 use crate::sparse::vector::SparseVec;

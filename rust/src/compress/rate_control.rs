@@ -1,0 +1,529 @@
+//! Per-client adaptive rate control: closes the scheduler ⇄ codec loop.
+//!
+//! Historically every client uploaded at one shared top-k rate and value
+//! coding, so slow links missed round deadlines while fast links wasted
+//! headroom — the waste the scheduler's `wasted_uplink_bytes` and
+//! `traffic_gini` columns measure but nothing acted on. The controller
+//! plans, per client and per round, an effective top-k and value coding
+//! from three signals:
+//!
+//! 1. the client's own capability profile (uplink bandwidth, latency,
+//!    compute multiplier),
+//! 2. its own deadline-hit history (Laplace-smoothed, the same
+//!    `(delivered + 1) / (selected + 2)` estimate `SelectionHistory`
+//!    keeps),
+//! 3. its own cumulative uplink spend versus what the base rate would
+//!    have cost it over the same selections.
+//!
+//! Every input is **client-mirrorable**: a service-mode client learns its
+//! own selection/delivery outcomes from the fate bytes it already
+//! receives and knows its own profile and payload sizes, so it can
+//! reproduce the server's plan without any protocol change. Decisions
+//! are pure functions of those inputs — no fleet-global state, no RNG —
+//! so the simulator, the service server and every service client compute
+//! identical plans. `mode = "off"` (the default) never constructs a plan
+//! and is bit-identical to the pre-controller trajectory.
+//!
+//! Error feedback absorbs the extra lossiness: a coordinate shaved by a
+//! smaller k or coarsened by a q8 downshift lands in the residual and is
+//! re-emitted later, so the per-coordinate mass ledger stays clean across
+//! rate switches (see `testkit::invariants::MassLedger`).
+
+use crate::sparse::codec::{IndexCoding, ValueCoding};
+
+/// Controller mode. `Off` is the default and leaves every trajectory
+/// bit-identical to a build without the controller.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RateControlMode {
+    Off,
+    /// shave (and optionally coarsen) per client from profile + history
+    Adaptive,
+}
+
+impl RateControlMode {
+    pub fn parse(s: &str) -> Option<RateControlMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" | "fixed" => Some(RateControlMode::Off),
+            "adaptive" | "on" | "auto" => Some(RateControlMode::Adaptive),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            RateControlMode::Off => "off",
+            RateControlMode::Adaptive => "adaptive",
+        }
+    }
+}
+
+/// `[rate_control]` knobs (see `docs/config.md`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RateControlConfig {
+    pub mode: RateControlMode,
+    /// floor on the per-client rate, as a fraction of the shared base k
+    /// (a struggling client never uploads fewer than
+    /// `ceil(base_k * min_rate_frac)` coordinates)
+    pub min_rate_frac: f64,
+    /// ceiling multiplier on the shared base k (1.0 = shave-only; the
+    /// controller never uploads more than `base_k * max_rate_boost`)
+    pub max_rate_boost: f64,
+    /// fraction of the round deadline budgeted for latency + compute +
+    /// upload when capping k to link capacity
+    pub deadline_margin: f64,
+    /// allow stepping the value coding *lossier* (f32 → f16 → q8) when
+    /// the shaped k still misses the deadline budget; never steps toward
+    /// lossless
+    pub adapt_coding: bool,
+}
+
+impl Default for RateControlConfig {
+    fn default() -> Self {
+        RateControlConfig {
+            mode: RateControlMode::Off,
+            min_rate_frac: 0.25,
+            max_rate_boost: 1.0,
+            deadline_margin: 0.8,
+            adapt_coding: true,
+        }
+    }
+}
+
+/// A client's own link/compute capability, as the scheduler models it.
+/// Plain floats (not `ClientProfile`) so this module stays independent
+/// of the sim layer and service clients can fill it from their own copy
+/// of the network description.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkSignals {
+    /// effective uplink rate in the scheduler's `bytes / up_bps` units
+    pub up_bps: f64,
+    pub latency_s: f64,
+    /// multiplier on the fleet-wide per-step compute cost
+    pub compute_mult: f64,
+}
+
+/// A client's own selection history and spend ledger.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HistorySignals {
+    /// Laplace-smoothed deadline-hit rate `(delivered + 1) / (selected + 2)`;
+    /// 0.5 before any observations
+    pub hit_rate: f64,
+    /// rounds this client was selected so far (before the current round)
+    pub times_selected: u64,
+    /// cumulative uplink bytes the meter charged this client (offline
+    /// fates charge nothing, matching `TrafficMeter`)
+    pub spent_bytes: u64,
+}
+
+impl HistorySignals {
+    /// Neutral history: unobserved client, no spend.
+    pub fn fresh() -> Self {
+        HistorySignals { hit_rate: 0.5, times_selected: 0, spent_bytes: 0 }
+    }
+}
+
+/// One planned upload: the per-client effective top-k and value coding.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RateDecision {
+    pub k: usize,
+    /// `k / dim` (0 when `dim == 0`)
+    pub rate: f64,
+    pub value: ValueCoding,
+    /// true when `value` is lossier than the configured base coding
+    pub downshifted: bool,
+}
+
+/// Fixed header allowance in the payload-size model (wire frame + codec
+/// preamble). A planning estimate, not the exact encoder output.
+const EST_HEADER_BYTES: f64 = 16.0;
+
+/// Planning estimate of encoded bytes per coordinate for one coding
+/// choice. Varint gaps and q8 blocks are data-dependent; these are the
+/// steady-state averages the controller budgets with. Exactness is not
+/// required — the deadline margin absorbs the model error — but the
+/// estimate must be a pure function so all parties agree on it.
+fn est_bytes_per_coord(index: IndexCoding, value: ValueCoding) -> f64 {
+    let ix = match index {
+        IndexCoding::Raw => 4.0,
+        IndexCoding::Varint => 2.5,
+    };
+    let val = match value {
+        ValueCoding::F32 => 4.0,
+        ValueCoding::F16 => 2.0,
+        ValueCoding::Q8 => 1.25, // 1 byte + blockwise scale amortized
+    };
+    ix + val
+}
+
+/// Planning estimate of one upload's total encoded bytes.
+pub fn est_upload_bytes(k: usize, index: IndexCoding, value: ValueCoding) -> f64 {
+    EST_HEADER_BYTES + k as f64 * est_bytes_per_coord(index, value)
+}
+
+fn step_lossier(v: ValueCoding) -> ValueCoding {
+    match v {
+        ValueCoding::F32 => ValueCoding::F16,
+        ValueCoding::F16 | ValueCoding::Q8 => ValueCoding::Q8,
+    }
+}
+
+impl RateControlConfig {
+    pub fn off() -> Self {
+        RateControlConfig::default()
+    }
+
+    pub fn active(&self) -> bool {
+        self.mode == RateControlMode::Adaptive
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.min_rate_frac > 0.0 && self.min_rate_frac <= 1.0) {
+            return Err(format!(
+                "rate_control.min_rate_frac must be in (0, 1], got {}",
+                self.min_rate_frac
+            ));
+        }
+        if !(self.max_rate_boost >= 1.0 && self.max_rate_boost <= 8.0) {
+            return Err(format!(
+                "rate_control.max_rate_boost must be in [1, 8], got {}",
+                self.max_rate_boost
+            ));
+        }
+        if !(self.deadline_margin > 0.0 && self.deadline_margin <= 1.0) {
+            return Err(format!(
+                "rate_control.deadline_margin must be in (0, 1], got {}",
+                self.deadline_margin
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{} min_frac={} max_boost={} margin={} adapt_coding={}",
+            self.mode.name(),
+            self.min_rate_frac,
+            self.max_rate_boost,
+            self.deadline_margin,
+            self.adapt_coding
+        )
+    }
+
+    /// Plan one client's upload for one round.
+    ///
+    /// `base_k` is the shared warmup schedule's k for this round
+    /// (`SparsityWarmup::k_at`), `base_value` the configured uplink value
+    /// coding. `deadline_s <= 0` (scheduling inactive) disables the
+    /// capacity cap and leaves only history/spend shaping. The result is
+    /// always within `1..=dim` (and `k == 0` only when `dim == 0`),
+    /// and `value` is never less lossy than `base_value`.
+    pub fn plan(
+        &self,
+        base_k: usize,
+        dim: usize,
+        index: IndexCoding,
+        base_value: ValueCoding,
+        link: LinkSignals,
+        hist: HistorySignals,
+        deadline_s: f64,
+        compute_s: f64,
+        local_steps: usize,
+    ) -> RateDecision {
+        debug_assert!(self.active(), "plan() is only called when the controller is on");
+        if dim == 0 || base_k == 0 {
+            return RateDecision { k: 0, rate: 0.0, value: base_value, downshifted: false };
+        }
+        let clamp_k = |k: f64| -> usize { (k.max(1.0) as usize).clamp(1, dim) };
+        let k_floor = clamp_k((base_k as f64 * self.min_rate_frac).ceil());
+
+        // 1. history + spend shaping. A client that keeps missing the
+        // deadline shaves; one that has spent less than its own base-rate
+        // bill (because it was shaved or dropped) earns headroom back.
+        let w_hist = 0.5 + hist.hit_rate.clamp(0.0, 1.0);
+        let w_spend = if hist.times_selected == 0 {
+            1.0
+        } else {
+            let expected =
+                hist.times_selected as f64 * est_upload_bytes(base_k, index, base_value);
+            let actual = (hist.spent_bytes as f64).max(1.0);
+            (expected / actual).clamp(0.5, 2.0)
+        };
+        let w = (w_hist * w_spend).clamp(self.min_rate_frac, self.max_rate_boost);
+        let mut k = clamp_k((base_k as f64 * w).round()).max(k_floor);
+        let mut value = base_value;
+
+        // 2. deadline-capacity cap: fit the payload into the share of the
+        // deadline left after latency + local compute, stepping the value
+        // coding lossier (never lossless-ward) before shaving below the
+        // shaped k. Uses the scheduler's own time model
+        // (`latency_s + bytes / up_bps` + `compute_mult * compute_s * steps`).
+        if deadline_s > 0.0 && deadline_s.is_finite() && link.up_bps > 0.0 {
+            let compute = link.compute_mult * compute_s * local_steps as f64;
+            let budget_s = deadline_s * self.deadline_margin - link.latency_s - compute;
+            let capacity = budget_s * link.up_bps - EST_HEADER_BYTES;
+            if capacity <= 0.0 {
+                // hopeless link for this deadline: send the floor as
+                // cheaply as allowed rather than going silent.
+                k = k_floor;
+                if self.adapt_coding {
+                    value = ValueCoding::Q8;
+                }
+            } else {
+                let mut k_cap = (capacity / est_bytes_per_coord(index, value)).floor();
+                while self.adapt_coding
+                    && (k_cap as usize) < k
+                    && step_lossier(value) != value
+                {
+                    value = step_lossier(value);
+                    k_cap = (capacity / est_bytes_per_coord(index, value)).floor();
+                }
+                if (k_cap as usize) < k {
+                    k = clamp_k(k_cap).max(k_floor);
+                }
+            }
+        }
+
+        let k = k.clamp(1, dim);
+        RateDecision {
+            k,
+            rate: k as f64 / dim as f64,
+            value,
+            downshifted: value != base_value,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adaptive() -> RateControlConfig {
+        RateControlConfig { mode: RateControlMode::Adaptive, ..RateControlConfig::default() }
+    }
+
+    fn fast_link() -> LinkSignals {
+        LinkSignals { up_bps: 1_000_000.0, latency_s: 0.0, compute_mult: 1.0 }
+    }
+
+    #[test]
+    fn default_is_off_and_validates() {
+        let cfg = RateControlConfig::default();
+        assert_eq!(cfg.mode, RateControlMode::Off);
+        assert!(!cfg.active());
+        cfg.validate().unwrap();
+        adaptive().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let bad = RateControlConfig { min_rate_frac: 0.0, ..adaptive() };
+        assert!(bad.validate().is_err());
+        let bad = RateControlConfig { max_rate_boost: 0.5, ..adaptive() };
+        assert!(bad.validate().is_err());
+        let bad = RateControlConfig { deadline_margin: 1.5, ..adaptive() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn mode_parses() {
+        assert_eq!(RateControlMode::parse("off"), Some(RateControlMode::Off));
+        assert_eq!(RateControlMode::parse("Adaptive"), Some(RateControlMode::Adaptive));
+        assert_eq!(RateControlMode::parse("nope"), None);
+        assert_eq!(RateControlMode::Adaptive.name(), "adaptive");
+    }
+
+    #[test]
+    fn neutral_signals_keep_base_rate() {
+        // fresh history, no deadline: shave-only default leaves k at base.
+        let d = adaptive().plan(
+            100,
+            1000,
+            IndexCoding::Raw,
+            ValueCoding::F32,
+            fast_link(),
+            HistorySignals::fresh(),
+            0.0,
+            0.0,
+            1,
+        );
+        assert_eq!(d.k, 100);
+        assert_eq!(d.value, ValueCoding::F32);
+        assert!(!d.downshifted);
+        assert!((d.rate - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slow_link_gets_smaller_k_than_fast_link() {
+        let cfg = adaptive();
+        let slow = LinkSignals { up_bps: 2_000.0, ..fast_link() };
+        let plan = |link| {
+            cfg.plan(
+                200,
+                1000,
+                IndexCoding::Raw,
+                ValueCoding::F32,
+                link,
+                HistorySignals::fresh(),
+                0.1,
+                0.0,
+                1,
+            )
+        };
+        let df = plan(fast_link());
+        let ds = plan(slow);
+        assert_eq!(df.k, 200, "fast link keeps the base k");
+        assert!(ds.k < df.k, "slow link is capped: {} !< {}", ds.k, df.k);
+        assert!(ds.k >= 1);
+    }
+
+    #[test]
+    fn missing_deadlines_shaves_and_underspending_earns_back() {
+        let cfg = adaptive();
+        let plan = |hist| {
+            cfg.plan(
+                100,
+                1000,
+                IndexCoding::Raw,
+                ValueCoding::F32,
+                fast_link(),
+                hist,
+                0.0,
+                0.0,
+                1,
+            )
+        };
+        let struggler = plan(HistorySignals {
+            hit_rate: 0.1,
+            times_selected: 10,
+            spent_bytes: est_upload_bytes(100, IndexCoding::Raw, ValueCoding::F32) as u64 * 10,
+        });
+        assert!(struggler.k < 100, "low hit rate shaves: {}", struggler.k);
+        // spent half its base-rate bill: spend weight 2.0 offsets the
+        // hit-rate shave up to the boost ceiling (1.0 by default).
+        let frugal = plan(HistorySignals {
+            hit_rate: 0.5,
+            times_selected: 10,
+            spent_bytes: est_upload_bytes(100, IndexCoding::Raw, ValueCoding::F32) as u64 * 5,
+        });
+        assert_eq!(frugal.k, 100, "underspend earns back to the ceiling");
+    }
+
+    #[test]
+    fn coding_only_steps_lossier() {
+        let cfg = adaptive();
+        // a link too slow for f32 at the shaped k downshifts before shaving
+        let tight = LinkSignals { up_bps: 40_000.0, latency_s: 0.0, compute_mult: 1.0 };
+        let d = cfg.plan(
+            400,
+            1000,
+            IndexCoding::Raw,
+            ValueCoding::F32,
+            tight,
+            HistorySignals::fresh(),
+            0.05,
+            0.0,
+            1,
+        );
+        assert!(d.downshifted, "tight budget downshifts the coding");
+        assert_ne!(d.value, ValueCoding::F32);
+        // base q8 never climbs back toward lossless
+        let d = cfg.plan(
+            400,
+            1000,
+            IndexCoding::Raw,
+            ValueCoding::Q8,
+            fast_link(),
+            HistorySignals::fresh(),
+            10.0,
+            0.0,
+            1,
+        );
+        assert_eq!(d.value, ValueCoding::Q8);
+        assert!(!d.downshifted, "base coding is not a downshift");
+        // adapt_coding = false shaves k instead of touching the coding
+        let fixed = RateControlConfig { adapt_coding: false, ..cfg };
+        let d = fixed.plan(
+            400,
+            1000,
+            IndexCoding::Raw,
+            ValueCoding::F32,
+            tight,
+            HistorySignals::fresh(),
+            0.05,
+            0.0,
+            1,
+        );
+        assert_eq!(d.value, ValueCoding::F32);
+        assert!(d.k < 400);
+    }
+
+    #[test]
+    fn hopeless_link_sends_the_floor() {
+        let cfg = adaptive();
+        let dead = LinkSignals { up_bps: 1e-3, latency_s: 10.0, compute_mult: 1.0 };
+        let d = cfg.plan(
+            100,
+            1000,
+            IndexCoding::Raw,
+            ValueCoding::F32,
+            dead,
+            HistorySignals::fresh(),
+            0.1,
+            0.02,
+            1,
+        );
+        assert_eq!(d.k, 25, "floor = ceil(base_k * min_rate_frac)");
+        assert_eq!(d.value, ValueCoding::Q8, "cheapest allowed coding");
+        assert!(d.k >= 1);
+    }
+
+    #[test]
+    fn bounds_hold_on_degenerate_shapes() {
+        let cfg = adaptive();
+        for (base_k, dim) in [(1usize, 1usize), (5, 3), (1, 1000), (1000, 1000)] {
+            let d = cfg.plan(
+                base_k,
+                dim,
+                IndexCoding::Varint,
+                ValueCoding::F16,
+                LinkSignals { up_bps: 10.0, latency_s: 0.05, compute_mult: 4.0 },
+                HistorySignals { hit_rate: 0.0, times_selected: 3, spent_bytes: 1 << 30 },
+                0.06,
+                0.01,
+                2,
+            );
+            assert!(d.k >= 1 && d.k <= dim, "k {} out of 1..={dim}", d.k);
+            assert!(d.rate > 0.0 && d.rate <= 1.0);
+        }
+        let d = cfg.plan(
+            0,
+            0,
+            IndexCoding::Raw,
+            ValueCoding::F32,
+            fast_link(),
+            HistorySignals::fresh(),
+            0.1,
+            0.0,
+            1,
+        );
+        assert_eq!(d.k, 0, "dim 0 stays empty");
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let cfg = adaptive();
+        let go = || {
+            cfg.plan(
+                123,
+                997,
+                IndexCoding::Varint,
+                ValueCoding::F32,
+                LinkSignals { up_bps: 9_600.0, latency_s: 0.004, compute_mult: 2.5 },
+                HistorySignals { hit_rate: 0.375, times_selected: 7, spent_bytes: 31_287 },
+                0.095,
+                0.02,
+                1,
+            )
+        };
+        assert_eq!(go(), go());
+    }
+}

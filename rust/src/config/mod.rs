@@ -20,7 +20,10 @@
 
 pub mod toml;
 
-use crate::compress::{CompressConfig, CompressorKind, SparsityWarmup, TauSchedule};
+use crate::compress::{
+    CompressConfig, CompressorKind, RateControlConfig, RateControlMode, SparsityWarmup,
+    TauSchedule,
+};
 use crate::coordinator::hierarchy::HierarchyConfig;
 use crate::coordinator::round::{FlConfig, LrSchedule};
 use crate::coordinator::sampler::Sampler;
@@ -155,6 +158,10 @@ pub struct RunConfig {
     /// fleet topology (TOML `[hierarchy]` — see `docs/hierarchy.md`); the
     /// default is the paper's flat hub-and-spoke and is bit-inert
     pub hierarchy: HierarchyConfig,
+    /// per-client adaptive rate controller (TOML `[rate_control]` — see
+    /// `docs/config.md`); the default (`off`) plans nothing and keeps the
+    /// run bit-identical to a pre-controller build
+    pub rate_control: RateControlConfig,
 }
 
 /// Read one `[codec]` key through the coding's parser (shared by the
@@ -209,6 +216,7 @@ impl Default for RunConfig {
             transport: TransportConfig::default(),
             store: StoreMode::Auto,
             hierarchy: HierarchyConfig::default(),
+            rate_control: RateControlConfig::default(),
         }
     }
 }
@@ -302,6 +310,7 @@ impl RunConfig {
             fault: self.transport.fault,
             store: self.store,
             hierarchy: self.hierarchy.clone(),
+            rate_control: self.rate_control,
         }
     }
 
@@ -313,9 +322,24 @@ impl RunConfig {
                 .split_once('=')
                 .ok_or_else(|| anyhow!("override `{ov}` must be section.key=value"))?;
             let (section, key) = path.trim().split_once('.').unwrap_or(("", path.trim()));
+            if key.is_empty() {
+                return Err(anyhow!("override `{ov}`: empty key (expected section.key=value)"));
+            }
             let parsed = toml::parse(&format!("k = {}", value.trim()))
                 .map_err(|e| anyhow!("override `{ov}`: {e}"))?;
-            let v = parsed[""]["k"].clone();
+            // a value that parses but doesn't land as `k` in the root table
+            // (e.g. one smuggling a `[section]` header or a newline) would
+            // have panicked the old direct indexing — reject it with context
+            let v = parsed
+                .get("")
+                .and_then(|root| root.get("k"))
+                .ok_or_else(|| {
+                    anyhow!(
+                        "override `{ov}`: `{}` is not a plain TOML value for key `{key}`",
+                        value.trim()
+                    )
+                })?
+                .clone();
             doc.entry(section.to_string()).or_default().insert(key.to_string(), v);
         }
         Self::from_doc(&doc)
@@ -515,6 +539,33 @@ impl RunConfig {
                     v.as_f64().ok_or_else(|| anyhow!("hierarchy.edge_uplink_bps: wrong type"))?;
             }
         }
+        // [rate_control] — per-client adaptive rate controller (see
+        // docs/config.md). Like [sim], the shape knobs are read first and
+        // only take effect through `rate_control.mode`.
+        {
+            if let Some(v) = get(doc, "rate_control", "min_rate_frac") {
+                cfg.rate_control.min_rate_frac =
+                    v.as_f64().ok_or_else(|| anyhow!("rate_control.min_rate_frac: wrong type"))?;
+            }
+            if let Some(v) = get(doc, "rate_control", "max_rate_boost") {
+                cfg.rate_control.max_rate_boost =
+                    v.as_f64().ok_or_else(|| anyhow!("rate_control.max_rate_boost: wrong type"))?;
+            }
+            if let Some(v) = get(doc, "rate_control", "deadline_margin") {
+                cfg.rate_control.deadline_margin = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("rate_control.deadline_margin: wrong type"))?;
+            }
+            if let Some(v) = get(doc, "rate_control", "adapt_coding") {
+                cfg.rate_control.adapt_coding =
+                    v.as_bool().ok_or_else(|| anyhow!("rate_control.adapt_coding: bool"))?;
+            }
+            if let Some(v) = get(doc, "rate_control", "mode") {
+                let s = v.as_str().ok_or_else(|| anyhow!("rate_control.mode: string"))?;
+                cfg.rate_control.mode = RateControlMode::parse(s)
+                    .ok_or_else(|| anyhow!("unknown rate_control.mode `{s}`"))?;
+            }
+        }
         // [transport] — service-mode sockets + chaos (see docs/transport.md).
         // `fault` defaults its seed to the run seed so every party that
         // agrees on run.seed agrees on the chaos plan.
@@ -567,6 +618,7 @@ impl RunConfig {
         }
         self.sim.validate().map_err(|e| anyhow!(e))?;
         self.hierarchy.validate()?;
+        self.rate_control.validate().map_err(|e| anyhow!(e))?;
         Ok(())
     }
 
@@ -608,6 +660,9 @@ impl RunConfig {
                 " | hierarchy: {} tiers, {} cohorts/edge",
                 self.hierarchy.tiers, self.hierarchy.cohorts_per_edge
             ));
+        }
+        if self.rate_control.active() {
+            s.push_str(&format!(" | rate_control: {}", self.rate_control.describe()));
         }
         s
     }
@@ -914,6 +969,99 @@ fault = "drop:0.25"
         assert!(RunConfig::from_toml_str("[transport]\nfault = 3\n", &[]).is_err());
         assert!(RunConfig::from_toml_str("[transport]\naddr = 3\n", &[]).is_err());
         assert!(RunConfig::from_toml_str("[transport]\nmax_retries = \"x\"\n", &[]).is_err());
+    }
+
+    #[test]
+    fn rate_control_section_from_toml() {
+        // default: off, inert, absent from describe()
+        let plain = RunConfig::from_toml_str("", &[]).unwrap();
+        assert!(!plain.rate_control.active());
+        assert_eq!(plain.rate_control, RateControlConfig::default());
+        assert!(!plain.describe().contains("rate_control"));
+        let cfg = RunConfig::from_toml_str(
+            r#"
+[rate_control]
+mode = "adaptive"
+min_rate_frac = 0.2
+max_rate_boost = 1.5
+deadline_margin = 0.75
+adapt_coding = false
+"#,
+            &[],
+        )
+        .unwrap();
+        assert_eq!(cfg.rate_control.mode, RateControlMode::Adaptive);
+        assert!((cfg.rate_control.min_rate_frac - 0.2).abs() < 1e-12);
+        assert!((cfg.rate_control.max_rate_boost - 1.5).abs() < 1e-12);
+        assert!((cfg.rate_control.deadline_margin - 0.75).abs() < 1e-12);
+        assert!(!cfg.rate_control.adapt_coding);
+        assert!(cfg.rate_control.active());
+        assert_eq!(cfg.fl_config().rate_control, cfg.rate_control);
+        assert!(cfg.describe().contains("rate_control: adaptive"));
+        // knobs without the mode selector stay inert (like [sim] shapes)
+        let knobs_only =
+            RunConfig::from_toml_str("[rate_control]\nmin_rate_frac = 0.5\n", &[]).unwrap();
+        assert!(!knobs_only.rate_control.active());
+        // --set override path
+        let ov = RunConfig::from_toml_str(
+            "",
+            &["rate_control.mode=\"adaptive\"".to_string()],
+        )
+        .unwrap();
+        assert!(ov.rate_control.active());
+    }
+
+    #[test]
+    fn rate_control_section_rejects_bad_values() {
+        assert!(RunConfig::from_toml_str("[rate_control]\nmode = \"nope\"\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str("[rate_control]\nmode = 3\n", &[]).is_err());
+        assert!(RunConfig::from_toml_str(
+            "[rate_control]\nmode = \"adaptive\"\nmin_rate_frac = 0.0\n",
+            &[]
+        )
+        .is_err());
+        assert!(RunConfig::from_toml_str(
+            "[rate_control]\nmode = \"adaptive\"\nmax_rate_boost = 0.5\n",
+            &[]
+        )
+        .is_err());
+        assert!(RunConfig::from_toml_str(
+            "[rate_control]\nmode = \"adaptive\"\ndeadline_margin = 2.0\n",
+            &[]
+        )
+        .is_err());
+        assert!(RunConfig::from_toml_str(
+            "[rate_control]\nadapt_coding = \"yes\"\n",
+            &[]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn malformed_overrides_error_instead_of_panicking() {
+        // every malformed --set shape must surface a contextual Err; none
+        // of these may panic mid-CLI
+        for bad in [
+            "run.rounds",          // no '='
+            "run.rounds=",         // empty value
+            "run.=5",              // empty key
+            "=5",                  // empty path
+            "run.rounds=zzz",      // unparseable value
+            "run.rounds=\"open",   // unterminated string
+            "sim.deadline_s=[1,",  // unterminated array
+        ] {
+            let got = RunConfig::from_toml_str("", &[bad.to_string()]);
+            assert!(got.is_err(), "override `{bad}` must error");
+            let msg = format!("{:#}", got.unwrap_err());
+            assert!(
+                msg.contains(bad.split('=').next().unwrap().trim()) || msg.contains("override"),
+                "error for `{bad}` lacks context: {msg}"
+            );
+        }
+        // wrong-typed section values keep their key in the message
+        let got = RunConfig::from_toml_str("[sim]\ndeadline_s = \"fast\"\n", &[]);
+        let msg = format!("{:#}", got.unwrap_err());
+        assert!(msg.contains("sim.deadline_s"), "missing key context: {msg}");
     }
 
     #[test]

@@ -81,7 +81,10 @@ pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
                 return Err(err("empty key"));
             }
             let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
-            doc.get_mut(&section).unwrap().insert(key.to_string(), value);
+            // entry, not get_mut().unwrap(): the section header always
+            // pre-inserts the table today, but a parser refactor must not be
+            // able to turn that invariant into a mid-CLI panic
+            doc.entry(section.clone()).or_default().insert(key.to_string(), value);
         } else {
             return Err(err("expected `key = value` or `[section]`"));
         }

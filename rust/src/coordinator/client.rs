@@ -87,6 +87,21 @@ impl FlClient {
         self.compressor.observe_broadcast(payload);
     }
 
+    /// Retarget the uplink value coding for the *next* `local_round` (the
+    /// per-client rate controller may coarsen f32 → f16 → q8 round over
+    /// round). Must not be called between a round's compress and its
+    /// restore: `restore_dropped_upload*` picks `echo` vs `upload` from
+    /// the codec the payload was encoded with, so the round loop and the
+    /// service client both set this before fan-out / after fates settle.
+    pub fn set_uplink_value(&mut self, value: crate::sparse::codec::ValueCoding) {
+        self.codec.value = value;
+    }
+
+    /// The uplink codec currently in effect (test/diagnostic accessor).
+    pub fn uplink_codec(&self) -> CodecParams {
+        self.codec
+    }
+
     /// The server never saw this round's upload (deadline miss or hard
     /// dropout): fold the in-flight values back into the compressor's
     /// residual so the mass re-enters a later round's top-k selection.

@@ -68,7 +68,10 @@ use super::sampler::{feasibility_weights, Sampler, SelectionHistory};
 use super::server::{BroadcastPolicy, FlServer, IngestOpts, UploadSource};
 use super::store::{ClientStore, DenseStore, StoreMode, VirtualStore};
 use super::traffic::{TrafficMeter, TrafficPolicy};
-use crate::compress::{self, CompressConfig, CompressorKind, SparsityWarmup};
+use crate::compress::{
+    self, CompressConfig, CompressorKind, HistorySignals, LinkSignals, RateControlConfig,
+    RateDecision, SparsityWarmup,
+};
 use crate::data::dataset::{Batch, Dataset};
 use crate::metrics::ledger::RoundLedger;
 use crate::metrics::recorder::{Recorder, RoundRecord};
@@ -182,6 +185,14 @@ pub struct FlConfig {
     /// Trajectory digests are bit-identical across tier counts — the edge
     /// tier only changes what the wire carries (see `coordinator::hierarchy`).
     pub hierarchy: HierarchyConfig,
+    /// per-client adaptive rate controller (TOML `[rate_control]`): plans
+    /// each participant's effective top-k and uplink value coding per round
+    /// from its own capability profile, deadline-hit history and cumulative
+    /// uplink spend — inputs a service client mirrors locally, so service
+    /// fleets reproduce simulator plans without protocol changes (see
+    /// `compress::rate_control`). The default (`off`) never plans and is
+    /// bit-identical to the pre-controller loop.
+    pub rate_control: RateControlConfig,
 }
 
 impl FlConfig {
@@ -209,6 +220,7 @@ impl FlConfig {
             fault: None,
             store: StoreMode::Auto,
             hierarchy: HierarchyConfig::default(),
+            rate_control: RateControlConfig::default(),
         }
     }
 }
@@ -279,6 +291,11 @@ pub struct FlRun {
     pub history: SelectionHistory,
     /// feasibility selection weights (reused)
     weight_scratch: Vec<f64>,
+    /// per-participant effective top-k for the round (reused; holds the
+    /// shared warmup k when the rate controller is off)
+    k_scratch: Vec<usize>,
+    /// per-participant rate-controller plans (reused; empty when off)
+    decision_scratch: Vec<RateDecision>,
     /// Gini sort buffer for the fairness statistic (reused)
     gini_scratch: Vec<f64>,
     /// broadcast payload after its wire round-trip — the exact update every
@@ -365,6 +382,8 @@ impl FlRun {
             stale_queue: StaleQueue::new(),
             history,
             weight_scratch: Vec::new(),
+            k_scratch: Vec::new(),
+            decision_scratch: Vec::new(),
             gini_scratch: Vec::new(),
             worker_engines: Vec::new(),
             edge_merger: None,
@@ -425,6 +444,45 @@ impl FlRun {
         let k = self.cfg.warmup.k_at(dim, round);
         let pool = resolve_pool(self.cfg.workers);
 
+        // per-client rate control: plan every participant's effective top-k
+        // and uplink value coding before fan-out, in participant order.
+        // Every input is something the client itself can mirror in service
+        // mode (own profile, own Laplace hit history, own metered spend —
+        // the meter charges Accepted and Straggler fates, never Offline),
+        // so a service fleet reproduces these plans bit-for-bit without any
+        // protocol change. Off (the default) skips planning entirely and
+        // fills the shared warmup k.
+        self.k_scratch.clear();
+        self.decision_scratch.clear();
+        if self.cfg.rate_control.active() {
+            for &cid in &participants {
+                let p = self.scheduler.profile(cid);
+                let d = self.cfg.rate_control.plan(
+                    k,
+                    dim,
+                    self.cfg.codec.uplink.index,
+                    self.cfg.codec.uplink.value,
+                    LinkSignals {
+                        up_bps: p.link.up_bps,
+                        latency_s: p.link.latency_s,
+                        compute_mult: p.compute_mult,
+                    },
+                    HistorySignals {
+                        hit_rate: self.history.hit_rate(cid),
+                        times_selected: self.history.times_selected(cid) as u64,
+                        spent_bytes: self.meter.client_uplink(cid) as u64,
+                    },
+                    self.cfg.sim.deadline_s,
+                    self.cfg.sim.compute_s,
+                    self.cfg.local_steps,
+                );
+                self.k_scratch.push(d.k);
+                self.decision_scratch.push(d);
+            }
+        } else {
+            self.k_scratch.resize(participants.len(), k);
+        }
+
         // 1. broadcast of the previous round reaches everyone (Alg.1 l.14+8)
         //    — per-client momentum fold-in, skipped wholesale for schemes
         //    whose observe is a no-op (plain DGC). The dense store fans it
@@ -453,9 +511,18 @@ impl FlRun {
         self.store.checkout(&participants);
         {
             let mut parts: Vec<&mut FlClient> = self.store.cohort_mut();
+            // retarget each checked-out client's uplink value coding to this
+            // round's plan, before any compress (the same round's restores
+            // must see the codec the payload was encoded with)
+            if self.cfg.rate_control.active() {
+                for (c, d) in parts.iter_mut().zip(&self.decision_scratch) {
+                    c.set_uplink_value(d.value);
+                }
+            }
             let (batch_size, local_steps) = (self.cfg.batch_size, self.cfg.local_steps);
             let params = &self.params;
             let losses = &mut self.loss_scratch[..];
+            let ks = &self.k_scratch[..];
             // top up the persistent worker pool (first rounds only; engines
             // are reused every round thereafter)
             let want = if pool > 1 && n > 1 { pool.min(n) - 1 } else { 0 };
@@ -468,9 +535,9 @@ impl FlRun {
             }
             let extra = &mut self.worker_engines[..self.worker_engines.len().min(want)];
             if extra.is_empty() {
-                for (c, l) in parts.iter_mut().zip(losses.iter_mut()) {
+                for ((c, l), &ck) in parts.iter_mut().zip(losses.iter_mut()).zip(ks) {
                     let (loss, _, _) =
-                        c.local_round(engine, params, batch_size, local_steps, k, round)?;
+                        c.local_round(engine, params, batch_size, local_steps, ck, round)?;
                     *l = loss;
                 }
             } else {
@@ -480,18 +547,22 @@ impl FlRun {
                 std::thread::scope(|s| {
                     let mut part_chunks = parts.chunks_mut(chunk);
                     let mut loss_chunks = losses.chunks_mut(chunk);
+                    let mut k_chunks = ks.chunks(chunk);
                     let head_parts = part_chunks.next();
                     let head_losses = loss_chunks.next();
+                    let head_ks = k_chunks.next();
                     let mut handles = Vec::with_capacity(threads - 1);
-                    for ((pc, lc), eng) in part_chunks.zip(loss_chunks).zip(extra.iter_mut()) {
+                    for (((pc, lc), kc), eng) in
+                        part_chunks.zip(loss_chunks).zip(k_chunks).zip(extra.iter_mut())
+                    {
                         handles.push(s.spawn(move || -> anyhow::Result<()> {
-                            for (c, l) in pc.iter_mut().zip(lc.iter_mut()) {
+                            for ((c, l), &ck) in pc.iter_mut().zip(lc.iter_mut()).zip(kc) {
                                 let (loss, _, _) = c.local_round(
                                     eng.as_mut(),
                                     params,
                                     batch_size,
                                     local_steps,
-                                    k,
+                                    ck,
                                     round,
                                 )?;
                                 *l = loss;
@@ -500,9 +571,9 @@ impl FlRun {
                         }));
                     }
                     // the caller's engine drives the first chunk on this thread
-                    if let (Some(pc), Some(lc)) = (head_parts, head_losses) {
-                        for (c, l) in pc.iter_mut().zip(lc.iter_mut()) {
-                            match c.local_round(engine, params, batch_size, local_steps, k, round)
+                    if let (Some(pc), Some(lc), Some(kc)) = (head_parts, head_losses, head_ks) {
+                        for ((c, l), &ck) in pc.iter_mut().zip(lc.iter_mut()).zip(kc) {
+                            match c.local_round(engine, params, batch_size, local_steps, ck, round)
                             {
                                 Ok((loss, _, _)) => *l = loss,
                                 Err(e) => {
@@ -769,6 +840,27 @@ impl FlRun {
             edge_stats.edges,
             self.cfg.hierarchy.edge_uplink_bps,
         );
+        // per-client rate-control diagnostics. Like the edge_* columns these
+        // are NOT digested: a rate_control=off run must stay digest-identical
+        // to a pre-controller build, and the columns are derivable
+        // diagnostics, not trajectory state.
+        let shared_rate = if dim > 0 { k as f64 / dim as f64 } else { 0.0 };
+        let (rate_mean, rate_min, rate_max, coding_downshifts) =
+            if self.decision_scratch.is_empty() {
+                (shared_rate, shared_rate, shared_rate, 0)
+            } else {
+                let mut sum = 0.0f64;
+                let mut lo = f64::INFINITY;
+                let mut hi = 0.0f64;
+                let mut shifts = 0usize;
+                for d in &self.decision_scratch {
+                    sum += d.rate;
+                    lo = lo.min(d.rate);
+                    hi = hi.max(d.rate);
+                    shifts += d.downshifted as usize;
+                }
+                (sum / self.decision_scratch.len() as f64, lo, hi, shifts)
+            };
         let rec = RoundRecord {
             round,
             train_loss,
@@ -802,6 +894,10 @@ impl FlRun {
                 0
             },
             edge_backhaul_s,
+            rate_mean,
+            rate_min,
+            rate_max,
+            coding_downshifts,
         };
         self.recorder.push(rec.clone());
         Ok(rec)

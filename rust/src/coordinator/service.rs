@@ -52,12 +52,12 @@ use super::client::FlClient;
 use super::round::{resolve_pool, FlConfig, FlRun, LrSchedule, RunSummary};
 use super::sampler::{feasibility_weights, Sampler};
 use super::server::{IngestOpts, UploadSource};
-use crate::compress::{self, CompressorKind};
+use crate::compress::{self, CompressorKind, HistorySignals, LinkSignals, RateDecision};
 use crate::data::dataset::Dataset;
 use crate::experiments::workload::verify_fixture;
 use crate::metrics::recorder::RoundRecord;
 use crate::runtime::TrainEngine;
-use crate::sim::scheduler::{uplink_close, ClientFate, SelectionPolicy};
+use crate::sim::scheduler::{uplink_close, ClientFate, Scheduler, SelectionPolicy};
 use crate::sparse::stream::Runs;
 use crate::sparse::vector::SparseVec;
 use crate::sparse::wire;
@@ -92,6 +92,21 @@ pub struct ServiceClient {
     /// round whose residual was already restored client-side (plan-`drop`
     /// faults: the client knows it never sent) — the fate echo is ignored
     self_restored: Option<usize>,
+    /// this client's own capability signals — measured locally in a real
+    /// deployment, extracted from the shared network fixture here
+    link: LinkSignals,
+    /// mirrors of the server's `SelectionHistory` / `TrafficMeter` rows for
+    /// this client, rebuilt from fate bytes alone: every settled fate is one
+    /// selection, ACCEPTED is one delivery, and any non-offline fate charges
+    /// the sent wire bytes (exactly the meter's bump rule — Offline uploads
+    /// are never billed). These feed the rate controller the same inputs
+    /// the simulator's planner reads server-side, so plans agree bit-exactly
+    /// without any new protocol frames.
+    sel_mirror: u64,
+    del_mirror: u64,
+    spent_mirror: u64,
+    /// wire bytes of the in-flight upload, charged when its fate lands
+    pending_bytes: usize,
 }
 
 impl ServiceClient {
@@ -100,6 +115,7 @@ impl ServiceClient {
         cfg: FlConfig,
         shard: Box<dyn Dataset + Send>,
         engine: Box<dyn TrainEngine>,
+        link: LinkSignals,
     ) -> Self {
         let dim = engine.param_count();
         let root = crate::util::rng::Rng::new(cfg.seed);
@@ -113,8 +129,20 @@ impl ServiceClient {
             last_payload: SparseVec::empty(dim),
             awaiting: None,
             self_restored: None,
+            link,
+            sel_mirror: 0,
+            del_mirror: 0,
+            spent_mirror: 0,
+            pending_bytes: 0,
             cfg,
         }
+    }
+
+    /// Laplace-smoothed delivery rate from the fate-byte mirror — the same
+    /// `(delivered + 1) / (selected + 2)` the server's `SelectionHistory`
+    /// computes, so both planners read identical history.
+    fn mirror_hit_rate(&self) -> f64 {
+        (self.del_mirror as f64 + 1.0) / (self.sel_mirror as f64 + 2.0)
     }
 
     /// Apply the server's verdict on the in-flight upload — the same
@@ -122,8 +150,23 @@ impl ServiceClient {
     /// fate byte reaches this side of the wire.
     fn apply_fate(&mut self, fate: u8) {
         let Some(round) = self.awaiting.take() else { return };
+        // every settled fate is one selection event, mirroring the server's
+        // `history.record(cid, ..)` for all participants (including plan-drop
+        // clients, whom the server fates offline without an arrival)
+        self.sel_mirror += 1;
+        let sent = std::mem::take(&mut self.pending_bytes);
         if self.self_restored.take() == Some(round) {
             return; // plan-drop: restored at send time, fate echo is stale
+        }
+        match fate {
+            FATE_ACCEPTED => {
+                self.del_mirror += 1;
+                self.spent_mirror += sent as u64;
+            }
+            // stragglers crossed the wire — carried or wasted, the meter
+            // bills them either way; only offline uploads go unbilled
+            FATE_STRAGGLER => self.spent_mirror += sent as u64,
+            _ => {}
         }
         match fate {
             FATE_STRAGGLER => {
@@ -177,8 +220,34 @@ impl ClientHandler for ServiceClient {
         }
 
         // 3. local training + compression + wire encode, exactly the
-        //    simulator's client fan-out body
-        let k = self.cfg.warmup.k_at(self.params.len(), round);
+        //    simulator's client fan-out body. With the rate controller on,
+        //    the client plans its own effective k / value coding from the
+        //    fate-byte mirror — identical inputs to the server-side planner,
+        //    hence identical plans. The codec retarget happens here, strictly
+        //    after step 1's `apply_fate`: a restore of the previous round's
+        //    upload must still see the coding that upload was encoded with.
+        let base_k = self.cfg.warmup.k_at(self.params.len(), round);
+        let k = if self.cfg.rate_control.active() {
+            let d = self.cfg.rate_control.plan(
+                base_k,
+                self.params.len(),
+                self.cfg.codec.uplink.index,
+                self.cfg.codec.uplink.value,
+                self.link,
+                HistorySignals {
+                    hit_rate: self.mirror_hit_rate(),
+                    times_selected: self.sel_mirror,
+                    spent_bytes: self.spent_mirror,
+                },
+                self.cfg.sim.deadline_s,
+                self.cfg.sim.compute_s,
+                self.cfg.local_steps,
+            );
+            self.inner.set_uplink_value(d.value);
+            d.k
+        } else {
+            base_k
+        };
         let (loss, _, _) = self.inner.local_round(
             self.engine.as_mut(),
             &self.params,
@@ -188,6 +257,7 @@ impl ClientHandler for ServiceClient {
             round,
         )?;
         self.awaiting = Some(round);
+        self.pending_bytes = self.inner.wire_buf.len();
 
         // 4. a plan-`drop` fault silences the upload at the source; the
         //    client restores immediately (it knows nothing was sent)
@@ -243,6 +313,9 @@ pub struct ServiceRun {
     /// broadcast wire bytes of the previous round (what `broadcast` ships)
     bcast_buf: Vec<u8>,
     accepted_scratch: Vec<usize>,
+    /// per-participant rate-controller plans recomputed server-side for the
+    /// recorder's rate columns (reused; empty when the controller is off)
+    decision_scratch: Vec<RateDecision>,
     prev_stats: TransportStats,
 }
 
@@ -262,6 +335,7 @@ impl ServiceRun {
             payload_scratch: SparseVec::empty(run.params.len()),
             bcast_buf: Vec::new(),
             accepted_scratch: Vec::new(),
+            decision_scratch: Vec::new(),
             prev_stats: TransportStats::default(),
             round_deadline_ms,
             run,
@@ -310,6 +384,40 @@ impl ServiceRun {
         };
         let n = participants.len();
         let pool = resolve_pool(r.cfg.workers);
+
+        // recompute each participant's rate-controller plan from the
+        // server-side history/meter — the same pure function the client
+        // evaluates over its fate-byte mirror, so these are the plans the
+        // arriving uploads were actually shaped by. Server-side they feed
+        // only the recorder's (non-digested) rate columns.
+        let dim = r.params.len();
+        let base_k = r.cfg.warmup.k_at(dim, round);
+        self.decision_scratch.clear();
+        if r.cfg.rate_control.active() {
+            for &cid in &participants {
+                let p = r.scheduler.profile(cid);
+                let d = r.cfg.rate_control.plan(
+                    base_k,
+                    dim,
+                    r.cfg.codec.uplink.index,
+                    r.cfg.codec.uplink.value,
+                    LinkSignals {
+                        up_bps: p.link.up_bps,
+                        latency_s: p.link.latency_s,
+                        compute_mult: p.compute_mult,
+                    },
+                    HistorySignals {
+                        hit_rate: r.history.hit_rate(cid),
+                        times_selected: r.history.times_selected(cid) as u64,
+                        spent_bytes: r.meter.client_uplink(cid) as u64,
+                    },
+                    r.cfg.sim.deadline_s,
+                    r.cfg.sim.compute_s,
+                    r.cfg.local_steps,
+                );
+                self.decision_scratch.push(d);
+            }
+        }
 
         // open the round on the wire: the previous round's broadcast bytes
         // (empty on round 0) plus each client's pending fate byte
@@ -562,6 +670,25 @@ impl ServiceRun {
         self.prev_stats = stats;
 
         let traffic_gini = r.meter.uplink_gini(r.store.fleet_len(), &mut self.gini_scratch);
+        // rate-control diagnostics, mirroring `FlRun::step_round` (and like
+        // it, never digested)
+        let shared_rate = if dim > 0 { base_k as f64 / dim as f64 } else { 0.0 };
+        let (rate_mean, rate_min, rate_max, coding_downshifts) =
+            if self.decision_scratch.is_empty() {
+                (shared_rate, shared_rate, shared_rate, 0)
+            } else {
+                let mut sum = 0.0f64;
+                let mut lo = f64::INFINITY;
+                let mut hi = 0.0f64;
+                let mut shifts = 0usize;
+                for d in &self.decision_scratch {
+                    sum += d.rate;
+                    lo = lo.min(d.rate);
+                    hi = hi.max(d.rate);
+                    shifts += d.downshifted as usize;
+                }
+                (sum / self.decision_scratch.len() as f64, lo, hi, shifts)
+            };
         let rec = RoundRecord {
             round,
             train_loss,
@@ -593,6 +720,10 @@ impl ServiceRun {
             edge_uplink_bytes: 0,
             edge_downlink_bytes: 0,
             edge_backhaul_s: 0.0,
+            rate_mean,
+            rate_min,
+            rate_max,
+            coding_downshifts,
         };
         r.recorder.push(rec.clone());
         Ok(rec)
@@ -659,7 +790,18 @@ pub fn build_service_client(
     let mut fx = verify_fixture(clients, seed);
     let cfg = service_config(clients, rounds, seed, fault);
     let shard = fx.shards.remove(id);
-    ServiceClient::new(id, cfg, shard, Box::new(fx.engine))
+    // the client's own capability profile: in a real fleet the device
+    // measures this; here both sides derive it from the shared fixture
+    // network through the same deterministic scheduler construction, so the
+    // client's rate-controller inputs equal the server's
+    let sched = Scheduler::new(&fx.network, cfg.sim.preset, cfg.seed);
+    let p = sched.profile(id);
+    let link = LinkSignals {
+        up_bps: p.link.up_bps,
+        latency_s: p.link.latency_s,
+        compute_mult: p.compute_mult,
+    };
+    ServiceClient::new(id, cfg, shard, Box::new(fx.engine), link)
 }
 
 /// The full fleet as in-process handlers (for `InProcTransport` and tests).
@@ -680,6 +822,8 @@ pub fn build_service_handlers(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::RateControlMode;
+    use crate::sim::scheduler::{ProfilePreset, StalenessPolicy};
     use crate::testkit::digest::trajectory_digest;
     use crate::transport::inproc::InProcTransport;
     use crate::transport::TransportConfig;
@@ -751,6 +895,90 @@ mod tests {
             service_digest_with(6, 4, 42, plan, true),
             "streamed ingest must absorb duplicated frames identically"
         );
+    }
+
+    /// `service_config` with the rate controller on over a straggler-prone
+    /// heterogeneous fleet — the config under which client and server must
+    /// re-derive identical per-client plans from fate bytes alone.
+    fn adaptive_cfg(clients: usize, rounds: usize, seed: u64) -> FlConfig {
+        let mut cfg = service_config(clients, rounds, seed, None);
+        cfg.rate_control.mode = RateControlMode::Adaptive;
+        cfg.sim.preset = ProfilePreset::Heterogeneous { slow_every: 2, slow_factor: 8.0 };
+        cfg.sim.deadline_s = 0.05;
+        cfg.sim.compute_s = 0.01;
+        cfg.sim.staleness = StalenessPolicy::CarryDiscounted(0.5);
+        cfg
+    }
+
+    fn sim_digest_adaptive(clients: usize, rounds: usize, seed: u64) -> u64 {
+        let fx = verify_fixture(clients, seed);
+        let mut engine = fx.engine;
+        let cfg = adaptive_cfg(clients, rounds, seed);
+        let mut run = FlRun::new(&engine, fx.shards, Vec::new(), fx.network, cfg);
+        run.run(&mut engine).unwrap();
+        trajectory_digest(&param_bits(&run.params), &run.recorder.rounds)
+    }
+
+    fn service_digest_adaptive(clients: usize, rounds: usize, seed: u64) -> u64 {
+        let handlers: Vec<Box<dyn ClientHandler>> = (0..clients)
+            .map(|id| {
+                let mut fx = verify_fixture(clients, seed);
+                let cfg = adaptive_cfg(clients, rounds, seed);
+                let shard = fx.shards.remove(id);
+                let sched = Scheduler::new(&fx.network, cfg.sim.preset, cfg.seed);
+                let p = sched.profile(id);
+                let link = LinkSignals {
+                    up_bps: p.link.up_bps,
+                    latency_s: p.link.latency_s,
+                    compute_mult: p.compute_mult,
+                };
+                Box::new(ServiceClient::new(id, cfg, shard, Box::new(fx.engine), link))
+                    as Box<dyn ClientHandler>
+            })
+            .collect();
+        let mut transport = InProcTransport::new(handlers, TransportConfig::default());
+        let fx = verify_fixture(clients, seed);
+        let run = FlRun::new(
+            &fx.engine,
+            fx.shards,
+            Vec::new(),
+            fx.network,
+            adaptive_cfg(clients, rounds, seed),
+        );
+        let mut service = ServiceRun::new(run, 1000);
+        service.run(&mut transport).unwrap();
+        trajectory_digest(&param_bits(&service.run.params), &service.run.recorder.rounds)
+    }
+
+    #[test]
+    fn adaptive_service_run_matches_simulator_digest() {
+        // the closed loop's headline guarantee: with per-client k and value
+        // coding re-planned every round, the fate-byte mirror gives the
+        // client planner bit-identical inputs to the server's, so the whole
+        // trajectory — straggler fates, scaled carry restores, per-client
+        // codec switches included — survives the move onto the wire
+        assert_eq!(
+            sim_digest_adaptive(6, 6, 42),
+            service_digest_adaptive(6, 6, 42),
+            "adaptive service run must be digest-identical to the simulator"
+        );
+    }
+
+    #[test]
+    fn adaptive_service_rounds_actually_diverge_rates() {
+        // guard against the identity above passing vacuously: the
+        // heterogeneous fleet must produce a genuine per-client rate spread
+        let fx = verify_fixture(6, 42);
+        let mut engine = fx.engine;
+        let cfg = adaptive_cfg(6, 6, 42);
+        let mut run = FlRun::new(&engine, fx.shards, Vec::new(), fx.network, cfg);
+        run.run(&mut engine).unwrap();
+        let spread = run
+            .recorder
+            .rounds
+            .iter()
+            .any(|r| r.rate_max - r.rate_min > 1e-9);
+        assert!(spread, "adaptive plans never diverged across a bimodal fleet");
     }
 
     #[test]

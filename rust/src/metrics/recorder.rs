@@ -80,6 +80,19 @@ pub struct RoundRecord {
     /// simulated backhaul seconds over the parallel edge links (diagnostic
     /// only — never added to `sim_seconds`, which is digested)
     pub edge_backhaul_s: f64,
+    /// mean effective top-k rate (`k / dim`) across the round's cohort.
+    /// Like the edge_* columns, the rate_* family is deliberately OUTSIDE
+    /// the trajectory digest: a `rate_control = off` run must stay
+    /// digest-identical to a pre-controller build, and under `off` these
+    /// just echo the shared warmup rate.
+    pub rate_mean: f64,
+    /// smallest per-client effective rate the controller planned this round
+    pub rate_min: f64,
+    /// largest per-client effective rate the controller planned this round
+    pub rate_max: f64,
+    /// cohort members whose uplink value coding was stepped lossier than
+    /// the configured base coding this round (0 when the controller is off)
+    pub coding_downshifts: usize,
 }
 
 impl RoundRecord {
@@ -137,6 +150,17 @@ impl RoundRecord {
         }
         if !self.edge_backhaul_s.is_finite() || self.edge_backhaul_s < 0.0 {
             out.push(format!("round {r}: edge_backhaul_s {} invalid", self.edge_backhaul_s));
+        }
+        if !(self.rate_mean.is_finite() && self.rate_min.is_finite() && self.rate_max.is_finite())
+            || self.rate_min < 0.0
+            || self.rate_max > 1.0
+            || self.rate_min > self.rate_mean + 1e-12
+            || self.rate_mean > self.rate_max + 1e-12
+        {
+            out.push(format!(
+                "round {r}: rate columns ({}, {}, {}) violate 0 <= min <= mean <= max <= 1",
+                self.rate_min, self.rate_mean, self.rate_max
+            ));
         }
         out
     }
@@ -270,18 +294,33 @@ impl Recorder {
         self.rounds.iter().map(|r| r.edge_downlink_bytes).sum()
     }
 
+    /// Uplink codings stepped lossier by the rate controller (whole run).
+    pub fn total_coding_downshifts(&self) -> usize {
+        self.rounds.iter().map(|r| r.coding_downshifts).sum()
+    }
+
+    /// Mean of the per-round mean effective top-k rate (the shared warmup
+    /// rate when the controller is off; 0 for an empty recorder).
+    pub fn mean_effective_rate(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.rate_mean).sum::<f64>() / self.rounds.len() as f64
+    }
+
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "round,train_loss,test_loss,test_accuracy,uplink_bytes,downlink_bytes,\
              aggregate_nnz,mask_overlap,sim_seconds,wall_seconds,selected,dropped_deadline,\
              dropped_offline,sim_clock,wasted_uplink_bytes,carried_in,carried_bytes,\
              traffic_gini,precodec_bytes,codec_ratio,retries,timeouts,stale_frames,\
-             dup_frames,edge_count,edge_uplink_bytes,edge_downlink_bytes,edge_backhaul_s\n",
+             dup_frames,edge_count,edge_uplink_bytes,edge_downlink_bytes,edge_backhaul_s,\
+             rate_mean,rate_min,rate_max,coding_downshifts\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
                 "{},{:.6},{:.6},{:.6},{},{},{},{:.6},{:.6},{:.6},{},{},{},{:.6},{},{},{},\
-                 {:.6},{},{:.6},{},{},{},{},{},{},{},{:.6}\n",
+                 {:.6},{},{:.6},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{}\n",
                 r.round,
                 r.train_loss,
                 r.test_loss,
@@ -309,7 +348,11 @@ impl Recorder {
                 r.edge_count,
                 r.edge_uplink_bytes,
                 r.edge_downlink_bytes,
-                r.edge_backhaul_s
+                r.edge_backhaul_s,
+                r.rate_mean,
+                r.rate_min,
+                r.rate_max,
+                r.coding_downshifts
             ));
         }
         out
@@ -340,6 +383,8 @@ impl Recorder {
             ("total_dup_frames", Json::num(self.total_dup_frames() as f64)),
             ("total_edge_uplink_bytes", Json::num(self.total_edge_uplink() as f64)),
             ("total_edge_downlink_bytes", Json::num(self.total_edge_downlink() as f64)),
+            ("total_coding_downshifts", Json::num(self.total_coding_downshifts() as f64)),
+            ("mean_effective_rate", Json::num(self.mean_effective_rate())),
         ])
     }
 
@@ -441,7 +486,8 @@ mod tests {
         assert!(csv.lines().next().unwrap().ends_with(
             "sim_clock,wasted_uplink_bytes,carried_in,carried_bytes,traffic_gini,\
              precodec_bytes,codec_ratio,retries,timeouts,stale_frames,dup_frames,\
-             edge_count,edge_uplink_bytes,edge_downlink_bytes,edge_backhaul_s"
+             edge_count,edge_uplink_bytes,edge_downlink_bytes,edge_backhaul_s,\
+             rate_mean,rate_min,rate_max,coding_downshifts"
         ));
     }
 
@@ -458,7 +504,10 @@ mod tests {
         assert_eq!(j.get("total_retries").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("total_dup_frames").unwrap().as_usize(), Some(4));
         let row = r.to_csv().lines().nth(1).unwrap().to_string();
-        assert!(row.ends_with("2,0,1,0,0,0,0,0.000000"), "row {row}");
+        assert!(
+            row.ends_with("2,0,1,0,0,0,0,0.000000,0.000000,0.000000,0.000000,0"),
+            "row {row}"
+        );
     }
 
     #[test]
@@ -546,7 +595,10 @@ mod tests {
         assert_eq!(j.get("total_edge_uplink_bytes").unwrap().as_usize(), Some(300));
         assert_eq!(j.get("total_edge_downlink_bytes").unwrap().as_usize(), Some(200));
         let row = r.to_csv().lines().nth(1).unwrap().to_string();
-        assert!(row.ends_with("2,300,200,0.500000"), "row {row}");
+        assert!(
+            row.ends_with("2,300,200,0.500000,0.000000,0.000000,0.000000,0"),
+            "row {row}"
+        );
         // flat rounds must keep the edge columns zero
         assert!(r.rounds[1].consistency_violations().is_empty());
         let phantom = RoundRecord {
@@ -565,6 +617,50 @@ mod tests {
             ..Default::default()
         };
         assert!(!bad_backhaul.consistency_violations().is_empty());
+    }
+
+    #[test]
+    fn rate_columns_total_and_validate() {
+        let mut r = Recorder::new();
+        r.push(RoundRecord {
+            codec_ratio: 1.0,
+            rate_mean: 0.08,
+            rate_min: 0.05,
+            rate_max: 0.1,
+            coding_downshifts: 3,
+            ..Default::default()
+        });
+        r.push(RoundRecord {
+            codec_ratio: 1.0,
+            rate_mean: 0.1,
+            rate_min: 0.1,
+            rate_max: 0.1,
+            coding_downshifts: 1,
+            ..Default::default()
+        });
+        assert_eq!(r.total_coding_downshifts(), 4);
+        assert!((r.mean_effective_rate() - 0.09).abs() < 1e-12);
+        let j = r.summary_json();
+        assert_eq!(j.get("total_coding_downshifts").unwrap().as_usize(), Some(4));
+        assert!((j.get("mean_effective_rate").unwrap().as_f64().unwrap() - 0.09).abs() < 1e-12);
+        assert!(r.rounds[0].consistency_violations().is_empty());
+        // a min above the mean (or a rate outside [0, 1]) is flagged
+        let bad = RoundRecord {
+            codec_ratio: 1.0,
+            rate_mean: 0.05,
+            rate_min: 0.2,
+            rate_max: 0.3,
+            ..Default::default()
+        };
+        assert!(!bad.consistency_violations().is_empty());
+        let oob = RoundRecord {
+            codec_ratio: 1.0,
+            rate_mean: 1.2,
+            rate_min: 1.1,
+            rate_max: 1.3,
+            ..Default::default()
+        };
+        assert!(!oob.consistency_violations().is_empty());
     }
 
     #[test]

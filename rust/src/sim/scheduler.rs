@@ -261,10 +261,59 @@ pub enum ClientFate {
 /// interchangeable. Diagnostic only: it never enters `sim_seconds`, which
 /// is digested and must stay identical between flat and two-tier runs.
 pub fn backhaul_time(bytes: usize, edges: usize, bps: f64) -> f64 {
-    if edges == 0 {
+    if edges == 0 || bytes == 0 {
         0.0
-    } else {
+    } else if bps > 0.0 {
         (bytes as f64 * 8.0) / (bps * edges as f64)
+    } else {
+        // a zero/negative/NaN backhaul rate ships nothing, ever: surface
+        // "never completes" instead of letting `0/0 → NaN` poison the
+        // diagnostic column
+        f64::INFINITY
+    }
+}
+
+/// Smallest accepted link rate. Links configured at (or scaled down to)
+/// zero, a negative value, or NaN are clamped here at profile construction
+/// instead of poisoning every downstream `bytes / bps` with NaN or a
+/// division by zero — a 10⁻³ B/s link is unambiguously "too slow for any
+/// deadline" while keeping every finish time finite. Valid rates pass
+/// through bit-identically (the digest contract).
+pub const MIN_LINK_BPS: f64 = 1e-3;
+
+/// Largest accepted compute slowdown: the long-tail draw `exp(σ·|N|)`
+/// overflows to +∞ for large σ, and an infinite multiplier would drive
+/// `compute_time` — and with it `sim_seconds` — non-finite.
+pub const MAX_COMPUTE_MULT: f64 = 1e12;
+
+/// Clamp a profile's arithmetic inputs into the range the time model is
+/// total over. Finite positive rates, finite non-negative latencies and
+/// finite positive multipliers are returned untouched (bit-identical).
+fn sanitize_profile(mut p: ClientProfile) -> ClientProfile {
+    // NaN and non-positive rates fail `> 0.0`; +∞ passes (an infinitely
+    // fast link is a valid limit: every transfer takes 0 s)
+    let fix_bps = |b: f64| if b > 0.0 { b } else { MIN_LINK_BPS };
+    p.link.up_bps = fix_bps(p.link.up_bps);
+    p.link.down_bps = fix_bps(p.link.down_bps);
+    if !(p.link.latency_s.is_finite() && p.link.latency_s >= 0.0) {
+        p.link.latency_s = 0.0;
+    }
+    if !p.compute_mult.is_finite() {
+        p.compute_mult = MAX_COMPUTE_MULT;
+    } else if p.compute_mult <= 0.0 {
+        p.compute_mult = 1.0;
+    }
+    p
+}
+
+/// `bytes / bps`, total: a non-positive or NaN rate yields +∞ (the
+/// transfer never completes) instead of `0/0 → NaN`. Post-sanitize
+/// profiles never hit the guard; it protects directly-constructed ones.
+fn transfer_s(bytes: usize, bps: f64) -> f64 {
+    if bps > 0.0 {
+        bytes as f64 / bps
+    } else {
+        f64::INFINITY
     }
 }
 
@@ -337,6 +386,10 @@ impl Scheduler {
                     .collect()
             }
         };
+        // clamp degenerate arithmetic inputs (zero-rate links, NaN
+        // latencies, overflowed long-tail multipliers) once, here, so every
+        // downstream divide stays finite; valid profiles are untouched
+        let profiles = profiles.into_iter().map(sanitize_profile).collect();
         Scheduler { profiles, clock: 0.0 }
     }
 
@@ -367,7 +420,7 @@ impl Scheduler {
     /// Simulated upload time for `bytes` on `client`'s link.
     pub fn uplink_time(&self, client: usize, bytes: usize) -> f64 {
         let l = &self.profile(client).link;
-        l.latency_s + bytes as f64 / l.up_bps
+        l.latency_s + transfer_s(bytes, l.up_bps)
     }
 
     /// Multicast completion time: the slowest participant's downlink.
@@ -376,7 +429,7 @@ impl Scheduler {
             .iter()
             .map(|&k| {
                 let l = &self.profile(k).link;
-                l.latency_s + bytes as f64 / l.down_bps
+                l.latency_s + transfer_s(bytes, l.down_bps)
             })
             .fold(0.0, f64::max)
     }
@@ -536,6 +589,90 @@ mod tests {
         let c = Scheduler::new(&network, ProfilePreset::LongTail { sigma: 0.8 }, 43);
         let differs = (0..32).any(|k| a.profile(k).compute_mult != c.profile(k).compute_mult);
         assert!(differs, "different seeds must draw different tails");
+    }
+
+    #[test]
+    fn degenerate_links_are_sanitized_at_construction() {
+        let links = vec![
+            LinkSpec { up_bps: 0.0, down_bps: -5.0, latency_s: f64::NAN },
+            LinkSpec { up_bps: f64::NAN, down_bps: 0.0, latency_s: -1.0 },
+            LinkSpec { up_bps: -3.0, down_bps: f64::NAN, latency_s: f64::INFINITY },
+        ];
+        let sched = Scheduler::new(&Network { links }, ProfilePreset::Uniform, 1);
+        for c in 0..3 {
+            let p = sched.profile(c);
+            assert!(p.link.up_bps > 0.0 && p.link.up_bps.is_finite(), "client {c} up_bps");
+            assert!(p.link.down_bps > 0.0 && p.link.down_bps.is_finite(), "client {c} down_bps");
+            assert!(p.link.latency_s == 0.0, "client {c} latency");
+            // the pre-guard failure mode: `0 bytes / 0 bps` was NaN, which
+            // `finish > deadline` silently classified as Accepted
+            assert!(sched.uplink_time(c, 0).is_finite(), "client {c} zero-byte uplink");
+            assert!(sched.uplink_time(c, 1000).is_finite(), "client {c} uplink");
+        }
+        assert!(sched.broadcast_time(512, &[0, 1, 2]).is_finite());
+        // a sanitized dead link is catastrophically slow, not fast: it must
+        // straggle under any realistic deadline rather than sneak in as a
+        // zero-cost accept
+        let cfg = SimConfig { deadline_s: 60.0, ..Default::default() };
+        let (fates, finishes, t) = plan(&sched, &cfg, &[0, 1, 2], &[100; 3], 7);
+        assert!(fates.iter().all(|&f| f == ClientFate::Straggler));
+        assert!(finishes.iter().all(|f| f.is_finite()));
+        assert!(t.is_finite());
+    }
+
+    #[test]
+    fn valid_profiles_pass_through_sanitizing_bit_identically() {
+        // the digest contract: the guard must be invisible on healthy input
+        let links = vec![
+            LinkSpec { up_bps: 24_000.0, down_bps: 96_000.0, latency_s: 0.004 },
+            LinkSpec { up_bps: 1_200.0, down_bps: 96_000.0, latency_s: 0.008 },
+        ];
+        let network = Network { links: links.clone() };
+        let sched = Scheduler::new(&network, ProfilePreset::Uniform, 1);
+        for (c, l) in links.iter().enumerate() {
+            assert_eq!(sched.profile(c).link.up_bps.to_bits(), l.up_bps.to_bits());
+            assert_eq!(sched.profile(c).link.down_bps.to_bits(), l.down_bps.to_bits());
+            assert_eq!(sched.profile(c).link.latency_s.to_bits(), l.latency_s.to_bits());
+            assert_eq!(sched.profile(c).compute_mult.to_bits(), 1.0f64.to_bits());
+        }
+        // infinitely fast is a valid limit, not a defect: transfers take 0 s
+        let inf = Network {
+            links: vec![LinkSpec { up_bps: f64::INFINITY, down_bps: f64::INFINITY, latency_s: 0.0 }],
+        };
+        let fast = Scheduler::new(&inf, ProfilePreset::Uniform, 1);
+        assert_eq!(fast.uplink_time(0, 4096), 0.0);
+        assert_eq!(fast.broadcast_time(4096, &[0]), 0.0);
+    }
+
+    #[test]
+    fn extreme_longtail_sigma_keeps_every_time_finite() {
+        // exp(σ·|N|) overflows to +∞ at large σ; before the clamp that made
+        // compute_time = ∞ and up_bps = base/∞ = 0 → uplink_time = ∞ or NaN
+        let network = net(16);
+        let sched = Scheduler::new(&network, ProfilePreset::LongTail { sigma: 400.0 }, 7);
+        let cfg = SimConfig { deadline_s: 1.0, compute_s: 0.01, ..Default::default() };
+        for c in 0..16 {
+            let p = sched.profile(c);
+            assert!(p.compute_mult.is_finite() && p.compute_mult >= 1.0, "client {c} mult");
+            assert!(p.link.up_bps > 0.0, "client {c} up_bps");
+            assert!(sched.compute_time(&cfg, c, 1).is_finite(), "client {c} compute");
+            assert!(sched.uplink_time(c, 500).is_finite(), "client {c} uplink");
+        }
+        let parts: Vec<usize> = (0..16).collect();
+        let (_, finishes, t) = plan(&sched, &cfg, &parts, &[500; 16], 3);
+        assert!(finishes.iter().all(|f| f.is_finite()), "finish times must stay finite");
+        assert!(t.is_finite(), "uplink-phase close must stay finite");
+    }
+
+    #[test]
+    fn backhaul_time_guards_degenerate_rates() {
+        assert_eq!(backhaul_time(1000, 2, 0.0), f64::INFINITY);
+        assert_eq!(backhaul_time(1000, 2, -8.0), f64::INFINITY);
+        assert_eq!(backhaul_time(1000, 2, f64::NAN), f64::INFINITY);
+        // nothing to ship is 0 s regardless of the rate's health
+        assert_eq!(backhaul_time(0, 2, 0.0), 0.0);
+        assert_eq!(backhaul_time(1000, 0, 0.0), 0.0);
+        assert_eq!(backhaul_time(1000, 2, f64::INFINITY), 0.0);
     }
 
     #[test]

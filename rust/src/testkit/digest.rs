@@ -152,6 +152,25 @@ mod tests {
     }
 
     #[test]
+    fn digest_blind_to_rate_control_fields() {
+        // the rate_* columns are derivable diagnostics: a rate_control=off
+        // run must fingerprint identically to a pre-controller build, so
+        // the recorder's rate family never enters the digest (the
+        // controller's *effects* — bytes, losses, params — of course do)
+        let off = RoundRecord { round: 5, uplink_bytes: 48, ..Default::default() };
+        let mut annotated = off.clone();
+        annotated.rate_mean = 0.07;
+        annotated.rate_min = 0.02;
+        annotated.rate_max = 0.1;
+        annotated.coding_downshifts = 3;
+        assert_eq!(
+            trajectory_digest(&[7], &[off]),
+            trajectory_digest(&[7], &[annotated]),
+            "rate-control columns leaked into the digest"
+        );
+    }
+
+    #[test]
     fn hex_roundtrip() {
         for d in [0u64, 1, 0xdead_beef_cafe_f00d, u64::MAX] {
             assert_eq!(from_hex(&hex(d)), Some(d));

@@ -68,7 +68,8 @@ pub struct ScenarioResult {
 pub struct VerifyReport {
     pub scale: &'static str,
     /// total runs executed (scenarios × worker counts, plus one
-    /// streamed-ingest run per scenario)
+    /// streamed-ingest, one two-tier and one adaptive rate-control run per
+    /// scenario)
     pub runs: usize,
     /// streamed-ingest runs folded into the cross-worker digest gate (one
     /// per scenario — proves streamed ≡ materialized across the matrix)
@@ -77,6 +78,10 @@ pub struct VerifyReport {
     /// scenario per non-flat [`scenario::TIERS`] entry — proves a two-tier
     /// edge fleet ≡ the flat hub-and-spoke, bit for bit)
     pub tiered_runs: usize,
+    /// adaptive rate-control runs (one per scenario) held to every
+    /// invariant ledger but excluded from the digest equality gate —
+    /// per-client (k, coding) planning changes the trajectory by design
+    pub rate_control_runs: usize,
     pub scenarios: Vec<ScenarioResult>,
     /// one-off codec self-check violations (q8 round-trip contract)
     pub codec_selfcheck: Vec<String>,
@@ -134,14 +139,20 @@ impl VerifyReport {
         );
         let chaos_axis =
             Json::Arr(scenario::AXIS_CHAOS.iter().map(|c| Json::str(c.name())).collect());
+        // runner-level axis (not part of the scenario key): every gated run
+        // is `off`; one extra `adaptive` run per scenario rides the
+        // invariant ledgers only
+        let rate_control_axis = Json::Arr(vec![Json::str("off"), Json::str("adaptive")]);
         Json::obj(vec![
             ("schema", Json::num(1.0)),
             ("scale", Json::str(self.scale)),
             ("runs", Json::num(self.runs as f64)),
             ("streamed_runs", Json::num(self.streamed_runs as f64)),
             ("tiered_runs", Json::num(self.tiered_runs as f64)),
+            ("rate_control_runs", Json::num(self.rate_control_runs as f64)),
             ("scenarios", Json::num(self.scenarios.len() as f64)),
             ("chaos_axis", chaos_axis),
+            ("rate_control_axis", rate_control_axis),
             ("invariant_failures", Json::num(self.invariant_failures() as f64)),
             (
                 "codec_selfcheck",
@@ -171,12 +182,13 @@ impl VerifyReport {
     pub fn render(&self) -> String {
         let mut out = format!(
             "verify[{}]: {} scenarios x {} worker counts (+{} streamed-ingest, \
-             +{} two-tier) = {} runs | kernels {}\n",
+             +{} two-tier, +{} adaptive-rate) = {} runs | kernels {}\n",
             self.scale,
             self.scenarios.len(),
             scenario::WORKERS.len(),
             self.streamed_runs,
             self.tiered_runs,
+            self.rate_control_runs,
             self.runs,
             self.kernel_dispatch
         );
@@ -313,12 +325,42 @@ pub fn run_scenario_tiered(
     streamed: bool,
     tiers: usize,
 ) -> Result<(u64, Vec<String>)> {
+    run_scenario_inner(s, workers, rounds, streamed, tiers, false)
+}
+
+/// [`run_scenario`] with the adaptive per-client rate controller switched
+/// on (`rate_control.mode = adaptive`, boost 2.0 so the history term can
+/// genuinely move k). Every invariant — per-coordinate mass ledger,
+/// traffic-meter consistency — must still hold; the digest is *not*
+/// compared against the fixed-rate reference, because per-client (k,
+/// coding) planning changes the trajectory by design. `rate_control = off`
+/// needs no extra leg: every digest-gated run above is exactly that.
+pub fn run_scenario_rate_controlled(
+    s: &Scenario,
+    workers: usize,
+    rounds: usize,
+) -> Result<(u64, Vec<String>)> {
+    run_scenario_inner(s, workers, rounds, false, 1, true)
+}
+
+fn run_scenario_inner(
+    s: &Scenario,
+    workers: usize,
+    rounds: usize,
+    streamed: bool,
+    tiers: usize,
+    adaptive: bool,
+) -> Result<(u64, Vec<String>)> {
     let VerifyFixture { shards, network, mut engine } =
         verify_fixture(scenario::FIXTURE_CLIENTS, scenario::FIXTURE_SEED);
     let mut cfg = s.fl_config(workers, rounds);
     cfg.streamed_ingest = streamed;
     cfg.hierarchy.tiers = tiers;
     cfg.hierarchy.cohorts_per_edge = scenario::FIXTURE_COHORTS_PER_EDGE;
+    if adaptive {
+        cfg.rate_control.mode = crate::compress::RateControlMode::Adaptive;
+        cfg.rate_control.max_rate_boost = 2.0;
+    }
     let staleness = cfg.sim.staleness;
     let dim = engine.param_count();
     let mut run = FlRun::new(&engine, shards, Vec::new(), network, cfg);
@@ -404,6 +446,15 @@ pub fn run_verify(opts: &VerifyOptions) -> Result<VerifyReport> {
             worker_digests.push((tname, d));
             violations.extend(v.into_iter().map(|m| format!("[{tname}] {m}")));
         }
+        // the rate-control axis: one adaptive run per scenario, held to the
+        // same invariant ledgers but NOT pushed into `worker_digests` — the
+        // controller changes the trajectory by design, so only `off` (every
+        // run above) is digest-gated
+        {
+            let (_, v) = run_scenario_rate_controlled(&s, 1, rounds)?;
+            runs += 1;
+            violations.extend(v.into_iter().map(|m| format!("[w1+adaptive] {m}")));
+        }
         let reference = worker_digests[0].1;
         for &(wname, d) in &worker_digests[1..] {
             if d != reference {
@@ -469,6 +520,7 @@ pub fn run_verify(opts: &VerifyOptions) -> Result<VerifyReport> {
         streamed_runs: Scenario::all().len(),
         tiered_runs: Scenario::all().len()
             * scenario::TIERS.iter().filter(|&&(_, t)| t > 1).count(),
+        rate_control_runs: Scenario::all().len(),
         scenarios: results,
         codec_selfcheck,
         kernel_selfcheck,

@@ -34,6 +34,17 @@ fn run_with_codec(
     sim: SimConfig,
     codec: WireCodec,
 ) -> (Vec<u32>, RunSummary) {
+    run_with_codec_rc(kind, sampler, workers, sim, codec, false)
+}
+
+fn run_with_codec_rc(
+    kind: CompressorKind,
+    sampler: Sampler,
+    workers: usize,
+    sim: SimConfig,
+    codec: WireCodec,
+    adaptive: bool,
+) -> (Vec<u32>, RunSummary) {
     let mut engine = engine();
     let shards: Vec<Box<dyn Dataset + Send>> = (0..CLIENTS)
         .map(|c| {
@@ -49,6 +60,10 @@ fn run_with_codec(
     cfg.workers = workers;
     cfg.sim = sim;
     cfg.codec = codec;
+    if adaptive {
+        cfg.rate_control.mode = fedgmf::compress::RateControlMode::Adaptive;
+        cfg.rate_control.max_rate_boost = 2.0;
+    }
     let mut run =
         FlRun::new(&engine, shards, test, Network::uniform(CLIENTS, Default::default()), cfg);
     let summary = run.run(&mut engine).unwrap();
@@ -311,7 +326,7 @@ fn feasibility_selection_bit_identical_across_worker_counts() {
 /// `testkit::digest::trajectory_digest` (final parameter bits plus every
 /// per-round record field the round loop promises to keep deterministic),
 /// so the CI matrix and `fedgmf verify` fingerprint runs identically.
-fn run_digest(workers: usize, staleness: StalenessPolicy, codec: WireCodec) -> u64 {
+fn run_digest(workers: usize, staleness: StalenessPolicy, codec: WireCodec, adaptive: bool) -> u64 {
     let sim = SimConfig {
         preset: ProfilePreset::Heterogeneous { slow_every: 3, slow_factor: 6.0 },
         deadline_s: 0.08,
@@ -321,15 +336,22 @@ fn run_digest(workers: usize, staleness: StalenessPolicy, codec: WireCodec) -> u
         staleness,
         selection: SelectionPolicy::Uniform,
     };
-    let (params, sum) =
-        run_with_codec(CompressorKind::DgcWgmf, Sampler::Fraction(0.5), workers, sim, codec);
+    let (params, sum) = run_with_codec_rc(
+        CompressorKind::DgcWgmf,
+        Sampler::Fraction(0.5),
+        workers,
+        sim,
+        codec,
+        adaptive,
+    );
     fedgmf::testkit::digest::trajectory_digest(&params, &sum.recorder.rounds)
 }
 
 /// The CI determinism matrix entrypoint: each matrix job pins one
-/// (workers, staleness, codec) combination via `FED_DET_WORKERS` /
-/// `FED_DET_STALENESS` / `FED_DET_CODEC` and this test asserts its digest
-/// equals the sequential digest for the same (staleness, codec) pair.
+/// (workers, staleness, codec, rate_control) combination via
+/// `FED_DET_WORKERS` / `FED_DET_STALENESS` / `FED_DET_CODEC` /
+/// `FED_DET_RATE_CONTROL` and this test asserts its digest equals the
+/// sequential digest for the same (staleness, codec, rate_control) triple.
 /// Without the env vars (local runs) it sweeps the full matrix in-process.
 #[test]
 fn ci_matrix_digest() {
@@ -346,29 +368,39 @@ fn ci_matrix_digest() {
         Some(other) => panic!("FED_DET_CODEC must be v1|varint_f16, got `{other}`"),
         None => vec![("v1", WireCodec::default()), ("varint_f16", varint_f16())],
     };
+    let rate_controls: Vec<(&str, bool)> =
+        match std::env::var("FED_DET_RATE_CONTROL").ok().as_deref() {
+            Some("off") => vec![("off", false)],
+            Some("adaptive") => vec![("adaptive", true)],
+            Some(other) => panic!("FED_DET_RATE_CONTROL must be off|adaptive, got `{other}`"),
+            None => vec![("off", false), ("adaptive", true)],
+        };
     let workers: Vec<usize> = match std::env::var("FED_DET_WORKERS").ok() {
         Some(w) => vec![w.parse().expect("FED_DET_WORKERS must be a worker count")],
         None => vec![1, 2, 0], // 0 = one worker per core
     };
     for (sname, policy) in &policies {
         for (cname, codec) in &codecs {
-            let reference = run_digest(1, *policy, *codec);
-            eprintln!(
-                "determinism digest[staleness={sname}, codec={cname}, workers=1] \
-                 = {reference:016x}"
-            );
-            // workers=1 IS the reference — re-running it would only assert
-            // same-process repeatability at double the job cost
-            for &w in workers.iter().filter(|&&w| w != 1) {
-                let d = run_digest(w, *policy, *codec);
+            for (rname, adaptive) in &rate_controls {
+                let reference = run_digest(1, *policy, *codec, *adaptive);
                 eprintln!(
-                    "determinism digest[staleness={sname}, codec={cname}, workers={w}] \
-                     = {d:016x}"
+                    "determinism digest[staleness={sname}, codec={cname}, \
+                     rate_control={rname}, workers=1] = {reference:016x}"
                 );
-                assert_eq!(
-                    d, reference,
-                    "digest diverged: staleness={sname} codec={cname} workers={w}"
-                );
+                // workers=1 IS the reference — re-running it would only
+                // assert same-process repeatability at double the job cost
+                for &w in workers.iter().filter(|&&w| w != 1) {
+                    let d = run_digest(w, *policy, *codec, *adaptive);
+                    eprintln!(
+                        "determinism digest[staleness={sname}, codec={cname}, \
+                         rate_control={rname}, workers={w}] = {d:016x}"
+                    );
+                    assert_eq!(
+                        d, reference,
+                        "digest diverged: staleness={sname} codec={cname} \
+                         rate_control={rname} workers={w}"
+                    );
+                }
             }
         }
     }

@@ -1163,6 +1163,19 @@ fn fixture_run_digest(
     tiers: usize,
     cohorts_per_edge: usize,
 ) -> (u64, fedgmf::coordinator::round::RunSummary) {
+    fixture_run_digest_with(kind, params, store, tiers, cohorts_per_edge, |_| {})
+}
+
+/// Same fixture run with a final config tweak applied before the run is
+/// built (rate-control knobs, sim deadlines, ...).
+fn fixture_run_digest_with(
+    kind: CompressorKind,
+    params: codec::CodecParams,
+    store: fedgmf::coordinator::StoreMode,
+    tiers: usize,
+    cohorts_per_edge: usize,
+    tweak: impl FnOnce(&mut fedgmf::coordinator::round::FlConfig),
+) -> (u64, fedgmf::coordinator::round::RunSummary) {
     use fedgmf::coordinator::round::{FlConfig, FlRun};
     use fedgmf::coordinator::sampler::Sampler;
     use fedgmf::experiments::workload::verify_fixture;
@@ -1178,6 +1191,7 @@ fn fixture_run_digest(
     cfg.codec = codec::WireCodec { uplink: params, downlink: params };
     cfg.hierarchy.tiers = tiers;
     cfg.hierarchy.cohorts_per_edge = cohorts_per_edge;
+    tweak(&mut cfg);
     let mut run = FlRun::new(&engine, fx.shards, Vec::new(), fx.network, cfg);
     let summary = run.run(&mut engine).unwrap();
     let bits: Vec<u32> = run.params.iter().map(|p| p.to_bits()).collect();
@@ -1236,6 +1250,147 @@ fn prop_two_tier_digest_matches_flat_for_any_edge_fanin() {
                 r.round,
                 r.consistency_violations()
             );
+        }
+    }
+}
+
+// ----------------------------------------------------- adaptive rate control
+
+#[test]
+fn prop_rate_control_off_is_inert_for_every_technique() {
+    // `[rate_control] mode = "off"` — even with every other knob moved off
+    // its default — must be byte-identical to a config that never mentions
+    // the section. The mode gates all planning, so pre-controller
+    // trajectories are reproduced digest-exact for every technique.
+    use fedgmf::compress::{RateControlConfig, RateControlMode};
+    use fedgmf::coordinator::StoreMode;
+    let params =
+        codec::CodecParams { index: codec::IndexCoding::Varint, value: codec::ValueCoding::F16 };
+    let off = RateControlConfig {
+        mode: RateControlMode::Off,
+        min_rate_frac: 0.5,
+        max_rate_boost: 4.0,
+        deadline_margin: 0.5,
+        adapt_coding: false,
+    };
+    for &kind in CompressorKind::ALL.iter() {
+        let (base, _) = fixture_run_digest(kind, params, StoreMode::Auto, 1, 32);
+        let (gated, summary) =
+            fixture_run_digest_with(kind, params, StoreMode::Auto, 1, 32, |cfg| {
+                cfg.rate_control = off;
+            });
+        assert_eq!(base, gated, "{kind:?}: rate_control=off moved the trajectory digest");
+        for r in &summary.recorder.rounds {
+            assert_eq!(r.coding_downshifts, 0, "{kind:?} round {}: off downshifted", r.round);
+            assert!(
+                (r.rate_max - r.rate_min).abs() < 1e-12,
+                "{kind:?} round {}: off must record one shared rate",
+                r.round
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_adaptive_digest_invariant_across_store_and_topology() {
+    // adaptive planning is a pure function of per-client scheduler profiles
+    // and selection history — state that is identical across fleet-state
+    // residency and aggregation topology — so turning the controller on
+    // must not break the Dense ≡ Virtual and flat ≡ two-tier digest
+    // contracts, even while per-client (k, coding) genuinely diverge
+    use fedgmf::coordinator::StoreMode;
+    let params =
+        codec::CodecParams { index: codec::IndexCoding::Varint, value: codec::ValueCoding::F16 };
+    // deadline regime sized so the 1 200 B/s fixture tier is hopeless
+    // (k floor + Q8) while the 24 000 B/s tier keeps its full budget
+    fn adaptive(cfg: &mut fedgmf::coordinator::round::FlConfig) {
+        use fedgmf::compress::RateControlMode;
+        cfg.rate_control.mode = RateControlMode::Adaptive;
+        cfg.sim.deadline_s = 0.03;
+        cfg.sim.compute_s = 0.004;
+    }
+    for &kind in CompressorKind::ALL.iter() {
+        let (dense, summary) =
+            fixture_run_digest_with(kind, params, StoreMode::Dense, 1, 32, adaptive);
+        let (virt, _) = fixture_run_digest_with(kind, params, StoreMode::Virtual, 1, 32, adaptive);
+        assert_eq!(dense, virt, "{kind:?}: adaptive virtual-store trajectory diverged from dense");
+        let (tiered, tiered_summary) =
+            fixture_run_digest_with(kind, params, StoreMode::Auto, 2, 2, adaptive);
+        assert_eq!(dense, tiered, "{kind:?}: adaptive two-tier digest diverged from flat");
+        // the regime must genuinely plan per client, not degenerate to off
+        assert!(
+            summary.recorder.rounds.iter().any(|r| r.rate_max - r.rate_min > 1e-9),
+            "{kind:?}: adaptive plans never diverged across clients"
+        );
+        assert!(
+            summary.recorder.rounds.iter().map(|r| r.coding_downshifts).sum::<usize>() > 0,
+            "{kind:?}: hopeless tier never downshifted its value coding"
+        );
+        for r in &tiered_summary.recorder.rounds {
+            assert!(
+                r.consistency_violations().is_empty(),
+                "{kind:?} round {}: {:?}",
+                r.round,
+                r.consistency_violations()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_adaptive_rate_control_mass_clean_under_chaos_and_staleness() {
+    // the verify-matrix claim at property scale: with per-client (k, coding)
+    // moving round to round, frame-level chaos (offline drops, delayed
+    // uploads) composed with every staleness policy must leave the
+    // per-coordinate mass ledger clean — no residual double-count, no mass
+    // minted when a replayed or carried upload meets a different plan
+    use fedgmf::compress::RateControlMode;
+    use fedgmf::coordinator::round::{FlConfig, FlRun};
+    use fedgmf::coordinator::sampler::Sampler;
+    use fedgmf::experiments::workload::verify_fixture;
+    use fedgmf::sim::scheduler::StalenessPolicy;
+    use fedgmf::testkit::invariants::MassLedger;
+    use fedgmf::transport::fault::{FaultKind, FaultPlan};
+    const ROUNDS: usize = 6;
+    let params =
+        codec::CodecParams { index: codec::IndexCoding::Varint, value: codec::ValueCoding::F16 };
+    for policy in [
+        StalenessPolicy::Drop,
+        StalenessPolicy::Carry,
+        StalenessPolicy::CarryDiscounted(0.4),
+    ] {
+        for (fkind, frate) in [(FaultKind::Drop, 0.2), (FaultKind::Delay, 0.25)] {
+            let fx = verify_fixture(8, 0xBEEF);
+            let mut engine = fx.engine;
+            let mut cfg = FlConfig::new(CompressorKind::DgcWgmf, 0.25, ROUNDS);
+            cfg.sampler = Sampler::Count(4);
+            cfg.eval_every = 0;
+            cfg.seed = 7;
+            cfg.codec = codec::WireCodec { uplink: params, downlink: params };
+            cfg.sim.deadline_s = 0.03;
+            cfg.sim.compute_s = 0.004;
+            cfg.sim.staleness = policy;
+            cfg.fault = Some(FaultPlan::new(fkind, frate, 0xC4A05));
+            cfg.rate_control.mode = RateControlMode::Adaptive;
+            cfg.rate_control.max_rate_boost = 2.0;
+            let mut run = FlRun::new(&engine, fx.shards, Vec::new(), fx.network, cfg);
+            let dim = run.params.len();
+            run.ledger = Some(Box::new(MassLedger::new(dim, policy)));
+            let mut planned = false;
+            for round in 0..ROUNDS {
+                let rec = run.step_round(&mut engine, round).unwrap();
+                planned |= rec.rate_max - rec.rate_min > 1e-9;
+                assert!(
+                    rec.consistency_violations().is_empty(),
+                    "{policy:?}/{fkind:?} round {round}: {:?}",
+                    rec.consistency_violations()
+                );
+            }
+            assert!(planned, "{policy:?}/{fkind:?}: plans never diverged across clients");
+            let ledger =
+                run.ledger.take().unwrap().into_any().downcast::<MassLedger>().unwrap();
+            let violations = ledger.check(&run.stale_queue);
+            assert!(violations.is_empty(), "{policy:?}/{fkind:?}: {violations:?}");
         }
     }
 }

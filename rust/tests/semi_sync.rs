@@ -156,6 +156,55 @@ fn prop_staleness_policies_conserve_gradient_mass_across_straggler_rounds() {
 }
 
 #[test]
+fn prop_adaptive_rate_control_conserves_mass_across_carry_rounds() {
+    // the restore_upload_scaled audit: with the rate controller on, a
+    // carried straggler's upload is compressed under that round's
+    // per-client (k, coding) plan — slow clients land on the Q8 floor while
+    // fast clients' k drifts round to round with their hit history. The
+    // same-round restore (1 − α, under the codec the payload was encoded
+    // with) plus the α·copy the server folds in next round must still
+    // conserve per-coordinate mass exactly: no residual double-count, no
+    // mass minted when the plan changes between the compress round and the
+    // carry-apply round.
+    use fedgmf::compress::RateControlMode;
+    use fedgmf::testkit::invariants::MassLedger;
+    for policy in [StalenessPolicy::Carry, StalenessPolicy::CarryDiscounted(0.4)] {
+        for seed in seeds() {
+            let (mut engine, mut run) = build_run(seed, policy);
+            run.cfg.rate_control.mode = RateControlMode::Adaptive;
+            // let the hit-history term actually move k between rounds
+            run.cfg.rate_control.max_rate_boost = 2.0;
+            let dim = run.params.len();
+            run.ledger = Some(Box::new(MassLedger::new(dim, policy)));
+            let mut stragglers_seen = 0usize;
+            let mut carried = 0usize;
+            let mut downshifts = 0usize;
+            let mut spread = false;
+            let mut means: Vec<u64> = Vec::new();
+            for round in 0..ROUNDS {
+                let rec = run.step_round(&mut engine, round).unwrap();
+                stragglers_seen += rec.dropped_deadline;
+                carried += rec.carried_in;
+                downshifts += rec.coding_downshifts;
+                spread |= rec.rate_max - rec.rate_min > 1e-9;
+                means.push(rec.rate_mean.to_bits());
+            }
+            // the regime must genuinely exercise what it claims to audit
+            assert!(stragglers_seen > 0, "seed {seed} {policy:?}: no stragglers");
+            assert!(carried > 0, "seed {seed} {policy:?}: nothing carried");
+            assert!(spread, "seed {seed} {policy:?}: plans never diverged");
+            assert!(downshifts > 0, "seed {seed} {policy:?}: no codec downshift");
+            means.dedup();
+            assert!(means.len() > 1, "seed {seed} {policy:?}: k never moved across rounds");
+            let ledger =
+                run.ledger.take().unwrap().into_any().downcast::<MassLedger>().unwrap();
+            let violations = ledger.check(&run.stale_queue);
+            assert!(violations.is_empty(), "seed {seed} {policy:?}: {violations:?}");
+        }
+    }
+}
+
+#[test]
 fn carry_and_discounted_alpha_one_are_byte_identical() {
     // α = 1 restores nothing and applies everything — exactly `carry`
     let (mut e_carry, mut r_carry) = build_run(11, StalenessPolicy::Carry);

@@ -37,11 +37,12 @@ fn quick_matrix_passes_invariants_and_golden_gate() {
     // least 200 scenario runs deep
     assert_eq!(report.scenarios.len(), Scenario::all().len());
     // every scenario runs at each worker count plus one streamed-ingest
-    // run and one two-tier topology run, all folded into the same
-    // cross-run digest gate
-    assert_eq!(report.runs, Scenario::all().len() * (WORKERS.len() + 2));
+    // run and one two-tier topology run (folded into the cross-run digest
+    // gate), plus one adaptive rate-control run (invariant ledgers only)
+    assert_eq!(report.runs, Scenario::all().len() * (WORKERS.len() + 3));
     assert_eq!(report.streamed_runs, Scenario::all().len());
     assert_eq!(report.tiered_runs, Scenario::all().len());
+    assert_eq!(report.rate_control_runs, Scenario::all().len());
     assert!(report.runs >= 200, "matrix shrank below the 200-run floor: {}", report.runs);
     // every invariant ledger must be clean in every scenario
     for s in &report.scenarios {
@@ -79,6 +80,15 @@ fn quick_matrix_passes_invariants_and_golden_gate() {
         let tail = s.key.rsplit('/').next().unwrap();
         assert!(names.contains(&tail), "{}: key must end in a chaos axis value", s.key);
     }
+    // the rate-control axis is runner-level (not part of the scenario key):
+    // the report names both legs and counts the adaptive runs
+    let rc = j.get("rate_control_axis").unwrap().as_arr().unwrap();
+    let rc_names: Vec<&str> = rc.iter().filter_map(|v| v.as_str()).collect();
+    assert_eq!(rc_names, ["off", "adaptive"]);
+    assert_eq!(
+        j.get("rate_control_runs").unwrap().as_usize(),
+        Some(report.rate_control_runs)
+    );
     let _ = std::fs::remove_file(&report_path);
 }
 
